@@ -1,0 +1,134 @@
+//! Engine micro-benchmarks (in-repo harness; `cargo bench --bench engine`).
+//!
+//! Covers the §Perf hot paths: scheduler ops, scope assembly + native
+//! update execution per engine, ghost-sync volume, lock-table throughput,
+//! and the PJRT batched kernel path when artifacts are built.
+
+use graphlab::apps::{self, als, pagerank};
+use graphlab::bench::{bench, bench_throughput};
+use graphlab::distributed::locks::{LockReq, LockTable, TxnId};
+use graphlab::engine::chromatic::{self, ChromaticOpts};
+use graphlab::engine::locking::{self, LockingOpts};
+use graphlab::engine::shared::{self, SharedOpts};
+use graphlab::partition::{Coloring, Partition};
+use graphlab::scheduler::{FifoScheduler, PriorityScheduler, Scheduler, Task};
+
+fn bench_schedulers() {
+    let n = 100_000;
+    bench_throughput("scheduler/fifo push+pop", 0.4, n, || {
+        let mut s = FifoScheduler::new(n);
+        for v in 0..n as u32 {
+            s.push(Task { vertex: v, priority: 0.0 });
+        }
+        while s.pop().is_some() {}
+    });
+    bench_throughput("scheduler/priority push+pop", 0.4, n, || {
+        let mut s = PriorityScheduler::new(n);
+        for v in 0..n as u32 {
+            s.push(Task { vertex: v, priority: (v % 97) as f64 });
+        }
+        while s.pop().is_some() {}
+    });
+}
+
+fn bench_lock_table() {
+    let n = 50_000usize;
+    bench_throughput("locks/grant+release cycle", 0.4, n, || {
+        let mut lt = LockTable::new();
+        for i in 0..n as u32 {
+            let t = TxnId { machine: 0, seq: i as u64 };
+            assert!(lt.request(LockReq { txn: t, vertex: i % 1024, write: false }));
+            lt.release(i % 1024, t, false);
+        }
+    });
+}
+
+fn bench_pagerank_engines() {
+    let n = 20_000;
+    let edges = graphlab::datagen::web_graph(n, 8, 1);
+    let prog = pagerank::PageRank { alpha: 0.15, eps: f32::INFINITY, n, use_pjrt: false };
+
+    bench_throughput("pagerank/shared 4w one-sweep", 1.0, n, || {
+        let g = pagerank::build(n, &edges, 0.15);
+        let (_g, stats) = shared::run(
+            g, &prog, apps::all_vertices(n), vec![],
+            Box::new(FifoScheduler::new(n)),
+            SharedOpts { workers: 4, ..Default::default() },
+        );
+        assert_eq!(stats.updates, n as u64);
+    });
+
+    let coloring_g = pagerank::build(n, &edges, 0.15);
+    let coloring = Coloring::greedy(&coloring_g);
+    let partition = Partition::random(n, 4, 3);
+    bench_throughput("pagerank/chromatic 4m one-sweep", 1.5, n, || {
+        let g = pagerank::build(n, &edges, 0.15);
+        let (_g, stats) = chromatic::run(
+            g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
+            ChromaticOpts { machines: 4, max_sweeps: 1, ..Default::default() },
+        );
+        assert_eq!(stats.updates, n as u64);
+    });
+
+    bench_throughput("pagerank/locking 4m one-sweep", 2.0, n, || {
+        let g = pagerank::build(n, &edges, 0.15);
+        let (_g, _stats) = locking::run(
+            g, &partition, &prog, apps::all_vertices(n), vec![],
+            LockingOpts {
+                machines: 4, maxpending: 256, scheduler: "fifo".into(),
+                max_updates_per_machine: n as u64 / 4 + 1000,
+                ..Default::default()
+            },
+        );
+    });
+}
+
+fn bench_als_paths() {
+    let data = graphlab::datagen::netflix(800, 400, 25, 8, 0.2, 5);
+    let coloring_g = als::build(&data, 20, 1);
+    let n = coloring_g.num_vertices();
+    let coloring = Coloring::bipartite(&coloring_g).unwrap();
+    let partition = Partition::random(n, 2, 3);
+
+    bench_throughput("als/native d=20 one-sweep", 1.5, n, || {
+        let g = als::build(&data, 20, 1);
+        let prog = als::Als { d: 20, lambda: 0.08, use_pjrt: false };
+        let (_g, _s) = chromatic::run(
+            g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
+            ChromaticOpts { machines: 2, max_sweeps: 1, ..Default::default() },
+        );
+    });
+
+    if graphlab::runtime::available() {
+        // Warm the per-thread executable caches outside the timing loop.
+        let g = als::build(&data, 20, 1);
+        let prog = als::Als { d: 20, lambda: 0.08, use_pjrt: true };
+        let _ = chromatic::run(
+            g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
+            ChromaticOpts { machines: 2, max_sweeps: 1, ..Default::default() },
+        );
+        bench_throughput("als/pjrt d=20 one-sweep", 1.5, n, || {
+            let g = als::build(&data, 20, 1);
+            let (_g, _s) = chromatic::run(
+                g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
+                ChromaticOpts { machines: 2, max_sweeps: 1, ..Default::default() },
+            );
+        });
+    } else {
+        println!("als/pjrt: skipped (run `make artifacts`)");
+    }
+}
+
+fn main() {
+    println!("== engine micro-benchmarks ==");
+    bench_schedulers();
+    bench_lock_table();
+    bench_pagerank_engines();
+    bench_als_paths();
+    bench("partition/two-phase 20k-vertex graph", 1.0, || {
+        let edges = graphlab::datagen::web_graph(20_000, 8, 1);
+        let g = pagerank::build(20_000, &edges, 0.15);
+        let p = graphlab::partition::atoms::two_phase(&g, 64, 8, 2);
+        std::hint::black_box(p.edge_cut(&g));
+    });
+}

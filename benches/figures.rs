@@ -1,0 +1,12 @@
+//! Paper-figure regeneration as a bench target: `cargo bench --bench
+//! figures` produces every table/figure CSV under `results/` and prints
+//! the headline comparisons (the "rows the paper reports").
+//!
+//! This is the end-to-end benchmark harness of DESIGN.md §Experiment-index;
+//! see EXPERIMENTS.md for paper-vs-measured shape checks.
+
+fn main() {
+    let out = std::path::Path::new("results");
+    graphlab::sim::figures::run_figure("all", out).expect("figure generation");
+    println!("\nall figures written to results/ — see EXPERIMENTS.md");
+}

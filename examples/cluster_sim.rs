@@ -1,0 +1,55 @@
+//! Cluster-scale what-if study using the calibrated performance model
+//! (DESIGN.md §Substitutions): how the paper's three applications scale
+//! from 4 to 64 EC2 nodes, and how GraphLab compares to Hadoop and MPI.
+//!
+//! ```text
+//! cargo run --release --example cluster_sim
+//! ```
+
+use graphlab::sim::{self, calibrate, ClusterModel};
+
+fn main() {
+    println!("calibrating per-update costs on this machine...");
+    let netflix = calibrate::netflix_workload(20);
+    let nerw = calibrate::ner_workload();
+    let cosegw = calibrate::coseg_workload(1740.0);
+    println!("  netflix d=20: {:.1} µs/update", netflix.update_cost * 1e6);
+    println!("  ner k=8     : {:.1} µs/update", nerw.update_cost * 1e6);
+    println!("  coseg l=5   : {:.1} µs/update", cosegw.update_cost * 1e6);
+
+    println!("\nspeedup (relative to 4 nodes) at paper scale:");
+    println!("{:>6} {:>10} {:>10} {:>10}", "nodes", "netflix", "ner", "coseg");
+    let deg_net = 2.0 * netflix.num_edges / netflix.num_vertices;
+    let deg_ner = 2.0 * nerw.num_edges / nerw.num_vertices;
+    let chrom = |nodes: usize, w: &sim::WorkloadModel, deg: f64| {
+        sim::chromatic_iter(
+            &ClusterModel::ec2_hpc(nodes), w,
+            sim::random_cut_fraction(nodes), sim::random_mirrors(nodes, deg),
+        ).seconds
+    };
+    let lockg = |nodes: usize, w: &sim::WorkloadModel| {
+        sim::locking_iter(
+            &ClusterModel::ec2_hpc(nodes), w,
+            sim::grid_cut_fraction(nodes, 1740.0), sim::grid_mirrors(nodes, 1740.0), 100,
+        ).seconds
+    };
+    let base = [chrom(4, &netflix, deg_net), chrom(4, &nerw, deg_ner)];
+    let coseg_base = lockg(4, &cosegw);
+    for nodes in [4usize, 8, 16, 24, 32, 48, 64] {
+        let s_net = base[0] / chrom(nodes, &netflix, deg_net) * 4.0;
+        let s_ner = base[1] / chrom(nodes, &nerw, deg_ner) * 4.0;
+        let s_cos = coseg_base / lockg(nodes, &cosegw) * 4.0;
+        println!("{nodes:>6} {s_net:>10.1} {s_ner:>10.1} {s_cos:>10.1}");
+    }
+
+    println!("\none netflix iteration (d=20): graphlab vs hadoop vs mpi:");
+    println!("{:>6} {:>12} {:>12} {:>12} {:>8}", "nodes", "graphlab(s)", "hadoop(s)", "mpi(s)", "h/g");
+    for nodes in [4usize, 16, 64] {
+        let c = ClusterModel::ec2_hpc(nodes);
+        let m = sim::random_mirrors(nodes, deg_net);
+        let gl = sim::chromatic_iter(&c, &netflix, sim::random_cut_fraction(nodes), m).seconds;
+        let hd = sim::hadoop_iter(&c, &netflix).seconds;
+        let mp = sim::mpi_iter(&c, &netflix, sim::random_cut_fraction(nodes), m).seconds;
+        println!("{nodes:>6} {gl:>12.2} {hd:>12.1} {mp:>12.2} {:>8.0}x", hd / gl);
+    }
+}

@@ -1,0 +1,86 @@
+//! **End-to-end driver** (EXPERIMENTS.md §E2E): Netflix-style ALS on a
+//! 4-machine distributed cluster, with the numeric hot path running
+//! through the AOT-compiled Pallas kernels via PJRT when artifacts are
+//! built (`make artifacts`).
+//!
+//! ```text
+//! cargo run --release --example netflix_als [-- --users 4000 --d 20 --sweeps 30]
+//! ```
+//!
+//! Logs the held-out RMSE curve per sweep and reports throughput.
+
+use graphlab::apps::{self, als};
+use graphlab::engine::chromatic::{self, ChromaticOpts};
+use graphlab::partition::{Coloring, Partition};
+use graphlab::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let users = args.num_or("users", 1000usize);
+    let movies = args.num_or("movies", 500usize);
+    let d = args.num_or("d", 10usize);
+    let sweeps = args.num_or("sweeps", 10u64);
+    let machines = args.num_or("machines", 4usize);
+    let use_pjrt = graphlab::runtime::available() && !args.flag("no-pjrt");
+
+    println!("== netflix ALS end-to-end: {users} users x {movies} movies, d={d}, {machines} machines ==");
+    println!("numeric path: {}", if use_pjrt { "PJRT (AOT Pallas kernels)" } else { "native rust" });
+    if use_pjrt {
+        println!("note: Pallas kernels run in interpret mode on CPU — wallclock is emulation, \
+                  not a kernel-performance signal (EXPERIMENTS.md §Perf); pass --no-pjrt for speed");
+    }
+
+    let mut data = graphlab::datagen::netflix(users, movies, 30, 8, 0.25, 42);
+    // 80/20 train/test split (shuffled so every user/movie keeps training
+    // coverage — ratings are generated grouped by user).
+    graphlab::util::Rng::new(99).shuffle(&mut data.ratings);
+    let split = data.ratings.len() * 4 / 5;
+    let train = graphlab::datagen::NetflixData {
+        users, movies,
+        ratings: data.ratings[..split].to_vec(),
+        true_rank: data.true_rank,
+    };
+    let test = &data.ratings[split..];
+    let g = als::build(&train, d, 3);
+    let n = g.num_vertices();
+    println!("graph: {} vertices, {} edges (train), {} held-out ratings", n, g.num_edges(), test.len());
+
+    let coloring = Coloring::bipartite(&g).expect("ALS graph is bipartite");
+    let partition = Partition::random(n, machines, 7);
+    let prog = als::Als { d, lambda: 0.08, use_pjrt };
+    let t0 = std::time::Instant::now();
+    let (g, stats) = chromatic::run(
+        g, &coloring, &partition, &prog,
+        apps::all_vertices(n),
+        vec![Box::new(als::rmse_sync())],
+        ChromaticOpts {
+            machines,
+            threads_per_machine: 2,
+            max_sweeps: sweeps,
+            on_sweep: Some(Box::new(move |s, u, gv| {
+                if let Some(r) = gv.get("rmse") {
+                    println!("sweep {s:>3}: updates={u:>9}  train-rmse={:.5}", r[0]);
+                }
+            })),
+            ..Default::default()
+        },
+    );
+    let secs = t0.elapsed().as_secs_f64();
+
+    // Held-out evaluation.
+    let mut sse = 0.0f64;
+    for &(u, m, r) in test {
+        let pred = graphlab::util::matrix::dot(
+            &g.vertex_data(u).factor,
+            &g.vertex_data(users as u32 + m).factor,
+        );
+        sse += ((r - pred) as f64).powi(2);
+    }
+    let test_rmse = (sse / test.len() as f64).sqrt();
+    println!("---");
+    println!("updates        : {}", stats.updates);
+    println!("wall time      : {secs:.2}s  ({:.0} updates/s)", stats.updates as f64 / secs);
+    println!("network        : {} MB total", stats.bytes_sent.iter().sum::<u64>() / 1_000_000);
+    println!("test RMSE      : {test_rmse:.5}  (planted rank {}, noise 0.25)", data.true_rank);
+    Ok(())
+}

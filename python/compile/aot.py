@@ -1,0 +1,167 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Usage (invoked by `make artifacts`):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Lowers every variant listed in `ARTIFACTS` to `artifacts/<name>.hlo.txt` and
+writes `artifacts/manifest.txt`, a line-oriented index the Rust runtime
+parses (no serde available on the Rust side):
+
+    <name> kind=<kernel> <dim>=<val>... in=<shape>;<shape>... out=<shape>;...
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the `xla` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. Lowering goes through stablehlo ->
+mlir_module_to_xla_computation(return_tuple=True) -> as_hlo_text, exactly
+the recipe validated by /opt/xla-example.
+
+Pallas kernels are lowered with interpret=True so they become plain HLO ops
+executable by the CPU PJRT client; real-TPU lowering would emit Mosaic
+custom-calls the CPU plugin cannot run (compile-only target).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Artifact table: name -> (builder, static dims, example-arg shapes)
+# ---------------------------------------------------------------------------
+
+f32 = model.f32
+
+#: Default tile sizes the Rust coordinator batches to. Chunk width N = 32
+#: for ALS/PageRank gathers, 64 for CoEM (denser bipartite graph).
+ALS_DS = (5, 10, 20)
+
+
+def _artifact_table():
+    table = []
+    # PageRank: one variant.
+    table.append(
+        (
+            "pagerank_b256_n32",
+            model.pagerank_step(256, 32),
+            dict(kind="pagerank", b=256, n=32),
+            [f32(256, 32), f32(256, 32), f32(256)],
+        )
+    )
+    # ALS: accum / solve / fused, per rank d.
+    for d in ALS_DS:
+        table.append(
+            (
+                f"als_accum_b64_n32_d{d}",
+                model.als_accum_step(64, 32, d),
+                dict(kind="als_accum", b=64, n=32, d=d),
+                [f32(64, 32, d), f32(64, 32), f32(64, 32)],
+            )
+        )
+        table.append(
+            (
+                f"als_solve_b64_d{d}",
+                model.als_solve_step(64, d),
+                dict(kind="als_solve", b=64, d=d),
+                [f32(64, d, d), f32(64, d), f32(1)],
+            )
+        )
+        table.append(
+            (
+                f"als_update_b64_n32_d{d}",
+                model.als_update_step(64, 32, d),
+                dict(kind="als_update", b=64, n=32, d=d),
+                [f32(64, 32, d), f32(64, 32), f32(64, 32), f32(1)],
+            )
+        )
+    # LBP: CoSeg uses L=5 labels (sky/building/grass/pavement/trees).
+    table.append(
+        (
+            "lbp_b128_l5",
+            model.lbp_step(128, 5),
+            dict(kind="lbp", b=128, l=5),
+            [f32(128, 6, 5), f32(128, 6), f32(128, 5), f32(128, 6), f32(128, 5)],
+        )
+    )
+    # CoEM: K=8 entity types.
+    table.append(
+        (
+            "coem_b64_n64_k8",
+            model.coem_step(64, 64, 8),
+            dict(kind="coem", b=64, n=64, k=8),
+            [f32(64, 64, 8), f32(64, 64), f32(64, 8), f32(1)],
+        )
+    )
+    table.append(
+        (
+            "coem_accum_b64_n64_k8",
+            model.coem_accum_step(64, 64, 8),
+            dict(kind="coem_accum", b=64, n=64, k=8),
+            [f32(64, 64, 8), f32(64, 64)],
+        )
+    )
+    return table
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(s) -> str:
+    return "x".join(str(x) for x in s.shape) if s.shape else "scalar"
+
+
+def lower_all(out_dir: str, only: str | None = None, verbose: bool = True) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    written = []
+    for name, fn, meta, args in _artifact_table():
+        if only and only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            _shape_str(s) for s in jax.eval_shape(fn, *args)
+        ]
+        in_shapes = [_shape_str(s) for s in args]
+        kv = " ".join(f"{k}={v}" for k, v in meta.items())
+        manifest_lines.append(
+            f"{name} {kv} in={';'.join(in_shapes)} out={';'.join(out_shapes)}"
+        )
+        written.append(path)
+        if verbose:
+            digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+            print(f"  {name}: {len(text)} chars sha={digest}")
+    if only is None:
+        with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest_lines) + "\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    written = lower_all(args.out_dir, only=args.only)
+    print(f"wrote {len(written)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

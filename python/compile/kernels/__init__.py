@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels and their pure-jnp reference oracles."""
+
+from .als import make_als_accum, make_als_solve, make_als_update
+from .coem import make_coem, make_coem_accum
+from .lbp import NB, make_lbp
+from .pagerank import make_pagerank
+from . import ref
+
+__all__ = [
+    "make_als_accum",
+    "make_als_solve",
+    "make_als_update",
+    "make_coem",
+    "make_coem_accum",
+    "make_lbp",
+    "make_pagerank",
+    "NB",
+    "ref",
+]

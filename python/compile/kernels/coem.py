@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernel: CoEM vertex update (NER application).
+
+The NER application (paper Sec. 5.3) runs CoEM on a bipartite
+noun-phrase/context graph: each vertex stores a distribution over K entity
+types, and an update replaces it by the normalized co-occurrence-weighted
+average of the adjacent vertices' distributions. The paper calls this out as
+the *light-weight* update that stresses runtime overhead and the network
+(O(deg) work, 816-byte vertex data) — so the kernel is a single fused
+masked matvec + normalize over a [block_b, N, K] tile, and the interesting
+reproduction behaviour (network saturation, Fig. 6(b)) lives in Layer 3.
+
+Like ALS, degree > N is handled by chunked accumulation in the coordinator:
+`make_coem_accum` emits the unnormalized partial sums which are linear in
+the chunks; `make_coem` fuses accumulate + smooth + normalize + residual for
+the common case.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["make_coem", "make_coem_accum"]
+
+
+def _coem_kernel(nbr_ref, cnt_ref, old_ref, smooth_ref, out_ref, res_ref):
+    nbr = nbr_ref[...]  # [bb, N, K]
+    cnt = cnt_ref[...]  # [bb, N] (padded slots 0)
+    old = old_ref[...]  # [bb, K]
+    agg = jnp.einsum("bnk,bn->bk", nbr, cnt, preferred_element_type=jnp.float32)
+    agg = agg + smooth_ref[0]
+    out = agg / jnp.maximum(jnp.sum(agg, axis=-1, keepdims=True), 1e-30)
+    out_ref[...] = out
+    res_ref[...] = jnp.sum(jnp.abs(out - old), axis=-1)
+
+
+def _coem_accum_kernel(nbr_ref, cnt_ref, out_ref):
+    nbr = nbr_ref[...]
+    cnt = cnt_ref[...]
+    out_ref[...] = jnp.einsum("bnk,bn->bk", nbr, cnt, preferred_element_type=jnp.float32)
+
+
+def make_coem(b: int, n: int, k: int, *, block_b: int = 32, interpret: bool = True):
+    """(nbr[B,N,K], cnt[B,N], old[B,K], smooth[1]) -> (dist[B,K], residual[B])."""
+    bb = block_b if b % block_b == 0 else b
+    return pl.pallas_call(
+        _coem_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, n, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+
+
+def make_coem_accum(b: int, n: int, k: int, *, block_b: int = 32, interpret: bool = True):
+    """Chunk accumulation: (nbr[B,N,K], cnt[B,N]) -> partial[B,K]."""
+    bb = block_b if b % block_b == 0 else b
+    return pl.pallas_call(
+        _coem_accum_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, n, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )

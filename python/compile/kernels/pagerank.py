@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: batched PageRank vertex update.
+
+The GraphLab PageRank update (paper Alg. 1) for a batch of vertices whose
+neighbor ranks have been gathered into a padded [B, N] tile. Padded slots
+carry weight 0, and the damping factor (1 - alpha) is folded into the edge
+weights by the Rust coordinator, so the kernel is a masked weighted
+reduction — the memory-bound archetype of GraphLab's "light" update
+functions (NER is the compute-heavier cousin in `coem.py`).
+
+Tiling: the grid walks the batch dimension in blocks of `block_b`; each
+program instance reduces an entire [block_b, N] tile held in VMEM. N is the
+padded max chunk degree (higher-degree vertices are chunk-accumulated by the
+coordinator), so VMEM footprint is 2*block_b*N*4 bytes per instance.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["make_pagerank"]
+
+
+def _pagerank_kernel(ranks_ref, weights_ref, base_ref, out_ref):
+    r = ranks_ref[...]  # [block_b, N]
+    w = weights_ref[...]  # [block_b, N]
+    base = base_ref[...]  # [block_b]
+    out_ref[...] = base + jnp.sum(w * r, axis=-1)
+
+
+def make_pagerank(b: int, n: int, *, block_b: int = 64, interpret: bool = True):
+    """Build the batched PageRank update: (ranks[B,N], weights[B,N],
+    base[B]) -> new_ranks[B]."""
+    if b % block_b != 0:
+        block_b = b  # degenerate single-block fallback for odd test shapes
+    grid = (b // block_b,)
+
+    call = pl.pallas_call(
+        _pagerank_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )
+
+    @functools.wraps(call)
+    def pagerank(ranks, weights, base):
+        return call(ranks, weights, base)
+
+    return pagerank

@@ -1,0 +1,122 @@
+"""Layer-2 JAX model: the batched vertex-update programs per application.
+
+Each `*_step` builder returns a jittable function over fixed static shapes
+(HLO requires static shapes; the Rust coordinator pads gather tiles to these
+shapes and selects the artifact variant by shape from the manifest). These
+are the functions `aot.py` lowers to `artifacts/*.hlo.txt`.
+
+The contract with Layer 3 (Rust):
+
+* all tensors are float32, row-major;
+* padded slots are indicated by mask/count == 0 and must not affect output;
+* vertices with degree > N are chunk-accumulated: the coordinator calls the
+  `*_accum` artifact per chunk, sums the partials itself (the contraction is
+  linear), then calls the `*_solve` / finalize artifact;
+* every lowered function returns a tuple (even singletons): the Rust runtime
+  unconditionally decomposes the result tuple.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import (
+    make_als_accum,
+    make_als_solve,
+    make_als_update,
+    make_coem,
+    make_coem_accum,
+    make_lbp,
+    make_pagerank,
+)
+
+__all__ = [
+    "pagerank_step",
+    "als_accum_step",
+    "als_solve_step",
+    "als_update_step",
+    "lbp_step",
+    "coem_step",
+    "coem_accum_step",
+]
+
+
+def pagerank_step(b: int, n: int, *, interpret: bool = True):
+    """PageRank: (ranks[B,N], weights[B,N], base[B]) -> (rank[B],)."""
+    kern = make_pagerank(b, n, interpret=interpret)
+
+    def step(ranks, weights, base):
+        return (kern(ranks, weights, base),)
+
+    return step
+
+
+def als_accum_step(b: int, n: int, d: int, *, interpret: bool = True):
+    """ALS chunk accumulation: (v, r, m) -> (A, y)."""
+    kern = make_als_accum(b, n, d, interpret=interpret)
+
+    def step(v, r, m):
+        a, y = kern(v, r, m)
+        return (a, y)
+
+    return step
+
+
+def als_solve_step(b: int, d: int, *, interpret: bool = True):
+    """ALS solve: (A, y, lam) -> (x,)."""
+    kern = make_als_solve(b, d, interpret=interpret)
+
+    def step(a, y, lam):
+        return (kern(a, y, lam),)
+
+    return step
+
+
+def als_update_step(b: int, n: int, d: int, *, interpret: bool = True):
+    """Fused ALS update: (v, r, m, lam) -> (x,)."""
+    kern = make_als_update(b, n, d, interpret=interpret)
+
+    def step(v, r, m, lam):
+        return (kern(v, r, m, lam),)
+
+    return step
+
+
+def lbp_step(b: int, l: int, *, interpret: bool = True):
+    """LBP update: (msgs, mask, npot, lam, old_belief)
+    -> (out_msgs, belief, residual)."""
+    kern = make_lbp(b, l, interpret=interpret)
+
+    def step(msgs, mask, npot, lam, oldb):
+        out, belief, res = kern(msgs, mask, npot, lam, oldb)
+        return (out, belief, res)
+
+    return step
+
+
+def coem_step(b: int, n: int, k: int, *, interpret: bool = True):
+    """CoEM update: (nbr, cnt, old, smooth) -> (dist, residual)."""
+    kern = make_coem(b, n, k, interpret=interpret)
+
+    def step(nbr, cnt, old, smooth):
+        dist, res = kern(nbr, cnt, old, smooth)
+        return (dist, res)
+
+    return step
+
+
+def coem_accum_step(b: int, n: int, k: int, *, interpret: bool = True):
+    """CoEM chunk accumulation: (nbr, cnt) -> (partial,)."""
+    kern = make_coem_accum(b, n, k, interpret=interpret)
+
+    def step(nbr, cnt):
+        return (kern(nbr, cnt),)
+
+    return step
+
+
+def f32(*shape):
+    """ShapeDtypeStruct helper used by aot.py and the shape tests."""
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, jnp.float32)

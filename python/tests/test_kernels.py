@@ -1,0 +1,253 @@
+"""Kernel-vs-reference correctness: the core Layer-1 signal.
+
+Every Pallas kernel (interpret=True) must match its pure-jnp oracle in
+`compile.kernels.ref` to float32 tolerance, across a hypothesis sweep of
+shapes, masks, and value ranges.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import kernels
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(*shape, lo=-1.0, hi=1.0, rng=None):
+    rng = rng or RNG
+    return rng.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+def _mask(b, n, rng=None):
+    """Random padding mask with at least one live slot per row."""
+    rng = rng or RNG
+    m = (rng.random((b, n)) < 0.7).astype(np.float32)
+    m[:, 0] = 1.0
+    return m
+
+
+# ---------------------------------------------------------------------------
+# PageRank
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 3, 16, 64, 256]),
+    n=st.sampled_from([1, 2, 7, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pagerank_matches_ref(b, n, seed):
+    rng = np.random.default_rng(seed)
+    ranks = _rand(b, n, lo=0.0, hi=1.0, rng=rng)
+    weights = _rand(b, n, lo=0.0, hi=1.0, rng=rng) * _mask(b, n, rng=rng)
+    base = _rand(b, lo=0.0, hi=0.2, rng=rng)
+    got = kernels.make_pagerank(b, n)(ranks, weights, base)
+    want = ref.pagerank_ref(ranks, weights, base)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_pagerank_padding_is_inert():
+    """Padded (zero-weight) slots must not change the result."""
+    b, n = 8, 16
+    ranks = _rand(b, n)
+    weights = _rand(b, n, lo=0.0, hi=1.0)
+    weights[:, 8:] = 0.0
+    base = _rand(b, lo=0.0, hi=0.2)
+    full = kernels.make_pagerank(b, n)(ranks, weights, base)
+    # Corrupt the padded ranks: result must be identical.
+    ranks2 = ranks.copy()
+    ranks2[:, 8:] = 1e6
+    full2 = kernels.make_pagerank(b, n)(ranks2, weights, base)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(full2))
+
+
+# ---------------------------------------------------------------------------
+# ALS
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 4, 16, 64]),
+    n=st.sampled_from([1, 3, 8, 32]),
+    d=st.sampled_from([1, 2, 5, 10, 20]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_als_accum_matches_ref(b, n, d, seed):
+    rng = np.random.default_rng(seed)
+    v = _rand(b, n, d, rng=rng)
+    r = _rand(b, n, lo=1.0, hi=5.0, rng=rng)
+    m = _mask(b, n, rng=rng)
+    ga, gy = kernels.make_als_accum(b, n, d)(v, r, m)
+    wa, wy = ref.als_accum_ref(v, r, m)
+    np.testing.assert_allclose(ga, wa, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gy, wy, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 4, 16, 64]),
+    d=st.sampled_from([1, 2, 5, 10, 20]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_als_solve_matches_ref(b, d, seed):
+    rng = np.random.default_rng(seed)
+    # Build a well-conditioned PSD system: A = G G^T.
+    g = _rand(b, d, d, rng=rng)
+    a = np.einsum("bik,bjk->bij", g, g).astype(np.float32)
+    y = _rand(b, d, rng=rng)
+    lam = np.array([0.5], dtype=np.float32)
+    got = kernels.make_als_solve(b, d)(a, y, lam)
+    want = ref.als_solve_ref(jnp.asarray(a), jnp.asarray(y), jnp.asarray(lam))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 8, 64]),
+    n=st.sampled_from([2, 8, 32]),
+    d=st.sampled_from([2, 5, 10, 20]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_als_update_fused_matches_ref(b, n, d, seed):
+    rng = np.random.default_rng(seed)
+    v = _rand(b, n, d, rng=rng)
+    r = _rand(b, n, lo=1.0, hi=5.0, rng=rng)
+    m = _mask(b, n, rng=rng)
+    lam = np.array([0.1], dtype=np.float32)
+    got = kernels.make_als_update(b, n, d)(v, r, m, lam)
+    want = ref.als_update_ref(
+        jnp.asarray(v), jnp.asarray(r), jnp.asarray(m), jnp.asarray(lam)
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4)
+
+
+def test_als_chunked_accumulation_is_exact():
+    """Accumulating two N-chunks must equal one 2N gather (linearity) —
+    this is the contract the Rust coordinator relies on for deg > N."""
+    b, n, d = 8, 8, 5
+    rng = np.random.default_rng(7)
+    v = _rand(b, 2 * n, d, rng=rng)
+    r = _rand(b, 2 * n, lo=1.0, hi=5.0, rng=rng)
+    m = np.ones((b, 2 * n), dtype=np.float32)
+    accum = kernels.make_als_accum(b, n, d)
+    a1, y1 = accum(v[:, :n], r[:, :n], m[:, :n])
+    a2, y2 = accum(v[:, n:], r[:, n:], m[:, n:])
+    wa, wy = ref.als_accum_ref(v, r, m)
+    np.testing.assert_allclose(np.asarray(a1) + np.asarray(a2), wa, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y1) + np.asarray(y2), wy, rtol=1e-4, atol=1e-5)
+
+
+def test_als_solve_recovers_planted_solution():
+    """(A + lam I) x = y with lam=0 and planted x should recover x."""
+    b, d = 4, 10
+    rng = np.random.default_rng(3)
+    g = rng.normal(size=(b, d, d)).astype(np.float32)
+    a = np.einsum("bik,bjk->bij", g, g).astype(np.float32) + 0.1 * np.eye(d, dtype=np.float32)
+    x_true = rng.normal(size=(b, d)).astype(np.float32)
+    y = np.einsum("bij,bj->bi", a, x_true).astype(np.float32)
+    lam = np.array([0.0], dtype=np.float32)
+    got = kernels.make_als_solve(b, d)(a, y, lam)
+    np.testing.assert_allclose(got, x_true, rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# LBP
+# ---------------------------------------------------------------------------
+
+
+def _lbp_inputs(b, l, seed):
+    rng = np.random.default_rng(seed)
+    msgs = rng.uniform(0.1, 1.0, size=(b, 6, l)).astype(np.float32)
+    msgs /= msgs.sum(-1, keepdims=True)
+    mask = (rng.random((b, 6)) < 0.8).astype(np.float32)
+    mask[:, 0] = 1.0
+    msgs = msgs * mask[:, :, None]
+    npot = rng.uniform(0.1, 1.0, size=(b, l)).astype(np.float32)
+    lam = rng.uniform(0.1, 2.0, size=(b, 6)).astype(np.float32)
+    oldb = rng.uniform(0.1, 1.0, size=(b, l)).astype(np.float32)
+    oldb /= oldb.sum(-1, keepdims=True)
+    return msgs, mask, npot, lam, oldb
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 16, 128]),
+    l=st.sampled_from([2, 3, 5, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lbp_matches_ref(b, l, seed):
+    msgs, mask, npot, lam, oldb = _lbp_inputs(b, l, seed)
+    go, gb, gr = kernels.make_lbp(b, l)(msgs, mask, npot, lam, oldb)
+    wo, wb, wr = ref.lbp_ref(msgs, mask, npot, lam, oldb)
+    np.testing.assert_allclose(go, wo, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gb, wb, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gr, wr, rtol=1e-4, atol=1e-5)
+
+
+def test_lbp_outputs_are_distributions():
+    msgs, mask, npot, lam, oldb = _lbp_inputs(32, 5, 11)
+    out, belief, _ = kernels.make_lbp(32, 5)(msgs, mask, npot, lam, oldb)
+    np.testing.assert_allclose(np.asarray(belief).sum(-1), 1.0, rtol=1e-5)
+    live = np.asarray(out).sum(-1)[np.asarray(mask) > 0]
+    np.testing.assert_allclose(live, 1.0, rtol=1e-5)
+
+
+def test_lbp_uniform_messages_yield_node_potential():
+    """With uniform incoming messages, belief == normalized node potential."""
+    b, l = 8, 5
+    msgs = np.full((b, 6, l), 1.0 / l, dtype=np.float32)
+    mask = np.ones((b, 6), dtype=np.float32)
+    npot = RNG.uniform(0.1, 1.0, size=(b, l)).astype(np.float32)
+    lam = np.ones((b, 6), dtype=np.float32)
+    oldb = np.full((b, l), 1.0 / l, dtype=np.float32)
+    _, belief, _ = kernels.make_lbp(b, l)(msgs, mask, npot, lam, oldb)
+    want = npot / npot.sum(-1, keepdims=True)
+    np.testing.assert_allclose(belief, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# CoEM
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 8, 64]),
+    n=st.sampled_from([1, 4, 16, 64]),
+    k=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_coem_matches_ref(b, n, k, seed):
+    rng = np.random.default_rng(seed)
+    nbr = rng.uniform(0.0, 1.0, size=(b, n, k)).astype(np.float32)
+    nbr /= np.maximum(nbr.sum(-1, keepdims=True), 1e-9)
+    cnt = (rng.integers(0, 20, size=(b, n))).astype(np.float32)
+    cnt[:, 0] = np.maximum(cnt[:, 0], 1.0)
+    old = rng.uniform(0.1, 1.0, size=(b, k)).astype(np.float32)
+    old /= old.sum(-1, keepdims=True)
+    smooth = np.array([0.01], dtype=np.float32)
+    gd, gr = kernels.make_coem(b, n, k)(nbr, cnt, old, smooth)
+    wd, wr = ref.coem_ref(nbr, cnt, old, smooth)
+    np.testing.assert_allclose(gd, wd, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gr, wr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gd).sum(-1), 1.0, rtol=1e-5)
+
+
+def test_coem_chunked_accumulation_is_exact():
+    b, n, k = 4, 8, 8
+    rng = np.random.default_rng(5)
+    nbr = rng.uniform(size=(b, 2 * n, k)).astype(np.float32)
+    cnt = rng.integers(0, 10, size=(b, 2 * n)).astype(np.float32)
+    accum = kernels.make_coem_accum(b, n, k)
+    p1 = np.asarray(accum(nbr[:, :n], cnt[:, :n]))
+    p2 = np.asarray(accum(nbr[:, n:], cnt[:, n:]))
+    want = np.einsum("bnk,bn->bk", nbr, cnt)
+    np.testing.assert_allclose(p1 + p2, want, rtol=1e-4, atol=1e-5)

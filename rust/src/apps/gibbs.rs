@@ -1,0 +1,172 @@
+//! Gibbs sampling on a Markov Random Field (paper Sec. 5.4).
+//!
+//! Ising model: each vertex holds a binary spin; an update resamples the
+//! spin conditioned on the neighbors. The paper's point: Gibbs sampling
+//! *requires* sequential consistency for statistical correctness
+//! ("Strict sequential consistency is necessary to preserve statistical
+//! properties [22]") — so this app runs under the edge consistency model
+//! and is the stress test for the engines' exclusion guarantees.
+//!
+//! Randomness is derived deterministically from (vertex, sample counter),
+//! keeping the update function stateless as the abstraction demands.
+
+use crate::distributed::DataValue;
+use crate::engine::sync::FnSync;
+use crate::engine::{Consistency, Ctx, Scope, VertexProgram};
+use crate::graph::{Graph, GraphBuilder};
+use crate::util::Rng;
+
+/// Vertex data: spin + external field + marginal bookkeeping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GibbsVertex {
+    /// Current spin (0 or 1).
+    pub spin: u8,
+    /// External field (positive favors spin 1).
+    pub field: f32,
+    /// Count of spin-1 samples (for the running marginal).
+    pub ones: u64,
+    /// Total samples drawn at this vertex.
+    pub samples: u64,
+}
+
+impl DataValue for GibbsVertex {
+    fn wire_bytes(&self) -> u64 {
+        21
+    }
+}
+
+/// The Gibbs sampler program (Ising coupling on every edge).
+pub struct Gibbs {
+    /// Uniform coupling strength J.
+    pub coupling: f32,
+    /// Samples per vertex before the chain stops rescheduling itself.
+    pub target_samples: u64,
+    /// Seed mixed into the per-sample randomness.
+    pub seed: u64,
+}
+
+impl VertexProgram<GibbsVertex, ()> for Gibbs {
+    fn consistency(&self) -> Consistency {
+        Consistency::Edge
+    }
+
+    fn update(&self, scope: &mut Scope<GibbsVertex, ()>, ctx: &mut Ctx) {
+        // Conditional: P(s=1 | nbrs) = sigmoid(2*(field + J * sum(2s_u - 1)))
+        let mut h = scope.center().field;
+        for i in 0..scope.degree() {
+            h += self.coupling * (2.0 * scope.nbr(i).spin as f32 - 1.0);
+        }
+        let p1 = 1.0 / (1.0 + (-2.0 * h).exp());
+        let vid = scope.vertex() as u64;
+        let c = scope.center_mut();
+        // Deterministic per-(vertex, draw) randomness.
+        let mut rng =
+            Rng::new(self.seed ^ (vid << 32) ^ c.samples.wrapping_mul(0x2545F4914F6CDD1D));
+        c.spin = (rng.f32() < p1) as u8;
+        c.ones += c.spin as u64;
+        c.samples += 1;
+        if c.samples < self.target_samples {
+            ctx.schedule(scope.vertex(), 1.0);
+        }
+    }
+}
+
+/// Build the Ising grid from synthetic MRF data (spins start 0).
+pub fn build(data: &crate::datagen::MrfData) -> Graph<GibbsVertex, ()> {
+    let n = data.side * data.side;
+    let mut b = GraphBuilder::new();
+    b.add_vertices(n, |i| GibbsVertex {
+        spin: 0,
+        field: data.field[i],
+        ones: 0,
+        samples: 0,
+    });
+    for &(u, v) in &crate::datagen::grid2d_edges(data.side) {
+        b.add_edge(u, v, ());
+    }
+    b.build()
+}
+
+/// Mean-magnetization sync (diagnostic aggregate).
+pub fn magnetization_sync() -> FnSync<GibbsVertex> {
+    FnSync::new(
+        "magnetization",
+        vec![0.0, 0.0],
+        0,
+        |acc, _v, d: &GibbsVertex| {
+            if d.samples > 0 {
+                acc[0] += d.ones as f64 / d.samples as f64;
+                acc[1] += 1.0;
+            }
+        },
+        |acc| vec![acc[0] / acc[1].max(1.0)],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::shared::{self, SharedOpts};
+    use crate::scheduler::SweepScheduler;
+
+    #[test]
+    fn marginals_track_planted_field() {
+        let data = crate::datagen::mrf(12, 0.4, 3);
+        let g = build(&data);
+        let n = g.num_vertices();
+        let prog = Gibbs {
+            coupling: 0.4,
+            target_samples: 200,
+            seed: 17,
+        };
+        let (g, stats) = shared::run(
+            g,
+            &prog,
+            crate::apps::all_vertices(n),
+            vec![Box::new(magnetization_sync())],
+            Box::new(SweepScheduler::new(n)),
+            SharedOpts {
+                workers: 4,
+                ..Default::default()
+            },
+        );
+        assert_eq!(stats.updates, n as u64 * 200);
+        // The blob with positive field should have high marginals, the
+        // negative blob low ones.
+        let marg = |x: usize, y: usize| {
+            let d = g.vertex_data((x * 12 + y) as u32);
+            d.ones as f64 / d.samples as f64
+        };
+        let pos = marg(3, 3); // field ~ +
+        let neg = marg(8, 8); // field ~ -
+        assert!(pos > 0.7, "positive-field marginal {pos}");
+        assert!(neg < 0.3, "negative-field marginal {neg}");
+    }
+
+    #[test]
+    fn deterministic_given_single_worker() {
+        let data = crate::datagen::mrf(8, 0.3, 1);
+        let run = || {
+            let g = build(&data);
+            let n = g.num_vertices();
+            let prog = Gibbs {
+                coupling: 0.3,
+                target_samples: 50,
+                seed: 5,
+            };
+            let (g, _) = shared::run(
+                g,
+                &prog,
+                crate::apps::all_vertices(n),
+                vec![],
+                Box::new(SweepScheduler::new(n)),
+                SharedOpts {
+                    workers: 1,
+                    ..Default::default()
+                },
+            );
+            g.vertex_ids().map(|v| g.vertex_data(v).ones).collect::<Vec<u64>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

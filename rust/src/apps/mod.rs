@@ -1,0 +1,34 @@
+//! The paper's applications (Sec. 5), each a [`crate::engine::VertexProgram`]:
+//!
+//! * [`pagerank`] — the running example (Sec. 3, Alg. 1),
+//! * [`als`] — Netflix movie recommendation via Alternating Least Squares
+//!   (Sec. 5.1; chromatic engine, bipartite 2-coloring),
+//! * [`coseg`] — video cosegmentation via Loopy BP + GMM sync (Sec. 5.2;
+//!   locking engine, residual-priority scheduling),
+//! * [`ner`] — Named Entity Recognition via CoEM (Sec. 5.3; chromatic),
+//! * [`gibbs`] — Gibbs sampling on an MRF (Sec. 5.4; strict sequential
+//!   consistency).
+//!
+//! Every app has two numeric paths with identical semantics: a *native*
+//! Rust path (`util::matrix`) and a *PJRT* path that gathers update
+//! batches into the padded tiles expected by the AOT-compiled Pallas
+//! kernels (`runtime::exec`). `use_pjrt: true` requires `make artifacts`.
+
+pub mod als;
+pub mod coseg;
+pub mod gibbs;
+pub mod ner;
+pub mod pagerank;
+
+use crate::graph::VertexId;
+use crate::scheduler::Task;
+
+/// Initial task set touching every vertex once (the standard kickoff).
+pub fn all_vertices(n: usize) -> Vec<Task> {
+    (0..n as VertexId)
+        .map(|vertex| Task {
+            vertex,
+            priority: 1.0,
+        })
+        .collect()
+}

@@ -1,0 +1,283 @@
+//! PageRank — the paper's running example (Ex. 3.1, Alg. 1).
+//!
+//! The data graph mirrors the web graph: vertex data is the rank estimate,
+//! edge data the directed link weights (an undirected edge carries both
+//! directions, disambiguated by endpoint order, the scheme the paper
+//! sketches in Sec. 3.1). The update is adaptive: neighbors are
+//! rescheduled only when the rank moved by more than `eps` — exactly
+//! Alg. 1.
+//!
+//! The PJRT path gathers update batches into the `pagerank_b256_n32`
+//! artifact's `[256, 32]` tiles; degrees above 32 are handled by chunk
+//! rounds feeding the previous partial sum back through `base` (the
+//! reduction is linear).
+
+use crate::distributed::DataValue;
+use crate::engine::{Consistency, Ctx, Scope, VertexProgram};
+use crate::graph::{Graph, GraphBuilder};
+use crate::runtime::{self, Input};
+
+/// Vertex data: current rank estimate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrVertex {
+    /// Current PageRank estimate R(v).
+    pub rank: f32,
+}
+
+impl DataValue for PrVertex {
+    fn wire_bytes(&self) -> u64 {
+        4
+    }
+}
+
+/// Edge data: both directed weights, keyed by endpoint order
+/// (`to_lo` = weight of the link pointing at the smaller vertex id).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrEdge {
+    /// Weight of the link toward the smaller endpoint id (damping folded).
+    pub to_lo: f32,
+    /// Weight of the link toward the larger endpoint id (damping folded).
+    pub to_hi: f32,
+}
+
+impl DataValue for PrEdge {
+    fn wire_bytes(&self) -> u64 {
+        8
+    }
+}
+
+/// The PageRank vertex program.
+pub struct PageRank {
+    /// Jump probability alpha.
+    pub alpha: f32,
+    /// Reschedule threshold epsilon (Alg. 1).
+    pub eps: f32,
+    /// Vertex count (for the alpha/n base term).
+    pub n: usize,
+    /// Use the AOT PJRT kernel path.
+    pub use_pjrt: bool,
+}
+
+impl PageRank {
+    /// Weight of the link from scope-neighbor slot `i` into the center.
+    #[inline]
+    fn weight_in(scope: &Scope<PrVertex, PrEdge>, i: usize) -> f32 {
+        if scope.vertex() < scope.nbr_id(i) {
+            scope.edge(i).to_lo
+        } else {
+            scope.edge(i).to_hi
+        }
+    }
+
+    fn base(&self) -> f32 {
+        self.alpha / self.n as f32
+    }
+
+    fn finish(&self, scope: &mut Scope<PrVertex, PrEdge>, ctx: &mut Ctx, new_rank: f32) {
+        let old = scope.center().rank;
+        scope.center_mut().rank = new_rank;
+        let delta = (new_rank - old).abs();
+        if delta > self.eps {
+            for i in 0..scope.degree() {
+                ctx.schedule(scope.nbr_id(i), delta as f64);
+            }
+        }
+    }
+}
+
+impl VertexProgram<PrVertex, PrEdge> for PageRank {
+    fn consistency(&self) -> Consistency {
+        Consistency::Edge
+    }
+
+    fn update(&self, scope: &mut Scope<PrVertex, PrEdge>, ctx: &mut Ctx) {
+        // R(v) = alpha/n + (1-alpha) * sum w_uv R(u)   [damping in weights]
+        let mut acc = self.base();
+        for i in 0..scope.degree() {
+            acc += Self::weight_in(scope, i) * scope.nbr(i).rank;
+        }
+        self.finish(scope, ctx, acc);
+    }
+
+    fn batch_width(&self) -> usize {
+        if self.use_pjrt {
+            256
+        } else {
+            1
+        }
+    }
+
+    fn update_batch(&self, scopes: &mut [&mut Scope<PrVertex, PrEdge>], ctx: &mut Ctx) {
+        if !self.use_pjrt {
+            for s in scopes {
+                self.update(s, ctx);
+            }
+            return;
+        }
+        let (bt, nt) = (256usize, 32usize);
+        debug_assert!(scopes.len() <= bt);
+        let chunks = scopes
+            .iter()
+            .map(|s| s.degree().div_ceil(nt))
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let mut base: Vec<f32> = vec![0.0; bt];
+        for (b, s) in scopes.iter().enumerate() {
+            let _ = s;
+            base[b] = self.base();
+        }
+        let mut ranks = vec![0.0f32; bt * nt];
+        let mut weights = vec![0.0f32; bt * nt];
+        for c in 0..chunks {
+            ranks.iter_mut().for_each(|x| *x = 0.0);
+            weights.iter_mut().for_each(|x| *x = 0.0);
+            for (b, s) in scopes.iter().enumerate() {
+                let lo = c * nt;
+                let hi = ((c + 1) * nt).min(s.degree());
+                if lo >= hi {
+                    continue;
+                }
+                for (j, i) in (lo..hi).enumerate() {
+                    ranks[b * nt + j] = s.nbr(i).rank;
+                    weights[b * nt + j] = Self::weight_in(s, i);
+                }
+            }
+            let out = runtime::exec(
+                "pagerank_b256_n32",
+                &[
+                    Input::new(&ranks, &[bt as i64, nt as i64]),
+                    Input::new(&weights, &[bt as i64, nt as i64]),
+                    Input::new(&base, &[bt as i64]),
+                ],
+            )
+            .expect("pagerank artifact");
+            base[..].copy_from_slice(&out[0]);
+        }
+        for (b, s) in scopes.iter_mut().enumerate() {
+            self.finish(s, ctx, base[b]);
+        }
+    }
+}
+
+/// Build the PageRank data graph from an undirected edge list: every edge
+/// is a bidirectional link; the weight of `u -> v` is `(1-alpha)/deg(u)`.
+/// Initial ranks are uniform `1/n`.
+pub fn build(n: usize, edges: &[(u32, u32)], alpha: f32) -> Graph<PrVertex, PrEdge> {
+    let mut deg = vec![0u32; n];
+    for &(u, v) in edges {
+        deg[u as usize] += 1;
+        deg[v as usize] += 1;
+    }
+    let mut b = GraphBuilder::with_capacity(n, edges.len());
+    b.add_vertices(n, |_| PrVertex { rank: 1.0 / n as f32 });
+    for &(u, v) in edges {
+        let (lo, hi) = (u.min(v), u.max(v));
+        b.add_edge(
+            lo,
+            hi,
+            PrEdge {
+                // link hi -> lo weighted by hi's out-degree, and vice versa
+                to_lo: (1.0 - alpha) / deg[hi as usize] as f32,
+                to_hi: (1.0 - alpha) / deg[lo as usize] as f32,
+            },
+        );
+    }
+    b.build()
+}
+
+/// Total-rank sync (should converge to ~1.0 — a paper-style global probe).
+pub fn total_rank_sync() -> crate::engine::sync::FnSync<PrVertex> {
+    crate::engine::sync::FnSync::new(
+        "total_rank",
+        vec![0.0],
+        0,
+        |acc, _v, d: &PrVertex| acc[0] += d.rank as f64,
+        |acc| acc,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::shared::{self, SharedOpts};
+    use crate::scheduler::FifoScheduler;
+
+    fn tiny() -> Graph<PrVertex, PrEdge> {
+        // 0 -- 1 -- 2 triangle-ish chain with a hub.
+        let edges = vec![(0, 1), (1, 2), (2, 0), (0, 3)];
+        build(4, &edges, 0.15)
+    }
+
+    #[test]
+    fn ranks_converge_and_sum_to_one() {
+        let g = tiny();
+        let n = g.num_vertices();
+        let prog = PageRank {
+            alpha: 0.15,
+            eps: 1e-7,
+            n,
+            use_pjrt: false,
+        };
+        let (g, stats) = shared::run(
+            g,
+            &prog,
+            crate::apps::all_vertices(n),
+            vec![Box::new(total_rank_sync())],
+            Box::new(FifoScheduler::new(n)),
+            SharedOpts {
+                workers: 2,
+                max_updates: 200_000,
+                ..Default::default()
+            },
+        );
+        assert!(stats.updates > 4, "should iterate: {}", stats.updates);
+        let total: f32 = g.vertex_ids().map(|v| g.vertex_data(v).rank).sum();
+        assert!((total - 1.0).abs() < 1e-3, "total={total}");
+        // Hub (vertex 0) outranks the leaf (vertex 3).
+        assert!(g.vertex_data(0).rank > g.vertex_data(3).rank);
+    }
+
+    #[test]
+    fn pjrt_batch_matches_native_under_chromatic() {
+        if !runtime::available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        use crate::engine::chromatic::{self, ChromaticOpts};
+        use crate::partition::{Coloring, Partition};
+        let n = 400;
+        let edges = crate::datagen::web_graph(n, 6, 11);
+        let run = |use_pjrt: bool| {
+            let g = build(n, &edges, 0.15);
+            let coloring = Coloring::greedy(&g);
+            let partition = Partition::random(n, 2, 5);
+            let prog = PageRank {
+                alpha: 0.15,
+                eps: 1e-6,
+                n,
+                use_pjrt,
+            };
+            let (g, stats) = chromatic::run(
+                g,
+                &coloring,
+                &partition,
+                &prog,
+                crate::apps::all_vertices(n),
+                vec![],
+                ChromaticOpts {
+                    machines: 2,
+                    max_sweeps: 10,
+                    ..Default::default()
+                },
+            );
+            assert!(stats.updates > 0);
+            g.vertex_ids().map(|v| g.vertex_data(v).rank).collect::<Vec<f32>>()
+        };
+        let native = run(false);
+        let pjrt = run(true);
+        for (i, (a, b)) in native.iter().zip(&pjrt).enumerate() {
+            assert!((a - b).abs() < 1e-4, "v{i}: native={a} pjrt={b}");
+        }
+    }
+}

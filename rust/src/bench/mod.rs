@@ -1,0 +1,115 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! Provides warmup + timed iterations + robust statistics, used by the
+//! `benches/` targets (built with `harness = false`) and the §Perf pass.
+//! Results print in a criterion-like one-line format and can be exported
+//! as CSV.
+
+use std::time::Instant;
+
+use crate::util::stats::{median, percentile};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// p10 seconds.
+    pub p10_s: f64,
+    /// p90 seconds.
+    pub p90_s: f64,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// criterion-like display line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  ({} iters)",
+            self.name,
+            fmt_time(self.p10_s),
+            fmt_time(self.median_s),
+            fmt_time(self.p90_s),
+            self.iters
+        )
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.2} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to `target_time`.
+pub fn bench(name: &str, target_time_s: f64, mut f: impl FnMut()) -> BenchResult {
+    // Warmup + estimate.
+    let warm_start = Instant::now();
+    f();
+    let one = warm_start.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_time_s / one) as usize).clamp(5, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        median_s: median(&samples),
+        p10_s: percentile(&samples, 10.0),
+        p90_s: percentile(&samples, 90.0),
+        iters,
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Benchmark a batch operation, reporting per-item time.
+pub fn bench_throughput(
+    name: &str,
+    target_time_s: f64,
+    items_per_call: usize,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    let mut r = bench(name, target_time_s, &mut f);
+    let per_item = r.median_s / items_per_call.max(1) as f64;
+    println!(
+        "{:<44}   -> {} per item ({:.0} items/s)",
+        "", fmt_time(per_item), 1.0 / per_item
+    );
+    r.median_s = per_item;
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let r = bench("noop-ish", 0.02, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.median_s > 0.0);
+        assert!(r.p10_s <= r.p90_s);
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains(" s"));
+    }
+}

@@ -1,0 +1,376 @@
+//! Synthetic dataset generators (DESIGN.md §Substitutions).
+//!
+//! The paper's datasets (Netflix ratings, a web crawl for NER, 1,740
+//! frames of high-resolution video) are not redistributable; these
+//! generators produce planted-structure equivalents that exercise the same
+//! code paths and preserve the behaviours the evaluation depends on:
+//! bipartite low-rank structure for ALS, dense power-law bipartite
+//! co-occurrence for CoEM, and a 3-D grid with smooth label regions for
+//! CoSeg. All generators are deterministic in their seed.
+
+use crate::util::Rng;
+
+/// A synthetic Netflix-style ratings dataset with planted low-rank
+/// structure: rating(u, m) = <p_u, q_m> + noise, clamped to [1, 5].
+pub struct NetflixData {
+    /// Number of users.
+    pub users: usize,
+    /// Number of movies.
+    pub movies: usize,
+    /// (user, movie, rating) triples (unique pairs).
+    pub ratings: Vec<(u32, u32, f32)>,
+    /// Planted rank.
+    pub true_rank: usize,
+}
+
+/// Generate planted low-rank ratings. Movie popularity is power-law
+/// distributed (like the real Netflix data); each user rates
+/// `ratings_per_user` distinct movies.
+pub fn netflix(
+    users: usize,
+    movies: usize,
+    ratings_per_user: usize,
+    true_rank: usize,
+    noise: f32,
+    seed: u64,
+) -> NetflixData {
+    let mut rng = Rng::new(seed);
+    // Planted factors are zero-mean so the signal genuinely has rank
+    // `true_rank` (all-positive factors would collapse to a near-rank-1
+    // matrix dominated by the row/column means, making d irrelevant).
+    // Var(<p, q>) = d * s^4, so s = (0.8^2 / d)^(1/4) gives the dot
+    // product a ~0.8 standard deviation around the 3.0 mid-scale.
+    let scale = (0.64f32 / true_rank as f32).powf(0.25);
+    let p: Vec<Vec<f32>> = (0..users)
+        .map(|_| (0..true_rank).map(|_| rng.normal() * scale).collect())
+        .collect();
+    let q: Vec<Vec<f32>> = (0..movies)
+        .map(|_| (0..true_rank).map(|_| rng.normal() * scale).collect())
+        .collect();
+    let mut ratings = Vec::with_capacity(users * ratings_per_user);
+    let mut seen = std::collections::HashSet::new();
+    for u in 0..users {
+        let mut tries = 0;
+        let mut count = 0;
+        while count < ratings_per_user && tries < ratings_per_user * 20 {
+            tries += 1;
+            let m = rng.powerlaw(movies, 1.5);
+            if !seen.insert((u as u32, m as u32)) {
+                continue;
+            }
+            let dot: f32 = p[u].iter().zip(&q[m]).map(|(a, b)| a * b).sum();
+            let r = (3.0 + dot + rng.normal() * noise).clamp(1.0, 5.0);
+            ratings.push((u as u32, m as u32, r));
+            count += 1;
+        }
+    }
+    NetflixData {
+        users,
+        movies,
+        ratings,
+        true_rank,
+    }
+}
+
+/// A power-law undirected web-like graph for PageRank: edge list over `n`
+/// vertices, preferential-attachment flavored.
+pub fn web_graph(n: usize, avg_degree: usize, seed: u64) -> Vec<(u32, u32)> {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(n * avg_degree / 2);
+    let mut seen = std::collections::HashSet::new();
+    let target = n * avg_degree / 2;
+    let mut tries = 0;
+    while edges.len() < target && tries < target * 30 {
+        tries += 1;
+        let u = rng.gen_range(n) as u32;
+        // Power-law target: low ids are hubs.
+        let v = rng.powerlaw(n, 1.8) as u32;
+        if u == v {
+            continue;
+        }
+        let key = (u.min(v), u.max(v));
+        if seen.insert(key) {
+            edges.push(key);
+        }
+    }
+    edges
+}
+
+/// Synthetic 3-D video grid for CoSeg.
+pub struct VideoData {
+    /// Frames (time axis).
+    pub frames: usize,
+    /// Super-pixel grid width per frame.
+    pub width: usize,
+    /// Super-pixel grid height per frame.
+    pub height: usize,
+    /// Number of labels.
+    pub labels: usize,
+    /// Per-super-pixel appearance feature ([frames*width*height][labels]).
+    pub appearance: Vec<Vec<f32>>,
+    /// Ground-truth label per super-pixel.
+    pub truth: Vec<u8>,
+}
+
+/// Vertex index of (frame, x, y) in the flattened grid.
+pub fn grid_index(frames_dims: (usize, usize, usize), f: usize, x: usize, y: usize) -> usize {
+    let (_, w, h) = frames_dims;
+    f * w * h + x * h + y
+}
+
+/// Generate a video with `labels` smooth regions (horizontal bands that
+/// drift over time) and noisy appearance features — the planted analogue
+/// of sky/building/grass/... regions.
+pub fn video(
+    frames: usize,
+    width: usize,
+    height: usize,
+    labels: usize,
+    noise: f32,
+    seed: u64,
+) -> VideoData {
+    let mut rng = Rng::new(seed);
+    let n = frames * width * height;
+    let mut appearance = Vec::with_capacity(n);
+    let mut truth = Vec::with_capacity(n);
+    for f in 0..frames {
+        // Band boundaries drift slowly with time.
+        let drift = (f as f32 * 0.07).sin() * 0.1;
+        for _x in 0..width {
+            for y in 0..height {
+                let pos = y as f32 / height as f32 + drift;
+                let lab = ((pos.clamp(0.0, 0.999)) * labels as f32) as usize % labels;
+                let mut feat = vec![0.0f32; labels];
+                for (l, fv) in feat.iter_mut().enumerate() {
+                    *fv = if l == lab { 1.0 } else { 0.0 } + rng.normal() * noise;
+                }
+                appearance.push(feat);
+                truth.push(lab as u8);
+            }
+        }
+    }
+    VideoData {
+        frames,
+        width,
+        height,
+        labels,
+        appearance,
+        truth,
+    }
+}
+
+/// Edges of the 3-D grid (6-neighborhood: x±1, y±1, t±1).
+pub fn video_edges(frames: usize, width: usize, height: usize) -> Vec<(u32, u32)> {
+    let dims = (frames, width, height);
+    let mut edges = Vec::new();
+    for f in 0..frames {
+        for x in 0..width {
+            for y in 0..height {
+                let v = grid_index(dims, f, x, y) as u32;
+                if y + 1 < height {
+                    edges.push((v, grid_index(dims, f, x, y + 1) as u32));
+                }
+                if x + 1 < width {
+                    edges.push((v, grid_index(dims, f, x + 1, y) as u32));
+                }
+                if f + 1 < frames {
+                    edges.push((v, grid_index(dims, f + 1, x, y) as u32));
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// Synthetic NER/CoEM bipartite co-occurrence data.
+pub struct NerData {
+    /// Noun-phrase count.
+    pub nps: usize,
+    /// Context count.
+    pub contexts: usize,
+    /// Entity type count.
+    pub types: usize,
+    /// (np, context, co-occurrence count) triples.
+    pub cooccur: Vec<(u32, u32, f32)>,
+    /// Ground-truth type per noun-phrase.
+    pub np_truth: Vec<u8>,
+    /// Seed labels: np index → type (the small pre-labeled set).
+    pub seeds: Vec<(u32, u8)>,
+}
+
+/// Generate CoEM data: each noun-phrase and context has a latent type;
+/// co-occurrence mass concentrates within-type (power-law context
+/// popularity, like web contexts).
+pub fn ner(
+    nps: usize,
+    contexts: usize,
+    edges_per_np: usize,
+    types: usize,
+    seed_fraction: f64,
+    seed: u64,
+) -> NerData {
+    let mut rng = Rng::new(seed);
+    let np_truth: Vec<u8> = (0..nps).map(|_| rng.gen_range(types) as u8).collect();
+    let ctx_truth: Vec<u8> = (0..contexts).map(|_| rng.gen_range(types) as u8).collect();
+    // Within-type contexts per type for fast sampling.
+    let mut by_type: Vec<Vec<u32>> = vec![Vec::new(); types];
+    for (c, &t) in ctx_truth.iter().enumerate() {
+        by_type[t as usize].push(c as u32);
+    }
+    let mut cooccur = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for np in 0..nps {
+        let t = np_truth[np] as usize;
+        for _ in 0..edges_per_np {
+            // 80% within-type, 20% random (noise).
+            let c = if rng.chance(0.8) && !by_type[t].is_empty() {
+                by_type[t][rng.powerlaw(by_type[t].len(), 1.5)]
+            } else {
+                rng.gen_range(contexts) as u32
+            };
+            if seen.insert((np as u32, c)) {
+                cooccur.push((np as u32, c, rng.gen_range(9) as f32 + 1.0));
+            }
+        }
+    }
+    let seeds: Vec<(u32, u8)> = (0..nps)
+        .filter(|_| rng.chance(seed_fraction))
+        .map(|np| (np as u32, np_truth[np]))
+        .collect();
+    NerData {
+        nps,
+        contexts,
+        types,
+        cooccur,
+        np_truth,
+        seeds,
+    }
+}
+
+/// A 2-D Ising-like Markov Random Field for Gibbs sampling: grid with
+/// per-vertex external field and uniform coupling.
+pub struct MrfData {
+    /// Grid side.
+    pub side: usize,
+    /// External field per vertex (+ favors 1, − favors 0).
+    pub field: Vec<f32>,
+    /// Coupling strength.
+    pub coupling: f32,
+}
+
+/// Generate an Ising MRF with a smooth planted field.
+pub fn mrf(side: usize, coupling: f32, seed: u64) -> MrfData {
+    let mut rng = Rng::new(seed);
+    let field = (0..side * side)
+        .map(|i| {
+            let (x, y) = (i / side, i % side);
+            // Two planted blobs of opposite polarity + noise.
+            let f1 = (-(((x as f32 - side as f32 * 0.3).powi(2)
+                + (y as f32 - side as f32 * 0.3).powi(2))
+                / (side as f32 * 2.0)))
+                .exp();
+            let f2 = (-(((x as f32 - side as f32 * 0.7).powi(2)
+                + (y as f32 - side as f32 * 0.7).powi(2))
+                / (side as f32 * 2.0)))
+                .exp();
+            (f1 - f2) * 2.0 + rng.normal() * 0.1
+        })
+        .collect();
+    MrfData {
+        side,
+        field,
+        coupling,
+    }
+}
+
+/// Edges of a 2-D grid (4-neighborhood).
+pub fn grid2d_edges(side: usize) -> Vec<(u32, u32)> {
+    let mut edges = Vec::new();
+    for x in 0..side {
+        for y in 0..side {
+            let v = (x * side + y) as u32;
+            if y + 1 < side {
+                edges.push((v, v + 1));
+            }
+            if x + 1 < side {
+                edges.push((v, v + side as u32));
+            }
+        }
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn netflix_is_deterministic_and_ranged() {
+        let a = netflix(100, 50, 10, 5, 0.2, 7);
+        let b = netflix(100, 50, 10, 5, 0.2, 7);
+        assert_eq!(a.ratings, b.ratings);
+        assert!(a.ratings.len() >= 900);
+        assert!(a.ratings.iter().all(|&(_, _, r)| (1.0..=5.0).contains(&r)));
+        // Unique (user, movie) pairs.
+        let mut set = std::collections::HashSet::new();
+        assert!(a.ratings.iter().all(|&(u, m, _)| set.insert((u, m))));
+    }
+
+    #[test]
+    fn web_graph_is_powerlaw_ish() {
+        let edges = web_graph(2000, 8, 3);
+        assert!(edges.len() > 6000);
+        let mut deg = vec![0usize; 2000];
+        for &(u, v) in &edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let max = *deg.iter().max().unwrap();
+        let mean = deg.iter().sum::<usize>() / 2000;
+        assert!(max > mean * 5, "hubs expected: max={max} mean={mean}");
+    }
+
+    #[test]
+    fn video_grid_shapes_and_smoothness() {
+        // With L=5 bands over height 26, (25-4)/25 = 84% of vertical
+        // neighbor pairs share a label.
+        let v = video(4, 10, 26, 5, 0.1, 1);
+        assert_eq!(v.appearance.len(), 4 * 10 * 26);
+        assert_eq!(v.truth.len(), 1040);
+        let dims = (4, 10, 26);
+        let mut same = 0;
+        let mut total = 0;
+        for f in 0..4 {
+            for x in 0..10 {
+                for y in 0..25 {
+                    total += 1;
+                    if v.truth[grid_index(dims, f, x, y)]
+                        == v.truth[grid_index(dims, f, x, y + 1)]
+                    {
+                        same += 1;
+                    }
+                }
+            }
+        }
+        assert!(same * 10 > total * 7, "smooth bands: {same}/{total}");
+        let edges = video_edges(4, 10, 26);
+        // 6-neighborhood edge count check.
+        let expected = 4 * 10 * 25 + 4 * 9 * 26 + 3 * 10 * 26;
+        assert_eq!(edges.len(), expected);
+    }
+
+    #[test]
+    fn ner_within_type_concentration() {
+        let d = ner(200, 100, 20, 4, 0.1, 5);
+        assert!(!d.seeds.is_empty());
+        assert!(d.cooccur.len() > 2000);
+        assert!(d.np_truth.len() == 200);
+    }
+
+    #[test]
+    fn mrf_and_grid() {
+        let m = mrf(16, 1.0, 2);
+        assert_eq!(m.field.len(), 256);
+        assert_eq!(grid2d_edges(16).len(), 2 * 16 * 15);
+    }
+}

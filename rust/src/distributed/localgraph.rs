@@ -1,0 +1,280 @@
+//! Machine-local view of the distributed data graph (paper Sec. 4.1).
+//!
+//! Each machine materializes its **local partition**: the vertices it owns
+//! plus **ghosts** — copies of boundary vertices and edges adjacent to the
+//! partition — which "act as local caches for their true counterparts
+//! across the network" with version-based coherence. All engine data access
+//! goes through local indices; only the coherence protocols speak global
+//! ids.
+
+use std::collections::HashMap;
+
+use crate::graph::{EdgeId, Graph, VertexId};
+use crate::partition::{MachineId, Partition};
+
+/// Local vertex index (dense, machine-private).
+pub type LocalVid = u32;
+/// Local edge index (dense, machine-private).
+pub type LocalEid = u32;
+
+/// One machine's partition + ghosts.
+pub struct LocalGraph<V, E> {
+    /// This machine.
+    pub machine: MachineId,
+    /// Local → global vertex id. Indices `< owned` are owned, the rest are
+    /// ghosts.
+    pub l2g: Vec<VertexId>,
+    /// Global → local vertex id (only defined for local vertices).
+    pub g2l: HashMap<VertexId, LocalVid>,
+    /// Number of owned vertices (prefix of `l2g`).
+    pub owned: usize,
+    /// Owner machine of each local vertex (self for the owned prefix).
+    pub owner: Vec<MachineId>,
+    /// Vertex data copies (owned = authoritative, ghosts = cached).
+    pub vdata: Vec<V>,
+    /// Vertex data versions (bumped on write; ghosts track last applied).
+    pub vversion: Vec<u64>,
+    /// CSR offsets over owned vertices only (scopes are assembled for
+    /// owned centers; ghosts need no adjacency).
+    pub adj_offsets: Vec<u32>,
+    /// CSR payload: (local neighbor, local edge).
+    pub adj: Vec<(LocalVid, LocalEid)>,
+    /// Local edge → global edge id.
+    pub le2g: Vec<EdgeId>,
+    /// Global edge → local edge id.
+    pub ge2l: HashMap<EdgeId, LocalEid>,
+    /// Edge data copies.
+    pub edata: Vec<E>,
+    /// Edge data versions.
+    pub eversion: Vec<u64>,
+    /// For each owned vertex: machines holding it as a ghost (sorted).
+    pub mirrors: Vec<Vec<MachineId>>,
+    /// For each local edge: the other machine holding a copy, if any.
+    pub edge_mirror: Vec<Option<MachineId>>,
+}
+
+impl<V: Clone, E: Clone> LocalGraph<V, E> {
+    /// Build machine `m`'s local graph from the global graph + partition.
+    /// (The paper builds this by merging atom files; in-process we read
+    /// from the already-loaded global graph, which models the same
+    /// result.)
+    pub fn build(g: &Graph<V, E>, part: &Partition, m: MachineId) -> Self {
+        let mut l2g: Vec<VertexId> = Vec::new();
+        let mut g2l: HashMap<VertexId, LocalVid> = HashMap::new();
+        // Owned prefix.
+        for v in g.vertex_ids() {
+            if part.owner(v) == m {
+                g2l.insert(v, l2g.len() as LocalVid);
+                l2g.push(v);
+            }
+        }
+        let owned = l2g.len();
+        // Ghosts: neighbors of owned vertices owned elsewhere.
+        for i in 0..owned {
+            let v = l2g[i];
+            for &(u, _) in g.neighbors(v) {
+                if part.owner(u) != m && !g2l.contains_key(&u) {
+                    g2l.insert(u, l2g.len() as LocalVid);
+                    l2g.push(u);
+                }
+            }
+        }
+        // Local edges: every global edge incident to an owned vertex.
+        let mut le2g: Vec<EdgeId> = Vec::new();
+        let mut ge2l: HashMap<EdgeId, LocalEid> = HashMap::new();
+        let mut adj_offsets = vec![0u32; owned + 1];
+        let mut adj: Vec<(LocalVid, LocalEid)> = Vec::new();
+        for i in 0..owned {
+            let v = l2g[i];
+            for &(u, e) in g.neighbors(v) {
+                let le = *ge2l.entry(e).or_insert_with(|| {
+                    le2g.push(e);
+                    (le2g.len() - 1) as LocalEid
+                });
+                adj.push((g2l[&u], le));
+            }
+            adj_offsets[i + 1] = adj.len() as u32;
+        }
+        // Data copies.
+        let vdata: Vec<V> = l2g.iter().map(|&v| g.vertex_data(v).clone()).collect();
+        let edata: Vec<E> = le2g.iter().map(|&e| g.edge_data(e).clone()).collect();
+        let owner: Vec<MachineId> = l2g.iter().map(|&v| part.owner(v)).collect();
+        // Mirrors of owned vertices: owners of their (distinct) remote
+        // neighbors.
+        let mut mirrors = vec![Vec::new(); owned];
+        for i in 0..owned {
+            let v = l2g[i];
+            let mut ms: Vec<MachineId> = g
+                .neighbors(v)
+                .iter()
+                .map(|&(u, _)| part.owner(u))
+                .filter(|&o| o != m)
+                .collect();
+            ms.sort_unstable();
+            ms.dedup();
+            mirrors[i] = ms;
+        }
+        // Edge mirrors: an edge incident to an owned vertex is also held by
+        // the other endpoint's owner when that differs.
+        let edge_mirror: Vec<Option<MachineId>> = le2g
+            .iter()
+            .map(|&e| {
+                let (a, b) = g.endpoints(e);
+                let (oa, ob) = (part.owner(a), part.owner(b));
+                if oa == m && ob != m {
+                    Some(ob)
+                } else if ob == m && oa != m {
+                    Some(oa)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let n_local = l2g.len();
+        let n_edges = le2g.len();
+        LocalGraph {
+            machine: m,
+            l2g,
+            g2l,
+            owned,
+            owner,
+            vdata,
+            vversion: vec![0; n_local],
+            adj_offsets,
+            adj,
+            le2g,
+            ge2l,
+            edata,
+            eversion: vec![0; n_edges],
+            mirrors,
+            edge_mirror,
+        }
+    }
+
+    /// Whether local vertex `lv` is owned by this machine.
+    #[inline]
+    pub fn is_owned(&self, lv: LocalVid) -> bool {
+        (lv as usize) < self.owned
+    }
+
+    /// Neighbors of owned local vertex `lv`.
+    #[inline]
+    pub fn neighbors(&self, lv: LocalVid) -> &[(LocalVid, LocalEid)] {
+        let i = lv as usize;
+        debug_assert!(i < self.owned);
+        &self.adj[self.adj_offsets[i] as usize..self.adj_offsets[i + 1] as usize]
+    }
+
+    /// Degree of owned local vertex `lv`.
+    #[inline]
+    pub fn degree(&self, lv: LocalVid) -> usize {
+        let i = lv as usize;
+        (self.adj_offsets[i + 1] - self.adj_offsets[i]) as usize
+    }
+
+    /// Apply a remote vertex-data write (ghost coherence).
+    pub fn apply_vertex(&mut self, v: VertexId, version: u64, data: V) {
+        if let Some(&lv) = self.g2l.get(&v) {
+            debug_assert!(
+                version > self.vversion[lv as usize],
+                "stale ghost write: v={v} incoming={version} have={}",
+                self.vversion[lv as usize]
+            );
+            self.vdata[lv as usize] = data;
+            self.vversion[lv as usize] = version;
+        }
+    }
+
+    /// Apply a remote edge-data write.
+    pub fn apply_edge(&mut self, e: EdgeId, version: u64, data: E) {
+        if let Some(&le) = self.ge2l.get(&e) {
+            debug_assert!(version > self.eversion[le as usize]);
+            self.edata[le as usize] = data;
+            self.eversion[le as usize] = version;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// 2-machine split of a path 0-1-2-3-4-5: machine 0 owns {0,1,2}.
+    fn setup() -> (Graph<u32, u32>, Partition) {
+        let mut b = GraphBuilder::new();
+        b.add_vertices(6, |i| i as u32 * 10);
+        for i in 0..5u32 {
+            b.add_edge(i, i + 1, 100 + i);
+        }
+        let g = b.build();
+        let part = Partition::from_assignment(vec![0, 0, 0, 1, 1, 1], 2);
+        (g, part)
+    }
+
+    #[test]
+    fn ghosts_are_boundary_only() {
+        let (g, part) = setup();
+        let lg: LocalGraph<u32, u32> = LocalGraph::build(&g, &part, 0);
+        assert_eq!(lg.owned, 3);
+        // Machine 0's ghosts: vertex 3 only (neighbor of owned 2).
+        assert_eq!(lg.l2g.len(), 4);
+        assert_eq!(lg.l2g[3], 3);
+        assert!(!lg.is_owned(3));
+        assert_eq!(lg.owner[3], 1);
+        // Data copied correctly.
+        assert_eq!(lg.vdata[3], 30);
+    }
+
+    #[test]
+    fn local_edges_cover_incident() {
+        let (g, part) = setup();
+        let lg: LocalGraph<u32, u32> = LocalGraph::build(&g, &part, 0);
+        // Edges 0-1, 1-2, 2-3 are local; 3-4, 4-5 are not.
+        assert_eq!(lg.le2g.len(), 3);
+        let cross = lg.ge2l[&2]; // edge 2-3
+        assert_eq!(lg.edge_mirror[cross as usize], Some(1));
+        let inner = lg.ge2l[&0];
+        assert_eq!(lg.edge_mirror[inner as usize], None);
+    }
+
+    #[test]
+    fn mirrors_computed() {
+        let (g, part) = setup();
+        let lg: LocalGraph<u32, u32> = LocalGraph::build(&g, &part, 0);
+        // Owned vertex 2 (local 2) borders machine 1.
+        assert_eq!(lg.mirrors[2], vec![1]);
+        assert!(lg.mirrors[0].is_empty());
+        assert!(lg.mirrors[1].is_empty());
+    }
+
+    #[test]
+    fn coherence_apply() {
+        let (g, part) = setup();
+        let mut lg: LocalGraph<u32, u32> = LocalGraph::build(&g, &part, 0);
+        lg.apply_vertex(3, 1, 999);
+        assert_eq!(lg.vdata[3], 999);
+        assert_eq!(lg.vversion[3], 1);
+        // Unknown vertex is ignored (not ghosted here).
+        lg.apply_vertex(5, 1, 1);
+        assert!(!lg.g2l.contains_key(&5));
+    }
+
+    #[test]
+    fn machines_cover_graph_disjointly() {
+        let (g, part) = setup();
+        let lg0: LocalGraph<u32, u32> = LocalGraph::build(&g, &part, 0);
+        let lg1: LocalGraph<u32, u32> = LocalGraph::build(&g, &part, 1);
+        assert_eq!(lg0.owned + lg1.owned, g.num_vertices());
+        // Each machine's scope data is complete: every neighbor of an
+        // owned vertex resolves locally.
+        for lg in [&lg0, &lg1] {
+            for lv in 0..lg.owned as LocalVid {
+                for &(nbr, le) in lg.neighbors(lv) {
+                    assert!((nbr as usize) < lg.l2g.len());
+                    assert!((le as usize) < lg.le2g.len());
+                }
+            }
+        }
+    }
+}

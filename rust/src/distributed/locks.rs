@@ -1,0 +1,228 @@
+//! Distributed reader–writer lock table (paper Sec. 4.2.2).
+//!
+//! Each machine owns the locks for its own vertices. Requests arrive (from
+//! local or remote transactions) and are granted immediately or queued
+//! FIFO; releases promote waiters. The table is pure logic — message
+//! transport is the engine's job — which makes the protocol directly
+//! unit-testable.
+//!
+//! Deadlock freedom: a transaction acquires the locks of its scope in
+//! ascending global vertex order, holding earlier locks while waiting for
+//! later ones. Cycles in the wait-for graph would need some transaction to
+//! wait on a lower-ordered lock than one it holds — impossible. Pipelining
+//! (paper Fig. 8(b)) runs many transactions' chains concurrently.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::graph::VertexId;
+use crate::partition::MachineId;
+
+/// Globally unique transaction id: (machine, local sequence).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TxnId {
+    /// Requesting machine.
+    pub machine: MachineId,
+    /// Per-machine sequence number.
+    pub seq: u64,
+}
+
+/// A lock request.
+#[derive(Debug, Clone, Copy)]
+pub struct LockReq {
+    /// Requesting transaction.
+    pub txn: TxnId,
+    /// Vertex whose lock is requested (owned by this table's machine).
+    pub vertex: VertexId,
+    /// Write (exclusive) or read (shared).
+    pub write: bool,
+}
+
+#[derive(Default)]
+struct LockState {
+    readers: u32,
+    writer: Option<TxnId>,
+    /// FIFO wait queue.
+    waiting: VecDeque<LockReq>,
+}
+
+/// Reader–writer lock table for the vertices owned by one machine.
+#[derive(Default)]
+pub struct LockTable {
+    locks: HashMap<VertexId, LockState>,
+    held_reads: HashMap<(VertexId, MachineId, u64), ()>,
+}
+
+impl LockTable {
+    /// Empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Submit a request. Returns `true` if granted immediately; otherwise
+    /// the request is queued and will appear in a later
+    /// [`LockTable::release`] result.
+    pub fn request(&mut self, req: LockReq) -> bool {
+        let st = self.locks.entry(req.vertex).or_default();
+        let grantable = if req.write {
+            st.readers == 0 && st.writer.is_none() && st.waiting.is_empty()
+        } else {
+            // Readers must also queue behind waiting writers (no writer
+            // starvation — matches a fair RW lock).
+            st.writer.is_none() && st.waiting.is_empty()
+        };
+        if grantable {
+            self.grant(req);
+            true
+        } else {
+            st.waiting.push_back(req);
+            false
+        }
+    }
+
+    fn grant(&mut self, req: LockReq) {
+        let st = self.locks.get_mut(&req.vertex).unwrap();
+        if req.write {
+            debug_assert!(st.readers == 0 && st.writer.is_none());
+            st.writer = Some(req.txn);
+        } else {
+            debug_assert!(st.writer.is_none());
+            st.readers += 1;
+            self.held_reads
+                .insert((req.vertex, req.txn.machine, req.txn.seq), ());
+        }
+    }
+
+    /// Release a previously granted lock; returns the requests that become
+    /// granted as a result (to be notified by the engine).
+    pub fn release(&mut self, vertex: VertexId, txn: TxnId, write: bool) -> Vec<LockReq> {
+        let st = self.locks.get_mut(&vertex).expect("release of unknown lock");
+        if write {
+            debug_assert_eq!(st.writer, Some(txn), "write release by non-holder");
+            st.writer = None;
+        } else {
+            debug_assert!(
+                self.held_reads
+                    .remove(&(vertex, txn.machine, txn.seq))
+                    .is_some(),
+                "read release by non-holder"
+            );
+            let st = self.locks.get_mut(&vertex).unwrap();
+            debug_assert!(st.readers > 0);
+            st.readers -= 1;
+        }
+        // Promote waiters: grant the head writer if the lock is free, or a
+        // maximal prefix run of readers.
+        let mut granted = Vec::new();
+        loop {
+            let st = self.locks.get_mut(&vertex).unwrap();
+            let Some(head) = st.waiting.front().copied() else {
+                break;
+            };
+            let ok = if head.write {
+                st.readers == 0 && st.writer.is_none()
+            } else {
+                st.writer.is_none()
+            };
+            if !ok {
+                break;
+            }
+            st.waiting.pop_front();
+            self.grant(head);
+            granted.push(head);
+            if head.write {
+                break;
+            }
+        }
+        granted
+    }
+
+    /// Number of vertices with any lock state (test/diagnostic).
+    pub fn active_locks(&self) -> usize {
+        self.locks
+            .values()
+            .filter(|s| s.readers > 0 || s.writer.is_some() || !s.waiting.is_empty())
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(m: MachineId, seq: u64) -> TxnId {
+        TxnId { machine: m, seq }
+    }
+
+    fn req(txn: TxnId, v: VertexId, write: bool) -> LockReq {
+        LockReq {
+            txn,
+            vertex: v,
+            write,
+        }
+    }
+
+    #[test]
+    fn readers_share_writers_exclude() {
+        let mut lt = LockTable::new();
+        assert!(lt.request(req(t(0, 1), 5, false)));
+        assert!(lt.request(req(t(1, 1), 5, false)));
+        assert!(!lt.request(req(t(2, 1), 5, true))); // queued
+        assert!(!lt.request(req(t(3, 1), 5, false))); // queued behind writer
+        // Release one reader: nothing grantable yet.
+        assert!(lt.release(5, t(0, 1), false).is_empty());
+        // Release last reader: writer granted.
+        let g = lt.release(5, t(1, 1), false);
+        assert_eq!(g.len(), 1);
+        assert!(g[0].write);
+        assert_eq!(g[0].txn, t(2, 1));
+        // Writer releases: queued reader granted.
+        let g = lt.release(5, t(2, 1), true);
+        assert_eq!(g.len(), 1);
+        assert!(!g[0].write);
+    }
+
+    #[test]
+    fn fifo_promotion_grants_reader_runs() {
+        let mut lt = LockTable::new();
+        assert!(lt.request(req(t(0, 1), 9, true)));
+        assert!(!lt.request(req(t(1, 1), 9, false)));
+        assert!(!lt.request(req(t(2, 1), 9, false)));
+        assert!(!lt.request(req(t(3, 1), 9, true)));
+        assert!(!lt.request(req(t(4, 1), 9, false)));
+        let g = lt.release(9, t(0, 1), true);
+        // Reader run of length 2 granted; writer t3 blocks the rest.
+        assert_eq!(g.len(), 2);
+        assert!(g.iter().all(|r| !r.write));
+        let _ = lt.release(9, t(1, 1), false);
+        let g = lt.release(9, t(2, 1), false);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].txn, t(3, 1));
+    }
+
+    #[test]
+    fn independent_vertices_dont_interact() {
+        let mut lt = LockTable::new();
+        assert!(lt.request(req(t(0, 1), 1, true)));
+        assert!(lt.request(req(t(0, 2), 2, true)));
+        assert_eq!(lt.active_locks(), 2);
+        assert!(lt.release(1, t(0, 1), true).is_empty());
+        assert_eq!(lt.active_locks(), 1);
+    }
+
+    #[test]
+    fn ordered_acquisition_cannot_deadlock_two_txns() {
+        // Simulated interleaving: txn A and B both need locks {3, 7} in
+        // ascending order. Whatever the interleaving, someone finishes.
+        let mut lt = LockTable::new();
+        let a = t(0, 1);
+        let b = t(1, 1);
+        assert!(lt.request(req(a, 3, true)));
+        assert!(!lt.request(req(b, 3, true))); // b queues on 3
+        assert!(lt.request(req(a, 7, true))); // a completes its chain
+        // a finishes, releases in any order.
+        let g = lt.release(3, a, true);
+        assert_eq!(g[0].txn, b); // b now holds 3
+        assert!(lt.release(7, a, true).is_empty());
+        assert!(lt.request(req(b, 7, true))); // b completes
+    }
+}

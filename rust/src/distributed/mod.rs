@@ -1,0 +1,76 @@
+//! Distributed substrate: the machinery under both distributed engines
+//! (paper Sec. 4).
+//!
+//! The paper runs on 64 EC2 nodes over TCP; here a *cluster* is a set of
+//! in-process machines (one OS thread each) communicating exclusively by
+//! message passing over [`network`] endpoints — no shared mutable state —
+//! with full byte accounting (for Fig. 6(b)) and optional injected latency
+//! (for the Fig. 8(b) lock-pipelining study). Every machine holds a
+//! [`localgraph::LocalGraph`]: its owned partition plus **ghost** copies of
+//! boundary vertices/edges with version-based cache coherence (paper Sec.
+//! 4.1, Fig. 4(b)).
+//!
+//! [`locks`] is the distributed reader–writer lock table with FIFO wait
+//! queues (paper Sec. 4.2.2); [`termination`] is the Misra/Safra-style
+//! token-ring termination detector the locking engine uses.
+
+pub mod localgraph;
+pub mod locks;
+pub mod network;
+pub mod termination;
+
+pub use localgraph::LocalGraph;
+pub use network::{Endpoint, Network, NetworkModel};
+
+/// Application data stored on vertices/edges of a distributed graph.
+///
+/// `wire_bytes` is the modeled serialized size: the in-process transport
+/// moves values by `Clone`, but every message's wire size is accounted so
+/// network figures (Fig. 6(b)) reflect what a TCP deployment would send.
+pub trait DataValue: Clone + Send + Sync + 'static {
+    /// Modeled serialized size in bytes.
+    fn wire_bytes(&self) -> u64;
+}
+
+macro_rules! impl_datavalue_prim {
+    ($($t:ty),*) => {
+        $(impl DataValue for $t {
+            fn wire_bytes(&self) -> u64 {
+                std::mem::size_of::<$t>() as u64
+            }
+        })*
+    };
+}
+
+impl_datavalue_prim!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64, usize, isize);
+
+impl DataValue for () {
+    fn wire_bytes(&self) -> u64 {
+        0
+    }
+}
+
+impl<T: DataValue> DataValue for Vec<T> {
+    fn wire_bytes(&self) -> u64 {
+        4 + self.iter().map(|x| x.wire_bytes()).sum::<u64>()
+    }
+}
+
+impl<A: DataValue, B: DataValue> DataValue for (A, B) {
+    fn wire_bytes(&self) -> u64 {
+        self.0.wire_bytes() + self.1.wire_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_sizes() {
+        assert_eq!(3.0f32.wire_bytes(), 4);
+        assert_eq!(vec![1.0f32; 8].wire_bytes(), 4 + 32);
+        assert_eq!(().wire_bytes(), 0);
+        assert_eq!((1u32, 2.0f64).wire_bytes(), 12);
+    }
+}

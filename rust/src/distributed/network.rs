@@ -1,0 +1,293 @@
+//! In-process message-passing network with byte accounting and injected
+//! latency.
+//!
+//! Machines communicate only through [`Endpoint`]s (mpsc channels), which
+//! preserves the FIFO-per-channel property of the paper's TCP sockets —
+//! the ordering guarantee the ghost-coherence and lock protocols rely on.
+//! Every send records modeled wire bytes into per-machine [`NetStats`]
+//! (Fig. 6(b) plots these). A [`NetworkModel`] latency delays *delivery*
+//! (not send), emulating one-way network latency for the Fig. 8(b)
+//! lock-pipelining experiment.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::partition::MachineId;
+
+/// Per-machine traffic counters.
+#[derive(Default)]
+pub struct NetStats {
+    /// Bytes sent by this machine (modeled wire size).
+    pub bytes_sent: AtomicU64,
+    /// Messages sent by this machine.
+    pub msgs_sent: AtomicU64,
+    /// Bytes received.
+    pub bytes_recv: AtomicU64,
+    /// Messages received.
+    pub msgs_recv: AtomicU64,
+}
+
+/// Network shape parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    /// One-way delivery latency injected at the receiver.
+    pub latency: Duration,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel {
+            latency: Duration::ZERO,
+        }
+    }
+}
+
+struct EnvelopeInner<M> {
+    src: MachineId,
+    bytes: u64,
+    deliver_at: Instant,
+    msg: M,
+}
+
+/// Construction handle: build one, split into per-machine endpoints.
+pub struct Network<M> {
+    endpoints: Vec<Endpoint<M>>,
+}
+
+/// One machine's connection to the cluster.
+pub struct Endpoint<M> {
+    me: MachineId,
+    machines: usize,
+    senders: Vec<mpsc::Sender<EnvelopeInner<M>>>,
+    rx: mpsc::Receiver<EnvelopeInner<M>>,
+    /// Messages received from the channel but not yet deliverable
+    /// (latency hold-back queue; FIFO order preserved).
+    pending: VecDeque<EnvelopeInner<M>>,
+    stats: Arc<Vec<NetStats>>,
+    model: NetworkModel,
+}
+
+impl<M: Send> Network<M> {
+    /// Create a fully-connected network of `machines` endpoints.
+    pub fn new(machines: usize, model: NetworkModel) -> Self {
+        let stats: Arc<Vec<NetStats>> =
+            Arc::new((0..machines).map(|_| NetStats::default()).collect());
+        let mut senders = Vec::with_capacity(machines);
+        let mut receivers = Vec::with_capacity(machines);
+        for _ in 0..machines {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let endpoints = receivers
+            .into_iter()
+            .enumerate()
+            .map(|(me, rx)| Endpoint {
+                me,
+                machines,
+                senders: senders.clone(),
+                rx,
+                pending: VecDeque::new(),
+                stats: stats.clone(),
+                model,
+            })
+            .collect();
+        Network { endpoints }
+    }
+
+    /// Split into the per-machine endpoints (index = machine id).
+    pub fn into_endpoints(self) -> Vec<Endpoint<M>> {
+        self.endpoints
+    }
+
+    /// Shared stats handle (read by the harness after the run).
+    pub fn stats(&self) -> Arc<Vec<NetStats>> {
+        self.endpoints[0].stats.clone()
+    }
+}
+
+/// Received message with its source.
+pub struct Received<M> {
+    /// Sender machine.
+    pub src: MachineId,
+    /// The message.
+    pub msg: M,
+}
+
+impl<M: Send> Endpoint<M> {
+    /// This machine's id.
+    pub fn me(&self) -> MachineId {
+        self.me
+    }
+
+    /// Cluster size.
+    pub fn machines(&self) -> usize {
+        self.machines
+    }
+
+    /// Shared stats handle.
+    pub fn stats(&self) -> Arc<Vec<NetStats>> {
+        self.stats.clone()
+    }
+
+    /// Send `msg` (modeled `bytes` on the wire) to `dst`.
+    ///
+    /// Sending to self is allowed and delivered through the same path
+    /// (simplifies engine loops) but accounts zero network bytes.
+    pub fn send(&self, dst: MachineId, bytes: u64, msg: M) {
+        let wire = if dst == self.me { 0 } else { bytes };
+        let s = &self.stats[self.me];
+        s.bytes_sent.fetch_add(wire, Ordering::Relaxed);
+        s.msgs_sent.fetch_add((dst != self.me) as u64, Ordering::Relaxed);
+        let deliver_at = if dst == self.me {
+            Instant::now()
+        } else {
+            Instant::now() + self.model.latency
+        };
+        // Receiver may have exited (engine shutdown); drop silently then.
+        let _ = self.senders[dst].send(EnvelopeInner {
+            src: self.me,
+            bytes: wire,
+            deliver_at,
+            msg,
+        });
+    }
+
+    fn account_recv(&self, env: &EnvelopeInner<M>) {
+        let s = &self.stats[self.me];
+        s.bytes_recv.fetch_add(env.bytes, Ordering::Relaxed);
+        s.msgs_recv
+            .fetch_add((env.src != self.me) as u64, Ordering::Relaxed);
+    }
+
+    /// Non-blocking receive honoring delivery latency.
+    pub fn try_recv(&mut self) -> Option<Received<M>> {
+        // Pull everything currently in the channel into the hold-back queue.
+        while let Ok(env) = self.rx.try_recv() {
+            self.pending.push_back(env);
+        }
+        if let Some(front) = self.pending.front() {
+            if front.deliver_at <= Instant::now() {
+                let env = self.pending.pop_front().unwrap();
+                self.account_recv(&env);
+                return Some(Received {
+                    src: env.src,
+                    msg: env.msg,
+                });
+            }
+        }
+        None
+    }
+
+    /// Blocking receive with timeout, honoring delivery latency.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Option<Received<M>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(r) = self.try_recv() {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            // Sleep until the earliest of: held-back delivery time, deadline,
+            // or a short poll for new channel arrivals.
+            let mut wait = deadline - now;
+            if let Some(front) = self.pending.front() {
+                let until = front.deliver_at.saturating_duration_since(now);
+                wait = wait.min(until);
+            } else {
+                match self.rx.recv_timeout(wait.min(Duration::from_millis(1))) {
+                    Ok(env) => {
+                        self.pending.push_back(env);
+                        continue;
+                    }
+                    Err(_) => continue,
+                }
+            }
+            if !wait.is_zero() {
+                std::thread::sleep(wait.min(Duration::from_millis(1)));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_delivery_and_accounting() {
+        let net: Network<u32> = Network::new(3, NetworkModel::default());
+        let stats = net.stats();
+        let mut eps = net.into_endpoints();
+        eps[0].send(2, 100, 7);
+        eps[0].send(2, 50, 8);
+        let r1 = eps[2].recv_timeout(Duration::from_secs(1)).unwrap();
+        let r2 = eps[2].recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!((r1.src, r1.msg), (0, 7));
+        assert_eq!((r2.src, r2.msg), (0, 8)); // FIFO per channel
+        assert_eq!(stats[0].bytes_sent.load(Ordering::Relaxed), 150);
+        assert_eq!(stats[2].bytes_recv.load(Ordering::Relaxed), 150);
+        assert_eq!(stats[2].msgs_recv.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn self_send_costs_nothing() {
+        let net: Network<u32> = Network::new(1, NetworkModel::default());
+        let stats = net.stats();
+        let mut eps = net.into_endpoints();
+        eps[0].send(0, 999, 1);
+        assert!(eps[0].recv_timeout(Duration::from_secs(1)).is_some());
+        assert_eq!(stats[0].bytes_sent.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn latency_delays_delivery() {
+        let net: Network<u32> = Network::new(2, NetworkModel {
+            latency: Duration::from_millis(30),
+        });
+        let mut eps = net.into_endpoints();
+        let t0 = Instant::now();
+        eps[0].send(1, 8, 42);
+        let r = eps[1].recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(r.msg, 42);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(28),
+            "delivered after {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn cross_thread_usage() {
+        let net: Network<u64> = Network::new(4, NetworkModel::default());
+        let eps = net.into_endpoints();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                std::thread::spawn(move || {
+                    // Everyone sends its id to everyone else, then sums
+                    // what it receives.
+                    for d in 0..ep.machines() {
+                        if d != ep.me() {
+                            ep.send(d, 8, ep.me() as u64);
+                        }
+                    }
+                    let mut sum = 0;
+                    for _ in 0..ep.machines() - 1 {
+                        sum += ep.recv_timeout(Duration::from_secs(5)).unwrap().msg;
+                    }
+                    sum
+                })
+            })
+            .collect();
+        let sums: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Machine m receives 0+1+2+3 - m.
+        for (m, s) in sums.iter().enumerate() {
+            assert_eq!(*s, 6 - m as u64);
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Distributed termination detection (paper Sec. 4.2.2: "a multi-threaded
+//! variant of the distributed consensus algorithm described in [Misra 83]").
+//!
+//! We implement the Safra refinement of Misra's token ring: each machine
+//! keeps a message counter (sent − received) and a color (black if it
+//! received a message since last forwarding the token). The leader
+//! circulates a token accumulating counters and colors; a white token
+//! returning to a white idle leader with total count zero proves global
+//! quiescence. The detector is pure state — the engine moves the token in
+//! its messages — so the protocol is unit-testable without threads.
+
+use crate::partition::MachineId;
+
+/// The circulating token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Token {
+    /// Sum of per-machine (sent − received) counters accumulated so far.
+    pub count: i64,
+    /// Black if any visited machine was black.
+    pub black: bool,
+    /// Detection round (monotone; diagnostic only).
+    pub round: u64,
+}
+
+/// Per-machine detector state.
+#[derive(Debug)]
+pub struct Termination {
+    me: MachineId,
+    machines: usize,
+    /// sent − received over *countable* messages (work-carrying ones).
+    counter: i64,
+    /// Black = received a countable message since last token forward.
+    black: bool,
+    /// Leader only: whether a token is currently circulating.
+    token_out: bool,
+    round: u64,
+}
+
+/// What to do after handling a token.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TokenAction {
+    /// Forward this token to machine `(me + 1) % machines`.
+    Forward(Token),
+    /// Global termination detected (leader only): broadcast halt.
+    Terminate,
+    /// Hold the token; re-offer via `maybe_forward` once idle.
+    Hold,
+}
+
+impl Termination {
+    /// Detector for machine `me` of `machines`.
+    pub fn new(me: MachineId, machines: usize) -> Self {
+        Termination {
+            me,
+            machines,
+            counter: 0,
+            black: false,
+            token_out: false,
+            round: 0,
+        }
+    }
+
+    /// Record a countable (work-carrying) message send.
+    pub fn on_send(&mut self) {
+        self.counter += 1;
+    }
+
+    /// Record a countable message receipt.
+    pub fn on_recv(&mut self) {
+        self.counter -= 1;
+        self.black = true;
+    }
+
+    /// Leader: start a detection round if none is circulating and the
+    /// leader itself is idle. Returns the token to send to machine 1 (or
+    /// `Terminate` immediately in a single-machine cluster).
+    pub fn leader_try_start(&mut self, idle: bool) -> Option<TokenAction> {
+        debug_assert_eq!(self.me, 0);
+        if self.token_out || !idle {
+            return None;
+        }
+        self.round += 1;
+        if self.machines == 1 {
+            // Single machine: idle leader with no peers terminates.
+            return Some(TokenAction::Terminate);
+        }
+        self.token_out = true;
+        let token = Token {
+            count: self.counter,
+            black: self.black,
+            round: self.round,
+        };
+        self.black = false;
+        Some(TokenAction::Forward(token))
+    }
+
+    /// Handle an incoming token. `idle` = scheduler empty and no
+    /// transactions in flight. Non-idle machines hold the token and call
+    /// [`Termination::maybe_forward`] later.
+    pub fn on_token(&mut self, token: Token, idle: bool) -> TokenAction {
+        if self.me == 0 {
+            // Token completed the ring.
+            self.token_out = false;
+            if idle && !token.black && !self.black && token.count == 0 {
+                return TokenAction::Terminate;
+            }
+            // Failed round; leader will restart via leader_try_start.
+            return TokenAction::Hold;
+        }
+        if !idle {
+            return TokenAction::Hold;
+        }
+        self.forward(token)
+    }
+
+    /// Re-offer a held token now that the machine is idle.
+    pub fn maybe_forward(&mut self, token: Token, idle: bool) -> TokenAction {
+        if !idle {
+            return TokenAction::Hold;
+        }
+        if self.me == 0 {
+            return self.on_token(token, idle);
+        }
+        self.forward(token)
+    }
+
+    fn forward(&mut self, mut token: Token) -> TokenAction {
+        token.count += self.counter;
+        token.black |= self.black;
+        self.black = false;
+        TokenAction::Forward(token)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive a full ring round over `dets`, returning the leader's verdict.
+    fn run_round(dets: &mut [Termination], idle: &[bool]) -> TokenAction {
+        let Some(action) = dets[0].leader_try_start(idle[0]) else {
+            return TokenAction::Hold;
+        };
+        let mut token = match action {
+            TokenAction::Forward(t) => t,
+            other => return other,
+        };
+        for m in 1..dets.len() {
+            match dets[m].on_token(token, idle[m]) {
+                TokenAction::Forward(t) => token = t,
+                other => return other,
+            }
+        }
+        dets[0].on_token(token, idle[0])
+    }
+
+    #[test]
+    fn all_idle_no_messages_terminates() {
+        let mut dets: Vec<Termination> = (0..4).map(|m| Termination::new(m, 4)).collect();
+        let idle = [true; 4];
+        assert_eq!(run_round(&mut dets, &idle), TokenAction::Terminate);
+    }
+
+    #[test]
+    fn busy_machine_blocks_termination() {
+        let mut dets: Vec<Termination> = (0..3).map(|m| Termination::new(m, 3)).collect();
+        let idle = [true, false, true];
+        assert_eq!(run_round(&mut dets, &idle), TokenAction::Hold);
+    }
+
+    #[test]
+    fn in_flight_message_blocks_then_clears() {
+        let mut dets: Vec<Termination> = (0..3).map(|m| Termination::new(m, 3)).collect();
+        // Machine 1 sent a message not yet received: counters unbalanced.
+        dets[1].on_send();
+        let idle = [true; 3];
+        assert_eq!(run_round(&mut dets, &idle), TokenAction::Hold);
+        // Message arrives at machine 2 (turns it black): still no terminate
+        // this round (black), but the next round is clean.
+        dets[2].on_recv();
+        assert_eq!(run_round(&mut dets, &idle), TokenAction::Hold);
+        assert_eq!(run_round(&mut dets, &idle), TokenAction::Terminate);
+    }
+
+    #[test]
+    fn single_machine_terminates_when_idle() {
+        let mut d = Termination::new(0, 1);
+        assert_eq!(d.leader_try_start(false), None);
+        assert_eq!(d.leader_try_start(true), Some(TokenAction::Terminate));
+    }
+
+    #[test]
+    fn no_false_termination_with_hidden_work() {
+        // Classic Safra scenario: machine 2 sends work to machine 1 after
+        // the token passed machine 1. The receive blackens machine 1, so
+        // the *next* round fails too, and only the round after can
+        // succeed — by which time the work is visible.
+        let mut dets: Vec<Termination> = (0..3).map(|m| Termination::new(m, 3)).collect();
+        // Round starts; simulate token passing 1 (idle), then 2 sends to 1.
+        let t0 = match dets[0].leader_try_start(true).unwrap() {
+            TokenAction::Forward(t) => t,
+            _ => panic!(),
+        };
+        let t1 = match dets[1].on_token(t0, true) {
+            TokenAction::Forward(t) => t,
+            _ => panic!(),
+        };
+        dets[2].on_send(); // work sent to machine 1 (in flight)
+        let t2 = match dets[2].on_token(t1, true) {
+            TokenAction::Forward(t) => t,
+            _ => panic!(),
+        };
+        // Leader must NOT terminate: counter sum is +1.
+        assert_eq!(dets[0].on_token(t2, true), TokenAction::Hold);
+        // Work arrives; machine 1 processes it and goes idle again.
+        dets[1].on_recv();
+        let idle = [true; 3];
+        // One round fails (machine 1 black), the next terminates.
+        assert_eq!(run_round(&mut dets, &idle), TokenAction::Hold);
+        assert_eq!(run_round(&mut dets, &idle), TokenAction::Terminate);
+    }
+}

@@ -1,0 +1,583 @@
+//! The **Chromatic engine** (paper Sec. 4.2.1).
+//!
+//! Executes update tasks in a static color-stratified order: given a proper
+//! vertex coloring, all tasks of one color run in parallel across machines
+//! (and across threads within a machine) with edge consistency guaranteed
+//! by the coloring itself — no locks. Between colors, modified vertex and
+//! edge data is pushed to the machines ghosting it (version-tagged, only
+//! modified data is sent — the paper's cache-versioning optimization) and
+//! a full communication barrier is enforced. Sync operations and the
+//! global continue/stop decision run at sweep boundaries through a leader
+//! reduction, and the engine's schedule is *deterministic*: repeated runs
+//! produce identical update sequences regardless of machine count, the
+//! property the paper highlights for debugging.
+//!
+//! Consistency coverage: a proper coloring yields **edge** consistency; a
+//! distance-2 coloring yields **full** consistency; the uniform coloring
+//! yields **vertex** consistency (paper Sec. 4.2.1). Callers pick the
+//! coloring to match `program.consistency()` (`color_for` helps).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::{Ctx, GlobalValues, Scope, SyncOp, VertexProgram};
+use crate::distributed::network::{Network, NetworkModel};
+use crate::distributed::{DataValue, LocalGraph};
+use crate::graph::{EdgeId, Graph, SharedStore, VertexId};
+use crate::partition::{Coloring, Partition};
+use crate::scheduler::Task;
+use crate::util::ThreadPool;
+
+/// Statistics of a distributed engine run.
+#[derive(Debug, Clone, Default)]
+pub struct DistStats {
+    /// Total update-function executions across machines.
+    pub updates: u64,
+    /// Full sweeps over the color spectrum (chromatic) / sync epochs
+    /// (locking).
+    pub sweeps: u64,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+    /// Modeled wire bytes sent, per machine.
+    pub bytes_sent: Vec<u64>,
+    /// Messages sent, per machine.
+    pub msgs_sent: Vec<u64>,
+}
+
+/// Options for a chromatic run.
+pub struct ChromaticOpts {
+    /// Machine count (cluster size).
+    pub machines: usize,
+    /// Worker threads per machine for the color-parallel updates.
+    pub threads_per_machine: usize,
+    /// Maximum sweeps before forced stop.
+    pub max_sweeps: u64,
+    /// Network model (latency injection).
+    pub network: NetworkModel,
+    /// Leader-side callback after every sweep: (sweep, total updates,
+    /// globals).
+    #[allow(clippy::type_complexity)]
+    pub on_sweep: Option<Box<dyn Fn(u64, u64, &GlobalValues) + Send + Sync>>,
+}
+
+impl Default for ChromaticOpts {
+    fn default() -> Self {
+        ChromaticOpts {
+            machines: 2,
+            threads_per_machine: 1,
+            max_sweeps: u64::MAX,
+            network: NetworkModel::default(),
+            on_sweep: None,
+        }
+    }
+}
+
+/// Pick the coloring that discharges `consistency` for `program`'s runs.
+pub fn color_for<V, E>(g: &Graph<V, E>, consistency: super::Consistency) -> Coloring {
+    match consistency {
+        super::Consistency::Vertex | super::Consistency::Unsafe => {
+            Coloring::uniform(g.num_vertices())
+        }
+        super::Consistency::Edge => {
+            Coloring::bipartite(g).unwrap_or_else(|| Coloring::greedy(g))
+        }
+        super::Consistency::Full => Coloring::second_order(g),
+    }
+}
+
+enum Msg<V, E> {
+    /// Ghost coherence + remote task delivery (flushed once per color).
+    /// `sweep` disambiguates which sweep scheduled `tasks`: a peer may be
+    /// one sweep ahead of the receiver, and its tasks belong to the sweep
+    /// *after* the receiver's next one.
+    Ghost {
+        sweep: u64,
+        verts: Vec<(VertexId, u64, V)>,
+        edges: Vec<(EdgeId, u64, E)>,
+        tasks: Vec<Task>,
+    },
+    /// Color barrier marker.
+    ColorDone { color: u32 },
+    /// Sweep-end report to the leader.
+    Report {
+        pending: u64,
+        updates: u64,
+        accs: Vec<Vec<f64>>,
+    },
+    /// Leader's sweep decision broadcast.
+    Decision {
+        cont: bool,
+        values: Vec<(String, Vec<f64>)>,
+    },
+}
+
+fn ghost_bytes<V: DataValue, E: DataValue>(
+    verts: &[(VertexId, u64, V)],
+    edges: &[(EdgeId, u64, E)],
+    tasks: &[Task],
+) -> u64 {
+    let vb: u64 = verts.iter().map(|(_, _, v)| 12 + v.wire_bytes()).sum();
+    let eb: u64 = edges.iter().map(|(_, _, e)| 12 + e.wire_bytes()).sum();
+    16 + vb + eb + tasks.len() as u64 * 12
+}
+
+/// Run `program` on `graph` under the chromatic engine.
+///
+/// `initial` tasks seed the first sweep (priorities are ignored — the
+/// chromatic schedule is static, paper Sec. 3.4). Returns the transformed
+/// graph and statistics.
+pub fn run<V, E, P>(
+    graph: Graph<V, E>,
+    coloring: &Coloring,
+    partition: &Partition,
+    program: &P,
+    initial: Vec<Task>,
+    syncs: Vec<Box<dyn SyncOp<V>>>,
+    opts: ChromaticOpts,
+) -> (Graph<V, E>, DistStats)
+where
+    V: DataValue,
+    E: DataValue,
+    P: VertexProgram<V, E>,
+{
+    assert_eq!(partition.machines(), opts.machines);
+    let start = std::time::Instant::now();
+    let machines = opts.machines;
+    let num_colors = coloring.num_colors().max(1);
+    let consistency = program.consistency();
+
+    let net: Network<Msg<V, E>> = Network::new(machines, opts.network);
+    let net_stats = net.stats();
+    let endpoints = net.into_endpoints();
+
+    // Build each machine's local graph up front (the paper's "merge your
+    // atom files" load step).
+    let locals: Vec<LocalGraph<V, E>> = (0..machines)
+        .map(|m| LocalGraph::build(&graph, partition, m))
+        .collect();
+    let (_, _, topo) = graph.into_parts();
+    let endpoints_ref = &topo.endpoints;
+
+    let syncs = &syncs;
+    let on_sweep = &opts.on_sweep;
+    let threads_per_machine = opts.threads_per_machine;
+    let max_sweeps = opts.max_sweeps;
+    let total_updates = std::sync::atomic::AtomicU64::new(0);
+    let sweeps_done = std::sync::atomic::AtomicU64::new(0);
+
+    // Each machine returns (global vid, V) for owned vertices and
+    // (global eid, E) for canonically-owned edges.
+    type MachineOut<V, E> = (Vec<(VertexId, V)>, Vec<(EdgeId, E)>);
+    let outputs: Mutex<Vec<Option<MachineOut<V, E>>>> =
+        Mutex::new((0..machines).map(|_| None).collect());
+
+    std::thread::scope(|s| {
+        for (lg, mut ep) in locals.into_iter().zip(endpoints) {
+            let coloring = &coloring;
+            let partition = &partition;
+            let initial = &initial;
+            let outputs = &outputs;
+            let total_updates = &total_updates;
+            let sweeps_done = &sweeps_done;
+            s.spawn(move || {
+                let mut lg = lg;
+                let me = ep.me();
+                let owned = lg.owned;
+                let vstore = SharedStore::new(std::mem::take(&mut lg.vdata));
+                let estore = SharedStore::new(std::mem::take(&mut lg.edata));
+                let mut vversion = std::mem::take(&mut lg.vversion);
+                let mut eversion = std::mem::take(&mut lg.eversion);
+                let lg = lg;
+                let globals = GlobalValues::new();
+                let pool = ThreadPool::new(threads_per_machine.max(1));
+
+                // Owned vertices grouped by color, in global-id order
+                // (static deterministic schedule).
+                let mut by_color: Vec<Vec<u32>> = vec![Vec::new(); num_colors as usize];
+                for lv in 0..owned as u32 {
+                    by_color[coloring.color(lg.l2g[lv as usize]) as usize].push(lv);
+                }
+
+                let mut task_cur = vec![false; owned];
+                let mut task_next = vec![false; owned];
+                // Tasks scheduled by peers already in the *next* sweep
+                // (they belong to the sweep after task_next).
+                let mut task_future = vec![false; owned];
+                for t in initial.iter() {
+                    if partition.owner(t.vertex) == me {
+                        task_cur[lg.g2l[&t.vertex] as usize] = true;
+                    }
+                }
+
+                let mut my_updates: u64 = 0;
+                let mut sweep: u64 = 0;
+                // Cumulative ColorDone counts per color. Channels are FIFO
+                // per peer but not synchronized across peers, so markers
+                // for a *later* color (or the next sweep) may arrive while
+                // we still wait on an earlier barrier; cumulative counts
+                // absorb that skew (each peer sends exactly one marker per
+                // color per sweep).
+                let mut color_done = vec![0u64; num_colors as usize];
+                let batch_w = program.batch_width().max(1);
+
+                loop {
+                    for color in 0..num_colors {
+                        // --- execute this color's scheduled owned tasks ---
+                        let batch: Vec<u32> = by_color[color as usize]
+                            .iter()
+                            .copied()
+                            .filter(|&lv| task_cur[lv as usize])
+                            .collect();
+                        for &lv in &batch {
+                            task_cur[lv as usize] = false;
+                        }
+                        // Parallel over chunks; collect per-chunk results.
+                        struct ChunkOut {
+                            dirty_v: Vec<u32>,
+                            dirty_e: Vec<u32>,
+                            tasks: Vec<Task>,
+                        }
+                        let chunk_outs: Mutex<Vec<ChunkOut>> = Mutex::new(Vec::new());
+                        let nchunks = batch.len().div_ceil(batch_w);
+                        pool.parallel_for(nchunks, 1, |ci| {
+                            let chunk = &batch[ci * batch_w..((ci + 1) * batch_w).min(batch.len())];
+                            let mut scopes: Vec<Scope<V, E>> = chunk
+                                .iter()
+                                .map(|&lv| {
+                                    let mut sc = Scope::new_buffer(consistency);
+                                    // SAFETY: coloring guarantees no two
+                                    // concurrently-updated vertices are
+                                    // adjacent, so center writes and
+                                    // neighbor/edge access never alias
+                                    // across threads (property-tested).
+                                    unsafe {
+                                        sc.reset(
+                                            lg.l2g[lv as usize],
+                                            vstore.get_mut(lv as usize) as *mut V,
+                                        );
+                                        let lo = lg.adj_offsets[lv as usize] as usize;
+                                        let hi = lg.adj_offsets[lv as usize + 1] as usize;
+                                        for &(nlv, nle) in &lg.adj[lo..hi] {
+                                            sc.push_neighbor(
+                                                lg.l2g[nlv as usize],
+                                                lg.le2g[nle as usize],
+                                                vstore.get_mut(nlv as usize) as *mut V,
+                                                estore.get_mut(nle as usize) as *mut E,
+                                            );
+                                        }
+                                    }
+                                    sc
+                                })
+                                .collect();
+                            let mut ctx = Ctx::new(&globals);
+                            ctx.set_updates_hint(my_updates);
+                            let mut refs: Vec<&mut Scope<V, E>> = scopes.iter_mut().collect();
+                            program.update_batch(&mut refs, &mut ctx);
+                            let mut out = ChunkOut {
+                                dirty_v: Vec::new(),
+                                dirty_e: Vec::new(),
+                                tasks: std::mem::take(&mut ctx.scheduled),
+                            };
+                            for (k, sc) in scopes.iter().enumerate() {
+                                let lv = chunk[k];
+                                if sc.center_dirty() {
+                                    out.dirty_v.push(lv);
+                                }
+                                let lo = lg.adj_offsets[lv as usize] as usize;
+                                for (i, &(_, nle)) in lg.neighbors(lv).iter().enumerate() {
+                                    let _ = lo;
+                                    if sc.edge_dirty(i) {
+                                        out.dirty_e.push(nle);
+                                    }
+                                }
+                            }
+                            chunk_outs.lock().unwrap().push(out);
+                        });
+                        my_updates += batch.len() as u64;
+
+                        // --- build per-peer ghost flushes ---
+                        let mut per_peer: Vec<(
+                            Vec<(VertexId, u64, V)>,
+                            Vec<(EdgeId, u64, E)>,
+                            Vec<Task>,
+                        )> = (0..machines).map(|_| Default::default()).collect();
+                        for out in chunk_outs.into_inner().unwrap() {
+                            for lv in out.dirty_v {
+                                vversion[lv as usize] += 1;
+                                let gv = lg.l2g[lv as usize];
+                                let ver = vversion[lv as usize];
+                                for &peer in &lg.mirrors[lv as usize] {
+                                    // SAFETY: color finished; no writers.
+                                    let val = unsafe { vstore.get(lv as usize) }.clone();
+                                    per_peer[peer].0.push((gv, ver, val));
+                                }
+                            }
+                            for le in out.dirty_e {
+                                eversion[le as usize] += 1;
+                                if let Some(peer) = lg.edge_mirror[le as usize] {
+                                    let val = unsafe { estore.get(le as usize) }.clone();
+                                    per_peer[peer].1.push((
+                                        lg.le2g[le as usize],
+                                        eversion[le as usize],
+                                        val,
+                                    ));
+                                }
+                            }
+                            for t in out.tasks {
+                                let owner = partition.owner(t.vertex);
+                                if owner == me {
+                                    task_next[lg.g2l[&t.vertex] as usize] = true;
+                                } else {
+                                    per_peer[owner].2.push(t);
+                                }
+                            }
+                        }
+                        for (peer, (verts, edges, tasks)) in per_peer.into_iter().enumerate() {
+                            if peer == me {
+                                continue;
+                            }
+                            if !verts.is_empty() || !edges.is_empty() || !tasks.is_empty() {
+                                let bytes = ghost_bytes(&verts, &edges, &tasks);
+                                ep.send(peer, bytes, Msg::Ghost { sweep, verts, edges, tasks });
+                            }
+                            ep.send(peer, 8, Msg::ColorDone { color });
+                        }
+
+                        // --- barrier: apply peers' data until all done ---
+                        let target = (machines as u64 - 1) * (sweep + 1);
+                        while color_done[color as usize] < target {
+                            let Some(rcv) = ep.recv_timeout(Duration::from_secs(30)) else {
+                                panic!(
+                                    "chromatic: color barrier timeout (machine {me}, sweep {sweep}, color {color}, have {} want {target}, dist {:?})",
+                                    color_done[color as usize], color_done
+                                );
+                            };
+                            match rcv.msg {
+                                Msg::Ghost { sweep: msg_sweep, verts, edges, tasks } => {
+                                    for (gv, ver, val) in verts {
+                                        let lv = lg.g2l[&gv] as usize;
+                                        debug_assert!(ver > vversion[lv]);
+                                        vversion[lv] = ver;
+                                        // SAFETY: ghosts are not written by
+                                        // local updates; applying between
+                                        // colors is race-free.
+                                        unsafe { *vstore.get_mut(lv) = val };
+                                    }
+                                    for (ge, ver, val) in edges {
+                                        let le = lg.ge2l[&ge] as usize;
+                                        debug_assert!(ver > eversion[le]);
+                                        eversion[le] = ver;
+                                        unsafe { *estore.get_mut(le) = val };
+                                    }
+                                    let bucket = if msg_sweep == sweep {
+                                        &mut task_next
+                                    } else {
+                                        debug_assert_eq!(msg_sweep, sweep + 1);
+                                        &mut task_future
+                                    };
+                                    for t in tasks {
+                                        bucket[lg.g2l[&t.vertex] as usize] = true;
+                                    }
+                                }
+                                Msg::ColorDone { color: c } => {
+                                    color_done[c as usize] += 1;
+                                }
+                                _ => panic!("unexpected message in color barrier"),
+                            }
+                        }
+                    }
+
+                    // --- sweep boundary: sync reduction + decision ---
+                    let pending = task_next.iter().filter(|&&b| b).count() as u64;
+                    let accs: Vec<Vec<f64>> = syncs
+                        .iter()
+                        .map(|op| {
+                            let mut acc = op.init();
+                            for lv in 0..owned {
+                                // SAFETY: between colors; no writers.
+                                op.fold(&mut acc, lg.l2g[lv], unsafe { vstore.get(lv) });
+                            }
+                            acc
+                        })
+                        .collect();
+                    let report_bytes =
+                        16 + accs.iter().map(|a| 8 * a.len() as u64 + 4).sum::<u64>();
+                    ep.send(
+                        0,
+                        report_bytes,
+                        Msg::Report {
+                            pending,
+                            updates: my_updates,
+                            accs,
+                        },
+                    );
+
+                    let cont = if me == 0 {
+                        // Leader: gather reports, merge, decide, broadcast.
+                        let mut merged: Vec<Vec<f64>> =
+                            syncs.iter().map(|op| op.init()).collect();
+                        let mut total_pending = 0u64;
+                        let mut updates_sum = 0u64;
+                        let mut got = 0;
+                        while got < machines {
+                            let Some(rcv) = ep.recv_timeout(Duration::from_secs(30)) else {
+                                panic!("chromatic: sweep barrier timeout");
+                            };
+                            match rcv.msg {
+                                Msg::Report {
+                                    pending,
+                                    updates,
+                                    accs,
+                                } => {
+                                    total_pending += pending;
+                                    updates_sum += updates;
+                                    for (op_i, a) in accs.into_iter().enumerate() {
+                                        syncs[op_i].merge(&mut merged[op_i], &a);
+                                    }
+                                    got += 1;
+                                }
+                                _ => panic!("unexpected message at sweep barrier"),
+                            }
+                        }
+                        let values: Vec<(String, Vec<f64>)> = syncs
+                            .iter()
+                            .zip(merged)
+                            .map(|(op, acc)| (op.key().to_string(), op.finalize(acc)))
+                            .collect();
+                        sweep += 1;
+                        let cont = total_pending > 0 && sweep < max_sweeps;
+                        total_updates
+                            .store(updates_sum, std::sync::atomic::Ordering::Relaxed);
+                        sweeps_done.store(sweep, std::sync::atomic::Ordering::Relaxed);
+                        for (k, v) in &values {
+                            globals.set(k, v.clone());
+                        }
+                        if let Some(cb) = on_sweep {
+                            cb(sweep, updates_sum, &globals);
+                        }
+                        let dec_bytes = 8 + values
+                            .iter()
+                            .map(|(k, v)| k.len() as u64 + 8 * v.len() as u64)
+                            .sum::<u64>();
+                        for peer in 1..machines {
+                            ep.send(
+                                peer,
+                                dec_bytes,
+                                Msg::Decision {
+                                    cont,
+                                    values: values.clone(),
+                                },
+                            );
+                        }
+                        cont
+                    } else {
+                        // Follower: wait for the decision.
+                        loop {
+                            let Some(rcv) = ep.recv_timeout(Duration::from_secs(30)) else {
+                                panic!("chromatic: decision timeout (machine {me}, sweep {sweep}, dist {color_done:?})");
+                            };
+                            match rcv.msg {
+                                Msg::Decision { cont, values } => {
+                                    for (k, v) in values {
+                                        globals.set(&k, v);
+                                    }
+                                    sweep += 1;
+                                    break cont;
+                                }
+                                // Fast peers may already be into the next
+                                // sweep: absorb their traffic here.
+                                Msg::Ghost { sweep: msg_sweep, verts, edges, tasks } => {
+                                    for (gv, ver, val) in verts {
+                                        let lv = lg.g2l[&gv] as usize;
+                                        vversion[lv] = ver;
+                                        // SAFETY: no updates execute while
+                                        // awaiting the decision.
+                                        unsafe { *vstore.get_mut(lv) = val };
+                                    }
+                                    for (ge, ver, val) in edges {
+                                        let le = lg.ge2l[&ge] as usize;
+                                        eversion[le] = ver;
+                                        unsafe { *estore.get_mut(le) = val };
+                                    }
+                                    let bucket = if msg_sweep == sweep {
+                                        &mut task_next
+                                    } else {
+                                        debug_assert_eq!(msg_sweep, sweep + 1);
+                                        &mut task_future
+                                    };
+                                    for t in tasks {
+                                        bucket[lg.g2l[&t.vertex] as usize] = true;
+                                    }
+                                }
+                                Msg::ColorDone { color: c } => {
+                                    color_done[c as usize] += 1;
+                                }
+                                _ => panic!("unexpected message awaiting decision"),
+                            }
+                        }
+                    };
+
+                    if !cont {
+                        break;
+                    }
+                    std::mem::swap(&mut task_cur, &mut task_next);
+                    for (nb, fb) in task_next.iter_mut().zip(task_future.iter_mut()) {
+                        // Future-sweep tasks become next-sweep tasks now.
+                        *nb = *fb;
+                        *fb = false;
+                    }
+                }
+
+                // Return owned vertex data + canonically-owned edge data.
+                let vdata = vstore.into_vec();
+                let edata = estore.into_vec();
+                let verts: Vec<(VertexId, V)> = (0..owned)
+                    .map(|lv| (lg.l2g[lv], vdata[lv].clone()))
+                    .collect();
+                let edges: Vec<(EdgeId, E)> = lg
+                    .le2g
+                    .iter()
+                    .enumerate()
+                    .filter(|&(le, _)| {
+                        // Canonical owner: owner of the min endpoint.
+                        let ge = lg.le2g[le];
+                        let (a, b) = endpoints_ref[ge as usize];
+                        partition.owner(a.min(b)) == me
+                    })
+                    .map(|(le, &ge)| (ge, edata[le].clone()))
+                    .collect();
+                outputs.lock().unwrap()[me] = Some((verts, edges));
+            });
+        }
+    });
+
+    // Reassemble the global graph from machine outputs.
+    let mut vdata_opt: Vec<Option<V>> = (0..topo.adj_offsets.len() - 1).map(|_| None).collect();
+    let mut edata_opt: Vec<Option<E>> = (0..topo.endpoints.len()).map(|_| None).collect();
+    for out in outputs.into_inner().unwrap().into_iter().flatten() {
+        for (v, d) in out.0 {
+            vdata_opt[v as usize] = Some(d);
+        }
+        for (e, d) in out.1 {
+            edata_opt[e as usize] = Some(d);
+        }
+    }
+    let vdata: Vec<V> = vdata_opt.into_iter().map(|o| o.expect("vertex unowned")).collect();
+    let edata: Vec<E> = edata_opt.into_iter().map(|o| o.expect("edge unowned")).collect();
+    let graph = Graph::from_parts(vdata, edata, topo);
+
+    let stats = DistStats {
+        updates: total_updates.load(std::sync::atomic::Ordering::Relaxed),
+        sweeps: sweeps_done.load(std::sync::atomic::Ordering::Relaxed),
+        seconds: start.elapsed().as_secs_f64(),
+        bytes_sent: net_stats
+            .iter()
+            .map(|s| s.bytes_sent.load(std::sync::atomic::Ordering::Relaxed))
+            .collect(),
+        msgs_sent: net_stats
+            .iter()
+            .map(|s| s.msgs_sent.load(std::sync::atomic::Ordering::Relaxed))
+            .collect(),
+    };
+    (graph, stats)
+}

@@ -1,0 +1,1122 @@
+//! The **Locking engine** (paper Sec. 4.2.2).
+//!
+//! Each machine runs an event loop over its owned partition: worker
+//! transactions pull tasks from a local scheduler (FIFO / priority /
+//! multiqueue), acquire the distributed reader–writer locks demanded by
+//! the consistency model — *in ascending global vertex order*, which makes
+//! the protocol deadlock-free — evaluate the update, push modified data to
+//! the authoritative owners, release, and repeat.
+//!
+//! The paper's latency-hiding techniques are reproduced:
+//!
+//! * **ghost caching with versioning** — lock grants piggyback vertex/edge
+//!   data only when the requester's cached version is stale;
+//! * **lock pipelining** — up to `maxpending` transactions progress their
+//!   lock chains concurrently (Fig. 8(b) sweeps this knob);
+//! * **ready-batch execution** — granted transactions are executed through
+//!   `VertexProgram::update_batch`, letting PJRT-backed programs amortize
+//!   compiled-kernel invocations.
+//!
+//! Termination uses the Safra/Misra token ring ([`crate::distributed::
+//! termination`]); sync operations run under a leader-coordinated global
+//! barrier (machines drain in-flight transactions, fold their partition,
+//! and resume after the leader broadcasts the merged result).
+//!
+//! The `Consistency::Unsafe` mode (for the paper's Fig. 1) skips locking
+//! entirely and propagates dirty data to ghost holders eagerly —
+//! "inconsistent asynchronous iterations".
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::chromatic::DistStats;
+use super::{Consistency, Ctx, GlobalValues, Scope, SyncOp, VertexProgram};
+use crate::distributed::locks::{LockReq, LockTable, TxnId};
+use crate::distributed::network::{Network, NetworkModel};
+use crate::distributed::termination::{Termination, Token, TokenAction};
+use crate::distributed::{DataValue, LocalGraph};
+use crate::graph::{EdgeId, Graph, VertexId};
+use crate::partition::{MachineId, Partition};
+use crate::scheduler::{self, Task};
+
+/// Options for a locking-engine run.
+pub struct LockingOpts {
+    /// Machine count.
+    pub machines: usize,
+    /// Maximum transactions in flight per machine (lock pipelining depth;
+    /// 0 means 1 — a fully serial pipeline, the paper's baseline).
+    pub maxpending: usize,
+    /// Scheduler policy: `fifo`, `priority`, `multiqueue`, `sweep`.
+    pub scheduler: String,
+    /// Network model (latency injection for Fig. 8(b)).
+    pub network: NetworkModel,
+    /// Period of leader-initiated global sync barriers (None = only at
+    /// termination). The paper's tau is counted in updates; a wall-clock
+    /// period is allowed by its footnote 2 ("the resolution of the
+    /// synchronization interval is left up to the implementation").
+    pub sync_period: Option<Duration>,
+    /// Stop after approximately this many updates per machine.
+    pub max_updates_per_machine: u64,
+    /// Leader callback at each sync barrier: (epoch, total updates seen).
+    #[allow(clippy::type_complexity)]
+    pub on_sync: Option<Box<dyn Fn(u64, u64, &GlobalValues) + Send + Sync>>,
+    /// Seed for the multiqueue scheduler.
+    pub seed: u64,
+}
+
+impl Default for LockingOpts {
+    fn default() -> Self {
+        LockingOpts {
+            machines: 2,
+            maxpending: 64,
+            scheduler: "fifo".to_string(),
+            network: NetworkModel::default(),
+            sync_period: None,
+            max_updates_per_machine: u64::MAX,
+            on_sync: None,
+            seed: 0,
+        }
+    }
+}
+
+enum Msg<V, E> {
+    LockReq {
+        txn: TxnId,
+        vertex: VertexId,
+        write: bool,
+        /// Requester's cached version of the vertex data.
+        vver: u64,
+        /// Edge between requester's center and `vertex`, with cached
+        /// version, when this owner is the edge's canonical home.
+        edge: Option<(EdgeId, u64)>,
+    },
+    Grant {
+        txn_seq: u64,
+        vertex: VertexId,
+        vdata: Option<(u64, V)>,
+        edata: Option<(EdgeId, u64, E)>,
+    },
+    Release {
+        txn: TxnId,
+        unlocks: Vec<(VertexId, bool)>,
+        vwrites: Vec<(VertexId, u64, V)>,
+        ewrites: Vec<(EdgeId, u64, E)>,
+        tasks: Vec<Task>,
+    },
+    /// Eager dirty-data push (Unsafe mode only — no locks, races allowed).
+    GhostPush {
+        verts: Vec<(VertexId, u64, V)>,
+        edges: Vec<(EdgeId, u64, E)>,
+    },
+    SyncBegin {
+        epoch: u64,
+    },
+    SyncPartial {
+        epoch: u64,
+        accs: Vec<Vec<f64>>,
+        updates: u64,
+        capped: bool,
+    },
+    SyncEnd {
+        epoch: u64,
+        values: Vec<(String, Vec<f64>)>,
+    },
+    Token(Token),
+    Halt,
+    FinalReport {
+        accs: Vec<Vec<f64>>,
+        updates: u64,
+    },
+}
+
+/// One in-flight transaction (a scope acquisition chain).
+struct Txn {
+    seq: u64,
+    center_lv: u32,
+    /// (global vertex, write) in ascending vertex order.
+    plan: Vec<(VertexId, bool)>,
+    /// Next plan index to request.
+    next: usize,
+}
+
+/// Run `program` under the distributed locking engine.
+pub fn run<V, E, P>(
+    graph: Graph<V, E>,
+    partition: &Partition,
+    program: &P,
+    initial: Vec<Task>,
+    syncs: Vec<Box<dyn SyncOp<V>>>,
+    opts: LockingOpts,
+) -> (Graph<V, E>, DistStats)
+where
+    V: DataValue,
+    E: DataValue,
+    P: VertexProgram<V, E>,
+{
+    assert_eq!(partition.machines(), opts.machines);
+    let start = Instant::now();
+    let machines = opts.machines;
+    let consistency = program.consistency();
+    let n_global = graph.num_vertices();
+
+    let net: Network<Msg<V, E>> = Network::new(machines, opts.network);
+    let net_stats = net.stats();
+    let endpoints = net.into_endpoints();
+    let locals: Vec<LocalGraph<V, E>> = (0..machines)
+        .map(|m| LocalGraph::build(&graph, partition, m))
+        .collect();
+    let (_, _, topo) = graph.into_parts();
+    let endpoints_ref = &topo.endpoints;
+
+    let syncs = &syncs;
+    let on_sync = &opts.on_sync;
+    let maxpending = opts.maxpending.max(1);
+    let sched_name = opts.scheduler.clone();
+    let sync_period = opts.sync_period;
+    let cap = opts.max_updates_per_machine;
+    let seed = opts.seed;
+
+    let total_updates = std::sync::atomic::AtomicU64::new(0);
+    let epochs = std::sync::atomic::AtomicU64::new(0);
+    type MachineOut<V, E> = (Vec<(VertexId, V)>, Vec<(EdgeId, E)>);
+    let outputs: std::sync::Mutex<Vec<Option<MachineOut<V, E>>>> =
+        std::sync::Mutex::new((0..machines).map(|_| None).collect());
+
+    std::thread::scope(|s| {
+        for (mut lg, mut ep) in locals.into_iter().zip(endpoints) {
+            let partition = &partition;
+            let initial = &initial;
+            let outputs = &outputs;
+            let total_updates = &total_updates;
+            let epochs = &epochs;
+            let sched_name = sched_name.clone();
+            s.spawn(move || {
+                let me = ep.me();
+                let owned = lg.owned;
+                let globals = GlobalValues::new();
+                let mut sched = scheduler::by_name(&sched_name, n_global, seed ^ me as u64);
+                for t in initial.iter() {
+                    if partition.owner(t.vertex) == me {
+                        sched.push(*t);
+                    }
+                }
+
+                let mut locks = LockTable::new();
+                // Metadata for queued remote requests, keyed by (txn,
+                // vertex): (requester's cached vver, edge id + cached ever).
+                let mut req_meta: HashMap<(TxnId, VertexId), (u64, Option<(EdgeId, u64)>)> =
+                    HashMap::new();
+                let mut pipeline: HashMap<u64, Txn> = HashMap::new();
+                let mut ready: Vec<Txn> = Vec::new();
+                let mut next_seq: u64 = 0;
+                let mut my_updates: u64 = 0;
+                let mut term = Termination::new(me, machines);
+                let mut held_token: Option<Token> = None;
+                let mut halted = false;
+                // Sync barrier state.
+                let mut syncing = false;
+                let mut sync_epoch = 0u64;
+                let mut sync_partial_sent = false;
+                let mut last_sync = Instant::now();
+                let mut last_token = Instant::now() - Duration::from_secs(1);
+                // Leader sync gathering.
+                let mut gather: Vec<Vec<f64>> = Vec::new();
+                let mut gather_updates = 0u64;
+                let mut gather_capped = true;
+                let mut gather_count = 0usize;
+                let batch_w = program.batch_width().max(1);
+
+                // ---------------------------------------------------------
+                // helpers as closures over machine state are impossible
+                // (borrow rules), so the loop below is written imperatively
+                // with small inline blocks.
+                // ---------------------------------------------------------
+
+                let mut idle_spins: u32 = 0;
+                'main: loop {
+                    let mut progressed = false;
+
+                    // ---- 1. drain incoming messages -----------------------
+                    while let Some(rcv) = ep.try_recv() {
+                        progressed = true;
+                        match rcv.msg {
+                            Msg::LockReq {
+                                txn,
+                                vertex,
+                                write,
+                                vver,
+                                edge,
+                            } => {
+                                let granted = locks.request(LockReq { txn, vertex, write });
+                                if granted {
+                                    send_grant(
+                                        &ep, &lg, txn, vertex, vver, edge,
+                                    );
+                                } else {
+                                    req_meta.insert((txn, vertex), (vver, edge));
+                                }
+                            }
+                            Msg::Grant {
+                                txn_seq,
+                                vertex,
+                                vdata,
+                                edata,
+                            } => {
+                                // Apply piggybacked data only if strictly
+                                // newer: with pipelined requests the owner
+                                // may grant from a snapshot that predates a
+                                // Release still in flight from *this*
+                                // machine, in which case our local copy
+                                // (written under the write lock) is the
+                                // fresher one.
+                                if let Some((ver, val)) = vdata {
+                                    let lv = lg.g2l[&vertex] as usize;
+                                    if ver > lg.vversion[lv] {
+                                        lg.vdata[lv] = val;
+                                        lg.vversion[lv] = ver;
+                                    }
+                                }
+                                if let Some((ge, ver, val)) = edata {
+                                    let le = lg.ge2l[&ge] as usize;
+                                    if ver > lg.eversion[le] {
+                                        lg.edata[le] = val;
+                                        lg.eversion[le] = ver;
+                                    }
+                                }
+                                let txn = pipeline
+                                    .get_mut(&txn_seq)
+                                    .expect("grant for unknown txn");
+                                debug_assert_eq!(txn.plan[txn.next].0, vertex);
+                                txn.next += 1;
+                                pump_txn(
+                                    &mut pipeline,
+                                    txn_seq,
+                                    &mut locks,
+                                    &mut req_meta,
+                                    &ep,
+                                    &lg,
+                                    partition,
+                                    me,
+                                    &mut ready,
+                                );
+                            }
+                            Msg::Release {
+                                txn,
+                                unlocks,
+                                vwrites,
+                                ewrites,
+                                tasks,
+                            } => {
+                                term.on_recv();
+                                for (v, ver, val) in vwrites {
+                                    let lv = lg.g2l[&v] as usize;
+                                    debug_assert!(ver > lg.vversion[lv]);
+                                    lg.vdata[lv] = val;
+                                    lg.vversion[lv] = ver;
+                                }
+                                for (ge, ver, val) in ewrites {
+                                    let le = lg.ge2l[&ge] as usize;
+                                    debug_assert!(ver > lg.eversion[le]);
+                                    lg.edata[le] = val;
+                                    lg.eversion[le] = ver;
+                                }
+                                for t in tasks {
+                                    if !halted {
+                                        sched.push(t);
+                                    }
+                                }
+                                for (v, write) in unlocks {
+                                    let promoted = locks.release(v, txn, write);
+                                    for p in promoted {
+                                        handle_promotion(
+                                            p,
+                                            &mut req_meta,
+                                            &mut pipeline,
+                                            &mut locks,
+                                            &ep,
+                                            &lg,
+                                            partition,
+                                            me,
+                                            &mut ready,
+                                        );
+                                    }
+                                }
+                            }
+                            Msg::GhostPush { verts, edges } => {
+                                for (v, ver, val) in verts {
+                                    if let Some(&lv) = lg.g2l.get(&v) {
+                                        lg.vdata[lv as usize] = val;
+                                        lg.vversion[lv as usize] =
+                                            lg.vversion[lv as usize].max(ver);
+                                    }
+                                }
+                                for (ge, ver, val) in edges {
+                                    if let Some(&le) = lg.ge2l.get(&ge) {
+                                        lg.edata[le as usize] = val;
+                                        lg.eversion[le as usize] =
+                                            lg.eversion[le as usize].max(ver);
+                                    }
+                                }
+                            }
+                            Msg::SyncBegin { epoch } => {
+                                syncing = true;
+                                sync_epoch = epoch;
+                                sync_partial_sent = false;
+                            }
+                            Msg::SyncPartial {
+                                epoch,
+                                accs,
+                                updates,
+                                capped,
+                            } => {
+                                debug_assert_eq!(me, 0);
+                                debug_assert_eq!(epoch, sync_epoch);
+                                if gather.is_empty() {
+                                    gather = accs;
+                                } else {
+                                    for (i, a) in accs.into_iter().enumerate() {
+                                        syncs[i].merge(&mut gather[i], &a);
+                                    }
+                                }
+                                gather_updates += updates;
+                                gather_capped &= capped;
+                                gather_count += 1;
+                                if gather_count == machines {
+                                    // Finalize, publish, broadcast SyncEnd.
+                                    let values: Vec<(String, Vec<f64>)> = syncs
+                                        .iter()
+                                        .zip(std::mem::take(&mut gather))
+                                        .map(|(op, acc)| {
+                                            (op.key().to_string(), op.finalize(acc))
+                                        })
+                                        .collect();
+                                    for (k, v) in &values {
+                                        globals.set(k, v.clone());
+                                    }
+                                    total_updates.store(
+                                        gather_updates,
+                                        std::sync::atomic::Ordering::Relaxed,
+                                    );
+                                    epochs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                    if let Some(cb) = on_sync {
+                                        cb(sync_epoch, gather_updates, &globals);
+                                    }
+                                    let bytes = 16
+                                        + values
+                                            .iter()
+                                            .map(|(k, v)| k.len() as u64 + 8 * v.len() as u64)
+                                            .sum::<u64>();
+                                    for peer in 0..machines {
+                                        if peer != me {
+                                            ep.send(
+                                                peer,
+                                                bytes,
+                                                Msg::SyncEnd {
+                                                    epoch: sync_epoch,
+                                                    values: values.clone(),
+                                                },
+                                            );
+                                        }
+                                    }
+                                    // Leader applies locally.
+                                    syncing = false;
+                                    // If every machine hit its update cap,
+                                    // stop even though tasks remain.
+                                    if gather_capped {
+                                        for peer in 1..machines {
+                                            ep.send(peer, 1, Msg::Halt);
+                                        }
+                                        halted = true;
+                                    }
+                                    gather_updates = 0;
+                                    gather_capped = true;
+                                    gather_count = 0;
+                                }
+                            }
+                            Msg::SyncEnd { epoch, values } => {
+                                debug_assert_eq!(epoch, sync_epoch);
+                                for (k, v) in values {
+                                    globals.set(&k, v);
+                                }
+                                syncing = false;
+                            }
+                            Msg::Token(tok) => {
+                                let idle = is_idle(
+                                    &pipeline, &ready, &*sched, syncing, my_updates, cap,
+                                );
+                                match term.on_token(tok, idle) {
+                                    TokenAction::Forward(t) => {
+                                        ep.send((me + 1) % machines, 17, Msg::Token(t));
+                                    }
+                                    TokenAction::Terminate => {
+                                        for peer in 0..machines {
+                                            if peer != me {
+                                                ep.send(peer, 1, Msg::Halt);
+                                            }
+                                        }
+                                        halted = true;
+                                    }
+                                    TokenAction::Hold => {
+                                        held_token = Some(tok);
+                                    }
+                                }
+                            }
+                            Msg::Halt => {
+                                halted = true;
+                            }
+                            Msg::FinalReport { accs, updates } => {
+                                debug_assert_eq!(me, 0);
+                                if gather.is_empty() {
+                                    gather = accs;
+                                } else {
+                                    for (i, a) in accs.into_iter().enumerate() {
+                                        syncs[i].merge(&mut gather[i], &a);
+                                    }
+                                }
+                                gather_updates += updates;
+                                gather_count += 1;
+                            }
+                        }
+                    }
+
+                    // ---- 2. sync-barrier drain ---------------------------
+                    if syncing && !sync_partial_sent && pipeline.is_empty() && ready.is_empty()
+                    {
+                        let accs: Vec<Vec<f64>> = syncs
+                            .iter()
+                            .map(|op| {
+                                let mut acc = op.init();
+                                for lv in 0..owned {
+                                    op.fold(&mut acc, lg.l2g[lv], &lg.vdata[lv]);
+                                }
+                                acc
+                            })
+                            .collect();
+                        let bytes =
+                            24 + accs.iter().map(|a| 8 * a.len() as u64 + 4).sum::<u64>();
+                        ep.send(
+                            0,
+                            bytes,
+                            Msg::SyncPartial {
+                                epoch: sync_epoch,
+                                accs,
+                                updates: my_updates,
+                                capped: my_updates >= cap,
+                            },
+                        );
+                        sync_partial_sent = true;
+                        progressed = true;
+                    }
+
+                    if halted && pipeline.is_empty() && ready.is_empty() {
+                        break 'main;
+                    }
+
+                    // ---- 3. start new transactions -----------------------
+                    if !syncing && !halted {
+                        while pipeline.len() + ready.len() < maxpending
+                            && (my_updates + (pipeline.len() + ready.len()) as u64) < cap
+                        {
+                            let Some(task) = sched.pop() else {
+                                break;
+                            };
+                            progressed = true;
+                            let lv = lg.g2l[&task.vertex];
+                            let seq = next_seq;
+                            next_seq += 1;
+                            let mut plan = Vec::new();
+                            crate::engine::shared::scope_lock_plan(
+                                task.vertex,
+                                lg.neighbors(lv).iter().map(|&(nlv, _)| lg.l2g[nlv as usize]),
+                                consistency,
+                                &mut plan,
+                            );
+                            let txn = Txn {
+                                seq,
+                                center_lv: lv,
+                                plan,
+                                next: 0,
+                            };
+                            pipeline.insert(seq, txn);
+                            pump_txn(
+                                &mut pipeline,
+                                seq,
+                                &mut locks,
+                                &mut req_meta,
+                                &ep,
+                                &lg,
+                                partition,
+                                me,
+                                &mut ready,
+                            );
+                        }
+                    }
+
+                    // ---- 4. execute ready batches ------------------------
+                    // Flush when the batch is full, when draining, or when
+                    // this iteration made no other progress — ready
+                    // transactions hold locks that may block the whole
+                    // pipeline, so waiting for a full batch can deadlock
+                    // when maxpending < batch width.
+                    let flush = !ready.is_empty()
+                        && (ready.len() >= batch_w
+                            || pipeline.is_empty()
+                            || syncing
+                            || halted
+                            || !progressed);
+                    if flush {
+                        progressed = true;
+                        let batch: Vec<Txn> = ready.drain(..).collect();
+                        execute_batch(
+                            &batch,
+                            program,
+                            consistency,
+                            &mut lg,
+                            &globals,
+                            partition,
+                            me,
+                            &mut locks,
+                            &mut req_meta,
+                            &ep,
+                            &mut sched,
+                            &mut pipeline,
+                            &mut ready,
+                            &mut term,
+                            my_updates,
+                            halted,
+                        );
+                        my_updates += batch.len() as u64;
+                    }
+
+                    // ---- 5. leader: periodic sync + termination ----------
+                    if me == 0 && !syncing && !halted {
+                        if let Some(period) = sync_period {
+                            if last_sync.elapsed() >= period {
+                                last_sync = Instant::now();
+                                syncing = true;
+                                sync_epoch += 1;
+                                sync_partial_sent = false;
+                                gather.clear();
+                                gather_updates = 0;
+                                gather_capped = true;
+                                gather_count = 0;
+                                for peer in 1..machines {
+                                    ep.send(peer, 9, Msg::SyncBegin { epoch: sync_epoch });
+                                }
+                                progressed = true;
+                            }
+                        }
+                        let idle = is_idle(&pipeline, &ready, &*sched, syncing, my_updates, cap)
+                            && last_token.elapsed() > Duration::from_micros(500);
+                        if idle {
+                            last_token = Instant::now();
+                        }
+                        if let Some(action) = term.leader_try_start(idle) {
+                            match action {
+                                TokenAction::Forward(t) => {
+                                    ep.send(1 % machines, 17, Msg::Token(t));
+                                }
+                                TokenAction::Terminate => {
+                                    halted = true;
+                                }
+                                TokenAction::Hold => {}
+                            }
+                        }
+                    }
+                    // Re-offer a held token once idle.
+                    if let Some(tok) = held_token {
+                        let idle =
+                            is_idle(&pipeline, &ready, &*sched, syncing, my_updates, cap);
+                        if idle {
+                            match term.maybe_forward(tok, idle) {
+                                TokenAction::Forward(t) => {
+                                    held_token = None;
+                                    ep.send((me + 1) % machines, 17, Msg::Token(t));
+                                }
+                                TokenAction::Terminate => {
+                                    held_token = None;
+                                    for peer in 0..machines {
+                                        if peer != me {
+                                            ep.send(peer, 1, Msg::Halt);
+                                        }
+                                    }
+                                    halted = true;
+                                }
+                                TokenAction::Hold => {}
+                            }
+                        }
+                    }
+
+                    // ---- 6. park briefly when nothing to do --------------
+                    if !progressed {
+                        // Spin briefly (remote lock-chain latency is a
+                        // multiple of the wake interval — §Perf), then
+                        // yield, then sleep once genuinely idle.
+                        idle_spins += 1;
+                        if idle_spins < 64 {
+                            std::hint::spin_loop();
+                        } else if idle_spins < 256 {
+                            std::thread::yield_now();
+                        } else {
+                            std::thread::sleep(Duration::from_micros(20));
+                        }
+                    } else {
+                        idle_spins = 0;
+                    }
+                }
+
+                // ---- final report / leader finalization ------------------
+                if me != 0 {
+                    let accs: Vec<Vec<f64>> = syncs
+                        .iter()
+                        .map(|op| {
+                            let mut acc = op.init();
+                            for lv in 0..owned {
+                                op.fold(&mut acc, lg.l2g[lv], &lg.vdata[lv]);
+                            }
+                            acc
+                        })
+                        .collect();
+                    let bytes = 24 + accs.iter().map(|a| 8 * a.len() as u64 + 4).sum::<u64>();
+                    ep.send(
+                        0,
+                        bytes,
+                        Msg::FinalReport {
+                            accs,
+                            updates: my_updates,
+                        },
+                    );
+                } else {
+                    // Leader: gather final reports from everyone else.
+                    let mut acc0: Vec<Vec<f64>> = syncs
+                        .iter()
+                        .map(|op| {
+                            let mut acc = op.init();
+                            for lv in 0..owned {
+                                op.fold(&mut acc, lg.l2g[lv], &lg.vdata[lv]);
+                            }
+                            acc
+                        })
+                        .collect();
+                    let mut updates_sum = my_updates;
+                    let mut got = 1;
+                    let deadline = Instant::now() + Duration::from_secs(30);
+                    while got < machines && Instant::now() < deadline {
+                        if let Some(rcv) = ep.recv_timeout(Duration::from_millis(50)) {
+                            if let Msg::FinalReport { accs, updates } = rcv.msg {
+                                for (i, a) in accs.into_iter().enumerate() {
+                                    syncs[i].merge(&mut acc0[i], &a);
+                                }
+                                updates_sum += updates;
+                                got += 1;
+                            }
+                        }
+                    }
+                    let values: Vec<(String, Vec<f64>)> = syncs
+                        .iter()
+                        .zip(acc0)
+                        .map(|(op, acc)| (op.key().to_string(), op.finalize(acc)))
+                        .collect();
+                    for (k, v) in &values {
+                        globals.set(k, v.clone());
+                    }
+                    total_updates.store(updates_sum, std::sync::atomic::Ordering::Relaxed);
+                    if let Some(cb) = on_sync {
+                        let e = epochs.load(std::sync::atomic::Ordering::Relaxed) + 1;
+                        cb(e, updates_sum, &globals);
+                    }
+                }
+
+                // Return authoritative data.
+                let verts: Vec<(VertexId, V)> = (0..owned)
+                    .map(|lv| (lg.l2g[lv], lg.vdata[lv].clone()))
+                    .collect();
+                let edges: Vec<(EdgeId, E)> = lg
+                    .le2g
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &ge)| {
+                        let (a, b) = endpoints_ref[ge as usize];
+                        partition.owner(a.min(b)) == me
+                    })
+                    .map(|(le, &ge)| (ge, lg.edata[le].clone()))
+                    .collect();
+                outputs.lock().unwrap()[me] = Some((verts, edges));
+            });
+        }
+    });
+
+    let mut vdata_opt: Vec<Option<V>> = (0..topo.adj_offsets.len() - 1).map(|_| None).collect();
+    let mut edata_opt: Vec<Option<E>> = (0..topo.endpoints.len()).map(|_| None).collect();
+    for out in outputs.into_inner().unwrap().into_iter().flatten() {
+        for (v, d) in out.0 {
+            vdata_opt[v as usize] = Some(d);
+        }
+        for (e, d) in out.1 {
+            edata_opt[e as usize] = Some(d);
+        }
+    }
+    let vdata: Vec<V> = vdata_opt.into_iter().map(|o| o.expect("vertex unowned")).collect();
+    let edata: Vec<E> = edata_opt.into_iter().map(|o| o.expect("edge unowned")).collect();
+    let graph = Graph::from_parts(vdata, edata, topo);
+
+    let stats = DistStats {
+        updates: total_updates.load(std::sync::atomic::Ordering::Relaxed),
+        sweeps: epochs.load(std::sync::atomic::Ordering::Relaxed),
+        seconds: start.elapsed().as_secs_f64(),
+        bytes_sent: net_stats
+            .iter()
+            .map(|s| s.bytes_sent.load(std::sync::atomic::Ordering::Relaxed))
+            .collect(),
+        msgs_sent: net_stats
+            .iter()
+            .map(|s| s.msgs_sent.load(std::sync::atomic::Ordering::Relaxed))
+            .collect(),
+    };
+    (graph, stats)
+}
+
+// ---------------------------------------------------------------------------
+// helper functions (free functions to satisfy the borrow checker)
+// ---------------------------------------------------------------------------
+
+fn is_idle(
+    pipeline: &HashMap<u64, Txn>,
+    ready: &[Txn],
+    sched: &dyn scheduler::Scheduler,
+    syncing: bool,
+    my_updates: u64,
+    cap: u64,
+) -> bool {
+    pipeline.is_empty() && ready.is_empty() && !syncing && (sched.is_empty() || my_updates >= cap)
+}
+
+/// Build and send the grant for a (now-granted) remote request.
+fn send_grant<V: DataValue, E: DataValue>(
+    ep: &crate::distributed::Endpoint<Msg<V, E>>,
+    lg: &LocalGraph<V, E>,
+    txn: TxnId,
+    vertex: VertexId,
+    req_vver: u64,
+    edge: Option<(EdgeId, u64)>,
+) {
+    let lv = lg.g2l[&vertex] as usize;
+    let vdata = if req_vver < lg.vversion[lv] {
+        Some((lg.vversion[lv], lg.vdata[lv].clone()))
+    } else {
+        None
+    };
+    let edata = edge.and_then(|(ge, req_ever)| {
+        let le = lg.ge2l[&ge] as usize;
+        if req_ever < lg.eversion[le] {
+            Some((ge, lg.eversion[le], lg.edata[le].clone()))
+        } else {
+            None
+        }
+    });
+    let bytes = 24
+        + vdata.as_ref().map(|(_, v)| 12 + v.wire_bytes()).unwrap_or(0)
+        + edata.as_ref().map(|(_, _, e)| 16 + e.wire_bytes()).unwrap_or(0);
+    ep.send(
+        txn.machine,
+        bytes,
+        Msg::Grant {
+            txn_seq: txn.seq,
+            vertex,
+            vdata,
+            edata,
+        },
+    );
+}
+
+/// A queued request became granted: local txns advance, remote get a Grant.
+#[allow(clippy::too_many_arguments)]
+fn handle_promotion<V: DataValue, E: DataValue>(
+    p: LockReq,
+    req_meta: &mut HashMap<(TxnId, VertexId), (u64, Option<(EdgeId, u64)>)>,
+    pipeline: &mut HashMap<u64, Txn>,
+    locks: &mut LockTable,
+    ep: &crate::distributed::Endpoint<Msg<V, E>>,
+    lg: &LocalGraph<V, E>,
+    partition: &Partition,
+    me: MachineId,
+    ready: &mut Vec<Txn>,
+) {
+    if p.txn.machine == me {
+        let txn = pipeline.get_mut(&p.txn.seq).expect("promotion for unknown txn");
+        debug_assert_eq!(txn.plan[txn.next].0, p.vertex);
+        txn.next += 1;
+        pump_txn(pipeline, p.txn.seq, locks, req_meta, ep, lg, partition, me, ready);
+    } else {
+        let (vver, edge) = req_meta
+            .remove(&(p.txn, p.vertex))
+            .expect("missing request metadata");
+        send_grant(ep, lg, p.txn, p.vertex, vver, edge);
+    }
+}
+
+/// Advance a transaction's lock chain as far as possible without waiting.
+#[allow(clippy::too_many_arguments)]
+fn pump_txn<V: DataValue, E: DataValue>(
+    pipeline: &mut HashMap<u64, Txn>,
+    seq: u64,
+    locks: &mut LockTable,
+    req_meta: &mut HashMap<(TxnId, VertexId), (u64, Option<(EdgeId, u64)>)>,
+    ep: &crate::distributed::Endpoint<Msg<V, E>>,
+    lg: &LocalGraph<V, E>,
+    partition: &Partition,
+    me: MachineId,
+    ready: &mut Vec<Txn>,
+) {
+    let _ = req_meta;
+    loop {
+        let txn = pipeline.get_mut(&seq).unwrap();
+        if txn.next >= txn.plan.len() {
+            // All locks held: move to the ready queue.
+            let txn = pipeline.remove(&seq).unwrap();
+            ready.push(txn);
+            return;
+        }
+        let (v, write) = txn.plan[txn.next];
+        let owner = partition.owner(v);
+        let txn_id = TxnId { machine: me, seq };
+        if owner == me {
+            if locks.request(LockReq {
+                txn: txn_id,
+                vertex: v,
+                write,
+            }) {
+                txn.next += 1;
+                continue;
+            }
+            return; // queued locally; promotion will resume us
+        }
+        // Remote: send the request with cache versions for piggybacking.
+        let lv = lg.g2l[&v] as usize;
+        let center_g = lg.l2g[txn.center_lv as usize];
+        let edge = if v < center_g {
+            // This owner is canonical for the center-v edge: ask for it.
+            lg.neighbors(txn.center_lv)
+                .iter()
+                .find(|&&(nlv, _)| lg.l2g[nlv as usize] == v)
+                .map(|&(_, le)| (lg.le2g[le as usize], lg.eversion[le as usize]))
+        } else {
+            None
+        };
+        ep.send(
+            owner,
+            33,
+            Msg::LockReq {
+                txn: txn_id,
+                vertex: v,
+                write,
+                vver: lg.vversion[lv],
+                edge,
+            },
+        );
+        return; // wait for the grant
+    }
+}
+
+/// Execute a batch of fully-locked transactions, write back, release.
+#[allow(clippy::too_many_arguments)]
+fn execute_batch<V, E, P>(
+    batch: &[Txn],
+    program: &P,
+    consistency: Consistency,
+    lg: &mut LocalGraph<V, E>,
+    globals: &GlobalValues,
+    partition: &Partition,
+    me: MachineId,
+    locks: &mut LockTable,
+    req_meta: &mut HashMap<(TxnId, VertexId), (u64, Option<(EdgeId, u64)>)>,
+    ep: &crate::distributed::Endpoint<Msg<V, E>>,
+    sched: &mut Box<dyn scheduler::Scheduler>,
+    pipeline: &mut HashMap<u64, Txn>,
+    ready: &mut Vec<Txn>,
+    term: &mut Termination,
+    updates_hint: u64,
+    halted: bool,
+) where
+    V: DataValue,
+    E: DataValue,
+    P: VertexProgram<V, E>,
+{
+    // Assemble scopes (raw pointers into lg data; locks guarantee
+    // exclusivity; batch members' scopes may alias READ slots only, which
+    // is fine since read locks are shared).
+    let vptr = lg.vdata.as_mut_ptr();
+    let eptr = lg.edata.as_mut_ptr();
+    let mut scopes: Vec<Scope<V, E>> = batch
+        .iter()
+        .map(|txn| {
+            let mut sc = Scope::new_buffer(consistency);
+            unsafe {
+                sc.reset(lg.l2g[txn.center_lv as usize], vptr.add(txn.center_lv as usize));
+                let lo = lg.adj_offsets[txn.center_lv as usize] as usize;
+                let hi = lg.adj_offsets[txn.center_lv as usize + 1] as usize;
+                for &(nlv, nle) in &lg.adj[lo..hi] {
+                    sc.push_neighbor(
+                        lg.l2g[nlv as usize],
+                        lg.le2g[nle as usize],
+                        vptr.add(nlv as usize),
+                        eptr.add(nle as usize),
+                    );
+                }
+            }
+            sc
+        })
+        .collect();
+    let mut ctx = Ctx::new(globals);
+    ctx.set_updates_hint(updates_hint);
+    {
+        let mut refs: Vec<&mut Scope<V, E>> = scopes.iter_mut().collect();
+        program.update_batch(&mut refs, &mut ctx);
+    }
+
+    // Write-back + release, one transaction at a time.
+    for (txn, sc) in batch.iter().zip(&scopes) {
+        let center_lv = txn.center_lv as usize;
+        let center_g = lg.l2g[center_lv];
+        // Per-owner release parts.
+        #[allow(clippy::type_complexity)]
+        let mut parts: HashMap<
+            MachineId,
+            (
+                Vec<(VertexId, bool)>,
+                Vec<(VertexId, u64, V)>,
+                Vec<(EdgeId, u64, E)>,
+                Vec<Task>,
+            ),
+        > = HashMap::new();
+
+        // Dirty center: bump our authoritative version. Ghost holders
+        // refresh via future grants (or eagerly in Unsafe mode).
+        if sc.center_dirty() {
+            lg.vversion[center_lv] += 1;
+        }
+        // Dirty neighbors (full consistency): send to their owners.
+        for (i, &(nlv, nle)) in lg.adj
+            [lg.adj_offsets[center_lv] as usize..lg.adj_offsets[center_lv + 1] as usize]
+            .iter()
+            .enumerate()
+        {
+            let nlv = nlv as usize;
+            if sc.nbr_dirty(i) {
+                let owner = lg.owner[nlv];
+                if owner == me {
+                    lg.vversion[nlv] += 1;
+                } else {
+                    lg.vversion[nlv] += 1; // our ghost now at granted+1
+                    parts.entry(owner).or_default().1.push((
+                        lg.l2g[nlv],
+                        lg.vversion[nlv],
+                        lg.vdata[nlv].clone(),
+                    ));
+                }
+            }
+            let nle = nle as usize;
+            if sc.edge_dirty(i) {
+                let ge = lg.le2g[nle];
+                let (a, b) = {
+                    // endpoints: center and neighbor
+                    (center_g.min(lg.l2g[nlv]), center_g.max(lg.l2g[nlv]))
+                };
+                let canon_owner = partition.owner(a.min(b));
+                lg.eversion[nle] += 1;
+                if canon_owner != me {
+                    parts.entry(canon_owner).or_default().2.push((
+                        ge,
+                        lg.eversion[nle],
+                        lg.edata[nle].clone(),
+                    ));
+                }
+            }
+        }
+        // Unlocks grouped by owner.
+        let txn_id = TxnId {
+            machine: me,
+            seq: txn.seq,
+        };
+        for &(v, write) in &txn.plan {
+            let owner = partition.owner(v);
+            parts.entry(owner).or_default().0.push((v, write));
+        }
+        // Scheduled tasks grouped by owner (drain ctx once per batch below).
+        // Tasks were accumulated across the whole batch; attribute them to
+        // owners now (after the last scope's write-back is fine: tasks are
+        // work hints, not data).
+        if std::ptr::eq(txn, batch.last().unwrap()) {
+            for t in ctx.scheduled.drain(..) {
+                let owner = partition.owner(t.vertex);
+                if owner == me {
+                    if !halted {
+                        sched.push(t);
+                    }
+                } else {
+                    parts.entry(owner).or_default().3.push(t);
+                }
+            }
+        }
+
+        // Unsafe mode: eager ghost push of the dirty center.
+        if matches!(consistency, Consistency::Unsafe) && sc.center_dirty() {
+            let ver = lg.vversion[center_lv];
+            let val = lg.vdata[center_lv].clone();
+            for &peer in &lg.mirrors[center_lv] {
+                let bytes = 16 + val.wire_bytes();
+                ep.send(
+                    peer,
+                    bytes,
+                    Msg::GhostPush {
+                        verts: vec![(center_g, ver, val.clone())],
+                        edges: vec![],
+                    },
+                );
+            }
+        }
+
+        for (owner, (unlocks, vwrites, ewrites, tasks)) in parts {
+            if owner == me {
+                // Local: apply writes (already in place), release locks.
+                for t in tasks {
+                    if !halted {
+                        sched.push(t);
+                    }
+                }
+                for (v, write) in unlocks {
+                    let promoted = locks.release(v, txn_id, write);
+                    for p in promoted {
+                        handle_promotion(
+                            p, req_meta, pipeline, locks, ep, lg, partition, me, ready,
+                        );
+                    }
+                }
+            } else {
+                let bytes = 16
+                    + unlocks.len() as u64 * 9
+                    + vwrites
+                        .iter()
+                        .map(|(_, _, v)| 12 + v.wire_bytes())
+                        .sum::<u64>()
+                    + ewrites
+                        .iter()
+                        .map(|(_, _, e)| 16 + e.wire_bytes())
+                        .sum::<u64>()
+                    + tasks.len() as u64 * 12;
+                term.on_send();
+                ep.send(
+                    owner,
+                    bytes,
+                    Msg::Release {
+                        txn: txn_id,
+                        unlocks,
+                        vwrites,
+                        ewrites,
+                        tasks,
+                    },
+                );
+            }
+        }
+    }
+}

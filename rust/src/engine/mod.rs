@@ -1,0 +1,360 @@
+//! The GraphLab abstraction: update functions, scopes, sync operations,
+//! consistency models (paper Sec. 3), and the engines that execute them
+//! (paper Sec. 4.2).
+//!
+//! * [`VertexProgram`] — the user's **update function**
+//!   `(v, S_v) -> (S_v, T)`: it mutates the scope and schedules new tasks
+//!   through [`Ctx`].
+//! * [`Scope`] — the data of vertex `v`, its adjacent edges and vertices,
+//!   with access rights determined by the [`Consistency`] model.
+//! * [`SyncOp`] — the **sync operation** `(Key, Fold, Merge, Finalize,
+//!   acc(0), tau)` maintaining global aggregates readable from updates.
+//! * Engines: [`shared::SharedEngine`] (the multicore runtime of the UAI'10
+//!   paper that Distributed GraphLab builds on), [`chromatic`] and
+//!   [`locking`] (the two distributed engines of Sec. 4.2).
+
+pub mod chromatic;
+pub mod locking;
+pub mod shared;
+pub mod sync;
+
+pub use sync::{GlobalValues, SyncOp};
+
+use crate::graph::{EdgeId, VertexId};
+use crate::scheduler::Task;
+
+/// Sequential-consistency models (paper Sec. 3.5, Fig. 3).
+///
+/// `Unsafe` is the paper's "adventurous user" escape hatch (end of Sec.
+/// 3.5): no exclusion at all. It exists to reproduce Fig. 1's
+/// consistent-vs-inconsistent ALS comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Consistency {
+    /// Write center vertex only; read adjacent edges. Map-like parallelism.
+    Vertex,
+    /// Write center vertex + adjacent edges; read adjacent vertices.
+    Edge,
+    /// Write the entire scope (center, adjacent edges and vertices).
+    Full,
+    /// No consistency guarantee (races allowed) — for Fig. 1 only.
+    Unsafe,
+}
+
+impl Consistency {
+    /// Parse from CLI/config string.
+    pub fn parse(s: &str) -> Self {
+        match s {
+            "vertex" => Consistency::Vertex,
+            "edge" => Consistency::Edge,
+            "full" => Consistency::Full,
+            "unsafe" | "none" => Consistency::Unsafe,
+            other => panic!("unknown consistency '{other}' (vertex|edge|full|unsafe)"),
+        }
+    }
+}
+
+/// One neighbor slot of a scope (raw pointers; the engine guarantees the
+/// aliasing discipline of the active consistency model).
+#[derive(Clone, Copy)]
+struct NbrSlot<V, E> {
+    id: VertexId,
+    edge_id: EdgeId,
+    vdata: *mut V,
+    edata: *mut E,
+}
+
+/// The scope `S_v` handed to an update function: the data of `v`, its
+/// adjacent edges, and its neighbors (paper Fig. 2). Access rights are
+/// checked against the consistency model at runtime (debug assertions in
+/// release-hot accessors are `debug_assert!`).
+pub struct Scope<V, E> {
+    vertex: VertexId,
+    center: *mut V,
+    nbrs: Vec<NbrSlot<V, E>>,
+    consistency: Consistency,
+    dirty_center: bool,
+    dirty_edges: Vec<bool>,
+    dirty_nbrs: Vec<bool>,
+}
+
+impl<V, E> Scope<V, E> {
+    /// Empty reusable scope buffer (engines call [`Scope::reset`] per task).
+    pub fn new_buffer(consistency: Consistency) -> Self {
+        Scope {
+            vertex: 0,
+            center: std::ptr::null_mut(),
+            nbrs: Vec::new(),
+            consistency,
+            dirty_center: false,
+            dirty_edges: Vec::new(),
+            dirty_nbrs: Vec::new(),
+        }
+    }
+
+    /// (engine-internal) Re-point the buffer at a new center vertex.
+    ///
+    /// # Safety
+    /// `center` must be exclusively accessible for the duration of the
+    /// update per the consistency model; neighbor slots are pushed with
+    /// [`Scope::push_neighbor`] under the same contract.
+    pub(crate) unsafe fn reset(&mut self, vertex: VertexId, center: *mut V) {
+        self.vertex = vertex;
+        self.center = center;
+        self.nbrs.clear();
+        self.dirty_center = false;
+        self.dirty_edges.clear();
+        self.dirty_nbrs.clear();
+    }
+
+    /// (engine-internal) Append one neighbor slot.
+    pub(crate) unsafe fn push_neighbor(
+        &mut self,
+        id: VertexId,
+        edge_id: EdgeId,
+        vdata: *mut V,
+        edata: *mut E,
+    ) {
+        self.nbrs.push(NbrSlot {
+            id,
+            edge_id,
+            vdata,
+            edata,
+        });
+        self.dirty_edges.push(false);
+        self.dirty_nbrs.push(false);
+    }
+
+    /// The center vertex id.
+    #[inline]
+    pub fn vertex(&self) -> VertexId {
+        self.vertex
+    }
+
+    /// Degree of the center vertex (neighbor slot count).
+    #[inline]
+    pub fn degree(&self) -> usize {
+        self.nbrs.len()
+    }
+
+    /// Consistency model in force.
+    #[inline]
+    pub fn consistency(&self) -> Consistency {
+        self.consistency
+    }
+
+    /// Read the center vertex data.
+    #[inline]
+    pub fn center(&self) -> &V {
+        unsafe { &*self.center }
+    }
+
+    /// Mutate the center vertex data (allowed under every model).
+    #[inline]
+    pub fn center_mut(&mut self) -> &mut V {
+        self.dirty_center = true;
+        unsafe { &mut *self.center }
+    }
+
+    /// Neighbor vertex id at slot `i`.
+    #[inline]
+    pub fn nbr_id(&self, i: usize) -> VertexId {
+        self.nbrs[i].id
+    }
+
+    /// Edge id of slot `i`.
+    #[inline]
+    pub fn edge_id(&self, i: usize) -> EdgeId {
+        self.nbrs[i].edge_id
+    }
+
+    /// Read neighbor vertex data (edge/full consistency; under vertex
+    /// consistency neighbor reads are not guaranteed consistent and are
+    /// rejected).
+    #[inline]
+    pub fn nbr(&self, i: usize) -> &V {
+        debug_assert!(
+            !matches!(self.consistency, Consistency::Vertex),
+            "vertex consistency grants no neighbor-vertex access"
+        );
+        unsafe { &*self.nbrs[i].vdata }
+    }
+
+    /// Mutate neighbor vertex data (full consistency only).
+    #[inline]
+    pub fn nbr_mut(&mut self, i: usize) -> &mut V {
+        assert!(
+            matches!(self.consistency, Consistency::Full | Consistency::Unsafe),
+            "neighbor-vertex writes require full consistency"
+        );
+        self.dirty_nbrs[i] = true;
+        unsafe { &mut *self.nbrs[i].vdata }
+    }
+
+    /// Read edge data at slot `i` (all models).
+    #[inline]
+    pub fn edge(&self, i: usize) -> &E {
+        unsafe { &*self.nbrs[i].edata }
+    }
+
+    /// Mutate edge data at slot `i` (edge/full consistency).
+    #[inline]
+    pub fn edge_mut(&mut self, i: usize) -> &mut E {
+        debug_assert!(
+            !matches!(self.consistency, Consistency::Vertex),
+            "vertex consistency grants read-only edge access"
+        );
+        self.dirty_edges[i] = true;
+        unsafe { &mut *self.nbrs[i].edata }
+    }
+
+    /// Whether the center data was mutably borrowed.
+    pub fn center_dirty(&self) -> bool {
+        self.dirty_center
+    }
+
+    /// Whether edge slot `i` was mutably borrowed.
+    pub fn edge_dirty(&self, i: usize) -> bool {
+        self.dirty_edges[i]
+    }
+
+    /// Whether neighbor slot `i` was mutably borrowed.
+    pub fn nbr_dirty(&self, i: usize) -> bool {
+        self.dirty_nbrs[i]
+    }
+}
+
+/// Per-update context: task scheduling plus read access to sync globals
+/// (the `T` and sync-read halves of the update signature).
+pub struct Ctx<'g> {
+    /// Tasks scheduled by this update (drained by the engine).
+    pub scheduled: Vec<Task>,
+    globals: &'g GlobalValues,
+    num_updates_hint: u64,
+}
+
+impl<'g> Ctx<'g> {
+    /// (engine-internal) fresh context.
+    pub(crate) fn new(globals: &'g GlobalValues) -> Self {
+        Ctx {
+            scheduled: Vec::new(),
+            globals,
+            num_updates_hint: 0,
+        }
+    }
+
+    /// Schedule `(Update, v)` with priority (merged by the scheduler).
+    pub fn schedule(&mut self, vertex: VertexId, priority: f64) {
+        self.scheduled.push(Task { vertex, priority });
+    }
+
+    /// Read the latest finalized value of a sync operation.
+    pub fn global(&self, key: &str) -> Option<Vec<f64>> {
+        self.globals.get(key)
+    }
+
+    /// Approximate count of updates executed so far (for app-side logging).
+    pub fn updates_so_far(&self) -> u64 {
+        self.num_updates_hint
+    }
+
+    pub(crate) fn set_updates_hint(&mut self, n: u64) {
+        self.num_updates_hint = n;
+    }
+}
+
+/// The user's **update function** (paper Sec. 3.2) plus an optional batched
+/// form used to drive the AOT-compiled PJRT kernels.
+pub trait VertexProgram<V, E>: Send + Sync {
+    /// Consistency model this program requires.
+    fn consistency(&self) -> Consistency {
+        Consistency::Edge
+    }
+
+    /// The update: mutate the scope, schedule follow-up tasks.
+    fn update(&self, scope: &mut Scope<V, E>, ctx: &mut Ctx);
+
+    /// Preferred batch width (1 = no batching). Engines that can gather
+    /// `batch_width()` same-color tasks call [`VertexProgram::update_batch`]
+    /// instead of per-vertex [`VertexProgram::update`]; the default
+    /// implementation degrades to the scalar path.
+    fn batch_width(&self) -> usize {
+        1
+    }
+
+    /// Batched update over disjoint scopes (all consistency obligations
+    /// already discharged by the engine). Programs backed by PJRT
+    /// artifacts override this to gather tiles and execute one compiled
+    /// call per batch.
+    fn update_batch(&self, scopes: &mut [&mut Scope<V, E>], ctx: &mut Ctx) {
+        for scope in scopes {
+            self.update(scope, ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_tracks_dirtiness_and_rights() {
+        let mut center = 10i64;
+        let mut nbr = 20i64;
+        let mut edge = 5i64;
+        let mut s: Scope<i64, i64> = Scope::new_buffer(Consistency::Edge);
+        unsafe {
+            s.reset(0, &mut center);
+            s.push_neighbor(1, 0, &mut nbr, &mut edge);
+        }
+        assert_eq!(*s.center(), 10);
+        assert!(!s.center_dirty());
+        *s.center_mut() += 1;
+        assert!(s.center_dirty());
+        assert_eq!(*s.nbr(0), 20);
+        *s.edge_mut(0) = 7;
+        assert!(s.edge_dirty(0));
+        assert!(!s.nbr_dirty(0));
+        assert_eq!(center, 11);
+        assert_eq!(edge, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "full consistency")]
+    fn edge_consistency_rejects_neighbor_writes() {
+        let mut center = 0i64;
+        let mut nbr = 0i64;
+        let mut edge = 0i64;
+        let mut s: Scope<i64, i64> = Scope::new_buffer(Consistency::Edge);
+        unsafe {
+            s.reset(0, &mut center);
+            s.push_neighbor(1, 0, &mut nbr, &mut edge);
+        }
+        let _ = s.nbr_mut(0);
+    }
+
+    #[test]
+    fn full_consistency_allows_neighbor_writes() {
+        let mut center = 0i64;
+        let mut nbr = 0i64;
+        let mut edge = 0i64;
+        let mut s: Scope<i64, i64> = Scope::new_buffer(Consistency::Full);
+        unsafe {
+            s.reset(0, &mut center);
+            s.push_neighbor(1, 0, &mut nbr, &mut edge);
+        }
+        *s.nbr_mut(0) = 42;
+        assert!(s.nbr_dirty(0));
+        assert_eq!(nbr, 42);
+    }
+
+    #[test]
+    fn ctx_collects_tasks() {
+        let globals = GlobalValues::new();
+        let mut ctx = Ctx::new(&globals);
+        ctx.schedule(3, 1.5);
+        ctx.schedule(7, 0.0);
+        assert_eq!(ctx.scheduled.len(), 2);
+        assert_eq!(ctx.scheduled[0].vertex, 3);
+        assert!(ctx.global("missing").is_none());
+    }
+}

@@ -1,0 +1,237 @@
+//! The **sync operation** (paper Sec. 3.3): `(Key, Fold, Merge, Finalize,
+//! acc(0), tau)` — a MapReduce-style global aggregate maintained while the
+//! asynchronous computation runs, readable from every update function.
+//!
+//! Accumulators are `Vec<f64>` — sufficient for every aggregate in the
+//! paper's applications (RMSE, convergence counters, GMM parameter sums,
+//! top-k ranks) while keeping the distributed protocol trivially
+//! serializable.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use crate::graph::VertexId;
+
+/// A sync operation definition.
+pub trait SyncOp<V>: Send + Sync {
+    /// Unique key under which the finalized value is published.
+    fn key(&self) -> &str;
+
+    /// `acc(0)` — the initial accumulator.
+    fn init(&self) -> Vec<f64>;
+
+    /// Fold one vertex into the accumulator.
+    fn fold(&self, acc: &mut Vec<f64>, vertex: VertexId, data: &V);
+
+    /// Merge a partial accumulator (parallel / distributed reduction).
+    fn merge(&self, acc: &mut Vec<f64>, other: &[f64]) {
+        for (a, b) in acc.iter_mut().zip(other) {
+            *a += b;
+        }
+    }
+
+    /// Transform the final accumulator into the published value.
+    fn finalize(&self, acc: Vec<f64>) -> Vec<f64> {
+        acc
+    }
+
+    /// Sync interval `tau`, in update-function executions. `0` means "at
+    /// every natural barrier" (color boundary for the Chromatic engine,
+    /// periodic barrier for the Locking engine).
+    fn interval(&self) -> u64 {
+        0
+    }
+}
+
+/// A closure-based [`SyncOp`] for apps and tests.
+pub struct FnSync<V> {
+    key: String,
+    init: Vec<f64>,
+    interval: u64,
+    #[allow(clippy::type_complexity)]
+    fold: Box<dyn Fn(&mut Vec<f64>, VertexId, &V) + Send + Sync>,
+    #[allow(clippy::type_complexity)]
+    finalize: Box<dyn Fn(Vec<f64>) -> Vec<f64> + Send + Sync>,
+}
+
+impl<V> FnSync<V> {
+    /// Build from closures with additive merge.
+    pub fn new(
+        key: &str,
+        init: Vec<f64>,
+        interval: u64,
+        fold: impl Fn(&mut Vec<f64>, VertexId, &V) + Send + Sync + 'static,
+        finalize: impl Fn(Vec<f64>) -> Vec<f64> + Send + Sync + 'static,
+    ) -> Self {
+        FnSync {
+            key: key.to_string(),
+            init,
+            interval,
+            fold: Box::new(fold),
+            finalize: Box::new(finalize),
+        }
+    }
+}
+
+impl<V> SyncOp<V> for FnSync<V> {
+    fn key(&self) -> &str {
+        &self.key
+    }
+    fn init(&self) -> Vec<f64> {
+        self.init.clone()
+    }
+    fn fold(&self, acc: &mut Vec<f64>, vertex: VertexId, data: &V) {
+        (self.fold)(acc, vertex, data)
+    }
+    fn finalize(&self, acc: Vec<f64>) -> Vec<f64> {
+        (self.finalize)(acc)
+    }
+    fn interval(&self) -> u64 {
+        self.interval
+    }
+}
+
+/// Published sync results, readable from update functions via
+/// [`crate::engine::Ctx::global`]. One instance is shared per engine run
+/// (in the distributed engines every machine holds a replica that the
+/// leader refreshes after each global reduce).
+#[derive(Default)]
+pub struct GlobalValues {
+    map: RwLock<HashMap<String, Vec<f64>>>,
+}
+
+impl GlobalValues {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Latest finalized value for `key`.
+    pub fn get(&self, key: &str) -> Option<Vec<f64>> {
+        self.map.read().unwrap().get(key).cloned()
+    }
+
+    /// Publish a finalized value.
+    pub fn set(&self, key: &str, value: Vec<f64>) {
+        self.map.write().unwrap().insert(key.to_string(), value);
+    }
+
+    /// All published keys (for logging).
+    pub fn keys(&self) -> Vec<String> {
+        self.map.read().unwrap().keys().cloned().collect()
+    }
+}
+
+/// Run `ops` sequentially over `n` vertices with data accessor `data`,
+/// publishing finalized values into `globals`. Used by the shared-memory
+/// engine at sync barriers; the distributed engines split fold/merge
+/// across machines instead.
+pub fn run_syncs_local<V>(
+    ops: &[Box<dyn SyncOp<V>>],
+    n: usize,
+    data: impl Fn(VertexId) -> V,
+    globals: &GlobalValues,
+) where
+    V: Clone,
+{
+    for op in ops {
+        let mut acc = op.init();
+        for v in 0..n as VertexId {
+            let d = data(v);
+            op.fold(&mut acc, v, &d);
+        }
+        globals.set(op.key(), op.finalize(acc));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_merge_finalize_pipeline() {
+        // Mean of vertex values: acc = [sum, count], finalize = [sum/count].
+        let op: FnSync<f64> = FnSync::new(
+            "mean",
+            vec![0.0, 0.0],
+            0,
+            |acc, _v, d| {
+                acc[0] += *d;
+                acc[1] += 1.0;
+            },
+            |acc| vec![acc[0] / acc[1].max(1.0)],
+        );
+        let data = [1.0f64, 2.0, 3.0, 4.0];
+        let mut acc = op.init();
+        for (v, d) in data.iter().enumerate() {
+            op.fold(&mut acc, v as VertexId, d);
+        }
+        // Split-merge must equal sequential.
+        let mut a1 = op.init();
+        let mut a2 = op.init();
+        for (v, d) in data.iter().enumerate().take(2) {
+            op.fold(&mut a1, v as VertexId, d);
+        }
+        for (v, d) in data.iter().enumerate().skip(2) {
+            op.fold(&mut a2, v as VertexId, d);
+        }
+        op.merge(&mut a1, &a2);
+        assert_eq!(a1, acc);
+        assert_eq!(op.finalize(acc), vec![2.5]);
+    }
+
+    #[test]
+    fn globals_roundtrip() {
+        let g = GlobalValues::new();
+        assert!(g.get("x").is_none());
+        g.set("x", vec![1.0, 2.0]);
+        assert_eq!(g.get("x").unwrap(), vec![1.0, 2.0]);
+        g.set("x", vec![3.0]);
+        assert_eq!(g.get("x").unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn top_two_sync_from_the_paper() {
+        // The paper's PageRank example: second most popular page.
+        struct TopTwo;
+        impl SyncOp<f64> for TopTwo {
+            fn key(&self) -> &str {
+                "top2"
+            }
+            fn init(&self) -> Vec<f64> {
+                vec![f64::NEG_INFINITY, f64::NEG_INFINITY]
+            }
+            fn fold(&self, acc: &mut Vec<f64>, _v: VertexId, d: &f64) {
+                if *d > acc[0] {
+                    acc[1] = acc[0];
+                    acc[0] = *d;
+                } else if *d > acc[1] {
+                    acc[1] = *d;
+                }
+            }
+            fn merge(&self, acc: &mut Vec<f64>, other: &[f64]) {
+                for &x in other {
+                    if x > acc[0] {
+                        acc[1] = acc[0];
+                        acc[0] = x;
+                    } else if x > acc[1] {
+                        acc[1] = x;
+                    }
+                }
+            }
+            fn finalize(&self, acc: Vec<f64>) -> Vec<f64> {
+                vec![acc[1]]
+            }
+        }
+        let op = TopTwo;
+        let globals = GlobalValues::new();
+        let data = [0.3, 0.9, 0.1, 0.7];
+        run_syncs_local(
+            &[Box::new(op) as Box<dyn SyncOp<f64>>],
+            data.len(),
+            |v| data[v as usize],
+            &globals,
+        );
+        assert_eq!(globals.get("top2").unwrap(), vec![0.7]);
+    }
+}

@@ -1,0 +1,359 @@
+//! The GraphLab **data graph** (paper Sec. 3.1).
+//!
+//! `Graph<V, E>` stores arbitrary user data on the vertices and edges of an
+//! undirected graph with a *static* structure (the paper fixes structure
+//! during execution; mutation is limited to the data). Adjacency is CSR so
+//! scope assembly in the engines is a contiguous scan.
+//!
+//! Directed edge data (e.g. PageRank link weights) is supported the way the
+//! paper describes: each undirected edge carries one `E` which the
+//! application partitions into its two directions (every app in `apps/`
+//! that needs direction does this; see `apps::pagerank::PrEdge`).
+
+pub mod store;
+
+pub use store::SharedStore;
+
+/// Vertex identifier (index into the data graph).
+pub type VertexId = u32;
+/// Edge identifier (index into the edge data).
+pub type EdgeId = u32;
+
+/// Mutable-data, static-structure undirected graph.
+#[derive(Debug, Clone)]
+pub struct Graph<V, E> {
+    vertex_data: Vec<V>,
+    edge_data: Vec<E>,
+    endpoints: Vec<(VertexId, VertexId)>,
+    adj_offsets: Vec<u32>,
+    adj: Vec<(VertexId, EdgeId)>,
+}
+
+/// Incremental builder; `build()` freezes the structure into CSR form.
+#[derive(Debug)]
+pub struct GraphBuilder<V, E> {
+    vertex_data: Vec<V>,
+    edges: Vec<(VertexId, VertexId, E)>,
+}
+
+impl<V, E> Default for GraphBuilder<V, E> {
+    fn default() -> Self {
+        GraphBuilder {
+            vertex_data: Vec::new(),
+            edges: Vec::new(),
+        }
+    }
+}
+
+impl<V, E> GraphBuilder<V, E> {
+    /// Empty builder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder with preallocated capacity.
+    pub fn with_capacity(vertices: usize, edges: usize) -> Self {
+        GraphBuilder {
+            vertex_data: Vec::with_capacity(vertices),
+            edges: Vec::with_capacity(edges),
+        }
+    }
+
+    /// Add a vertex carrying `data`; returns its id.
+    pub fn add_vertex(&mut self, data: V) -> VertexId {
+        self.vertex_data.push(data);
+        (self.vertex_data.len() - 1) as VertexId
+    }
+
+    /// Add `n` vertices produced by `f(local_index)`.
+    pub fn add_vertices(&mut self, n: usize, mut f: impl FnMut(usize) -> V) -> VertexId {
+        let first = self.vertex_data.len() as VertexId;
+        for i in 0..n {
+            self.vertex_data.push(f(i));
+        }
+        first
+    }
+
+    /// Add an undirected edge `{u, v}` carrying `data`; returns its id.
+    /// Self-loops and duplicate edges are rejected by debug assertion only
+    /// (the paper's apps never produce them; checking duplicates globally
+    /// would need a set per vertex).
+    pub fn add_edge(&mut self, u: VertexId, v: VertexId, data: E) -> EdgeId {
+        debug_assert!(u != v, "self loops are not part of the GraphLab model");
+        debug_assert!((u as usize) < self.vertex_data.len());
+        debug_assert!((v as usize) < self.vertex_data.len());
+        self.edges.push((u, v, data));
+        (self.edges.len() - 1) as EdgeId
+    }
+
+    /// Current vertex count.
+    pub fn num_vertices(&self) -> usize {
+        self.vertex_data.len()
+    }
+
+    /// Freeze into CSR form.
+    pub fn build(self) -> Graph<V, E> {
+        let n = self.vertex_data.len();
+        let m = self.edges.len();
+        let mut degrees = vec![0u32; n];
+        for &(u, v, _) in &self.edges {
+            degrees[u as usize] += 1;
+            degrees[v as usize] += 1;
+        }
+        let mut adj_offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            adj_offsets[i + 1] = adj_offsets[i] + degrees[i];
+        }
+        let mut adj = vec![(0 as VertexId, 0 as EdgeId); 2 * m];
+        let mut cursor: Vec<u32> = adj_offsets[..n].to_vec();
+        let mut endpoints = Vec::with_capacity(m);
+        let mut edge_data = Vec::with_capacity(m);
+        for (eid, (u, v, data)) in self.edges.into_iter().enumerate() {
+            let eid = eid as EdgeId;
+            adj[cursor[u as usize] as usize] = (v, eid);
+            cursor[u as usize] += 1;
+            adj[cursor[v as usize] as usize] = (u, eid);
+            cursor[v as usize] += 1;
+            endpoints.push((u, v));
+            edge_data.push(data);
+        }
+        Graph {
+            vertex_data: self.vertex_data,
+            edge_data,
+            endpoints,
+            adj_offsets,
+            adj,
+        }
+    }
+}
+
+impl<V, E> Graph<V, E> {
+    /// Number of vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.vertex_data.len()
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.edge_data.len()
+    }
+
+    /// Degree of `v`.
+    pub fn degree(&self, v: VertexId) -> usize {
+        let v = v as usize;
+        (self.adj_offsets[v + 1] - self.adj_offsets[v]) as usize
+    }
+
+    /// Maximum degree over all vertices.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Neighbors of `v` as `(neighbor, edge_id)` pairs.
+    pub fn neighbors(&self, v: VertexId) -> &[(VertexId, EdgeId)] {
+        let v = v as usize;
+        &self.adj[self.adj_offsets[v] as usize..self.adj_offsets[v + 1] as usize]
+    }
+
+    /// Vertex data (shared).
+    pub fn vertex_data(&self, v: VertexId) -> &V {
+        &self.vertex_data[v as usize]
+    }
+
+    /// Vertex data (exclusive).
+    pub fn vertex_data_mut(&mut self, v: VertexId) -> &mut V {
+        &mut self.vertex_data[v as usize]
+    }
+
+    /// Edge data (shared).
+    pub fn edge_data(&self, e: EdgeId) -> &E {
+        &self.edge_data[e as usize]
+    }
+
+    /// Edge data (exclusive).
+    pub fn edge_data_mut(&mut self, e: EdgeId) -> &mut E {
+        &mut self.edge_data[e as usize]
+    }
+
+    /// The two endpoints of edge `e` in insertion order.
+    pub fn endpoints(&self, e: EdgeId) -> (VertexId, VertexId) {
+        self.endpoints[e as usize]
+    }
+
+    /// Given one endpoint of `e`, return the other.
+    pub fn other_end(&self, e: EdgeId, v: VertexId) -> VertexId {
+        let (a, b) = self.endpoints[e as usize];
+        if a == v {
+            b
+        } else {
+            debug_assert_eq!(b, v);
+            a
+        }
+    }
+
+    /// Whether `u` and `v` are adjacent (linear scan of the smaller list).
+    pub fn adjacent(&self, u: VertexId, v: VertexId) -> bool {
+        let (a, b) = if self.degree(u) <= self.degree(v) {
+            (u, v)
+        } else {
+            (v, u)
+        };
+        self.neighbors(a).iter().any(|&(w, _)| w == b)
+    }
+
+    /// Iterate all vertex ids.
+    pub fn vertex_ids(&self) -> impl Iterator<Item = VertexId> {
+        0..self.vertex_data.len() as VertexId
+    }
+
+    /// Take ownership of vertex and edge data, leaving structure intact is
+    /// impossible; instead expose consuming decomposition for the
+    /// distributed loader.
+    pub fn into_parts(self) -> (Vec<V>, Vec<E>, GraphTopology) {
+        (
+            self.vertex_data,
+            self.edge_data,
+            GraphTopology {
+                endpoints: self.endpoints,
+                adj_offsets: self.adj_offsets,
+                adj: self.adj,
+            },
+        )
+    }
+
+    /// Rebuild a graph from parts produced by [`Graph::into_parts`].
+    pub fn from_parts(vertex_data: Vec<V>, edge_data: Vec<E>, topo: GraphTopology) -> Self {
+        debug_assert_eq!(vertex_data.len() + 1, topo.adj_offsets.len());
+        debug_assert_eq!(edge_data.len(), topo.endpoints.len());
+        Graph {
+            vertex_data,
+            edge_data,
+            endpoints: topo.endpoints,
+            adj_offsets: topo.adj_offsets,
+            adj: topo.adj,
+        }
+    }
+
+    /// Borrow the structure alone.
+    pub fn topology(&self) -> GraphTopologyRef<'_> {
+        GraphTopologyRef {
+            endpoints: &self.endpoints,
+            adj_offsets: &self.adj_offsets,
+            adj: &self.adj,
+        }
+    }
+}
+
+/// Owned structure of a graph without its data (distributed loader).
+#[derive(Debug, Clone)]
+pub struct GraphTopology {
+    /// Edge endpoints by edge id.
+    pub endpoints: Vec<(VertexId, VertexId)>,
+    /// CSR offsets.
+    pub adj_offsets: Vec<u32>,
+    /// CSR neighbor list.
+    pub adj: Vec<(VertexId, EdgeId)>,
+}
+
+/// Borrowed structure of a graph.
+#[derive(Debug, Clone, Copy)]
+pub struct GraphTopologyRef<'a> {
+    /// Edge endpoints by edge id.
+    pub endpoints: &'a [(VertexId, VertexId)],
+    /// CSR offsets.
+    pub adj_offsets: &'a [u32],
+    /// CSR neighbor list.
+    pub adj: &'a [(VertexId, EdgeId)],
+}
+
+impl GraphTopologyRef<'_> {
+    /// Neighbors of `v`.
+    pub fn neighbors(&self, v: VertexId) -> &[(VertexId, EdgeId)] {
+        let v = v as usize;
+        &self.adj[self.adj_offsets[v] as usize..self.adj_offsets[v + 1] as usize]
+    }
+
+    /// Degree of `v`.
+    pub fn degree(&self, v: VertexId) -> usize {
+        let v = v as usize;
+        (self.adj_offsets[v + 1] - self.adj_offsets[v]) as usize
+    }
+
+    /// Number of vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.adj_offsets.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> Graph<u32, u32> {
+        let mut b = GraphBuilder::new();
+        b.add_vertices(n, |i| i as u32);
+        for i in 0..n - 1 {
+            b.add_edge(i as VertexId, (i + 1) as VertexId, 100 + i as u32);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn path_structure() {
+        let g = path_graph(5);
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(2), 2);
+        assert_eq!(g.max_degree(), 2);
+        let n2: Vec<VertexId> = g.neighbors(2).iter().map(|&(v, _)| v).collect();
+        assert_eq!(n2, vec![1, 3]);
+        assert!(g.adjacent(1, 2));
+        assert!(!g.adjacent(0, 2));
+    }
+
+    #[test]
+    fn edge_data_roundtrip() {
+        let mut g = path_graph(4);
+        let (_, eid) = g.neighbors(1)[1]; // edge 1-2
+        assert_eq!(*g.edge_data(eid), 101);
+        *g.edge_data_mut(eid) = 999;
+        assert_eq!(*g.edge_data(eid), 999);
+        assert_eq!(g.other_end(eid, 1), 2);
+        assert_eq!(g.other_end(eid, 2), 1);
+    }
+
+    #[test]
+    fn adjacency_is_symmetric() {
+        let mut b = GraphBuilder::new();
+        b.add_vertices(10, |_| 0u8);
+        b.add_edge(0, 5, ());
+        b.add_edge(5, 9, ());
+        b.add_edge(0, 9, ());
+        let g = b.build();
+        for v in g.vertex_ids() {
+            for &(u, e) in g.neighbors(v) {
+                assert!(g.neighbors(u).iter().any(|&(w, e2)| w == v && e2 == e));
+            }
+        }
+    }
+
+    #[test]
+    fn star_degrees() {
+        let mut b = GraphBuilder::new();
+        let hub = b.add_vertex(0u8);
+        for _ in 0..20 {
+            let v = b.add_vertex(0u8);
+            b.add_edge(hub, v, ());
+        }
+        let g = b.build();
+        assert_eq!(g.degree(hub), 20);
+        assert_eq!(g.max_degree(), 20);
+        for v in 1..=20 {
+            assert_eq!(g.degree(v), 1);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Shared mutable storage for parallel engines.
+//!
+//! The GraphLab engines hand out overlapping scopes to worker threads and
+//! enforce exclusion themselves (via coloring or locks, Sec. 3.5/4.2). Rust
+//! cannot see those protocol-level guarantees, so the data vectors are held
+//! in [`SharedStore`], an `UnsafeCell`-backed slice whose unsafe accessors
+//! put the aliasing obligation on the engine.
+//!
+//! # Safety contract
+//! A caller of [`SharedStore::get_mut`] must guarantee that no other thread
+//! concurrently accesses the same index (readers included); a caller of
+//! [`SharedStore::get`] must guarantee no concurrent writer to that index.
+//! The Chromatic engine discharges this with a proper vertex coloring; the
+//! Locking engine with reader-writer scope locks; both are property-tested
+//! in `rust/tests/`.
+
+use std::cell::UnsafeCell;
+
+/// A fixed-length slice of `T` allowing engine-managed concurrent access.
+pub struct SharedStore<T> {
+    data: Vec<UnsafeCell<T>>,
+}
+
+// SAFETY: access discipline is delegated to the engines per the module
+// contract above.
+unsafe impl<T: Send> Sync for SharedStore<T> {}
+unsafe impl<T: Send> Send for SharedStore<T> {}
+
+impl<T> SharedStore<T> {
+    /// Wrap a vector.
+    pub fn new(data: Vec<T>) -> Self {
+        SharedStore {
+            data: data.into_iter().map(UnsafeCell::new).collect(),
+        }
+    }
+
+    /// Length of the store.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Whether the store is empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Shared access to element `i`.
+    ///
+    /// # Safety
+    /// No concurrent mutable access to index `i` may exist.
+    #[inline]
+    #[allow(clippy::missing_safety_doc)]
+    pub unsafe fn get(&self, i: usize) -> &T {
+        &*self.data[i].get()
+    }
+
+    /// Exclusive access to element `i`.
+    ///
+    /// # Safety
+    /// No concurrent access (shared or mutable) to index `i` may exist.
+    #[inline]
+    #[allow(clippy::mut_from_ref, clippy::missing_safety_doc)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        &mut *self.data[i].get()
+    }
+
+    /// Consume into the underlying vector (single-threaded epilogue).
+    pub fn into_vec(self) -> Vec<T> {
+        self.data.into_iter().map(UnsafeCell::into_inner).collect()
+    }
+
+    /// Exclusive iteration when holding `&mut self` (no races possible).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut T> {
+        self.data.iter_mut().map(|c| unsafe { &mut *c.get() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ThreadPool;
+
+    #[test]
+    fn disjoint_parallel_writes_are_visible() {
+        let n = 1000;
+        let store = SharedStore::new(vec![0u64; n]);
+        ThreadPool::new(8).parallel_for(n, 16, |i| {
+            // SAFETY: each index is visited exactly once (threadpool test
+            // proves this), so access is exclusive.
+            unsafe { *store.get_mut(i) = i as u64 * 3 };
+        });
+        let v = store.into_vec();
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u64 * 3));
+    }
+
+    #[test]
+    fn roundtrip_preserves_order() {
+        let store = SharedStore::new(vec![1, 2, 3]);
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.into_vec(), vec![1, 2, 3]);
+    }
+}

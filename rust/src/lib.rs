@@ -1,0 +1,34 @@
+//! # graphlab — a reproduction of distributed GraphLab (Low et al., 2011)
+//!
+//! This crate implements the GraphLab abstraction — data graph, update
+//! functions, sync operations, and sequential-consistency models — together
+//! with the paper's two distributed engines (Chromatic and Locking), the
+//! distributed data-graph substrate (two-phase partitioning, ghosts,
+//! versioned cache coherence, distributed locks, termination detection), a
+//! discrete-event cluster simulator standing in for the paper's 64-node EC2
+//! testbed, and the three evaluation applications (Netflix-ALS, CoSeg-LBP,
+//! NER-CoEM) plus PageRank and Gibbs sampling.
+//!
+//! Numeric vertex-update hot spots are AOT-compiled from JAX/Pallas to HLO
+//! text (`artifacts/*.hlo.txt`, built by `make artifacts`) and executed from
+//! Rust through the PJRT CPU client (`runtime` module). Python never runs at
+//! execution time.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod apps;
+pub mod bench;
+pub mod datagen;
+pub mod distributed;
+pub mod engine;
+pub mod graph;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

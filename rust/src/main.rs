@@ -1,0 +1,246 @@
+//! `graphlab` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! * `run <app>` — run one application end-to-end on synthetic data:
+//!   `pagerank | als | ner | coseg | gibbs`, with
+//!   `--engine shared|chromatic|locking`, `--machines N`, `--threads N`,
+//!   `--pjrt`, app-specific size flags, and `--config FILE` overlays.
+//! * `figure <name>` — regenerate a paper table/figure (`table2`, `fig1`,
+//!   `fig5a`, `fig6a`..`fig8d`, or `all`) into `--out-dir` (default
+//!   `results/`).
+//! * `partition` — two-phase partitioning demo: atoms → meta-graph →
+//!   machine assignment quality report.
+//! * `calibrate` — print the measured per-update costs feeding the
+//!   cluster model.
+//!
+//! Examples:
+//!
+//! ```text
+//! graphlab run als --machines 4 --d 20 --sweeps 20 --pjrt
+//! graphlab figure fig6d --out-dir results/
+//! graphlab run coseg --engine locking --machines 4 --maxpending 100
+//! ```
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use graphlab::apps::{self, als, coseg, gibbs, ner, pagerank};
+use graphlab::engine::chromatic::{self, ChromaticOpts};
+use graphlab::engine::locking::{self, LockingOpts};
+use graphlab::engine::shared::{self, SharedOpts};
+use graphlab::partition::Partition;
+use graphlab::scheduler;
+use graphlab::util::cli::Args;
+use graphlab::util::config::Config;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let mut cfg = Config::new();
+    if let Some(path) = args.get("config") {
+        cfg = Config::load(path)?;
+    }
+    cfg.overlay(args.flags());
+    match args.pos(0) {
+        Some("run") => run_app(&args, &cfg),
+        Some("figure") => {
+            let name = args.pos(1).unwrap_or("all").to_string();
+            let out = cfg.str_or("out-dir", "results");
+            graphlab::sim::figures::run_figure(&name, std::path::Path::new(&out))
+        }
+        Some("partition") => partition_demo(&cfg),
+        Some("calibrate") => calibrate(&cfg),
+        _ => {
+            eprintln!("usage: graphlab <run|figure|partition|calibrate> [...]\n");
+            eprintln!("  graphlab run <pagerank|als|ner|coseg|gibbs> [--engine chromatic|locking|shared]");
+            eprintln!("      [--machines N] [--threads N] [--pjrt] [--sweeps N] [--d N] [--config FILE]");
+            eprintln!("  graphlab figure <table2|fig1|fig5a|fig6a|fig6c|fig6d|fig7a|fig8a|fig8b|fig8c|fig8d|all>");
+            eprintln!("      [--out-dir DIR]");
+            bail!("missing subcommand");
+        }
+    }
+}
+
+fn run_app(args: &Args, cfg: &Config) -> Result<()> {
+    let app = args.pos(1).unwrap_or("pagerank");
+    let engine = cfg.str_or("engine", "chromatic");
+    let machines = cfg.num_or("machines", 2usize);
+    let threads = cfg.num_or("threads", 2usize);
+    let sweeps = cfg.num_or("sweeps", 20u64);
+    let use_pjrt = cfg.bool_or("pjrt", false);
+    let seed = cfg.num_or("seed", 1u64);
+    println!("== graphlab run {app} (engine={engine}, machines={machines}) ==");
+
+    match app {
+        "pagerank" => {
+            let n = cfg.num_or("n", 10_000usize);
+            let edges = graphlab::datagen::web_graph(n, cfg.num_or("avg-degree", 8), seed);
+            let g = pagerank::build(n, &edges, 0.15);
+            let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-6, n, use_pjrt };
+            run_generic(g, prog, engine.as_str(), machines, threads, sweeps, cfg,
+                vec![Box::new(pagerank::total_rank_sync())], "total_rank")
+        }
+        "als" => {
+            let d = cfg.num_or("d", 20usize);
+            let data = graphlab::datagen::netflix(
+                cfg.num_or("users", 2000), cfg.num_or("movies", 1000),
+                cfg.num_or("ratings-per-user", 30), 8, 0.2, seed);
+            let g = als::build(&data, d, seed);
+            println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
+            let prog = als::Als { d, lambda: 0.08, use_pjrt };
+            run_generic(g, prog, engine.as_str(), machines, threads, sweeps, cfg,
+                vec![Box::new(als::rmse_sync())], "rmse")
+        }
+        "ner" => {
+            let data = graphlab::datagen::ner(
+                cfg.num_or("nps", 5000), cfg.num_or("contexts", 2500),
+                cfg.num_or("edges-per-np", 30), 8, 0.1, seed);
+            let g = ner::build(&data);
+            println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
+            let prog = ner::Coem { k: 8, smoothing: 0.01, eps: 1e-4, use_pjrt };
+            run_generic(g, prog, engine.as_str(), machines, threads, sweeps, cfg,
+                vec![Box::new(ner::accuracy_sync())], "accuracy")
+        }
+        "coseg" => {
+            let data = graphlab::datagen::video(
+                cfg.num_or("frames", 16), cfg.num_or("width", 24),
+                cfg.num_or("height", 20), 5, 0.4, seed);
+            let g = coseg::build(&data, 0.8);
+            println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
+            let prog = coseg::Coseg { labels: 5, eps: 1e-3, sigma2: 0.5, use_pjrt };
+            run_generic(g, prog, engine.as_str(), machines, threads, sweeps, cfg,
+                vec![Box::new(coseg::gmm_sync(5)), Box::new(coseg::accuracy_sync())], "accuracy")
+        }
+        "gibbs" => {
+            let data = graphlab::datagen::mrf(cfg.num_or("side", 64), 0.4, seed);
+            let g = gibbs::build(&data);
+            let _n = g.num_vertices();
+            let prog = gibbs::Gibbs { coupling: 0.4, target_samples: sweeps.max(10), seed };
+            run_generic(g, prog, engine.as_str(), machines, threads, u64::MAX, cfg,
+                vec![Box::new(gibbs::magnetization_sync())], "magnetization")
+        }
+        other => bail!("unknown app '{other}'"),
+    }
+}
+
+/// Dispatch a (graph, program) pair to the selected engine.
+#[allow(clippy::too_many_arguments)]
+fn run_generic<V, E, P>(
+    g: graphlab::graph::Graph<V, E>,
+    prog: P,
+    engine: &str,
+    machines: usize,
+    threads: usize,
+    sweeps: u64,
+    cfg: &Config,
+    syncs: Vec<Box<dyn graphlab::engine::SyncOp<V>>>,
+    probe_key: &'static str,
+) -> Result<()>
+where
+    V: graphlab::distributed::DataValue,
+    E: graphlab::distributed::DataValue,
+    P: graphlab::engine::VertexProgram<V, E>,
+{
+    let n = g.num_vertices();
+    let initial = apps::all_vertices(n);
+    match engine {
+        "chromatic" => {
+            let coloring = chromatic::color_for(&g, prog.consistency());
+            println!("coloring: {} colors", coloring.num_colors());
+            let partition = Partition::random(n, machines, 7);
+            let (_g, stats) = chromatic::run(
+                g, &coloring, &partition, &prog, initial, syncs,
+                ChromaticOpts {
+                    machines,
+                    threads_per_machine: threads,
+                    max_sweeps: sweeps,
+                    on_sweep: Some(Box::new(move |s, u, gv| {
+                        if let Some(v) = gv.get(probe_key) {
+                            println!("sweep {s:>3}: updates={u:>9} {probe_key}={:.5}", v[0]);
+                        }
+                    })),
+                    ..Default::default()
+                },
+            );
+            println!("done: {} updates, {} sweeps, {:.2}s, {} MB sent",
+                stats.updates, stats.sweeps, stats.seconds,
+                stats.bytes_sent.iter().sum::<u64>() / 1_000_000);
+        }
+        "locking" => {
+            let partition = Partition::blocked(n, machines);
+            let cap = cfg.num_or("max-updates", n as u64 * sweeps.min(1000)) / machines as u64;
+            let (_g, stats) = locking::run(
+                g, &partition, &prog, initial, syncs,
+                LockingOpts {
+                    machines,
+                    maxpending: cfg.num_or("maxpending", 64usize),
+                    scheduler: cfg.str_or("scheduler", "priority"),
+                    sync_period: Some(Duration::from_millis(cfg.num_or("sync-ms", 100u64))),
+                    max_updates_per_machine: cap,
+                    on_sync: Some(Box::new(move |e, u, gv| {
+                        if let Some(v) = gv.get(probe_key) {
+                            println!("epoch {e:>3}: updates={u:>9} {probe_key}={:.5}", v[0]);
+                        }
+                    })),
+                    ..Default::default()
+                },
+            );
+            println!("done: {} updates, {} epochs, {:.2}s, {} MB sent",
+                stats.updates, stats.sweeps, stats.seconds,
+                stats.bytes_sent.iter().sum::<u64>() / 1_000_000);
+        }
+        "shared" => {
+            let sched = scheduler::by_name(&cfg.str_or("scheduler", "fifo"), n, 1);
+            let (_g, stats) = shared::run(
+                g, &prog, initial, syncs, sched,
+                SharedOpts {
+                    workers: threads.max(machines),
+                    max_updates: n as u64 * sweeps.min(10_000),
+                    on_sync: Some(Box::new(move |u, gv| {
+                        if let Some(v) = gv.get(probe_key) {
+                            println!("updates={u:>9} {probe_key}={:.5}", v[0]);
+                        }
+                    })),
+                },
+            );
+            println!("done: {} updates, {:.2}s", stats.updates, stats.seconds);
+        }
+        other => bail!("unknown engine '{other}'"),
+    }
+    Ok(())
+}
+
+fn partition_demo(cfg: &Config) -> Result<()> {
+    use graphlab::partition::atoms;
+    let n = cfg.num_or("n", 20_000usize);
+    let edges = graphlab::datagen::web_graph(n, 8, 1);
+    let g = pagerank::build(n, &edges, 0.15);
+    let k = cfg.num_or("atoms", 128usize);
+    println!("two-phase partitioning: {} vertices, {} edges, {k} atoms", n, g.num_edges());
+    let a = atoms::AtomSet::grow_bfs(&g, k, 2);
+    let meta = atoms::MetaGraph::build(&g, &a);
+    for machines in [2usize, 4, 8, 16] {
+        let assign = meta.partition(machines);
+        let vassign: Vec<usize> = (0..n as u32).map(|v| assign[a.atom(v)]).collect();
+        let p = Partition::from_assignment(vassign, machines);
+        let rand = Partition::random(n, machines, 3);
+        println!(
+            "  {machines:>2} machines: two-phase cut={} ({:.1}% | imbalance {:.2}) vs random cut={} ({:.1}%)",
+            p.edge_cut(&g), 100.0 * p.edge_cut(&g) as f64 / g.num_edges() as f64, p.imbalance(),
+            rand.edge_cut(&g), 100.0 * rand.edge_cut(&g) as f64 / g.num_edges() as f64,
+        );
+    }
+    Ok(())
+}
+
+fn calibrate(_cfg: &Config) -> Result<()> {
+    use graphlab::sim::calibrate as cal;
+    println!("measured per-update costs (native path, this machine):");
+    for d in [5usize, 20, 50, 100] {
+        println!("  als d={d:>3}: {:>10.2} µs", cal::als_update_cost(d, 198) * 1e6);
+    }
+    println!("  coem k=8 deg=100: {:.2} µs", cal::coem_update_cost(8, 100) * 1e6);
+    println!("  lbp  l=5 deg=6:   {:.2} µs", cal::lbp_update_cost(5) * 1e6);
+    Ok(())
+}

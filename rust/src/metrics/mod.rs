@@ -1,0 +1,185 @@
+//! Runtime metrics: counters, timers, histograms.
+//!
+//! Every distributed component (network, lock manager, engines) records
+//! into a [`Metrics`] registry; the figure harnesses read them out (e.g.
+//! bytes/sec/node for Fig. 6(b), lock latencies for Fig. 8(b)).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A concurrent metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<AtomicU64>>>,
+}
+
+/// Handle to a single counter (cheap to clone, lock-free to bump).
+pub type Counter = std::sync::Arc<AtomicU64>;
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a counter by name.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(AtomicU64::new(0)))
+            .clone()
+    }
+
+    /// Add to a counter by name (slow path; hot paths hold a [`Counter`]).
+    pub fn add(&self, name: &str, delta: u64) {
+        self.counter(name).fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Read a counter (0 if absent).
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Snapshot all counters.
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Reset every counter to zero.
+    pub fn reset(&self) {
+        for c in self.counters.lock().unwrap().values() {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Scope timer that adds elapsed nanoseconds to a counter on drop.
+pub struct ScopedTimer {
+    start: Instant,
+    counter: Counter,
+}
+
+impl ScopedTimer {
+    /// Start timing into `counter`.
+    pub fn new(counter: Counter) -> Self {
+        ScopedTimer {
+            start: Instant::now(),
+            counter,
+        }
+    }
+}
+
+impl Drop for ScopedTimer {
+    fn drop(&mut self) {
+        self.counter
+            .fetch_add(self.start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Fixed-bucket log-scale histogram (powers of two, nanosecond scale).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// 64 power-of-two buckets.
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Record a value.
+    pub fn record(&self, value: u64) {
+        let b = (64 - value.max(1).leading_zeros() as usize).min(63);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total recorded count.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate quantile (bucket upper bound), `q` in [0,1].
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return 1u64 << i;
+            }
+        }
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_concurrently() {
+        let m = Metrics::new();
+        let c = m.counter("bytes");
+        crate::util::ThreadPool::new(8).parallel_for(1000, 10, |_| {
+            c.fetch_add(3, Ordering::Relaxed);
+        });
+        assert_eq!(m.get("bytes"), 3000);
+        m.reset();
+        assert_eq!(m.get("bytes"), 0);
+    }
+
+    #[test]
+    fn snapshot_lists_all() {
+        let m = Metrics::new();
+        m.add("a", 1);
+        m.add("b", 2);
+        let s = m.snapshot();
+        assert_eq!(s["a"], 1);
+        assert_eq!(s["b"], 2);
+    }
+
+    #[test]
+    fn timer_records_positive_elapsed() {
+        let m = Metrics::new();
+        {
+            let _t = ScopedTimer::new(m.counter("t"));
+            std::hint::black_box(0);
+        }
+        assert!(m.get("t") > 0);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(i);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.quantile(0.99) >= 512);
+    }
+}

@@ -1,0 +1,288 @@
+//! Two-phase partitioning: atoms + meta-graph (paper Sec. 4.1, Fig. 4).
+//!
+//! Phase 1 (offline, expensive): over-partition the data graph into
+//! `k >> #machines` **atoms** with a BFS region-grower (our stand-in for
+//! Metis — DESIGN.md §Substitutions). Each atom corresponds to one "file"
+//! in the paper's scheme.
+//!
+//! Phase 2 (load time, cheap): build the **meta-graph** — one vertex per
+//! atom weighted by its data size, one edge per atom pair weighted by the
+//! number of crossing edges — and run a fast balanced greedy partition of
+//! the meta-graph onto the actual machine count. The same atom set serves
+//! any cluster size without re-partitioning the full graph.
+
+use super::{MachineId, Partition};
+use crate::graph::{Graph, VertexId};
+use crate::util::Rng;
+use std::collections::VecDeque;
+
+/// Atom id (phase-1 part index).
+pub type AtomId = usize;
+
+/// A phase-1 over-partition: vertex → atom.
+#[derive(Debug, Clone)]
+pub struct AtomSet {
+    assignment: Vec<AtomId>,
+    num_atoms: usize,
+}
+
+impl AtomSet {
+    /// BFS region-growing over-partition into `k` atoms of roughly equal
+    /// vertex count. Deterministic given the seed (seeds pick BFS sources).
+    pub fn grow_bfs<V, E>(g: &Graph<V, E>, k: usize, seed: u64) -> Self {
+        let n = g.num_vertices();
+        let k = k.max(1).min(n.max(1));
+        let target = n.div_ceil(k);
+        let mut assignment = vec![usize::MAX; n];
+        let mut rng = Rng::new(seed);
+        let mut atom = 0usize;
+        let mut unvisited: Vec<VertexId> = (0..n as VertexId).collect();
+        rng.shuffle(&mut unvisited);
+        let mut cursor = 0usize;
+        let mut queue = VecDeque::new();
+        let mut size = 0usize;
+        while cursor < unvisited.len() {
+            // Find a fresh BFS source.
+            while cursor < unvisited.len() && assignment[unvisited[cursor] as usize] != usize::MAX
+            {
+                cursor += 1;
+            }
+            if cursor >= unvisited.len() {
+                break;
+            }
+            queue.push_back(unvisited[cursor]);
+            while let Some(v) = queue.pop_front() {
+                if assignment[v as usize] != usize::MAX {
+                    continue;
+                }
+                assignment[v as usize] = atom;
+                size += 1;
+                if size >= target && atom + 1 < k {
+                    atom += 1;
+                    size = 0;
+                    queue.clear();
+                    break;
+                }
+                for &(u, _) in g.neighbors(v) {
+                    if assignment[u as usize] == usize::MAX {
+                        queue.push_back(u);
+                    }
+                }
+            }
+        }
+        // Any leftovers (disconnected tails after a clear) go to the
+        // smallest atom.
+        let mut sizes = vec![0usize; k];
+        for &a in assignment.iter().filter(|&&a| a != usize::MAX) {
+            sizes[a] += 1;
+        }
+        for a in assignment.iter_mut().filter(|a| **a == usize::MAX) {
+            let m = (0..k).min_by_key(|&i| sizes[i]).unwrap();
+            *a = m;
+            sizes[m] += 1;
+        }
+        AtomSet {
+            assignment,
+            num_atoms: k,
+        }
+    }
+
+    /// Hash over-partition (the "random" baseline for dense graphs).
+    pub fn hashed(num_vertices: usize, k: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        AtomSet {
+            assignment: (0..num_vertices).map(|_| rng.gen_range(k)).collect(),
+            num_atoms: k,
+        }
+    }
+
+    /// Atom of vertex `v`.
+    pub fn atom(&self, v: VertexId) -> AtomId {
+        self.assignment[v as usize]
+    }
+
+    /// Number of atoms.
+    pub fn num_atoms(&self) -> usize {
+        self.num_atoms
+    }
+
+    /// Atom sizes (vertex counts).
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.num_atoms];
+        for &a in &self.assignment {
+            s[a] += 1;
+        }
+        s
+    }
+}
+
+/// The weighted atom-connectivity graph (paper Fig. 4(c)).
+#[derive(Debug, Clone)]
+pub struct MetaGraph {
+    /// Vertex weight of each atom: bytes (here: vertex count as proxy).
+    pub atom_weight: Vec<u64>,
+    /// `edge_weight[a]` = list of `(b, crossing_edges)` for b adjacent to a.
+    pub adjacency: Vec<Vec<(AtomId, u64)>>,
+}
+
+impl MetaGraph {
+    /// Build the meta-graph of an atom set over a data graph.
+    pub fn build<V, E>(g: &Graph<V, E>, atoms: &AtomSet) -> Self {
+        let k = atoms.num_atoms();
+        let mut atom_weight = vec![0u64; k];
+        for v in 0..g.num_vertices() as VertexId {
+            atom_weight[atoms.atom(v)] += 1;
+        }
+        let mut pair_counts: std::collections::HashMap<(AtomId, AtomId), u64> =
+            std::collections::HashMap::new();
+        for e in 0..g.num_edges() as u32 {
+            let (u, v) = g.endpoints(e);
+            let (a, b) = (atoms.atom(u), atoms.atom(v));
+            if a != b {
+                let key = (a.min(b), a.max(b));
+                *pair_counts.entry(key).or_insert(0) += 1;
+            }
+        }
+        let mut adjacency = vec![Vec::new(); k];
+        for (&(a, b), &w) in &pair_counts {
+            adjacency[a].push((b, w));
+            adjacency[b].push((a, w));
+        }
+        for adj in &mut adjacency {
+            adj.sort_unstable();
+        }
+        MetaGraph {
+            atom_weight,
+            adjacency,
+        }
+    }
+
+    /// Fast balanced greedy partition of the meta-graph onto `machines`
+    /// parts (phase 2). Atoms are placed heaviest-first onto the machine
+    /// maximizing (edge affinity − balance penalty), an LDG-style
+    /// streaming heuristic.
+    pub fn partition(&self, machines: usize) -> Vec<MachineId> {
+        let k = self.atom_weight.len();
+        let machines = machines.max(1);
+        let total: u64 = self.atom_weight.iter().sum();
+        let capacity = (total as f64 / machines as f64) * 1.1 + 1.0;
+        let mut order: Vec<AtomId> = (0..k).collect();
+        order.sort_by_key(|&a| std::cmp::Reverse(self.atom_weight[a]));
+        let mut assignment = vec![usize::MAX; k];
+        let mut load = vec![0u64; machines];
+        for a in order {
+            let mut best = 0usize;
+            let mut best_score = f64::NEG_INFINITY;
+            for m in 0..machines {
+                if load[m] as f64 + self.atom_weight[a] as f64 > capacity && load[m] > 0 {
+                    continue;
+                }
+                let affinity: u64 = self.adjacency[a]
+                    .iter()
+                    .filter(|&&(b, _)| assignment[b] == m)
+                    .map(|&(_, w)| w)
+                    .sum();
+                let balance = 1.0 - load[m] as f64 / capacity;
+                let score = affinity as f64 * balance.max(0.01);
+                if score > best_score {
+                    best_score = score;
+                    best = m;
+                }
+            }
+            assignment[a] = best;
+            load[best] += self.atom_weight[a];
+        }
+        assignment
+    }
+}
+
+/// The full two-phase pipeline: atoms → meta-graph → machine assignment.
+pub fn two_phase<V, E>(g: &Graph<V, E>, k: usize, machines: usize, seed: u64) -> Partition {
+    let atoms = AtomSet::grow_bfs(g, k, seed);
+    let meta = MetaGraph::build(g, &atoms);
+    let atom_to_machine = meta.partition(machines);
+    let assignment = (0..g.num_vertices() as VertexId)
+        .map(|v| atom_to_machine[atoms.atom(v)])
+        .collect();
+    Partition::from_assignment(assignment, machines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn grid(n: usize) -> Graph<u8, u8> {
+        let mut b = GraphBuilder::new();
+        b.add_vertices(n * n, |_| 0);
+        for i in 0..n {
+            for j in 0..n {
+                let v = (i * n + j) as VertexId;
+                if j + 1 < n {
+                    b.add_edge(v, v + 1, 0);
+                }
+                if i + 1 < n {
+                    b.add_edge(v, v + n as u32, 0);
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn bfs_atoms_cover_and_balance() {
+        let g = grid(20);
+        let atoms = AtomSet::grow_bfs(&g, 16, 1);
+        let sizes = atoms.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 400);
+        assert!(*sizes.iter().max().unwrap() <= 2 * 400 / 16 + 1);
+    }
+
+    #[test]
+    fn meta_graph_edge_weights_match_cut() {
+        let g = grid(10);
+        let atoms = AtomSet::grow_bfs(&g, 4, 2);
+        let meta = MetaGraph::build(&g, &atoms);
+        // Total meta edge weight (each pair counted once per direction / 2)
+        let total: u64 = meta.adjacency.iter().flatten().map(|&(_, w)| w).sum::<u64>() / 2;
+        let cut = (0..g.num_edges() as u32)
+            .filter(|&e| {
+                let (u, v) = g.endpoints(e);
+                atoms.atom(u) != atoms.atom(v)
+            })
+            .count() as u64;
+        assert_eq!(total, cut);
+    }
+
+    #[test]
+    fn two_phase_beats_random_cut_on_grid() {
+        let g = grid(24);
+        let tp = two_phase(&g, 32, 4, 3);
+        let rand = Partition::random(g.num_vertices(), 4, 3);
+        assert!(tp.imbalance() < 1.5, "imbalance={}", tp.imbalance());
+        assert!(
+            tp.edge_cut(&g) < rand.edge_cut(&g),
+            "two-phase {} vs random {}",
+            tp.edge_cut(&g),
+            rand.edge_cut(&g)
+        );
+    }
+
+    #[test]
+    fn same_atoms_serve_multiple_cluster_sizes() {
+        let g = grid(16);
+        let atoms = AtomSet::grow_bfs(&g, 32, 4);
+        let meta = MetaGraph::build(&g, &atoms);
+        for machines in [2, 4, 8] {
+            let assign = meta.partition(machines);
+            assert_eq!(assign.len(), 32);
+            assert!(assign.iter().all(|&m| m < machines));
+            // Every machine gets at least one atom at these sizes.
+            let mut used = vec![false; machines];
+            for &m in &assign {
+                used[m] = true;
+            }
+            assert!(used.iter().all(|&u| u), "machines={machines}");
+        }
+    }
+}

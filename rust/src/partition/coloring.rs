@@ -1,0 +1,258 @@
+//! Vertex colorings for the Chromatic engine (paper Sec. 4.2.1).
+//!
+//! A proper vertex coloring satisfies the **edge consistency** model when
+//! the engine executes one color at a time; a *second-order* coloring
+//! (distance-2) satisfies **full consistency**; the trivial single color
+//! satisfies **vertex consistency**. Bipartite graphs (ALS, CoEM) are
+//! two-colored directly, as the paper notes ("the bipartite graph is
+//! naturally two colored").
+
+use crate::graph::{Graph, VertexId};
+use std::collections::VecDeque;
+
+/// A vertex coloring: `color[v]` in `0..num_colors`.
+#[derive(Debug, Clone)]
+pub struct Coloring {
+    colors: Vec<u32>,
+    num_colors: u32,
+}
+
+impl Coloring {
+    /// Greedy first-fit coloring in descending-degree order (the classic
+    /// heuristic; exact chromatic number is NP-hard and unnecessary).
+    pub fn greedy<V, E>(g: &Graph<V, E>) -> Self {
+        let n = g.num_vertices();
+        let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+        order.sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+        let mut colors = vec![u32::MAX; n];
+        let mut used = Vec::new();
+        let mut num_colors = 0u32;
+        for v in order {
+            used.clear();
+            used.resize(num_colors as usize + 1, false);
+            for &(u, _) in g.neighbors(v) {
+                let c = colors[u as usize];
+                if c != u32::MAX {
+                    used[c as usize] = true;
+                }
+            }
+            let c = used.iter().position(|&b| !b).unwrap() as u32;
+            colors[v as usize] = c;
+            num_colors = num_colors.max(c + 1);
+        }
+        Coloring { colors, num_colors }
+    }
+
+    /// Two-coloring by BFS; returns `None` if the graph has an odd cycle.
+    /// ALS and CoEM graphs are bipartite by construction, so this is the
+    /// coloring their chromatic runs use.
+    pub fn bipartite<V, E>(g: &Graph<V, E>) -> Option<Self> {
+        let n = g.num_vertices();
+        let mut colors = vec![u32::MAX; n];
+        let mut queue = VecDeque::new();
+        for s in 0..n as VertexId {
+            if colors[s as usize] != u32::MAX {
+                continue;
+            }
+            colors[s as usize] = 0;
+            queue.push_back(s);
+            while let Some(v) = queue.pop_front() {
+                let cv = colors[v as usize];
+                for &(u, _) in g.neighbors(v) {
+                    let cu = &mut colors[u as usize];
+                    if *cu == u32::MAX {
+                        *cu = 1 - cv;
+                        queue.push_back(u);
+                    } else if *cu == cv {
+                        return None;
+                    }
+                }
+            }
+        }
+        Some(Coloring {
+            colors,
+            num_colors: if n == 0 { 0 } else { 2 },
+        })
+    }
+
+    /// Second-order (distance-2) greedy coloring: no vertex shares a color
+    /// with any vertex within two hops. Satisfies the **full consistency**
+    /// model under the chromatic schedule.
+    pub fn second_order<V, E>(g: &Graph<V, E>) -> Self {
+        let n = g.num_vertices();
+        let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+        order.sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+        let mut colors = vec![u32::MAX; n];
+        let mut num_colors = 0u32;
+        let mut used = Vec::new();
+        for v in order {
+            used.clear();
+            used.resize(num_colors as usize + 1, false);
+            for &(u, _) in g.neighbors(v) {
+                let c = colors[u as usize];
+                if c != u32::MAX {
+                    used[c as usize] = true;
+                }
+                for &(w, _) in g.neighbors(u) {
+                    if w == v {
+                        continue;
+                    }
+                    let c2 = colors[w as usize];
+                    if c2 != u32::MAX {
+                        used[c2 as usize] = true;
+                    }
+                }
+            }
+            let c = used.iter().position(|&b| !b).unwrap() as u32;
+            colors[v as usize] = c;
+            num_colors = num_colors.max(c + 1);
+        }
+        Coloring { colors, num_colors }
+    }
+
+    /// Single-color "coloring" — trivially satisfies vertex consistency
+    /// (all updates independent, Map-like).
+    pub fn uniform(num_vertices: usize) -> Self {
+        Coloring {
+            colors: vec![0; num_vertices],
+            num_colors: if num_vertices == 0 { 0 } else { 1 },
+        }
+    }
+
+    /// Color of vertex `v`.
+    #[inline]
+    pub fn color(&self, v: VertexId) -> u32 {
+        self.colors[v as usize]
+    }
+
+    /// Number of distinct colors.
+    pub fn num_colors(&self) -> u32 {
+        self.num_colors
+    }
+
+    /// Vertices grouped by color.
+    pub fn by_color(&self) -> Vec<Vec<VertexId>> {
+        let mut groups = vec![Vec::new(); self.num_colors as usize];
+        for (v, &c) in self.colors.iter().enumerate() {
+            groups[c as usize].push(v as VertexId);
+        }
+        groups
+    }
+
+    /// Validity: no edge joins same-colored vertices.
+    pub fn is_valid<V, E>(&self, g: &Graph<V, E>) -> bool {
+        (0..g.num_edges() as u32).all(|e| {
+            let (u, v) = g.endpoints(e);
+            self.color(u) != self.color(v)
+        })
+    }
+
+    /// Distance-2 validity (for the full-consistency coloring).
+    pub fn is_second_order_valid<V, E>(&self, g: &Graph<V, E>) -> bool {
+        if !self.is_valid(g) {
+            return false;
+        }
+        for v in g.vertex_ids() {
+            for &(u, _) in g.neighbors(v) {
+                for &(w, _) in g.neighbors(u) {
+                    if w != v && self.color(w) == self.color(v) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::util::Rng;
+
+    fn random_graph(n: usize, m: usize, seed: u64) -> Graph<u8, u8> {
+        let mut rng = Rng::new(seed);
+        let mut b = GraphBuilder::new();
+        b.add_vertices(n, |_| 0);
+        let mut seen = std::collections::HashSet::new();
+        while seen.len() < m {
+            let u = rng.gen_range(n) as VertexId;
+            let v = rng.gen_range(n) as VertexId;
+            if u != v && seen.insert((u.min(v), u.max(v))) {
+                b.add_edge(u, v, 0);
+            }
+        }
+        b.build()
+    }
+
+    fn bipartite_graph(left: usize, right: usize, m: usize, seed: u64) -> Graph<u8, u8> {
+        let mut rng = Rng::new(seed);
+        let mut b = GraphBuilder::new();
+        b.add_vertices(left + right, |_| 0);
+        let mut seen = std::collections::HashSet::new();
+        while seen.len() < m {
+            let u = rng.gen_range(left) as VertexId;
+            let v = (left + rng.gen_range(right)) as VertexId;
+            if seen.insert((u, v)) {
+                b.add_edge(u, v, 0);
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn greedy_is_valid_on_random_graphs() {
+        for seed in 0..5 {
+            let g = random_graph(200, 800, seed);
+            let c = Coloring::greedy(&g);
+            assert!(c.is_valid(&g), "seed={seed}");
+            assert!(c.num_colors() <= g.max_degree() as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn bipartite_two_colors() {
+        let g = bipartite_graph(50, 80, 400, 9);
+        let c = Coloring::bipartite(&g).expect("graph is bipartite");
+        assert_eq!(c.num_colors(), 2);
+        assert!(c.is_valid(&g));
+    }
+
+    #[test]
+    fn odd_cycle_rejected() {
+        let mut b = GraphBuilder::new();
+        b.add_vertices(3, |_| 0u8);
+        b.add_edge(0, 1, 0u8);
+        b.add_edge(1, 2, 0);
+        b.add_edge(2, 0, 0);
+        let g = b.build();
+        assert!(Coloring::bipartite(&g).is_none());
+        let c = Coloring::greedy(&g);
+        assert!(c.is_valid(&g));
+        assert_eq!(c.num_colors(), 3);
+    }
+
+    #[test]
+    fn second_order_is_distance_two_valid() {
+        for seed in 0..3 {
+            let g = random_graph(100, 300, seed + 100);
+            let c = Coloring::second_order(&g);
+            assert!(c.is_second_order_valid(&g), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn by_color_partitions_vertices() {
+        let g = random_graph(100, 300, 1);
+        let c = Coloring::greedy(&g);
+        let groups = c.by_color();
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, 100);
+        for (color, group) in groups.iter().enumerate() {
+            for &v in group {
+                assert_eq!(c.color(v), color as u32);
+            }
+        }
+    }
+}

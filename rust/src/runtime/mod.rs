@@ -1,0 +1,345 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` lowers the Layer-2 JAX programs (which wrap the Layer-1
+//! Pallas kernels) to HLO *text* in `artifacts/`, indexed by
+//! `manifest.txt`. At run time this module compiles them on the PJRT CPU
+//! client (`xla` crate: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile`) and executes them from
+//! the engines' hot paths. Python is never invoked.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so each
+//! engine thread lazily creates its own client and executable cache via a
+//! thread-local ([`exec`] hides this). Compilation is per-thread but
+//! happens once per (thread, artifact) and is excluded from benchmark
+//! timings by a warmup call.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Metadata of one artifact from `manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Artifact name (file stem).
+    pub name: String,
+    /// Kernel kind: `pagerank`, `als_accum`, `als_solve`, `als_update`,
+    /// `lbp`, `coem`, `coem_accum`.
+    pub kind: String,
+    /// Static dims (`b`, `n`, `d`, `l`, `k` as present).
+    pub dims: HashMap<String, usize>,
+    /// Input shapes (row-major dims).
+    pub in_shapes: Vec<Vec<usize>>,
+    /// Output shapes.
+    pub out_shapes: Vec<Vec<usize>>,
+}
+
+impl ArtifactMeta {
+    /// Dim lookup with panic-on-missing (manifest is trusted build output).
+    pub fn dim(&self, key: &str) -> usize {
+        self.dims[key]
+    }
+}
+
+/// Parsed manifest: artifact name → metadata.
+#[derive(Debug, Default, Clone)]
+pub struct Manifest {
+    entries: HashMap<String, ArtifactMeta>,
+    dir: PathBuf,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts.next().ok_or_else(|| anyhow!("empty manifest line"))?;
+            let mut meta = ArtifactMeta {
+                name: name.to_string(),
+                kind: String::new(),
+                dims: HashMap::new(),
+                in_shapes: Vec::new(),
+                out_shapes: Vec::new(),
+            };
+            for kv in parts {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("bad manifest field {kv}"))?;
+                match k {
+                    "kind" => meta.kind = v.to_string(),
+                    "in" => meta.in_shapes = parse_shapes(v)?,
+                    "out" => meta.out_shapes = parse_shapes(v)?,
+                    dim => {
+                        meta.dims.insert(dim.to_string(), v.parse()?);
+                    }
+                }
+            }
+            entries.insert(name.to_string(), meta);
+        }
+        Ok(Manifest {
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Artifact metadata by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(name)
+    }
+
+    /// All artifacts of a kind, sorted by name.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self.entries.values().filter(|m| m.kind == kind).collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the manifest is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>> {
+    s.split(';')
+        .map(|shape| {
+            if shape == "scalar" {
+                return Ok(Vec::new());
+            }
+            shape.split('x').map(|d| d.parse().map_err(Into::into)).collect()
+        })
+        .collect()
+}
+
+static ARTIFACTS_DIR: OnceLock<PathBuf> = OnceLock::new();
+static MANIFEST: OnceLock<Option<Manifest>> = OnceLock::new();
+
+/// Set the artifact directory (default `artifacts/`, overridable by the
+/// `GRAPHLAB_ARTIFACTS` env var). Must be called before first [`exec`] to
+/// have effect.
+pub fn set_artifacts_dir(dir: impl Into<PathBuf>) {
+    let _ = ARTIFACTS_DIR.set(dir.into());
+}
+
+fn artifacts_dir() -> PathBuf {
+    ARTIFACTS_DIR
+        .get()
+        .cloned()
+        .or_else(|| std::env::var("GRAPHLAB_ARTIFACTS").ok().map(PathBuf::from))
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// The global manifest (None if artifacts are not built). Engines fall
+/// back to native math when unavailable.
+pub fn manifest() -> Option<&'static Manifest> {
+    MANIFEST
+        .get_or_init(|| Manifest::load(&artifacts_dir()).ok())
+        .as_ref()
+}
+
+/// Whether compiled artifacts are available.
+pub fn available() -> bool {
+    manifest().is_some()
+}
+
+thread_local! {
+    static TLS: RefCell<Option<ThreadRuntime>> = const { RefCell::new(None) };
+}
+
+struct ThreadRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// An input tensor for [`exec`]: row-major f32 data + dims.
+pub struct Input<'a> {
+    /// Row-major f32 buffer.
+    pub data: &'a [f32],
+    /// Dimensions.
+    pub dims: &'a [i64],
+}
+
+impl<'a> Input<'a> {
+    /// Construct (checks element count in debug builds).
+    pub fn new(data: &'a [f32], dims: &'a [i64]) -> Self {
+        debug_assert_eq!(
+            data.len() as i64,
+            dims.iter().product::<i64>(),
+            "input data/dims mismatch"
+        );
+        Input { data, dims }
+    }
+}
+
+/// Execute artifact `name` on this thread's PJRT client. Inputs are f32
+/// tensors; outputs are the flattened f32 elements of each tuple member.
+pub fn exec(name: &str, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+    TLS.with(|tls| {
+        let mut slot = tls.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(ThreadRuntime {
+                client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+                exes: HashMap::new(),
+            });
+        }
+        let rt = slot.as_mut().unwrap();
+        if !rt.exes.contains_key(name) {
+            let path = artifacts_dir().join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                bail!("artifact {} not found (run `make artifacts`)", path.display());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = rt
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            rt.exes.insert(name.to_string(), exe);
+        }
+        let exe = &rt.exes[name];
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                let lit = xla::Literal::vec1(inp.data);
+                lit.reshape(inp.dims).map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let members = result
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        members
+            .into_iter()
+            .map(|m| m.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        available()
+    }
+
+    #[test]
+    fn manifest_parses_when_built() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = manifest().unwrap();
+        assert!(m.len() >= 10, "expected full artifact set, got {}", m.len());
+        let pr = m.get("pagerank_b256_n32").expect("pagerank artifact");
+        assert_eq!(pr.kind, "pagerank");
+        assert_eq!(pr.dim("b"), 256);
+        assert_eq!(pr.in_shapes[0], vec![256, 32]);
+        assert_eq!(pr.out_shapes[0], vec![256]);
+        assert!(!m.by_kind("als_update").is_empty());
+    }
+
+    #[test]
+    fn pagerank_artifact_matches_native() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (b, n) = (256usize, 32usize);
+        let mut rng = crate::util::Rng::new(1);
+        let ranks: Vec<f32> = (0..b * n).map(|_| rng.f32()).collect();
+        let weights: Vec<f32> = (0..b * n).map(|_| rng.f32()).collect();
+        let base: Vec<f32> = (0..b).map(|_| rng.f32() * 0.1).collect();
+        let out = exec(
+            "pagerank_b256_n32",
+            &[
+                Input::new(&ranks, &[b as i64, n as i64]),
+                Input::new(&weights, &[b as i64, n as i64]),
+                Input::new(&base, &[b as i64]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), b);
+        for i in 0..b {
+            let want: f32 = base[i]
+                + (0..n).map(|j| ranks[i * n + j] * weights[i * n + j]).sum::<f32>();
+            assert!((out[0][i] - want).abs() < 1e-4, "i={i}: {} vs {want}", out[0][i]);
+        }
+    }
+
+    #[test]
+    fn als_update_artifact_matches_native_solver() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (b, n, d) = (64usize, 32usize, 5usize);
+        let mut rng = crate::util::Rng::new(2);
+        let v: Vec<f32> = (0..b * n * d).map(|_| rng.normal() * 0.5).collect();
+        let r: Vec<f32> = (0..b * n).map(|_| rng.uniform(1.0, 5.0)).collect();
+        let m: Vec<f32> = (0..b * n).map(|_| (rng.f32() < 0.8) as u8 as f32).collect();
+        let lam = [0.3f32];
+        let out = exec(
+            "als_update_b64_n32_d5",
+            &[
+                Input::new(&v, &[b as i64, n as i64, d as i64]),
+                Input::new(&r, &[b as i64, n as i64]),
+                Input::new(&m, &[b as i64, n as i64]),
+                Input::new(&lam, &[1]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(out[0].len(), b * d);
+        // Cross-check a few batch rows against the native Cholesky path.
+        for bi in [0usize, 17, 63] {
+            let mut a = crate::util::matrix::Mat::zeros(d, d);
+            let mut y = vec![0.0f32; d];
+            for j in 0..n {
+                if m[bi * n + j] == 0.0 {
+                    continue;
+                }
+                let row = &v[(bi * n + j) * d..(bi * n + j + 1) * d];
+                a.rank1_update(row, 1.0);
+                crate::util::matrix::axpy(&mut y, row, r[bi * n + j]);
+            }
+            let x = crate::util::matrix::solve_psd(&a, &y, lam[0]);
+            for k in 0..d {
+                let got = out[0][bi * d + k];
+                assert!(
+                    (got - x[k]).abs() < 2e-2,
+                    "b={bi} k={k}: pjrt={got} native={}",
+                    x[k]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,421 @@
+//! Task schedulers: the `RemoveNext(T)` policies of the execution model
+//! (paper Alg. 2, Sec. 3.4).
+//!
+//! GraphLab leaves the order of task removal to the implementation; ours
+//! provides the same menu as the paper's runtime:
+//!
+//! * [`SweepScheduler`] — fixed canonical order (the Chromatic engine's
+//!   static schedule is a color-stratified sweep built on this),
+//! * [`FifoScheduler`] — approximate FIFO,
+//! * [`PriorityScheduler`] — exact max-priority (binary heap),
+//! * [`MultiQueueScheduler`] — the *approximate* priority queue the paper
+//!   uses in the distributed Locking engine (per-worker heaps with random
+//!   two-choice popping, trading strict order for lower contention).
+//!
+//! All schedulers deduplicate: scheduling an already-queued vertex merges
+//! the task, keeping the maximum priority (GraphLab task-set semantics:
+//! `T <- T u T'`).
+
+use crate::graph::VertexId;
+use crate::util::Rng;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// A schedulable update task: target vertex + priority.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Task {
+    /// Vertex the update function will run on.
+    pub vertex: VertexId,
+    /// Priority (higher runs earlier under priority scheduling).
+    pub priority: f64,
+}
+
+/// Common scheduler interface (single consumer; engines wrap in a mutex
+/// per machine, mirroring the paper's per-node schedulers).
+pub trait Scheduler: Send {
+    /// Add (or merge) a task.
+    fn push(&mut self, task: Task);
+    /// Remove the next task per this scheduler's policy.
+    fn pop(&mut self) -> Option<Task>;
+    /// Number of pending tasks.
+    fn len(&self) -> usize;
+    /// Whether no tasks are pending.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Build a scheduler by name (CLI/config selection).
+pub fn by_name(name: &str, num_vertices: usize, seed: u64) -> Box<dyn Scheduler> {
+    match name {
+        "fifo" => Box::new(FifoScheduler::new(num_vertices)),
+        "priority" => Box::new(PriorityScheduler::new(num_vertices)),
+        "multiqueue" => Box::new(MultiQueueScheduler::new(num_vertices, 4, seed)),
+        "sweep" => Box::new(SweepScheduler::new(num_vertices)),
+        other => panic!("unknown scheduler '{other}' (fifo|priority|multiqueue|sweep)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FIFO
+// ---------------------------------------------------------------------------
+
+/// First-in-first-out with membership dedup.
+pub struct FifoScheduler {
+    queue: VecDeque<VertexId>,
+    queued: Vec<bool>,
+}
+
+impl FifoScheduler {
+    /// FIFO over a vertex universe of `num_vertices`.
+    pub fn new(num_vertices: usize) -> Self {
+        FifoScheduler {
+            queue: VecDeque::new(),
+            queued: vec![false; num_vertices],
+        }
+    }
+}
+
+impl Scheduler for FifoScheduler {
+    fn push(&mut self, task: Task) {
+        let q = &mut self.queued[task.vertex as usize];
+        if !*q {
+            *q = true;
+            self.queue.push_back(task.vertex);
+        }
+    }
+
+    fn pop(&mut self) -> Option<Task> {
+        let v = self.queue.pop_front()?;
+        self.queued[v as usize] = false;
+        Some(Task {
+            vertex: v,
+            priority: 0.0,
+        })
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exact priority
+// ---------------------------------------------------------------------------
+
+#[derive(PartialEq)]
+struct HeapEntry {
+    priority: f64,
+    vertex: VertexId,
+}
+
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.priority
+            .partial_cmp(&o.priority)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.vertex.cmp(&o.vertex))
+    }
+}
+
+/// Exact max-priority scheduler (lazy-deletion binary heap).
+pub struct PriorityScheduler {
+    heap: BinaryHeap<HeapEntry>,
+    /// Current merged priority per vertex; NAN = not queued.
+    current: Vec<f64>,
+    live: usize,
+}
+
+impl PriorityScheduler {
+    /// Priority scheduler over `num_vertices`.
+    pub fn new(num_vertices: usize) -> Self {
+        PriorityScheduler {
+            heap: BinaryHeap::new(),
+            current: vec![f64::NAN; num_vertices],
+            live: 0,
+        }
+    }
+}
+
+impl Scheduler for PriorityScheduler {
+    fn push(&mut self, task: Task) {
+        let cur = &mut self.current[task.vertex as usize];
+        if cur.is_nan() {
+            *cur = task.priority;
+            self.live += 1;
+            self.heap.push(HeapEntry {
+                priority: task.priority,
+                vertex: task.vertex,
+            });
+        } else if task.priority > *cur {
+            *cur = task.priority;
+            self.heap.push(HeapEntry {
+                priority: task.priority,
+                vertex: task.vertex,
+            });
+        }
+        // Lower priority merges into the existing (higher) entry: no-op.
+    }
+
+    fn pop(&mut self) -> Option<Task> {
+        while let Some(top) = self.heap.pop() {
+            let cur = self.current[top.vertex as usize];
+            if !cur.is_nan() && cur == top.priority {
+                self.current[top.vertex as usize] = f64::NAN;
+                self.live -= 1;
+                return Some(Task {
+                    vertex: top.vertex,
+                    priority: top.priority,
+                });
+            }
+            // else: stale lazy-deleted entry
+        }
+        None
+    }
+
+    fn len(&self) -> usize {
+        self.live
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Approximate priority (multi-queue)
+// ---------------------------------------------------------------------------
+
+/// Approximate priority via `q` internal heaps: pushes go to a random heap,
+/// pops take the better top of two random heaps ("power of two choices").
+/// This is the low-contention structure the paper's distributed locking
+/// engine uses ("efficient approximate FIFO/priority task-queues").
+pub struct MultiQueueScheduler {
+    queues: Vec<PriorityScheduler>,
+    /// Which internal queue a vertex currently lives in (for dedup).
+    home: Vec<u8>,
+    rng: Rng,
+    live: usize,
+}
+
+impl MultiQueueScheduler {
+    /// `q` internal heaps over `num_vertices`.
+    pub fn new(num_vertices: usize, q: usize, seed: u64) -> Self {
+        let q = q.clamp(1, 255);
+        MultiQueueScheduler {
+            queues: (0..q).map(|_| PriorityScheduler::new(num_vertices)).collect(),
+            home: vec![u8::MAX; num_vertices],
+            rng: Rng::new(seed),
+            live: 0,
+        }
+    }
+}
+
+impl Scheduler for MultiQueueScheduler {
+    fn push(&mut self, task: Task) {
+        let h = self.home[task.vertex as usize];
+        if h != u8::MAX {
+            // Already queued: merge within its home queue.
+            self.queues[h as usize].push(task);
+            return;
+        }
+        let q = self.rng.gen_range(self.queues.len());
+        self.home[task.vertex as usize] = q as u8;
+        let before = self.queues[q].len();
+        self.queues[q].push(task);
+        self.live += self.queues[q].len() - before;
+    }
+
+    fn pop(&mut self) -> Option<Task> {
+        if self.live == 0 {
+            return None;
+        }
+        let k = self.queues.len();
+        let a = self.rng.gen_range(k);
+        let b = self.rng.gen_range(k);
+        let pick = |qs: &Vec<PriorityScheduler>, i: usize, j: usize| {
+            let pi = qs[i].heap.peek().map(|e| e.priority);
+            let pj = qs[j].heap.peek().map(|e| e.priority);
+            match (pi, pj) {
+                (Some(x), Some(y)) if y > x => j,
+                (None, Some(_)) => j,
+                _ => i,
+            }
+        };
+        let mut q = pick(&self.queues, a, b);
+        // Fall back to a scan if both sampled queues are empty.
+        if self.queues[q].is_empty() {
+            q = (0..k).find(|&i| !self.queues[i].is_empty())?;
+        }
+        let t = self.queues[q].pop()?;
+        self.home[t.vertex as usize] = u8::MAX;
+        self.live -= 1;
+        Some(t)
+    }
+
+    fn len(&self) -> usize {
+        self.live
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sweep
+// ---------------------------------------------------------------------------
+
+/// Fixed canonical-order scheduler: pops scheduled vertices in ascending
+/// vertex id, wrapping around (the Chromatic engine's static order).
+pub struct SweepScheduler {
+    flagged: Vec<bool>,
+    cursor: usize,
+    live: usize,
+}
+
+impl SweepScheduler {
+    /// Sweep over `num_vertices`.
+    pub fn new(num_vertices: usize) -> Self {
+        SweepScheduler {
+            flagged: vec![false; num_vertices],
+            cursor: 0,
+            live: 0,
+        }
+    }
+}
+
+impl Scheduler for SweepScheduler {
+    fn push(&mut self, task: Task) {
+        let f = &mut self.flagged[task.vertex as usize];
+        if !*f {
+            *f = true;
+            self.live += 1;
+        }
+    }
+
+    fn pop(&mut self) -> Option<Task> {
+        if self.live == 0 {
+            return None;
+        }
+        let n = self.flagged.len();
+        for _ in 0..n {
+            let v = self.cursor;
+            self.cursor = (self.cursor + 1) % n;
+            if self.flagged[v] {
+                self.flagged[v] = false;
+                self.live -= 1;
+                return Some(Task {
+                    vertex: v as VertexId,
+                    priority: 0.0,
+                });
+            }
+        }
+        None
+    }
+
+    fn len(&self) -> usize {
+        self.live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: VertexId, p: f64) -> Task {
+        Task {
+            vertex: v,
+            priority: p,
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_dedup() {
+        let mut s = FifoScheduler::new(10);
+        s.push(t(3, 0.0));
+        s.push(t(1, 0.0));
+        s.push(t(3, 0.0)); // dup
+        s.push(t(7, 0.0));
+        assert_eq!(s.len(), 3);
+        let order: Vec<VertexId> = std::iter::from_fn(|| s.pop()).map(|x| x.vertex).collect();
+        assert_eq!(order, vec![3, 1, 7]);
+    }
+
+    #[test]
+    fn priority_pops_in_descending_order() {
+        let mut s = PriorityScheduler::new(10);
+        for (v, p) in [(0, 1.0), (1, 5.0), (2, 3.0), (3, 4.0)] {
+            s.push(t(v, p));
+        }
+        let ps: Vec<f64> = std::iter::from_fn(|| s.pop()).map(|x| x.priority).collect();
+        assert_eq!(ps, vec![5.0, 4.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn priority_merge_keeps_max() {
+        let mut s = PriorityScheduler::new(4);
+        s.push(t(0, 2.0));
+        s.push(t(0, 5.0)); // raise
+        s.push(t(0, 1.0)); // ignored
+        assert_eq!(s.len(), 1);
+        let x = s.pop().unwrap();
+        assert_eq!(x.priority, 5.0);
+        assert!(s.pop().is_none());
+    }
+
+    #[test]
+    fn sweep_wraps_in_id_order() {
+        let mut s = SweepScheduler::new(5);
+        s.push(t(4, 0.0));
+        s.push(t(1, 0.0));
+        assert_eq!(s.pop().unwrap().vertex, 1);
+        // Cursor is now past 1; pushing 0 pops after wrap.
+        s.push(t(0, 0.0));
+        assert_eq!(s.pop().unwrap().vertex, 4);
+        assert_eq!(s.pop().unwrap().vertex, 0);
+        assert!(s.pop().is_none());
+    }
+
+    #[test]
+    fn multiqueue_conserves_tasks_and_dedups() {
+        let mut s = MultiQueueScheduler::new(100, 4, 7);
+        for v in 0..50u32 {
+            s.push(t(v, v as f64));
+            s.push(t(v, v as f64 / 2.0)); // dup, lower
+        }
+        assert_eq!(s.len(), 50);
+        let mut got: Vec<VertexId> = std::iter::from_fn(|| s.pop()).map(|x| x.vertex).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn multiqueue_is_approximately_ordered() {
+        // Not exact, but high-priority tasks should come out early on
+        // average: check the mean rank of the top decile.
+        let mut s = MultiQueueScheduler::new(1000, 4, 3);
+        for v in 0..1000u32 {
+            s.push(t(v, v as f64));
+        }
+        let order: Vec<f64> = std::iter::from_fn(|| s.pop()).map(|x| x.priority).collect();
+        let top_decile_mean_rank: f64 = order
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p >= 900.0)
+            .map(|(i, _)| i as f64)
+            .sum::<f64>()
+            / 100.0;
+        assert!(
+            top_decile_mean_rank < 400.0,
+            "mean rank of top decile = {top_decile_mean_rank}"
+        );
+    }
+
+    #[test]
+    fn by_name_builds_all() {
+        for name in ["fifo", "priority", "multiqueue", "sweep"] {
+            let mut s = by_name(name, 10, 1);
+            s.push(t(5, 1.0));
+            assert_eq!(s.pop().unwrap().vertex, 5);
+        }
+    }
+}

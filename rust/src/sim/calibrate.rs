@@ -1,0 +1,160 @@
+//! Measured per-update compute costs feeding the cluster model.
+//!
+//! The paper's scaling figures depend on the ratio between per-update
+//! compute and communication. We measure the *native* update cost of each
+//! application on this machine (single-threaded, realistic degrees) and
+//! feed it into [`super::WorkloadModel`]. This is the calibration step
+//! referenced in DESIGN.md §Substitutions.
+
+use std::time::Instant;
+
+use crate::util::matrix::{self, Mat};
+use crate::util::Rng;
+
+/// Hardware-era scaling: the paper's testbed (2×Xeon X5570 Nehalem, 2011)
+/// executes the same scalar f32 update roughly this many times slower than
+/// the machine the costs are measured on (per-core IPC × clock × vector
+/// width progress since 2011). Applied to measured costs so the modeled
+/// compute/communication ratio — which the scaling figures hinge on —
+/// matches the paper's testbed rather than ours.
+pub const HW_2011_SLOWDOWN: f64 = 6.0;
+
+/// Measured seconds per ALS vertex update at rank `d`, degree `deg`
+/// (O(d^3 + d^2 deg) solve, mirroring `apps::als`).
+pub fn als_update_cost(d: usize, deg: usize) -> f64 {
+    let mut rng = Rng::new(7);
+    let nbrs: Vec<Vec<f32>> = (0..deg)
+        .map(|_| (0..d).map(|_| rng.normal() * 0.3).collect())
+        .collect();
+    let ratings: Vec<f32> = (0..deg).map(|_| rng.uniform(1.0, 5.0)).collect();
+    let iters = (2000 / d.max(1)).max(20);
+    let start = Instant::now();
+    let mut sink = 0.0f32;
+    for _ in 0..iters {
+        let mut a = Mat::zeros(d, d);
+        let mut y = vec![0.0f32; d];
+        for (f, &r) in nbrs.iter().zip(&ratings) {
+            a.rank1_update(f, 1.0);
+            matrix::axpy(&mut y, f, r);
+        }
+        let x = matrix::solve_psd(&a, &y, 0.1);
+        sink += x[0];
+    }
+    std::hint::black_box(sink);
+    start.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Measured seconds per CoEM vertex update with `k` types, degree `deg`.
+pub fn coem_update_cost(k: usize, deg: usize) -> f64 {
+    let mut rng = Rng::new(8);
+    let nbrs: Vec<Vec<f32>> = (0..deg)
+        .map(|_| (0..k).map(|_| rng.f32()).collect())
+        .collect();
+    let counts: Vec<f32> = (0..deg).map(|_| rng.uniform(1.0, 10.0)).collect();
+    let iters = 5000;
+    let start = Instant::now();
+    let mut sink = 0.0f32;
+    for _ in 0..iters {
+        let mut agg = vec![0.01f32; k];
+        for (nb, &c) in nbrs.iter().zip(&counts) {
+            matrix::axpy(&mut agg, nb, c);
+        }
+        matrix::normalize(&mut agg);
+        sink += agg[0];
+    }
+    std::hint::black_box(sink);
+    start.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Measured seconds per LBP vertex update with `l` labels (grid degree 6).
+pub fn lbp_update_cost(l: usize) -> f64 {
+    let mut rng = Rng::new(9);
+    let msgs: Vec<Vec<f32>> = (0..6)
+        .map(|_| {
+            let mut m: Vec<f32> = (0..l).map(|_| rng.uniform(0.1, 1.0)).collect();
+            matrix::normalize(&mut m);
+            m
+        })
+        .collect();
+    let npot: Vec<f32> = (0..l).map(|_| rng.uniform(0.1, 1.0)).collect();
+    let iters = 5000;
+    let start = Instant::now();
+    let mut sink = 0.0f32;
+    for _ in 0..iters {
+        let mut prod = npot.clone();
+        for m in &msgs {
+            for (p, &mi) in prod.iter_mut().zip(m) {
+                *p *= mi.max(1e-30);
+            }
+        }
+        for m in &msgs {
+            let mut cav: Vec<f32> = prod.iter().zip(m).map(|(p, &mi)| p / mi.max(1e-30)).collect();
+            let s: f32 = cav.iter().sum();
+            let rho = 0.45f32;
+            for c in cav.iter_mut() {
+                *c = rho * s + (1.0 - rho) * *c;
+            }
+            matrix::normalize(&mut cav);
+            sink += cav[0];
+        }
+    }
+    std::hint::black_box(sink);
+    start.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Paper-scale workload models with measured update costs.
+pub fn netflix_workload(d: usize) -> super::WorkloadModel {
+    let avg_deg = 99e6 / 0.5e6;
+    super::WorkloadModel {
+        num_vertices: 0.5e6,
+        num_edges: 99e6,
+        update_cost: als_update_cost(d, (avg_deg as usize).min(512)) * HW_2011_SLOWDOWN,
+        vertex_bytes: 8.0 * d as f64 + 13.0,
+        edge_bytes: 16.0,
+        colors: 2.0,
+        bytes_per_update: avg_deg * (16.0 + 8.0 * d as f64 + 13.0),
+    }
+}
+
+/// NER at paper scale (2M vertices, 200M edges, 816-byte vertex data).
+pub fn ner_workload() -> super::WorkloadModel {
+    let avg_deg = 200e6 / 2e6;
+    super::WorkloadModel {
+        num_vertices: 2e6,
+        num_edges: 200e6,
+        update_cost: coem_update_cost(8, (avg_deg as usize).min(256)) * HW_2011_SLOWDOWN,
+        vertex_bytes: 816.0,
+        edge_bytes: 4.0,
+        colors: 2.0,
+        bytes_per_update: avg_deg * (4.0 + 816.0),
+    }
+}
+
+/// CoSeg at paper scale (10.5M vertices, 31M edges).
+pub fn coseg_workload(frames: f64) -> super::WorkloadModel {
+    let verts = frames * 120.0 * 50.0;
+    super::WorkloadModel {
+        num_vertices: verts,
+        num_edges: verts * 3.0,
+        update_cost: lbp_update_cost(5) * HW_2011_SLOWDOWN,
+        vertex_bytes: 392.0,
+        edge_bytes: 80.0,
+        colors: 0.0,
+        bytes_per_update: 6.0 * 80.0 + 392.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn costs_are_positive_and_ordered() {
+        let c5 = als_update_cost(5, 32);
+        let c20 = als_update_cost(20, 32);
+        assert!(c5 > 0.0);
+        assert!(c20 > c5, "d=20 must cost more than d=5: {c20:.2e} vs {c5:.2e}");
+        assert!(coem_update_cost(8, 64) > 0.0);
+        assert!(lbp_update_cost(5) > 0.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Minimal CLI argument parser (no `clap` offline).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` conventions used by the `graphlab` binary and the examples.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positional args plus `--key value` flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order (subcommand first).
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process command line.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional argument `i`, if present.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// Raw flag value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed flag with default; panics with a friendly message on a value
+    /// that does not parse (CLI misuse should fail loudly).
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={v}: {e}")),
+        }
+    }
+
+    /// Boolean flag (`--x`, `--x=true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// All flags, for config merging.
+    pub fn flags(&self) -> &BTreeMap<String, String> {
+        &self.flags
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("run als --nodes 8 --d=20 --verbose");
+        assert_eq!(a.pos(0), Some("run"));
+        assert_eq!(a.pos(1), Some("als"));
+        assert_eq!(a.num_or("nodes", 0usize), 8);
+        assert_eq!(a.num_or("d", 0usize), 20);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.num_or("nodes", 4usize), 4);
+        assert_eq!(a.str_or("engine", "chromatic"), "chromatic");
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let a = parse("x --offset -3");
+        assert_eq!(a.num_or("offset", 0i64), -3);
+    }
+
+    #[test]
+    #[should_panic(expected = "--nodes=abc")]
+    fn bad_value_panics() {
+        let a = parse("x --nodes abc");
+        let _: usize = a.num_or("nodes", 0);
+    }
+}

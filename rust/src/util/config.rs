@@ -1,0 +1,144 @@
+//! Layered key=value configuration (no `serde`/`toml` offline).
+//!
+//! A [`Config`] is a flat `section.key = value` map loaded from a file
+//! (`#` comments, `[section]` headers) and overridable from CLI flags
+//! (`--section.key value`). This is the config system behind `graphlab
+//! run --config cluster.conf ...` and the figure harnesses.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context as _, Result};
+
+/// Flat layered configuration store.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Empty config.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse from file contents (INI-like: `[section]`, `key = value`).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("config line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            cfg.values.insert(key, v.trim().to_string());
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Overlay (later wins): apply `other` on top of `self`.
+    pub fn overlay(&mut self, other: &BTreeMap<String, String>) {
+        for (k, v) in other {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    /// Set a single value.
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// String lookup with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Boolean lookup with default.
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => default,
+        }
+    }
+
+    /// Iterate all entries (for dumping effective config into run logs).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.values.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_comments_and_types() {
+        let cfg = Config::parse(
+            "# cluster config\n\
+             [cluster]\n\
+             machines = 8   # eight nodes\n\
+             threads = 4\n\
+             [engine]\n\
+             kind = locking\n\
+             maxpending = 100\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.num_or("cluster.machines", 0usize), 8);
+        assert_eq!(cfg.str_or("engine.kind", ""), "locking");
+        assert_eq!(cfg.num_or("engine.maxpending", 0u32), 100);
+        assert_eq!(cfg.num_or("missing", 7i32), 7);
+    }
+
+    #[test]
+    fn overlay_wins() {
+        let mut cfg = Config::parse("a = 1\nb = 2\n").unwrap();
+        let mut over = BTreeMap::new();
+        over.insert("b".to_string(), "20".to_string());
+        cfg.overlay(&over);
+        assert_eq!(cfg.num_or("a", 0i32), 1);
+        assert_eq!(cfg.num_or("b", 0i32), 20);
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        assert!(Config::parse("not a kv line\n").is_err());
+    }
+
+    #[test]
+    fn bools() {
+        let cfg = Config::parse("x = true\ny = 0\n").unwrap();
+        assert!(cfg.bool_or("x", false));
+        assert!(!cfg.bool_or("y", true));
+        assert!(cfg.bool_or("z", true));
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny CSV emitter for figure/bench output (no `csv` crate offline).
+//!
+//! Every figure harness writes a `results/<fig>.csv` through [`CsvWriter`];
+//! columns are declared once and row writes are checked against them.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{ensure, Context as _, Result};
+
+/// Column-checked CSV writer.
+pub struct CsvWriter {
+    out: Box<dyn Write + Send>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create a writer over an arbitrary sink with the given header.
+    pub fn new(mut out: Box<dyn Write + Send>, header: &[&str]) -> Result<Self> {
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            columns: header.len(),
+        })
+    }
+
+    /// Create a file-backed writer (parent directories are created).
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Self::new(Box::new(f), header)
+    }
+
+    /// Write one row; must match the header width.
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        ensure!(
+            fields.len() == self.columns,
+            "csv row has {} fields, header has {}",
+            fields.len(),
+            self.columns
+        );
+        writeln!(self.out, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    /// Convenience: write a row of displayable values.
+    pub fn rowd(&mut self, fields: &[&dyn std::fmt::Display]) -> Result<()> {
+        let v: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&v)
+    }
+
+    /// Flush the sink.
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Format a float with fixed precision for stable CSV diffs.
+pub fn f(x: f64) -> String {
+    format!("{x:.6}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[derive(Clone, Default)]
+    struct Buf(Arc<Mutex<Vec<u8>>>);
+    impl Write for Buf {
+        fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(b);
+            Ok(b.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn writes_header_and_rows() {
+        let buf = Buf::default();
+        let mut w = CsvWriter::new(Box::new(buf.clone()), &["nodes", "time"]).unwrap();
+        w.rowd(&[&4, &1.5]).unwrap();
+        w.rowd(&[&8, &0.9]).unwrap();
+        let s = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        assert_eq!(s, "nodes,time\n4,1.5\n8,0.9\n");
+    }
+
+    #[test]
+    fn width_mismatch_is_error() {
+        let buf = Buf::default();
+        let mut w = CsvWriter::new(Box::new(buf), &["a", "b"]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+    }
+}

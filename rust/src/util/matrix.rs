@@ -1,0 +1,264 @@
+//! Small dense f32 linear algebra (no BLAS/LAPACK offline).
+//!
+//! This is the *native* mirror of the Layer-1 Pallas math: the engines can
+//! run every application without artifacts (`Runtime::native`), and the
+//! integration tests cross-check the PJRT path against these routines. The
+//! same Cholesky algorithm is implemented (unrolled) inside
+//! `python/compile/kernels/als.py`.
+
+/// Row-major dense matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Underlying row-major slice.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable row-major slice.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Rank-1 update: `self += w * x x^T` (the ALS Gram accumulation).
+    pub fn rank1_update(&mut self, x: &[f32], w: f32) {
+        debug_assert_eq!(self.rows, self.cols);
+        debug_assert_eq!(x.len(), self.rows);
+        for i in 0..self.rows {
+            let wi = w * x[i];
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r += wi * x[j];
+            }
+        }
+    }
+
+    /// Add `lam` to the diagonal (ridge regularization).
+    pub fn add_diag(&mut self, lam: f32) {
+        for i in 0..self.rows.min(self.cols) {
+            self[(i, i)] += lam;
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// In-place Cholesky factorization of a symmetric PSD matrix; returns the
+/// lower-triangular factor. Mirrors `_cholesky_solve` in `als.py`.
+pub fn cholesky(a: &Mat) -> Mat {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for j in 0..n {
+        let mut s = a[(j, j)];
+        for k in 0..j {
+            s -= l[(j, k)] * l[(j, k)];
+        }
+        let ljj = s.max(1e-12).sqrt();
+        l[(j, j)] = ljj;
+        for i in (j + 1)..n {
+            let mut s2 = a[(i, j)];
+            for k in 0..j {
+                s2 -= l[(i, k)] * l[(j, k)];
+            }
+            l[(i, j)] = s2 / ljj;
+        }
+    }
+    l
+}
+
+/// Solve `(A + lam I) x = y` for symmetric PSD `A` via Cholesky.
+pub fn solve_psd(a: &Mat, y: &[f32], lam: f32) -> Vec<f32> {
+    let mut reg = a.clone();
+    reg.add_diag(lam);
+    let l = cholesky(&reg);
+    let n = y.len();
+    // forward: L t = y
+    let mut t = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = y[i];
+        for k in 0..i {
+            s -= l[(i, k)] * t[k];
+        }
+        t[i] = s / l[(i, i)];
+    }
+    // backward: L^T x = t
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = t[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y += w * x`.
+pub fn axpy(y: &mut [f32], x: &[f32], w: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += w * xi;
+    }
+}
+
+/// L1 distance between two slices.
+pub fn l1_dist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// Normalize a slice to sum 1 (guarding empty mass).
+pub fn normalize(x: &mut [f32]) {
+    let s: f32 = x.iter().sum();
+    if s > 1e-30 {
+        for v in x.iter_mut() {
+            *v /= s;
+        }
+    } else if !x.is_empty() {
+        let u = 1.0 / x.len() as f32;
+        for v in x.iter_mut() {
+            *v = u;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_psd(n: usize, rng: &mut Rng) -> Mat {
+        // A = G G^T + 0.1 I
+        let mut g = Mat::zeros(n, n);
+        for v in g.as_mut_slice() {
+            *v = rng.normal();
+        }
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += g[(i, k)] * g[(j, k)];
+                }
+                a[(i, j)] = s;
+            }
+        }
+        a.add_diag(0.1);
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(1);
+        let a = random_psd(8, &mut rng);
+        let l = cholesky(&a);
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0;
+                for k in 0..8 {
+                    s += l[(i, k)] * l[(j, k)];
+                }
+                assert!((s - a[(i, j)]).abs() < 1e-3, "({i},{j}): {s} vs {}", a[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_recovers_planted() {
+        let mut rng = Rng::new(2);
+        for n in [1, 2, 5, 10, 20] {
+            let a = random_psd(n, &mut rng);
+            let x_true: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut y = vec![0.0f32; n];
+            for i in 0..n {
+                let mut s = 0.0;
+                for j in 0..n {
+                    s += a[(i, j)] * x_true[j];
+                }
+                y[i] = s;
+            }
+            let x = solve_psd(&a, &y, 0.0);
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-2, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn rank1_matches_definition() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut a = Mat::zeros(3, 3);
+        a.rank1_update(&x, 2.0);
+        assert_eq!(a[(0, 0)], 2.0);
+        assert_eq!(a[(1, 2)], 12.0);
+        assert_eq!(a[(2, 1)], 12.0);
+    }
+
+    #[test]
+    fn normalize_handles_zero_mass() {
+        let mut x = [0.0f32; 4];
+        normalize(&mut x);
+        assert!(x.iter().all(|&v| (v - 0.25).abs() < 1e-7));
+        let mut y = [1.0f32, 3.0];
+        normalize(&mut y);
+        assert!((y[0] - 0.25).abs() < 1e-7 && (y[1] - 0.75).abs() < 1e-7);
+    }
+}

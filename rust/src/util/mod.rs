@@ -1,0 +1,20 @@
+//! In-repo utility substrate.
+//!
+//! The offline vendor set only provides `xla`/`anyhow`/`thiserror`, so every
+//! other building block a framework of this shape normally pulls from
+//! crates.io is implemented here: a deterministic PRNG ([`rng`]), a thread
+//! pool ([`threadpool`]), a CLI flag parser ([`cli`]), a key=value config
+//! system ([`config`]), CSV emission ([`csv`]), summary statistics
+//! ([`stats`]), and the small dense linear algebra used by the native
+//! (non-PJRT) math paths ([`matrix`]).
+
+pub mod cli;
+pub mod config;
+pub mod csv;
+pub mod matrix;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use rng::Rng;
+pub use threadpool::ThreadPool;

@@ -1,0 +1,153 @@
+//! A small scoped thread pool (no `rayon` offline).
+//!
+//! Provides the two primitives the engines need:
+//!
+//! * [`ThreadPool::scope_execute`] — run a closure on every worker
+//!   simultaneously (the engines' "spawn N workers over shared state"
+//!   pattern, mirroring the paper's pthread worker loops);
+//! * [`parallel_for_chunks`] — a static block-cyclic parallel for used by
+//!   data generators and the chromatic engine's per-color vertex sweeps.
+//!
+//! Scoped execution is built on `std::thread::scope`, so borrows of stack
+//! data are allowed without `Arc` gymnastics.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Thread-count container; threads are spawned per scoped call rather than
+/// persisted, which keeps lifetimes simple and is cheap at the granularity
+/// the engines use (one spawn per engine phase, not per task).
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// A pool with `workers` worker threads (minimum 1).
+    pub fn new(workers: usize) -> Self {
+        ThreadPool {
+            workers: workers.max(1),
+        }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(worker_id)` on every worker concurrently and wait for all.
+    pub fn scope_execute<F>(&self, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.workers == 1 {
+            f(0);
+            return;
+        }
+        std::thread::scope(|s| {
+            for w in 0..self.workers {
+                let f = &f;
+                s.spawn(move || f(w));
+            }
+        });
+    }
+
+    /// Dynamic parallel for over `0..n` with an atomic chunk cursor:
+    /// `f(i)` for every index, chunked to amortize the atomic.
+    pub fn parallel_for<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let cursor = AtomicUsize::new(0);
+        let chunk = chunk.max(1);
+        self.scope_execute(|_w| loop {
+            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+            if start >= n {
+                break;
+            }
+            let end = (start + chunk).min(n);
+            for i in start..end {
+                f(i);
+            }
+        });
+    }
+
+    /// Parallel fold: each worker folds a private accumulator over the
+    /// indices it claims, then the accumulators are merged sequentially.
+    pub fn parallel_fold<A, F, M>(&self, n: usize, chunk: usize, init: A, fold: F, merge: M) -> A
+    where
+        A: Clone + Send + Sync,
+        F: Fn(&mut A, usize) + Sync,
+        M: Fn(&mut A, A),
+    {
+        let cursor = AtomicUsize::new(0);
+        let chunk = chunk.max(1);
+        let accs = std::sync::Mutex::new(Vec::new());
+        self.scope_execute(|_w| {
+            let mut acc = init.clone();
+            loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    fold(&mut acc, i);
+                }
+            }
+            accs.lock().unwrap().push(acc);
+        });
+        let mut out = init;
+        for a in accs.into_inner().unwrap() {
+            merge(&mut out, a);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        ThreadPool::new(8).parallel_for(n, 64, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_fold_sums_correctly() {
+        let n = 100_000usize;
+        let total = ThreadPool::new(4).parallel_fold(
+            n,
+            1000,
+            0u64,
+            |acc, i| *acc += i as u64,
+            |a, b| *a += b,
+        );
+        assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn scope_execute_runs_every_worker() {
+        let flags: Vec<AtomicU64> = (0..6).map(|_| AtomicU64::new(0)).collect();
+        ThreadPool::new(6).scope_execute(|w| {
+            flags[w].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(flags.iter().all(|f| f.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_worker_is_inline() {
+        let mut hit = false;
+        let hit_ref = std::sync::Mutex::new(&mut hit);
+        ThreadPool::new(1).scope_execute(|_| {
+            **hit_ref.lock().unwrap() = true;
+        });
+        assert!(hit);
+    }
+}

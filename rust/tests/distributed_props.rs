@@ -1,0 +1,145 @@
+//! Property tests over the distributed substrate (seed-swept, in-repo
+//! generators — no proptest crate offline).
+
+use graphlab::graph::{Graph, GraphBuilder, VertexId};
+use graphlab::partition::{atoms, Coloring, Partition};
+use graphlab::util::Rng;
+
+fn random_graph(n: usize, m: usize, seed: u64) -> Graph<u32, u32> {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new();
+    b.add_vertices(n, |i| i as u32);
+    let mut seen = std::collections::HashSet::new();
+    let mut added = 0;
+    while added < m {
+        let u = rng.gen_range(n) as VertexId;
+        let v = rng.gen_range(n) as VertexId;
+        if u != v && seen.insert((u.min(v), u.max(v))) {
+            b.add_edge(u, v, added as u32);
+            added += 1;
+        }
+    }
+    b.build()
+}
+
+#[test]
+fn prop_greedy_coloring_always_valid() {
+    for seed in 0..20 {
+        let n = 50 + (seed as usize * 37) % 200;
+        let m = n * 3;
+        let g = random_graph(n, m, seed);
+        let c = Coloring::greedy(&g);
+        assert!(c.is_valid(&g), "seed={seed}");
+        assert!(c.num_colors() as usize <= g.max_degree() + 1);
+    }
+}
+
+#[test]
+fn prop_second_order_coloring_always_distance2_valid() {
+    for seed in 0..10 {
+        let g = random_graph(60, 150, 1000 + seed);
+        let c = Coloring::second_order(&g);
+        assert!(c.is_second_order_valid(&g), "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_two_phase_partition_covers_and_balances() {
+    for seed in 0..10 {
+        let g = random_graph(400, 1600, 2000 + seed);
+        for machines in [2usize, 3, 8] {
+            let p = atoms::two_phase(&g, 48, machines, seed);
+            assert_eq!(p.num_vertices(), 400);
+            let sizes = p.sizes();
+            assert_eq!(sizes.iter().sum::<usize>(), 400);
+            assert!(
+                p.imbalance() < 2.0,
+                "seed={seed} machines={machines} imbalance={}",
+                p.imbalance()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_local_graphs_partition_ownership_exactly() {
+    use graphlab::distributed::LocalGraph;
+    for seed in 0..8 {
+        let g = random_graph(120, 480, 3000 + seed);
+        let p = Partition::random(120, 4, seed);
+        let locals: Vec<LocalGraph<u32, u32>> =
+            (0..4).map(|m| LocalGraph::build(&g, &p, m)).collect();
+        // Ownership partition is exact.
+        let total_owned: usize = locals.iter().map(|l| l.owned).sum();
+        assert_eq!(total_owned, 120);
+        for lg in &locals {
+            // Every ghost is a neighbor of an owned vertex and owned
+            // elsewhere.
+            for lv in lg.owned..lg.l2g.len() {
+                assert_ne!(lg.owner[lv], lg.machine);
+            }
+            // Mirrors point at machines that really ghost the vertex.
+            for lv in 0..lg.owned {
+                for &peer in &lg.mirrors[lv] {
+                    let gv = lg.l2g[lv];
+                    assert!(locals[peer].g2l.contains_key(&gv),
+                        "machine {peer} should ghost vertex {gv}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scheduler_task_conservation() {
+    use graphlab::scheduler::{by_name, Task};
+    for (si, name) in ["fifo", "priority", "multiqueue", "sweep"].iter().enumerate() {
+        for seed in 0..6u64 {
+            let mut rng = Rng::new(seed * 31 + si as u64);
+            let n = 200;
+            let mut s = by_name(name, n, seed);
+            let mut expected = std::collections::HashSet::new();
+            for _ in 0..500 {
+                let v = rng.gen_range(n) as VertexId;
+                s.push(Task { vertex: v, priority: rng.f64() });
+                expected.insert(v);
+            }
+            assert_eq!(s.len(), expected.len(), "{name} seed={seed}");
+            let mut got = std::collections::HashSet::new();
+            while let Some(t) = s.pop() {
+                assert!(got.insert(t.vertex), "{name}: duplicate pop");
+            }
+            assert_eq!(got, expected, "{name} seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_ghost_copies_coherent_after_chromatic_run() {
+    // After a chromatic run, both machine copies of every cross edge and
+    // every ghost must equal the owner's value. We verify through the
+    // result graph (assembled from owner copies) by re-running: any
+    // incoherence manifests as nondeterminism vs the 1-machine run.
+    use graphlab::apps::{self, pagerank};
+    use graphlab::engine::chromatic::{self, ChromaticOpts};
+    for seed in 0..5 {
+        let n = 150;
+        let edges = graphlab::datagen::web_graph(n, 5, 100 + seed);
+        let run = |machines: usize| {
+            let g = pagerank::build(n, &edges, 0.15);
+            let coloring = Coloring::greedy(&g);
+            let partition = Partition::random(n, machines, seed);
+            let prog = pagerank::PageRank { alpha: 0.15, eps: 0.0, n, use_pjrt: false };
+            let (g, _) = chromatic::run(
+                g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
+                ChromaticOpts { machines, max_sweeps: 4, ..Default::default() },
+            );
+            g.vertex_ids().map(|v| g.vertex_data(v).rank).collect::<Vec<f32>>()
+        };
+        let r1 = run(1);
+        let r4 = run(4);
+        for (a, b) in r1.iter().zip(&r4) {
+            assert!((a - b).abs() < 1e-6, "seed={seed}: {a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Cross-engine equivalence and sequential-consistency properties.
+//!
+//! The GraphLab guarantee (paper Def. 3.1): every parallel execution has
+//! an equivalent sequential execution. For deterministic-schedule programs
+//! this means the distributed engines must agree exactly with a sequential
+//! shared-memory run; for adaptive programs they must agree on the fixed
+//! point.
+
+use graphlab::apps::{self, als, pagerank};
+use graphlab::engine::chromatic::{self, ChromaticOpts};
+use graphlab::engine::locking::{self, LockingOpts};
+use graphlab::engine::shared::{self, SharedOpts};
+use graphlab::partition::{Coloring, Partition};
+use graphlab::scheduler::FifoScheduler;
+
+#[test]
+fn chromatic_machine_count_does_not_change_results() {
+    // The chromatic schedule is deterministic regardless of machine count
+    // (paper Sec. 4.2.1 "repeated invocations ... will always produce
+    // identical update sequences, regardless of the number of machines").
+    let data = graphlab::datagen::netflix(120, 80, 12, 4, 0.1, 3);
+    let run = |machines: usize| {
+        let g = als::build(&data, 5, 1);
+        let n = g.num_vertices();
+        let coloring = Coloring::bipartite(&g).unwrap();
+        let partition = Partition::random(n, machines, 9);
+        let prog = als::Als { d: 5, lambda: 0.1, use_pjrt: false };
+        let (g, _) = chromatic::run(
+            g, &coloring, &partition, &prog,
+            apps::all_vertices(n), vec![],
+            ChromaticOpts { machines, max_sweeps: 6, ..Default::default() },
+        );
+        g.vertex_ids().flat_map(|v| g.vertex_data(v).factor.clone()).collect::<Vec<f32>>()
+    };
+    let f1 = run(1);
+    let f3 = run(3);
+    let f5 = run(5);
+    // Color-internal order differs but updates are independent within a
+    // color, so results agree to float reduction order (exact here since
+    // per-vertex accumulation order is scope order in every engine).
+    for ((a, b), c) in f1.iter().zip(&f3).zip(&f5) {
+        assert!((a - b).abs() < 1e-5 && (a - c).abs() < 1e-5, "{a} {b} {c}");
+    }
+}
+
+#[test]
+fn all_engines_reach_same_pagerank_fixed_point() {
+    let n = 800;
+    let edges = graphlab::datagen::web_graph(n, 6, 17);
+    let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-7, n, use_pjrt: false };
+
+    let g = pagerank::build(n, &edges, 0.15);
+    let (g_shared, _) = shared::run(
+        g, &prog, apps::all_vertices(n), vec![],
+        Box::new(FifoScheduler::new(n)),
+        SharedOpts { workers: 4, max_updates: 3_000_000, ..Default::default() },
+    );
+
+    let g = pagerank::build(n, &edges, 0.15);
+    let coloring = Coloring::greedy(&g);
+    let partition = Partition::random(n, 3, 5);
+    let (g_chrom, _) = chromatic::run(
+        g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
+        ChromaticOpts { machines: 3, max_sweeps: 500, ..Default::default() },
+    );
+
+    let g = pagerank::build(n, &edges, 0.15);
+    let (g_lock, _) = locking::run(
+        g, &partition, &prog, apps::all_vertices(n), vec![],
+        LockingOpts {
+            machines: 3, maxpending: 128, scheduler: "fifo".into(),
+            max_updates_per_machine: 2_000_000, ..Default::default()
+        },
+    );
+
+    for v in g_shared.vertex_ids() {
+        let r = g_shared.vertex_data(v).rank;
+        assert!((r - g_chrom.vertex_data(v).rank).abs() < 1e-5, "chromatic v{v}");
+        assert!((r - g_lock.vertex_data(v).rank).abs() < 1e-5, "locking v{v}");
+    }
+}
+
+#[test]
+fn locking_engine_respects_consistency_under_contention() {
+    // Counter app where each update increments the center and all
+    // neighbor-visible sums must stay exact (full consistency): any lost
+    // update or torn read breaks the total.
+    use graphlab::distributed::DataValue;
+    use graphlab::engine::{Consistency, Ctx, Scope, VertexProgram};
+    use graphlab::graph::GraphBuilder;
+
+    #[derive(Clone, Debug, PartialEq)]
+    struct C(u64);
+    impl DataValue for C {
+        fn wire_bytes(&self) -> u64 { 8 }
+    }
+    struct IncAll {
+        rounds: u64,
+    }
+    impl VertexProgram<C, C> for IncAll {
+        fn consistency(&self) -> Consistency { Consistency::Full }
+        fn update(&self, scope: &mut Scope<C, C>, ctx: &mut Ctx) {
+            scope.center_mut().0 += 1;
+            for i in 0..scope.degree() {
+                scope.nbr_mut(i).0 += 1;
+                scope.edge_mut(i).0 += 1;
+            }
+            if scope.center().0 < self.rounds {
+                ctx.schedule(scope.vertex(), 1.0);
+            }
+        }
+    }
+
+    // Dense-ish graph, striped partition: maximal remote contention.
+    let n = 24u32;
+    let mut b = GraphBuilder::new();
+    b.add_vertices(n as usize, |_| C(0));
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if (u + v) % 3 == 0 {
+                b.add_edge(u, v, C(0));
+            }
+        }
+    }
+    let g = b.build();
+    let m = g.num_edges() as u64;
+    let partition = Partition::striped(n as usize, 3);
+    let prog = IncAll { rounds: 50 };
+    let (g, stats) = locking::run(
+        g, &partition, &prog, apps::all_vertices(n as usize), vec![],
+        LockingOpts {
+            machines: 3, maxpending: 16, scheduler: "fifo".into(),
+            max_updates_per_machine: 100_000, ..Default::default()
+        },
+    );
+    // Every update increments center + degree neighbors + degree edges;
+    // totals must match the update count exactly (no lost writes).
+    let total_v: u64 = g.vertex_ids().map(|v| g.vertex_data(v).0).sum();
+    let total_e: u64 = (0..m as u32).map(|e| g.edge_data(e).0).sum();
+    let expected_v: u64 = stats.updates
+        + (0..n).map(|v| g.degree(v) as u64).sum::<u64>() * stats.updates / n as u64;
+    // Exact accounting: sum over updates of (1 + deg(center)). Since every
+    // vertex runs the same number of rounds (self-rescheduling to a fixed
+    // count is contention-dependent), recompute from per-vertex counts:
+    // center increments happened `c_v >= rounds` times... instead verify
+    // the invariant total_e == sum of per-update degrees via total_v:
+    // total_v = updates + total_e (each update adds deg to edges and deg
+    // to neighbor vertices plus 1 to center).
+    assert_eq!(total_v, stats.updates + total_e, "lost or torn writes (expected_v draft {expected_v})");
+}

@@ -1,0 +1,89 @@
+//! PJRT-path integration: the AOT Pallas kernels driving full distributed
+//! runs must agree with the native math (all tests no-op gracefully when
+//! `make artifacts` has not been run).
+
+use graphlab::apps::{self, als, coseg, ner};
+use graphlab::engine::chromatic::{self, ChromaticOpts};
+use graphlab::engine::locking::{self, LockingOpts};
+use graphlab::partition::{Coloring, Partition};
+
+fn artifacts() -> bool {
+    if graphlab::runtime::available() {
+        true
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        false
+    }
+}
+
+#[test]
+fn als_pjrt_equals_native_distributed() {
+    if !artifacts() {
+        return;
+    }
+    let data = graphlab::datagen::netflix(300, 150, 20, 5, 0.1, 7);
+    let rmse = |use_pjrt: bool| {
+        let g = als::build(&data, 10, 1);
+        let n = g.num_vertices();
+        let coloring = Coloring::bipartite(&g).unwrap();
+        let partition = Partition::random(n, 3, 3);
+        let prog = als::Als { d: 10, lambda: 0.08, use_pjrt };
+        let (g, _) = chromatic::run(
+            g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
+            ChromaticOpts { machines: 3, max_sweeps: 6, ..Default::default() },
+        );
+        als::rmse_direct(&g)
+    };
+    let (nat, pj) = (rmse(false), rmse(true));
+    assert!((nat - pj).abs() < 5e-3, "native={nat} pjrt={pj}");
+    assert!(pj < 0.3, "pjrt ALS must converge: {pj}");
+}
+
+#[test]
+fn coem_pjrt_equals_native_distributed() {
+    if !artifacts() {
+        return;
+    }
+    let data = graphlab::datagen::ner(400, 200, 20, 8, 0.15, 9);
+    let final_dists = |use_pjrt: bool| {
+        let g = ner::build(&data);
+        let n = g.num_vertices();
+        let coloring = Coloring::bipartite(&g).unwrap();
+        let partition = Partition::random(n, 2, 3);
+        let prog = ner::Coem { k: 8, smoothing: 0.01, eps: 1e-4, use_pjrt };
+        let (g, _) = chromatic::run(
+            g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
+            ChromaticOpts { machines: 2, max_sweeps: 6, ..Default::default() },
+        );
+        g.vertex_ids().flat_map(|v| g.vertex_data(v).dist.clone()).collect::<Vec<f32>>()
+    };
+    let nat = final_dists(false);
+    let pj = final_dists(true);
+    let max_diff = nat.iter().zip(&pj).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "max diff {max_diff}");
+}
+
+#[test]
+fn lbp_pjrt_runs_in_locking_engine() {
+    if !artifacts() {
+        return;
+    }
+    let data = graphlab::datagen::video(3, 8, 10, 5, 0.4, 3);
+    let g = coseg::build(&data, 0.8);
+    let n = g.num_vertices();
+    let partition = Partition::blocked(n, 2);
+    let prog = coseg::Coseg { labels: 5, eps: 5e-3, sigma2: 0.5, use_pjrt: true };
+    let (g, stats) = locking::run(
+        g, &partition, &prog, apps::all_vertices(n), vec![],
+        LockingOpts {
+            machines: 2, maxpending: 64, scheduler: "priority".into(),
+            max_updates_per_machine: n as u64 * 10, ..Default::default()
+        },
+    );
+    assert!(stats.updates >= n as u64 / 2);
+    // Beliefs are normalized distributions.
+    for v in g.vertex_ids() {
+        let s: f32 = g.vertex_data(v).belief.iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "belief sum {s} at v{v}");
+    }
+}
