@@ -1,0 +1,45 @@
+# graphlab-rs build orchestration. Tier-1 is plain `cargo build --release
+# && cargo test -q`; this Makefile only adds convenience wrappers and the
+# `artifacts` AOT-lowering step (the one target that needs Python/JAX).
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS_DIR := artifacts
+
+.PHONY: all build test check clippy fmt fmt-fix bench figures artifacts clean
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+check: test clippy fmt
+
+clippy:
+	$(CARGO) clippy -- -D warnings
+
+fmt:
+	$(CARGO) fmt --check
+
+fmt-fix:
+	$(CARGO) fmt
+
+bench:
+	$(CARGO) bench --bench engine
+
+figures:
+	$(CARGO) bench --bench figures
+
+# AOT-lower the Layer-1 Pallas kernels to HLO text artifacts consumed by
+# the Rust runtime (`rust/src/runtime/`). Requires Python with jax; runs
+# at build time only — execution never invokes Python.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+	@echo "artifacts written to $(ARTIFACTS_DIR)/ ($$(ls $(ARTIFACTS_DIR)/*.hlo.txt 2>/dev/null | wc -l) kernels)"
+
+clean:
+	$(CARGO) clean
+	rm -rf $(ARTIFACTS_DIR) results

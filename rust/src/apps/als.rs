@@ -147,9 +147,9 @@ impl VertexProgram<AlsVertex, AlsEdge> for Als {
         let mut rt = vec![0.0f32; bt * nt];
         let mut mt = vec![0.0f32; bt * nt];
         for c in 0..chunks {
-            vt.iter_mut().for_each(|x| *x = 0.0);
-            rt.iter_mut().for_each(|x| *x = 0.0);
-            mt.iter_mut().for_each(|x| *x = 0.0);
+            vt.fill(0.0);
+            rt.fill(0.0);
+            mt.fill(0.0);
             for (b, s) in scopes.iter().enumerate() {
                 let lo = c * nt;
                 let hi = ((c + 1) * nt).min(s.degree());

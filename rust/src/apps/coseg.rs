@@ -97,7 +97,7 @@ impl Coseg {
     }
 
     /// Incoming message from neighbor slot `i` (toward the center).
-    fn msg_in<'a>(scope: &'a Scope<CosegVertex, CosegEdge>, i: usize) -> &'a [f32] {
+    fn msg_in(scope: &Scope<CosegVertex, CosegEdge>, i: usize) -> &[f32] {
         if scope.vertex() < scope.nbr_id(i) {
             &scope.edge(i).msg_to_lo
         } else {

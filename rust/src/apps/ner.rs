@@ -64,7 +64,7 @@ pub struct Coem {
 impl Coem {
     fn finish(&self, scope: &mut Scope<NerVertex, NerEdge>, ctx: &mut Ctx, mut new: Vec<f32>) {
         if let Some(seed) = scope.center().seed {
-            new.iter_mut().for_each(|x| *x = 0.0);
+            new.fill(0.0);
             new[seed as usize] = 1.0;
         }
         let residual = matrix::l1_dist(&new, &scope.center().dist);
@@ -123,8 +123,8 @@ impl VertexProgram<NerVertex, NerEdge> for Coem {
         let mut nbr = vec![0.0f32; bt * nt * k];
         let mut cnt = vec![0.0f32; bt * nt];
         for c in 0..chunks {
-            nbr.iter_mut().for_each(|x| *x = 0.0);
-            cnt.iter_mut().for_each(|x| *x = 0.0);
+            nbr.fill(0.0);
+            cnt.fill(0.0);
             for (b, s) in scopes.iter().enumerate() {
                 let lo = c * nt;
                 let hi = ((c + 1) * nt).min(s.degree());
@@ -176,7 +176,7 @@ pub fn build(data: &crate::datagen::NerData) -> Graph<NerVertex, NerEdge> {
         let seed = if is_np { seed_of[i] } else { None };
         let mut dist = uniform.clone();
         if let Some(t) = seed {
-            dist.iter_mut().for_each(|x| *x = 0.0);
+            dist.fill(0.0);
             dist[t as usize] = 1.0;
         }
         NerVertex {

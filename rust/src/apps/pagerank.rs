@@ -130,8 +130,8 @@ impl VertexProgram<PrVertex, PrEdge> for PageRank {
         let mut ranks = vec![0.0f32; bt * nt];
         let mut weights = vec![0.0f32; bt * nt];
         for c in 0..chunks {
-            ranks.iter_mut().for_each(|x| *x = 0.0);
-            weights.iter_mut().for_each(|x| *x = 0.0);
+            ranks.fill(0.0);
+            weights.fill(0.0);
             for (b, s) in scopes.iter().enumerate() {
                 let lo = c * nt;
                 let hi = ((c + 1) * nt).min(s.degree());

@@ -95,18 +95,16 @@ impl LockTable {
     /// Release a previously granted lock; returns the requests that become
     /// granted as a result (to be notified by the engine).
     pub fn release(&mut self, vertex: VertexId, txn: TxnId, write: bool) -> Vec<LockReq> {
-        let st = self.locks.get_mut(&vertex).expect("release of unknown lock");
         if write {
+            let st = self.locks.get_mut(&vertex).expect("release of unknown lock");
             debug_assert_eq!(st.writer, Some(txn), "write release by non-holder");
             st.writer = None;
         } else {
-            debug_assert!(
-                self.held_reads
-                    .remove(&(vertex, txn.machine, txn.seq))
-                    .is_some(),
-                "read release by non-holder"
-            );
-            let st = self.locks.get_mut(&vertex).unwrap();
+            // Note: the removal must stay outside debug_assert! — a side
+            // effect inside it would vanish in release builds.
+            let held = self.held_reads.remove(&(vertex, txn.machine, txn.seq));
+            debug_assert!(held.is_some(), "read release by non-holder");
+            let st = self.locks.get_mut(&vertex).expect("release of unknown lock");
             debug_assert!(st.readers > 0);
             st.readers -= 1;
         }

@@ -283,9 +283,7 @@ where
                                 if sc.center_dirty() {
                                     out.dirty_v.push(lv);
                                 }
-                                let lo = lg.adj_offsets[lv as usize] as usize;
                                 for (i, &(_, nle)) in lg.neighbors(lv).iter().enumerate() {
-                                    let _ = lo;
                                     if sc.edge_dirty(i) {
                                         out.dirty_e.push(nle);
                                     }
@@ -296,6 +294,7 @@ where
                         my_updates += batch.len() as u64;
 
                         // --- build per-peer ghost flushes ---
+                        #[allow(clippy::type_complexity)]
                         let mut per_peer: Vec<(
                             Vec<(VertexId, u64, V)>,
                             Vec<(EdgeId, u64, E)>,

@@ -17,8 +17,9 @@
 //!   `VertexProgram::update_batch`, letting PJRT-backed programs amortize
 //!   compiled-kernel invocations.
 //!
-//! Termination uses the Safra/Misra token ring ([`crate::distributed::
-//! termination`]); sync operations run under a leader-coordinated global
+//! Termination uses the Safra/Misra token ring
+//! ([`crate::distributed::termination`]); sync operations run under a
+//! leader-coordinated global
 //! barrier (machines drain in-flight transactions, fold their partition,
 //! and resume after the leader broadcasts the merged result).
 //!
@@ -129,6 +130,11 @@ enum Msg<V, E> {
     },
 }
 
+/// Metadata for queued remote lock requests, keyed by (txn, vertex):
+/// (requester's cached vertex version, edge id + cached edge version when
+/// this owner is the edge's canonical home).
+type ReqMeta = HashMap<(TxnId, VertexId), (u64, Option<(EdgeId, u64)>)>;
+
 /// One in-flight transaction (a scope acquisition chain).
 struct Txn {
     seq: u64,
@@ -202,10 +208,7 @@ where
                 }
 
                 let mut locks = LockTable::new();
-                // Metadata for queued remote requests, keyed by (txn,
-                // vertex): (requester's cached vver, edge id + cached ever).
-                let mut req_meta: HashMap<(TxnId, VertexId), (u64, Option<(EdgeId, u64)>)> =
-                    HashMap::new();
+                let mut req_meta: ReqMeta = HashMap::new();
                 let mut pipeline: HashMap<u64, Txn> = HashMap::new();
                 let mut ready: Vec<Txn> = Vec::new();
                 let mut next_seq: u64 = 0;
@@ -833,7 +836,7 @@ fn send_grant<V: DataValue, E: DataValue>(
 #[allow(clippy::too_many_arguments)]
 fn handle_promotion<V: DataValue, E: DataValue>(
     p: LockReq,
-    req_meta: &mut HashMap<(TxnId, VertexId), (u64, Option<(EdgeId, u64)>)>,
+    req_meta: &mut ReqMeta,
     pipeline: &mut HashMap<u64, Txn>,
     locks: &mut LockTable,
     ep: &crate::distributed::Endpoint<Msg<V, E>>,
@@ -861,7 +864,7 @@ fn pump_txn<V: DataValue, E: DataValue>(
     pipeline: &mut HashMap<u64, Txn>,
     seq: u64,
     locks: &mut LockTable,
-    req_meta: &mut HashMap<(TxnId, VertexId), (u64, Option<(EdgeId, u64)>)>,
+    req_meta: &mut ReqMeta,
     ep: &crate::distributed::Endpoint<Msg<V, E>>,
     lg: &LocalGraph<V, E>,
     partition: &Partition,
@@ -929,9 +932,9 @@ fn execute_batch<V, E, P>(
     partition: &Partition,
     me: MachineId,
     locks: &mut LockTable,
-    req_meta: &mut HashMap<(TxnId, VertexId), (u64, Option<(EdgeId, u64)>)>,
+    req_meta: &mut ReqMeta,
     ep: &crate::distributed::Endpoint<Msg<V, E>>,
-    sched: &mut Box<dyn scheduler::Scheduler>,
+    sched: &mut dyn scheduler::Scheduler,
     pipeline: &mut HashMap<u64, Txn>,
     ready: &mut Vec<Txn>,
     term: &mut Termination,

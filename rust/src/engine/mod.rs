@@ -9,7 +9,7 @@
 //!   with access rights determined by the [`Consistency`] model.
 //! * [`SyncOp`] — the **sync operation** `(Key, Fold, Merge, Finalize,
 //!   acc(0), tau)` maintaining global aggregates readable from updates.
-//! * Engines: [`shared::SharedEngine`] (the multicore runtime of the UAI'10
+//! * Engines: [`shared::run`] (the multicore runtime of the UAI'10
 //!   paper that Distributed GraphLab builds on), [`chromatic`] and
 //!   [`locking`] (the two distributed engines of Sec. 4.2).
 
@@ -78,7 +78,8 @@ pub struct Scope<V, E> {
 }
 
 impl<V, E> Scope<V, E> {
-    /// Empty reusable scope buffer (engines call [`Scope::reset`] per task).
+    /// Empty reusable scope buffer (engines call the crate-internal
+    /// `Scope::reset` per task).
     pub fn new_buffer(consistency: Consistency) -> Self {
         Scope {
             vertex: 0,

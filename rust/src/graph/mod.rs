@@ -104,7 +104,7 @@ impl<V, E> GraphBuilder<V, E> {
         for i in 0..n {
             adj_offsets[i + 1] = adj_offsets[i] + degrees[i];
         }
-        let mut adj = vec![(0 as VertexId, 0 as EdgeId); 2 * m];
+        let mut adj: Vec<(VertexId, EdgeId)> = vec![(0, 0); 2 * m];
         let mut cursor: Vec<u32> = adj_offsets[..n].to_vec();
         let mut endpoints = Vec::with_capacity(m);
         let mut edge_data = Vec::with_capacity(m);

@@ -69,6 +69,12 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
     let threads = cfg.num_or("threads", 2usize);
     let sweeps = cfg.num_or("sweeps", 20u64);
     let use_pjrt = cfg.bool_or("pjrt", false);
+    if use_pjrt && !graphlab::runtime::available() {
+        bail!(
+            "--pjrt requested but the PJRT runtime is unavailable \
+             (build with `--features pjrt` and run `make artifacts`)"
+        );
+    }
     let seed = cfg.num_or("seed", 1u64);
     println!("== graphlab run {app} (engine={engine}, machines={machines}) ==");
 

@@ -7,18 +7,22 @@
 //! `XlaComputation::from_proto` → `client.compile`) and executes them from
 //! the engines' hot paths. Python is never invoked.
 //!
-//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so each
-//! engine thread lazily creates its own client and executable cache via a
-//! thread-local ([`exec`] hides this). Compilation is per-thread but
-//! happens once per (thread, artifact) and is excluded from benchmark
-//! timings by a warmup call.
+//! The execution backend is selected by the `pjrt` cargo feature:
+//!
+//! * `--features pjrt` — the real backend (the `pjrt` submodule) backed by
+//!   the native `xla` crate;
+//! * default — a pure-Rust stub with no native prerequisites:
+//!   [`available`] returns `false` and [`exec`] returns a clean error, so
+//!   engines and apps always take their native math paths.
+//!
+//! Manifest parsing ([`Manifest`]) and the [`Input`] tensor type are
+//! backend-independent and always compiled.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::OnceLock;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 /// Metadata of one artifact from `manifest.txt`.
 #[derive(Debug, Clone)]
@@ -142,11 +146,24 @@ pub fn set_artifacts_dir(dir: impl Into<PathBuf>) {
 }
 
 fn artifacts_dir() -> PathBuf {
-    ARTIFACTS_DIR
-        .get()
-        .cloned()
-        .or_else(|| std::env::var("GRAPHLAB_ARTIFACTS").ok().map(PathBuf::from))
-        .unwrap_or_else(|| PathBuf::from("artifacts"))
+    if let Some(d) = ARTIFACTS_DIR.get() {
+        return d.clone();
+    }
+    if let Ok(d) = std::env::var("GRAPHLAB_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let local = PathBuf::from("artifacts");
+    if local.exists() {
+        return local;
+    }
+    // Cargo runs test/bench binaries with cwd = the package dir (rust/),
+    // while `make artifacts` writes to the repository root next to the
+    // workspace manifest — fall back to that location.
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts");
+    if repo_root.exists() {
+        return repo_root;
+    }
+    local
 }
 
 /// The global manifest (None if artifacts are not built). Engines fall
@@ -157,18 +174,11 @@ pub fn manifest() -> Option<&'static Manifest> {
         .as_ref()
 }
 
-/// Whether compiled artifacts are available.
+/// Whether compiled artifacts can actually be executed: true only when the
+/// crate was built with the `pjrt` feature *and* `make artifacts` has been
+/// run. Callers use this to pick between the PJRT and native math paths.
 pub fn available() -> bool {
-    manifest().is_some()
-}
-
-thread_local! {
-    static TLS: RefCell<Option<ThreadRuntime>> = const { RefCell::new(None) };
-}
-
-struct ThreadRuntime {
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    cfg!(feature = "pjrt") && manifest().is_some()
 }
 
 /// An input tensor for [`exec`]: row-major f32 data + dims.
@@ -191,56 +201,24 @@ impl<'a> Input<'a> {
     }
 }
 
-/// Execute artifact `name` on this thread's PJRT client. Inputs are f32
-/// tensors; outputs are the flattened f32 elements of each tuple member.
-pub fn exec(name: &str, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
-    TLS.with(|tls| {
-        let mut slot = tls.borrow_mut();
-        if slot.is_none() {
-            *slot = Some(ThreadRuntime {
-                client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
-                exes: HashMap::new(),
-            });
-        }
-        let rt = slot.as_mut().unwrap();
-        if !rt.exes.contains_key(name) {
-            let path = artifacts_dir().join(format!("{name}.hlo.txt"));
-            if !path.exists() {
-                bail!("artifact {} not found (run `make artifacts`)", path.display());
-            }
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = rt
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            rt.exes.insert(name.to_string(), exe);
-        }
-        let exe = &rt.exes[name];
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|inp| -> Result<xla::Literal> {
-                let lit = xla::Literal::vec1(inp.data);
-                lit.reshape(inp.dims).map_err(|e| anyhow!("reshape: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let members = result
-            .to_tuple()
-            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
-        members
-            .into_iter()
-            .map(|m| m.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect()
-    })
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::exec;
+
+/// Execute artifact `name` on this thread's PJRT client (stub backend).
+///
+/// The crate was built without the `pjrt` feature, so there is no PJRT
+/// client to execute on: this always returns an error. Engines never reach
+/// it unless an app was explicitly configured with `use_pjrt: true` while
+/// [`available`] is false.
+#[cfg(not(feature = "pjrt"))]
+pub fn exec(name: &str, _inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+    anyhow::bail!(
+        "artifact {name} requested but the PJRT runtime is not compiled in \
+         (rebuild with `cargo build --features pjrt` and run `make artifacts`)"
+    )
 }
 
 #[cfg(test)]
@@ -249,6 +227,45 @@ mod tests {
 
     fn have_artifacts() -> bool {
         available()
+    }
+
+    #[test]
+    fn stub_backend_is_inert_without_pjrt_feature() {
+        if cfg!(feature = "pjrt") {
+            return;
+        }
+        assert!(!available(), "stub backend must report unavailable");
+        let data = [0.0f32; 4];
+        let err = exec("pagerank_b256_n32", &[Input::new(&data, &[2, 2])])
+            .expect_err("stub exec must error");
+        assert!(err.to_string().contains("pjrt"), "actionable error: {err}");
+    }
+
+    #[test]
+    fn manifest_parses_without_artifacts_built() {
+        // Backend-independent: parse a manifest written to a temp dir.
+        let dir = std::env::temp_dir().join(format!(
+            "graphlab-manifest-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "pagerank_b256_n32 kind=pagerank b=256 n=32 in=256x32;256x32;256 out=256\n\
+             als_solve_b64_d5 kind=als_solve b=64 d=5 in=64x5x5;64x5;1 out=64x5\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        assert!(!m.is_empty());
+        assert_eq!(m.dir(), dir.as_path());
+        let pr = m.get("pagerank_b256_n32").unwrap();
+        assert_eq!(pr.kind, "pagerank");
+        assert_eq!(pr.dim("b"), 256);
+        assert_eq!(pr.in_shapes, vec![vec![256, 32], vec![256, 32], vec![256]]);
+        assert_eq!(pr.out_shapes, vec![vec![256]]);
+        assert_eq!(m.by_kind("als_solve").len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,75 @@
+//! The real PJRT execution backend (compiled only with `--features pjrt`).
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so each
+//! engine thread lazily creates its own client and executable cache via a
+//! thread-local ([`exec`] hides this). Compilation is per-thread but
+//! happens once per (thread, artifact) and is excluded from benchmark
+//! timings by a warmup call.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{artifacts_dir, Input};
+
+thread_local! {
+    static TLS: RefCell<Option<ThreadRuntime>> = const { RefCell::new(None) };
+}
+
+struct ThreadRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Execute artifact `name` on this thread's PJRT client. Inputs are f32
+/// tensors; outputs are the flattened f32 elements of each tuple member.
+pub fn exec(name: &str, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+    TLS.with(|tls| {
+        let mut slot = tls.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(ThreadRuntime {
+                client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+                exes: HashMap::new(),
+            });
+        }
+        let rt = slot.as_mut().unwrap();
+        if !rt.exes.contains_key(name) {
+            let path = artifacts_dir().join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                bail!("artifact {} not found (run `make artifacts`)", path.display());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = rt
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            rt.exes.insert(name.to_string(), exe);
+        }
+        let exe = &rt.exes[name];
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                let lit = xla::Literal::vec1(inp.data);
+                lit.reshape(inp.dims).map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let members = result
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        members
+            .into_iter()
+            .map(|m| m.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    })
+}

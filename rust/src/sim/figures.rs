@@ -121,7 +121,7 @@ fn fig1(out: &Path) -> Result<()> {
             inner: als::Als { d: 5, lambda: 0.05, use_pjrt: false },
             consistency,
         };
-        let series: Arc<Mutex<Vec<(u64, u64, f64)>>> = Arc::new(Mutex::new(Vec::new()));
+        let series = Arc::new(Mutex::new(Vec::<(u64, u64, f64)>::new()));
         let series2 = series.clone();
         let (_g, _stats) = locking::run(
             g,

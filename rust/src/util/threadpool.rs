@@ -5,7 +5,7 @@
 //! * [`ThreadPool::scope_execute`] — run a closure on every worker
 //!   simultaneously (the engines' "spawn N workers over shared state"
 //!   pattern, mirroring the paper's pthread worker loops);
-//! * [`parallel_for_chunks`] — a static block-cyclic parallel for used by
+//! * [`ThreadPool::parallel_for`] — a chunked dynamic parallel for used by
 //!   data generators and the chromatic engine's per-color vertex sweeps.
 //!
 //! Scoped execution is built on `std::thread::scope`, so borrows of stack
