@@ -11,7 +11,7 @@ use graphlab::engine::chromatic::{self, ChromaticOpts};
 use graphlab::engine::locking::{self, LockingOpts};
 use graphlab::engine::shared::{self, SharedOpts};
 use graphlab::partition::{Coloring, Partition};
-use graphlab::scheduler::{FifoScheduler, PriorityScheduler, Scheduler, Task};
+use graphlab::scheduler::{FifoScheduler, Policy, PriorityScheduler, SchedSpec, Scheduler, Task, WorkStealing};
 
 fn bench_schedulers() {
     let n = 100_000;
@@ -29,6 +29,78 @@ fn bench_schedulers() {
         }
         while s.pop().is_some() {}
     });
+}
+
+fn bench_work_stealing() {
+    // Contended push/pop: 4 threads, disjoint vertex ranges, local pushes
+    // + drain with steals — the shared engine's hot path shape.
+    let n = 100_000;
+    let workers = 4usize;
+    bench_throughput("scheduler/work-stealing 4t push+pop", 0.4, n, || {
+        let ws = WorkStealing::new(Policy::Fifo, n, workers, 1);
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let ws = &ws;
+                s.spawn(move || {
+                    let mut rng = graphlab::util::Rng::new(w as u64);
+                    let per = (n / workers) as u32;
+                    let lo = w as u32 * per;
+                    for v in lo..lo + per {
+                        ws.push(w, Task { vertex: v, priority: 0.0 });
+                    }
+                    loop {
+                        match ws.pop(w, &mut rng) {
+                            Some(_) => ws.task_done(),
+                            None => {
+                                if ws.outstanding() == 0 {
+                                    break;
+                                }
+                                std::hint::spin_loop();
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    });
+    // The single-mutex baseline under identical contention, for the gap.
+    bench_throughput("scheduler/global-mutex 4t push+pop", 0.4, n, || {
+        let sched = std::sync::Mutex::new(FifoScheduler::new(n));
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let sched = &sched;
+                s.spawn(move || {
+                    let per = (n / workers) as u32;
+                    let lo = w as u32 * per;
+                    for v in lo..lo + per {
+                        sched.lock().unwrap().push(Task { vertex: v, priority: 0.0 });
+                    }
+                    while sched.lock().unwrap().pop().is_some() {}
+                });
+            }
+        });
+    });
+}
+
+fn bench_shared_engine_thread_sweep() {
+    // The BENCH_pr2 shape, abbreviated: PageRank with eps=0 (always
+    // reschedules) capped at 2 sweeps' worth of updates, old vs new
+    // scheduler at 4 threads. The full 1/2/4/8 sweep with JSON output is
+    // `graphlab bench-sched`.
+    let n = 20_000;
+    let edges = graphlab::datagen::web_graph(n, 8, 1);
+    let prog = pagerank::PageRank { alpha: 0.15, eps: 0.0, n, use_pjrt: false };
+    for spec in [SchedSpec::global(Policy::Fifo, 1), SchedSpec::ws(Policy::Fifo, 1)] {
+        let name = format!("pagerank/shared 4w 2-sweeps {}", spec.name());
+        bench_throughput(&name, 1.0, 2 * n, || {
+            let g = pagerank::build(n, &edges, 0.15);
+            let (_g, stats) = shared::run(
+                g, &prog, apps::all_vertices(n), vec![], spec,
+                SharedOpts { workers: 4, max_updates: 2 * n as u64, ..Default::default() },
+            );
+            assert!(stats.updates >= n as u64);
+        });
+    }
 }
 
 fn bench_lock_table() {
@@ -52,7 +124,7 @@ fn bench_pagerank_engines() {
         let g = pagerank::build(n, &edges, 0.15);
         let (_g, stats) = shared::run(
             g, &prog, apps::all_vertices(n), vec![],
-            Box::new(FifoScheduler::new(n)),
+            SchedSpec::ws(Policy::Fifo, 1),
             SharedOpts { workers: 4, ..Default::default() },
         );
         assert_eq!(stats.updates, n as u64);
@@ -75,7 +147,7 @@ fn bench_pagerank_engines() {
         let (_g, _stats) = locking::run(
             g, &partition, &prog, apps::all_vertices(n), vec![],
             LockingOpts {
-                machines: 4, maxpending: 256, scheduler: "fifo".into(),
+                machines: 4, maxpending: 256, scheduler: Policy::Fifo,
                 max_updates_per_machine: n as u64 / 4 + 1000,
                 ..Default::default()
             },
@@ -122,6 +194,8 @@ fn bench_als_paths() {
 fn main() {
     println!("== engine micro-benchmarks ==");
     bench_schedulers();
+    bench_work_stealing();
+    bench_shared_engine_thread_sweep();
     bench_lock_table();
     bench_pagerank_engines();
     bench_als_paths();

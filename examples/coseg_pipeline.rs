@@ -13,8 +13,8 @@ use graphlab::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let frames = args.num_or("frames", 16usize);
-    let machines = args.num_or("machines", 4usize);
+    let frames = args.num_or("frames", 16usize)?;
+    let machines = args.num_or("machines", 4usize)?;
     let use_pjrt = graphlab::runtime::available() && !args.flag("no-pjrt");
 
     let data = graphlab::datagen::video(frames, 24, 20, 5, 0.45, 7);
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         LockingOpts {
             machines,
             maxpending: 100,
-            scheduler: "priority".into(),
+            scheduler: graphlab::scheduler::Policy::Priority,
             sync_period: Some(std::time::Duration::from_millis(100)),
             max_updates_per_machine: (n as u64 * 50) / machines as u64,
             on_sync: Some(Box::new(|e, u, gv| {

@@ -12,8 +12,8 @@ use graphlab::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let nps = args.num_or("nps", 8000usize);
-    let machines = args.num_or("machines", 4usize);
+    let nps = args.num_or("nps", 8000usize)?;
+    let machines = args.num_or("machines", 4usize)?;
     let use_pjrt = graphlab::runtime::available() && !args.flag("no-pjrt");
 
     let data = graphlab::datagen::ner(nps, nps / 2, 30, 8, 0.1, 5);

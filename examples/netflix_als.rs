@@ -16,11 +16,11 @@ use graphlab::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let users = args.num_or("users", 1000usize);
-    let movies = args.num_or("movies", 500usize);
-    let d = args.num_or("d", 10usize);
-    let sweeps = args.num_or("sweeps", 10u64);
-    let machines = args.num_or("machines", 4usize);
+    let users = args.num_or("users", 1000usize)?;
+    let movies = args.num_or("movies", 500usize)?;
+    let d = args.num_or("d", 10usize)?;
+    let sweeps = args.num_or("sweeps", 10u64)?;
+    let machines = args.num_or("machines", 4usize)?;
     let use_pjrt = graphlab::runtime::available() && !args.flag("no-pjrt");
 
     println!("== netflix ALS end-to-end: {users} users x {movies} movies, d={d}, {machines} machines ==");

@@ -13,7 +13,7 @@ use graphlab::engine::chromatic::{self, ChromaticOpts};
 use graphlab::engine::locking::{self, LockingOpts};
 use graphlab::engine::shared::{self, SharedOpts};
 use graphlab::partition::Partition;
-use graphlab::scheduler::FifoScheduler;
+use graphlab::scheduler::{Policy, SchedSpec};
 
 fn main() -> anyhow::Result<()> {
     let n = 5_000;
@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
         &prog,
         apps::all_vertices(n),
         vec![Box::new(pagerank::total_rank_sync())],
-        Box::new(FifoScheduler::new(n)),
+        SchedSpec::ws(Policy::Fifo, 1),
         SharedOpts { workers: 4, max_updates: 2_000_000, ..Default::default() },
     );
     println!("shared   : {:>8} updates in {:.2}s", stats.updates, stats.seconds);
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
         apps::all_vertices(n),
         vec![Box::new(pagerank::total_rank_sync())],
         LockingOpts {
-            machines: 4, maxpending: 256, scheduler: "fifo".into(),
+            machines: 4, maxpending: 256, scheduler: Policy::Fifo,
             max_updates_per_machine: 500_000, ..Default::default()
         },
     );

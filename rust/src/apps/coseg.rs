@@ -372,7 +372,7 @@ mod tests {
             LockingOpts {
                 machines: 2,
                 maxpending: 32,
-                scheduler: "priority".into(),
+                scheduler: crate::scheduler::Policy::Priority,
                 sync_period: Some(std::time::Duration::from_millis(40)),
                 max_updates_per_machine: 40_000,
                 ..Default::default()

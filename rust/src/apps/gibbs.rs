@@ -107,7 +107,7 @@ pub fn magnetization_sync() -> FnSync<GibbsVertex> {
 mod tests {
     use super::*;
     use crate::engine::shared::{self, SharedOpts};
-    use crate::scheduler::SweepScheduler;
+    use crate::scheduler::{Policy, SchedSpec};
 
     #[test]
     fn marginals_track_planted_field() {
@@ -124,7 +124,7 @@ mod tests {
             &prog,
             crate::apps::all_vertices(n),
             vec![Box::new(magnetization_sync())],
-            Box::new(SweepScheduler::new(n)),
+            SchedSpec::ws(Policy::Sweep, 1),
             SharedOpts {
                 workers: 4,
                 ..Default::default()
@@ -159,7 +159,7 @@ mod tests {
                 &prog,
                 crate::apps::all_vertices(n),
                 vec![],
-                Box::new(SweepScheduler::new(n)),
+                SchedSpec::ws(Policy::Sweep, 1),
                 SharedOpts {
                     workers: 1,
                     ..Default::default()

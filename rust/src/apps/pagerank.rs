@@ -201,7 +201,7 @@ pub fn total_rank_sync() -> crate::engine::sync::FnSync<PrVertex> {
 mod tests {
     use super::*;
     use crate::engine::shared::{self, SharedOpts};
-    use crate::scheduler::FifoScheduler;
+    use crate::scheduler::{Policy, SchedSpec};
 
     fn tiny() -> Graph<PrVertex, PrEdge> {
         // 0 -- 1 -- 2 triangle-ish chain with a hub.
@@ -224,7 +224,7 @@ mod tests {
             &prog,
             crate::apps::all_vertices(n),
             vec![Box::new(total_rank_sync())],
-            Box::new(FifoScheduler::new(n)),
+            SchedSpec::ws(Policy::Fifo, 1),
             SharedOpts {
                 workers: 2,
                 max_updates: 200_000,

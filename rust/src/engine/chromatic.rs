@@ -189,6 +189,9 @@ where
                 let mut eversion = std::mem::take(&mut lg.eversion);
                 let lg = lg;
                 let globals = GlobalValues::new();
+                // One persistent pool per machine for the whole run: the
+                // per-color `parallel_for` below reuses parked workers
+                // instead of spawning threads every color of every sweep.
                 let pool = ThreadPool::new(threads_per_machine.max(1));
 
                 // Owned vertices grouped by color, in global-id order

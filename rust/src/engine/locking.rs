@@ -38,7 +38,7 @@ use crate::distributed::termination::{Termination, Token, TokenAction};
 use crate::distributed::{DataValue, LocalGraph};
 use crate::graph::{EdgeId, Graph, VertexId};
 use crate::partition::{MachineId, Partition};
-use crate::scheduler::{self, Task};
+use crate::scheduler::{self, Policy, Task};
 
 /// Options for a locking-engine run.
 pub struct LockingOpts {
@@ -47,8 +47,9 @@ pub struct LockingOpts {
     /// Maximum transactions in flight per machine (lock pipelining depth;
     /// 0 means 1 — a fully serial pipeline, the paper's baseline).
     pub maxpending: usize,
-    /// Scheduler policy: `fifo`, `priority`, `multiqueue`, `sweep`.
-    pub scheduler: String,
+    /// Scheduler policy (parsed at the CLI boundary via
+    /// [`Policy::parse`], so unknown names fail with an error up front).
+    pub scheduler: Policy,
     /// Network model (latency injection for Fig. 8(b)).
     pub network: NetworkModel,
     /// Period of leader-initiated global sync barriers (None = only at
@@ -70,7 +71,7 @@ impl Default for LockingOpts {
         LockingOpts {
             machines: 2,
             maxpending: 64,
-            scheduler: "fifo".to_string(),
+            scheduler: Policy::Fifo,
             network: NetworkModel::default(),
             sync_period: None,
             max_updates_per_machine: u64::MAX,
@@ -177,7 +178,7 @@ where
     let syncs = &syncs;
     let on_sync = &opts.on_sync;
     let maxpending = opts.maxpending.max(1);
-    let sched_name = opts.scheduler.clone();
+    let sched_policy = opts.scheduler;
     let sync_period = opts.sync_period;
     let cap = opts.max_updates_per_machine;
     let seed = opts.seed;
@@ -195,12 +196,11 @@ where
             let outputs = &outputs;
             let total_updates = &total_updates;
             let epochs = &epochs;
-            let sched_name = sched_name.clone();
             s.spawn(move || {
                 let me = ep.me();
                 let owned = lg.owned;
                 let globals = GlobalValues::new();
-                let mut sched = scheduler::by_name(&sched_name, n_global, seed ^ me as u64);
+                let mut sched = sched_policy.build(n_global, seed ^ me as u64);
                 for t in initial.iter() {
                     if partition.owner(t.vertex) == me {
                         sched.push(*t);

@@ -41,15 +41,23 @@ pub enum Consistency {
 }
 
 impl Consistency {
-    /// Parse from CLI/config string.
-    pub fn parse(s: &str) -> Self {
-        match s {
+    /// Parse from a CLI/config string; unknown input is an error, not a
+    /// panic (CLI misuse surfaces as a clean `bail!` at the boundary).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
             "vertex" => Consistency::Vertex,
             "edge" => Consistency::Edge,
             "full" => Consistency::Full,
             "unsafe" | "none" => Consistency::Unsafe,
-            other => panic!("unknown consistency '{other}' (vertex|edge|full|unsafe)"),
-        }
+            other => anyhow::bail!("unknown consistency '{other}' (vertex|edge|full|unsafe)"),
+        })
+    }
+}
+
+impl std::str::FromStr for Consistency {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Consistency::parse(s)
     }
 }
 
@@ -346,6 +354,14 @@ mod tests {
         *s.nbr_mut(0) = 42;
         assert!(s.nbr_dirty(0));
         assert_eq!(nbr, 42);
+    }
+
+    #[test]
+    fn consistency_parse_is_fallible_not_panicking() {
+        assert_eq!(Consistency::parse("edge").unwrap(), Consistency::Edge);
+        assert_eq!(Consistency::parse("none").unwrap(), Consistency::Unsafe);
+        assert!(Consistency::parse("sorta-safe").is_err());
+        assert!("full".parse::<Consistency>().is_ok());
     }
 
     #[test]

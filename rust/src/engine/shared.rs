@@ -1,22 +1,31 @@
 //! The shared-memory GraphLab engine (paper Sec. 4.2.2, first half).
 //!
 //! This is the multicore runtime of the original UAI'10 GraphLab that the
-//! distributed engines build on: worker threads pull tasks from a shared
-//! scheduler, acquire the per-vertex reader–writer locks demanded by the
-//! consistency model (always in ascending vertex order — deadlock-free),
-//! evaluate the update function, release, repeat. Sync operations are
-//! triggered by a global update counter and run under a stop-the-world
-//! barrier, exactly as described in the paper.
+//! distributed engines build on: worker threads pull tasks from per-worker
+//! schedulers (stealing from victims when their own queue runs dry — see
+//! [`crate::scheduler::WorkStealing`]), acquire the per-vertex
+//! reader–writer locks demanded by the consistency model (always in
+//! ascending vertex order — deadlock-free), evaluate the update function,
+//! release, repeat. Sync operations are triggered by a global update
+//! counter and run under a stop-the-world barrier, exactly as described in
+//! the paper.
+//!
+//! The queue organization is selected by [`SchedSpec`]: the default is
+//! work stealing; `SchedSpec::global` keeps the original single
+//! mutex-guarded queue as an A/B baseline (`--scheduler global-fifo` on
+//! the CLI, swept by `graphlab bench-sched`).
 //!
 //! The engine is also the *sequential oracle* for the distributed engines'
-//! equivalence tests (`workers = 1` gives a fully deterministic run).
+//! equivalence tests (`workers = 1` gives a fully deterministic run: one
+//! local queue, no stealing, no randomness).
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
 use super::{Consistency, Ctx, GlobalValues, Scope, SyncOp, VertexProgram};
 use crate::graph::{Graph, VertexId};
-use crate::scheduler::{Scheduler, Task};
+use crate::scheduler::{SchedSpec, Scheduler, Task, WorkStealing};
+use crate::util::Rng;
 
 /// Options for a shared-memory run.
 pub struct SharedOpts {
@@ -205,18 +214,127 @@ impl SyncGate {
 }
 
 // ---------------------------------------------------------------------------
+// Task queue facade: work-stealing (default) or single global queue
+// ---------------------------------------------------------------------------
+
+/// The engine's view of its task queues; both variants share the
+/// outstanding-work termination contract (`pop` → execute → `publish` →
+/// `done`, with `drained()` true only once no task is queued or in
+/// flight).
+enum TaskQueue {
+    /// One mutex-guarded queue shared by every worker (the contended
+    /// baseline). `in_flight` is incremented under the queue mutex.
+    Global {
+        sched: Mutex<Box<dyn Scheduler>>,
+        in_flight: AtomicUsize,
+    },
+    /// Per-worker queues + stealing; `WorkStealing` tracks queued and
+    /// in-flight work in one counter.
+    Stealing(WorkStealing),
+}
+
+impl TaskQueue {
+    fn new(spec: SchedSpec, num_vertices: usize, workers: usize, initial: Vec<Task>) -> Self {
+        if spec.work_stealing {
+            let ws = WorkStealing::new(spec.policy, num_vertices, workers, spec.seed);
+            // Deal initial tasks round-robin so every worker starts with
+            // local work (with one worker this preserves exact order).
+            for (i, t) in initial.into_iter().enumerate() {
+                ws.push(i % workers, t);
+            }
+            TaskQueue::Stealing(ws)
+        } else {
+            let mut sched = spec.policy.build(num_vertices, spec.seed);
+            for t in initial {
+                sched.push(t);
+            }
+            TaskQueue::Global {
+                sched: Mutex::new(sched),
+                in_flight: AtomicUsize::new(0),
+            }
+        }
+    }
+
+    fn pop(&self, worker: usize, rng: &mut Rng) -> Option<Task> {
+        match self {
+            TaskQueue::Global { sched, in_flight } => {
+                let mut s = sched.lock().unwrap();
+                let t = s.pop();
+                if t.is_some() {
+                    // Inside the lock: an observer that pops None afterwards
+                    // is guaranteed to see this increment.
+                    in_flight.fetch_add(1, Ordering::SeqCst);
+                }
+                t
+            }
+            TaskQueue::Stealing(ws) => ws.pop(worker, rng),
+        }
+    }
+
+    /// Publish follow-up tasks scheduled by an update (before `done`).
+    fn publish(&self, worker: usize, tasks: &mut Vec<Task>) {
+        if tasks.is_empty() {
+            return;
+        }
+        match self {
+            TaskQueue::Global { sched, .. } => {
+                let mut s = sched.lock().unwrap();
+                for t in tasks.drain(..) {
+                    s.push(t);
+                }
+            }
+            TaskQueue::Stealing(ws) => {
+                for t in tasks.drain(..) {
+                    ws.push(worker, t);
+                }
+            }
+        }
+    }
+
+    /// Retire a popped task (update executed — or abandoned at the cap).
+    fn done(&self) {
+        match self {
+            TaskQueue::Global { in_flight, .. } => {
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+            }
+            TaskQueue::Stealing(ws) => ws.task_done(),
+        }
+    }
+
+    /// True once no task is queued or in flight. Only meaningful right
+    /// after a failed `pop` (both variants then guarantee no work can
+    /// reappear without a new push, and no pusher survives quiescence).
+    fn drained(&self) -> bool {
+        match self {
+            TaskQueue::Global { in_flight, .. } => in_flight.load(Ordering::SeqCst) == 0,
+            TaskQueue::Stealing(ws) => ws.outstanding() == 0,
+        }
+    }
+
+    /// Wait a beat before re-polling: yield (global) or park on the idle
+    /// condvar (stealing).
+    fn idle_wait(&self) {
+        match self {
+            TaskQueue::Global { .. } => std::thread::yield_now(),
+            TaskQueue::Stealing(ws) => ws.park(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Engine
 // ---------------------------------------------------------------------------
 
 /// Run `program` over `graph` starting from `initial` tasks, with sync
 /// operations `syncs`, using the shared-memory engine. Returns the
 /// transformed graph and run statistics (paper Alg. 2 semantics).
+/// `spec` selects the scheduling policy and queue organization.
 pub fn run<V, E, P>(
     graph: Graph<V, E>,
     program: &P,
     initial: Vec<Task>,
     syncs: Vec<Box<dyn SyncOp<V>>>,
-    mut scheduler: Box<dyn Scheduler>,
+    spec: SchedSpec,
     opts: SharedOpts,
 ) -> (Graph<V, E>, RunStats)
 where
@@ -233,11 +351,8 @@ where
     let globals = GlobalValues::new();
     let consistency = program.consistency();
 
-    for t in initial {
-        scheduler.push(t);
-    }
-    let scheduler = Mutex::new(scheduler);
-    let in_flight = AtomicUsize::new(0);
+    let workers = opts.workers.max(1);
+    let queue = TaskQueue::new(spec, n, workers, initial);
     let updates = AtomicU64::new(0);
     let syncs_run = AtomicU64::new(0);
     let gate = SyncGate::new();
@@ -272,11 +387,13 @@ where
         }
     };
 
-    let workers = opts.workers.max(1);
-    crate::util::ThreadPool::new(workers).scope_execute(|_w| {
+    crate::util::ThreadPool::new(workers).scope_execute(|w| {
         let mut scope: Scope<V, E> = Scope::new_buffer(consistency);
         let mut plan: Vec<(VertexId, bool)> = Vec::new();
         let mut ctx = Ctx::new(&globals);
+        // Per-worker stream for steal-victim selection (never consulted
+        // with a single worker — the deterministic-oracle contract).
+        let mut rng = Rng::new(0x5EED ^ w as u64);
         loop {
             gate.checkpoint();
             if stop.load(Ordering::Relaxed) {
@@ -296,24 +413,17 @@ where
                     continue;
                 }
             }
-            // Pull a task.
-            let task = {
-                let mut s = scheduler.lock().unwrap();
-                let t = s.pop();
-                if t.is_some() {
-                    in_flight.fetch_add(1, Ordering::SeqCst);
-                }
-                t
-            };
-            let Some(task) = task else {
-                if in_flight.load(Ordering::SeqCst) == 0 {
+            // Pull a task: local queue first, then steal (or the global
+            // queue in baseline mode).
+            let Some(task) = queue.pop(w, &mut rng) else {
+                if queue.drained() {
                     break;
                 }
-                std::thread::yield_now();
+                queue.idle_wait();
                 continue;
             };
             if updates.load(Ordering::Relaxed) >= opts.max_updates {
-                in_flight.fetch_sub(1, Ordering::SeqCst);
+                queue.done();
                 stop.store(true, Ordering::Relaxed);
                 break;
             }
@@ -361,14 +471,10 @@ where
                 }
             }
             updates.fetch_add(1, Ordering::Relaxed);
-            // Publish newly scheduled tasks, then retire.
-            if !ctx.scheduled.is_empty() {
-                let mut s = scheduler.lock().unwrap();
-                for t in ctx.scheduled.drain(..) {
-                    s.push(t);
-                }
-            }
-            in_flight.fetch_sub(1, Ordering::SeqCst);
+            // Publish newly scheduled tasks, then retire (publishing first
+            // keeps the outstanding-work count from reaching zero early).
+            queue.publish(w, &mut ctx.scheduled);
+            queue.done();
         }
         // Count this worker as permanently parked for pending barriers.
         gate.retire();
@@ -390,7 +496,7 @@ where
 mod tests {
     use super::*;
     use crate::graph::GraphBuilder;
-    use crate::scheduler::FifoScheduler;
+    use crate::scheduler::Policy;
 
     /// Each vertex stores a counter; the update increments the center and
     /// schedules neighbors until a hop budget (stored per vertex) runs out.
@@ -432,7 +538,7 @@ mod tests {
             &Propagate,
             initial,
             vec![],
-            Box::new(FifoScheduler::new(64)),
+            SchedSpec::ws(Policy::Fifo, 1),
             SharedOpts {
                 workers: 4,
                 ..Default::default()
@@ -466,7 +572,7 @@ mod tests {
                 &Inc,
                 initial,
                 vec![],
-                Box::new(FifoScheduler::new(128)),
+                SchedSpec::ws(Policy::Fifo, 1),
                 SharedOpts {
                     workers,
                     ..Default::default()
@@ -496,7 +602,7 @@ mod tests {
             &Forever,
             initial,
             vec![],
-            Box::new(FifoScheduler::new(8)),
+            SchedSpec::ws(Policy::Fifo, 1),
             SharedOpts {
                 workers: 2,
                 max_updates: 100,
@@ -536,7 +642,7 @@ mod tests {
             &Inc,
             initial,
             vec![Box::new(sync)],
-            Box::new(FifoScheduler::new(256)),
+            SchedSpec::ws(Policy::Fifo, 1),
             SharedOpts {
                 workers: 4,
                 max_updates: u64::MAX,
@@ -549,5 +655,66 @@ mod tests {
         // At least the terminal sync plus some interval syncs.
         assert!(stats.syncs >= 2, "syncs={}", stats.syncs);
         assert!(fired.load(Ordering::Relaxed) == stats.syncs);
+    }
+
+    #[test]
+    fn every_queue_mode_and_policy_runs_to_quiescence() {
+        struct Inc;
+        impl VertexProgram<(u64, u32), ()> for Inc {
+            fn update(&self, scope: &mut Scope<(u64, u32), ()>, _ctx: &mut Ctx) {
+                scope.center_mut().0 += 1;
+            }
+        }
+        for policy in crate::scheduler::POLICIES {
+            for spec in [SchedSpec::ws(policy, 3), SchedSpec::global(policy, 3)] {
+                let g = ring(96);
+                let initial: Vec<Task> = (0..96)
+                    .map(|v| Task { vertex: v, priority: v as f64 })
+                    .collect();
+                let (g, stats) = run(
+                    g,
+                    &Inc,
+                    initial,
+                    vec![],
+                    spec,
+                    SharedOpts {
+                        workers: 4,
+                        ..Default::default()
+                    },
+                );
+                assert_eq!(stats.updates, 96, "{}", spec.name());
+                assert!(
+                    g.vertex_ids().all(|v| g.vertex_data(v).0 == 1),
+                    "{}",
+                    spec.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_propagation_quiesces_under_stealing() {
+        // Dynamic rescheduling (the Propagate app) exercises the
+        // outstanding-work termination check: the run may only end once no
+        // task is queued or in flight anywhere.
+        for workers in [1, 2, 8] {
+            let g = ring(64);
+            let initial = vec![Task { vertex: 0, priority: 0.0 }];
+            let (g, stats) = run(
+                g,
+                &Propagate,
+                initial,
+                vec![],
+                SchedSpec::ws(Policy::Fifo, 7),
+                SharedOpts {
+                    workers,
+                    ..Default::default()
+                },
+            );
+            // Hop budget 2 from vertex 0 reaches at least 0,1,2 (dedup can
+            // merge re-schedules, so only lower-bound the count).
+            assert!(stats.updates >= 3, "workers={workers}: {}", stats.updates);
+            assert!(g.vertex_data(0).0 >= 1);
+        }
     }
 }

@@ -5,7 +5,11 @@
 //! * `run <app>` — run one application end-to-end on synthetic data:
 //!   `pagerank | als | ner | coseg | gibbs`, with
 //!   `--engine shared|chromatic|locking`, `--machines N`, `--threads N`,
-//!   `--pjrt`, app-specific size flags, and `--config FILE` overlays.
+//!   `--scheduler POLICY`, `--pjrt`, app-specific size flags, and
+//!   `--config FILE` overlays. `POLICY` is `fifo|priority|multiqueue|sweep`
+//!   (work-stealing per-worker queues on the shared engine; per-machine
+//!   queues on the locking engine) or `global-<policy>` (single shared
+//!   queue — the contended baseline, shared engine only).
 //! * `figure <name>` — regenerate a paper table/figure (`table2`, `fig1`,
 //!   `fig5a`, `fig6a`..`fig8d`, or `all`) into `--out-dir` (default
 //!   `results/`).
@@ -13,25 +17,31 @@
 //!   machine assignment quality report.
 //! * `calibrate` — print the measured per-update costs feeding the
 //!   cluster model.
+//! * `bench-sched` — shared-engine PageRank updates/sec at 1/2/4/8
+//!   threads, work-stealing vs single-queue, written as JSON (the
+//!   `BENCH_pr2.json` perf-trajectory artifact; also run by CI's
+//!   bench-smoke job).
 //!
 //! Examples:
 //!
 //! ```text
 //! graphlab run als --machines 4 --d 20 --sweeps 20 --pjrt
+//! graphlab run pagerank --engine shared --threads 8 --scheduler multiqueue
 //! graphlab figure fig6d --out-dir results/
 //! graphlab run coseg --engine locking --machines 4 --maxpending 100
+//! graphlab bench-sched --out BENCH_pr2.json
 //! ```
 
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
 
 use graphlab::apps::{self, als, coseg, gibbs, ner, pagerank};
 use graphlab::engine::chromatic::{self, ChromaticOpts};
 use graphlab::engine::locking::{self, LockingOpts};
 use graphlab::engine::shared::{self, SharedOpts};
 use graphlab::partition::Partition;
-use graphlab::scheduler;
+use graphlab::scheduler::{Policy, SchedSpec};
 use graphlab::util::cli::Args;
 use graphlab::util::config::Config;
 
@@ -51,12 +61,15 @@ fn main() -> Result<()> {
         }
         Some("partition") => partition_demo(&cfg),
         Some("calibrate") => calibrate(&cfg),
+        Some("bench-sched") => bench_sched(&cfg),
         _ => {
-            eprintln!("usage: graphlab <run|figure|partition|calibrate> [...]\n");
+            eprintln!("usage: graphlab <run|figure|partition|calibrate|bench-sched> [...]\n");
             eprintln!("  graphlab run <pagerank|als|ner|coseg|gibbs> [--engine chromatic|locking|shared]");
-            eprintln!("      [--machines N] [--threads N] [--pjrt] [--sweeps N] [--d N] [--config FILE]");
+            eprintln!("      [--machines N] [--threads N] [--scheduler fifo|priority|multiqueue|sweep|global-*]");
+            eprintln!("      [--pjrt] [--sweeps N] [--d N] [--config FILE]");
             eprintln!("  graphlab figure <table2|fig1|fig5a|fig6a|fig6c|fig6d|fig7a|fig8a|fig8b|fig8c|fig8d|all>");
             eprintln!("      [--out-dir DIR]");
+            eprintln!("  graphlab bench-sched [--out FILE] [--n N] [--sweeps N] [--quick]");
             bail!("missing subcommand");
         }
     }
@@ -65,9 +78,9 @@ fn main() -> Result<()> {
 fn run_app(args: &Args, cfg: &Config) -> Result<()> {
     let app = args.pos(1).unwrap_or("pagerank");
     let engine = cfg.str_or("engine", "chromatic");
-    let machines = cfg.num_or("machines", 2usize);
-    let threads = cfg.num_or("threads", 2usize);
-    let sweeps = cfg.num_or("sweeps", 20u64);
+    let machines = cfg.num_or("machines", 2usize)?;
+    let threads = cfg.num_or("threads", 2usize)?;
+    let sweeps = cfg.num_or("sweeps", 20u64)?;
     let use_pjrt = cfg.bool_or("pjrt", false);
     if use_pjrt && !graphlab::runtime::available() {
         bail!(
@@ -75,23 +88,23 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
              (build with `--features pjrt` and run `make artifacts`)"
         );
     }
-    let seed = cfg.num_or("seed", 1u64);
+    let seed = cfg.num_or("seed", 1u64)?;
     println!("== graphlab run {app} (engine={engine}, machines={machines}) ==");
 
     match app {
         "pagerank" => {
-            let n = cfg.num_or("n", 10_000usize);
-            let edges = graphlab::datagen::web_graph(n, cfg.num_or("avg-degree", 8), seed);
+            let n = cfg.num_or("n", 10_000usize)?;
+            let edges = graphlab::datagen::web_graph(n, cfg.num_or("avg-degree", 8)?, seed);
             let g = pagerank::build(n, &edges, 0.15);
             let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-6, n, use_pjrt };
             run_generic(g, prog, engine.as_str(), machines, threads, sweeps, cfg,
                 vec![Box::new(pagerank::total_rank_sync())], "total_rank")
         }
         "als" => {
-            let d = cfg.num_or("d", 20usize);
+            let d = cfg.num_or("d", 20usize)?;
             let data = graphlab::datagen::netflix(
-                cfg.num_or("users", 2000), cfg.num_or("movies", 1000),
-                cfg.num_or("ratings-per-user", 30), 8, 0.2, seed);
+                cfg.num_or("users", 2000)?, cfg.num_or("movies", 1000)?,
+                cfg.num_or("ratings-per-user", 30)?, 8, 0.2, seed);
             let g = als::build(&data, d, seed);
             println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
             let prog = als::Als { d, lambda: 0.08, use_pjrt };
@@ -100,8 +113,8 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
         }
         "ner" => {
             let data = graphlab::datagen::ner(
-                cfg.num_or("nps", 5000), cfg.num_or("contexts", 2500),
-                cfg.num_or("edges-per-np", 30), 8, 0.1, seed);
+                cfg.num_or("nps", 5000)?, cfg.num_or("contexts", 2500)?,
+                cfg.num_or("edges-per-np", 30)?, 8, 0.1, seed);
             let g = ner::build(&data);
             println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
             let prog = ner::Coem { k: 8, smoothing: 0.01, eps: 1e-4, use_pjrt };
@@ -110,8 +123,8 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
         }
         "coseg" => {
             let data = graphlab::datagen::video(
-                cfg.num_or("frames", 16), cfg.num_or("width", 24),
-                cfg.num_or("height", 20), 5, 0.4, seed);
+                cfg.num_or("frames", 16)?, cfg.num_or("width", 24)?,
+                cfg.num_or("height", 20)?, 5, 0.4, seed);
             let g = coseg::build(&data, 0.8);
             println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
             let prog = coseg::Coseg { labels: 5, eps: 1e-3, sigma2: 0.5, use_pjrt };
@@ -119,7 +132,7 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
                 vec![Box::new(coseg::gmm_sync(5)), Box::new(coseg::accuracy_sync())], "accuracy")
         }
         "gibbs" => {
-            let data = graphlab::datagen::mrf(cfg.num_or("side", 64), 0.4, seed);
+            let data = graphlab::datagen::mrf(cfg.num_or("side", 64)?, 0.4, seed);
             let g = gibbs::build(&data);
             let _n = g.num_vertices();
             let prog = gibbs::Gibbs { coupling: 0.4, target_samples: sweeps.max(10), seed };
@@ -150,6 +163,7 @@ where
 {
     let n = g.num_vertices();
     let initial = apps::all_vertices(n);
+    let seed = cfg.num_or("seed", 1u64)?;
     match engine {
         "chromatic" => {
             let coloring = chromatic::color_for(&g, prog.consistency());
@@ -175,14 +189,16 @@ where
         }
         "locking" => {
             let partition = Partition::blocked(n, machines);
-            let cap = cfg.num_or("max-updates", n as u64 * sweeps.min(1000)) / machines as u64;
+            let cap = cfg.num_or("max-updates", n as u64 * sweeps.min(1000))? / machines as u64;
+            let policy = Policy::parse(&cfg.str_or("scheduler", "priority"))
+                .context("--scheduler (locking engine)")?;
             let (_g, stats) = locking::run(
                 g, &partition, &prog, initial, syncs,
                 LockingOpts {
                     machines,
-                    maxpending: cfg.num_or("maxpending", 64usize),
-                    scheduler: cfg.str_or("scheduler", "priority"),
-                    sync_period: Some(Duration::from_millis(cfg.num_or("sync-ms", 100u64))),
+                    maxpending: cfg.num_or("maxpending", 64usize)?,
+                    scheduler: policy,
+                    sync_period: Some(Duration::from_millis(cfg.num_or("sync-ms", 100u64)?)),
                     max_updates_per_machine: cap,
                     on_sync: Some(Box::new(move |e, u, gv| {
                         if let Some(v) = gv.get(probe_key) {
@@ -197,11 +213,15 @@ where
                 stats.bytes_sent.iter().sum::<u64>() / 1_000_000);
         }
         "shared" => {
-            let sched = scheduler::by_name(&cfg.str_or("scheduler", "fifo"), n, 1);
+            let spec = SchedSpec::parse(&cfg.str_or("scheduler", "fifo"), seed)
+                .context("--scheduler (shared engine)")?;
             let (_g, stats) = shared::run(
-                g, &prog, initial, syncs, sched,
+                g, &prog, initial, syncs, spec,
                 SharedOpts {
-                    workers: threads.max(machines),
+                    // Respect --threads exactly: --threads 1 must give the
+                    // deterministic single-worker run (it used to be
+                    // silently raised to the machine count).
+                    workers: threads,
                     max_updates: n as u64 * sweeps.min(10_000),
                     on_sync: Some(Box::new(move |u, gv| {
                         if let Some(v) = gv.get(probe_key) {
@@ -210,7 +230,8 @@ where
                     })),
                 },
             );
-            println!("done: {} updates, {:.2}s", stats.updates, stats.seconds);
+            println!("done: {} updates, {:.2}s ({} scheduler)",
+                stats.updates, stats.seconds, spec.name());
         }
         other => bail!("unknown engine '{other}'"),
     }
@@ -219,10 +240,10 @@ where
 
 fn partition_demo(cfg: &Config) -> Result<()> {
     use graphlab::partition::atoms;
-    let n = cfg.num_or("n", 20_000usize);
+    let n = cfg.num_or("n", 20_000usize)?;
     let edges = graphlab::datagen::web_graph(n, 8, 1);
     let g = pagerank::build(n, &edges, 0.15);
-    let k = cfg.num_or("atoms", 128usize);
+    let k = cfg.num_or("atoms", 128usize)?;
     println!("two-phase partitioning: {} vertices, {} edges, {k} atoms", n, g.num_edges());
     let a = atoms::AtomSet::grow_bfs(&g, k, 2);
     let meta = atoms::MetaGraph::build(&g, &a);
@@ -248,5 +269,95 @@ fn calibrate(_cfg: &Config) -> Result<()> {
     }
     println!("  coem k=8 deg=100: {:.2} µs", cal::coem_update_cost(8, 100) * 1e6);
     println!("  lbp  l=5 deg=6:   {:.2} µs", cal::lbp_update_cost(5) * 1e6);
+    Ok(())
+}
+
+/// Shared-engine PageRank scheduler sweep: updates/sec at 1/2/4/8 threads,
+/// single global queue (`global-fifo`) vs work stealing (`fifo` and
+/// `multiqueue`), written as JSON for the perf trajectory
+/// (`BENCH_pr2.json`). `--quick` shrinks the graph/workload for CI smoke.
+fn bench_sched(cfg: &Config) -> Result<()> {
+    let quick = cfg.bool_or("quick", false);
+    let n = cfg.num_or("n", if quick { 5_000 } else { 20_000usize })?;
+    let sweeps = cfg.num_or("sweeps", if quick { 4 } else { 12u64 })?;
+    let out_path = cfg.str_or("out", "BENCH_pr2.json");
+    let thread_counts = [1usize, 2, 4, 8];
+    let specs = [
+        SchedSpec::global(Policy::Fifo, 1),
+        SchedSpec::ws(Policy::Fifo, 1),
+        SchedSpec::ws(Policy::MultiQueue, 1),
+    ];
+
+    let edges = graphlab::datagen::web_graph(n, 8, 1);
+    println!("== bench-sched: shared-engine PageRank, n={n}, {} edges, {sweeps} sweeps ==", edges.len());
+
+    // eps = 0 keeps every update rescheduling its neighbors, so the run is
+    // scheduler-bound until the max_updates cap — exactly the contention
+    // path this PR changes.
+    let prog = pagerank::PageRank { alpha: 0.15, eps: 0.0, n, use_pjrt: false };
+    struct Row {
+        scheduler: String,
+        threads: usize,
+        updates: u64,
+        seconds: f64,
+        ups: f64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    for spec in specs {
+        for &threads in &thread_counts {
+            let g = pagerank::build(n, &edges, 0.15);
+            let (_g, stats) = shared::run(
+                g, &prog, apps::all_vertices(n), vec![], spec,
+                SharedOpts {
+                    workers: threads,
+                    max_updates: n as u64 * sweeps,
+                    ..Default::default()
+                },
+            );
+            let ups = stats.updates as f64 / stats.seconds.max(1e-9);
+            println!(
+                "  {:<16} threads={threads}: {:>9} updates in {:.3}s = {:>12.0} updates/s",
+                spec.name(), stats.updates, stats.seconds, ups
+            );
+            rows.push(Row {
+                scheduler: spec.name(),
+                threads,
+                updates: stats.updates,
+                seconds: stats.seconds,
+                ups,
+            });
+        }
+    }
+
+    let ups_at = |sched: &str, threads: usize| -> f64 {
+        rows.iter()
+            .find(|r| r.scheduler == sched && r.threads == threads)
+            .map(|r| r.ups)
+            .unwrap_or(0.0)
+    };
+    let improved = ups_at("fifo", 4) > ups_at("global-fifo", 4);
+    println!(
+        "work-stealing vs single-queue at 4 threads: {}",
+        if improved { "IMPROVED" } else { "NOT improved" }
+    );
+
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"scheduler\": \"{}\", \"threads\": {}, \"updates\": {}, \"seconds\": {:.6}, \"updates_per_sec\": {:.1}}}",
+                r.scheduler, r.threads, r.updates, r.seconds, r.ups
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"shared-engine PageRank scheduler sweep (PR 2)\",\n  \
+         \"command\": \"graphlab bench-sched\",\n  \"n\": {n},\n  \"avg_degree\": 8,\n  \
+         \"sweeps\": {sweeps},\n  \"quick\": {quick},\n  \
+         \"ws_beats_global_at_4_threads\": {improved},\n  \"results\": [\n{}\n  ]\n}}\n",
+        body.join(",\n")
+    );
+    std::fs::write(&out_path, json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
     Ok(())
 }

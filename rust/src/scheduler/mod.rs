@@ -15,6 +15,17 @@
 //! All schedulers deduplicate: scheduling an already-queued vertex merges
 //! the task, keeping the maximum priority (GraphLab task-set semantics:
 //! `T <- T u T'`).
+//!
+//! The types above are single-consumer queues (`&mut self`); the
+//! shared-memory engine's multi-worker execution path wraps them in
+//! [`work_stealing::WorkStealing`] — one local queue per worker plus
+//! stealing — so the hot pop path never serializes on one shared lock.
+
+pub mod work_stealing;
+
+pub use work_stealing::WorkStealing;
+
+use anyhow::bail;
 
 use crate::graph::VertexId;
 use crate::util::Rng;
@@ -44,14 +55,122 @@ pub trait Scheduler: Send {
     }
 }
 
-/// Build a scheduler by name (CLI/config selection).
-pub fn by_name(name: &str, num_vertices: usize, seed: u64) -> Box<dyn Scheduler> {
-    match name {
-        "fifo" => Box::new(FifoScheduler::new(num_vertices)),
-        "priority" => Box::new(PriorityScheduler::new(num_vertices)),
-        "multiqueue" => Box::new(MultiQueueScheduler::new(num_vertices, 4, seed)),
-        "sweep" => Box::new(SweepScheduler::new(num_vertices)),
-        other => panic!("unknown scheduler '{other}' (fifo|priority|multiqueue|sweep)"),
+/// `RemoveNext(T)` policy names (CLI/config selection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Approximate first-in-first-out.
+    Fifo,
+    /// Exact max-priority.
+    Priority,
+    /// Approximate priority via multiple internal heaps.
+    MultiQueue,
+    /// Fixed canonical (ascending vertex id) order.
+    Sweep,
+}
+
+/// Every policy, in CLI listing order.
+pub const POLICIES: [Policy; 4] = [
+    Policy::Fifo,
+    Policy::Priority,
+    Policy::MultiQueue,
+    Policy::Sweep,
+];
+
+impl Policy {
+    /// Parse a policy name; unknown names are an error, not a panic.
+    pub fn parse(s: &str) -> anyhow::Result<Policy> {
+        Ok(match s {
+            "fifo" => Policy::Fifo,
+            "priority" => Policy::Priority,
+            "multiqueue" => Policy::MultiQueue,
+            "sweep" => Policy::Sweep,
+            other => bail!("unknown scheduler '{other}' (fifo|priority|multiqueue|sweep)"),
+        })
+    }
+
+    /// The CLI name of this policy.
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::Priority => "priority",
+            Policy::MultiQueue => "multiqueue",
+            Policy::Sweep => "sweep",
+        }
+    }
+
+    /// Build a single-consumer scheduler implementing this policy.
+    pub fn build(self, num_vertices: usize, seed: u64) -> Box<dyn Scheduler> {
+        match self {
+            Policy::Fifo => Box::new(FifoScheduler::new(num_vertices)),
+            Policy::Priority => Box::new(PriorityScheduler::new(num_vertices)),
+            Policy::MultiQueue => Box::new(MultiQueueScheduler::new(num_vertices, 4, seed)),
+            Policy::Sweep => Box::new(SweepScheduler::new(num_vertices)),
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Build a scheduler by name. Returns an error (not a panic) on unknown
+/// names so CLI/config misuse surfaces as a clean `bail!`.
+pub fn by_name(name: &str, num_vertices: usize, seed: u64) -> anyhow::Result<Box<dyn Scheduler>> {
+    Ok(Policy::parse(name)?.build(num_vertices, seed))
+}
+
+/// How the shared-memory engine should organize task queues.
+///
+/// * `work_stealing = true` (the default): one local queue per worker with
+///   stealing — the paper's low-contention multiqueue direction.
+/// * `work_stealing = false`: the single mutex-guarded global queue (the
+///   pre-work-stealing baseline, kept for A/B benchmarking as
+///   `global-<policy>` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedSpec {
+    /// Pop policy of each queue.
+    pub policy: Policy,
+    /// Per-worker queues + stealing vs one shared queue.
+    pub work_stealing: bool,
+    /// Seed for randomized policies (multiqueue) and victim selection.
+    pub seed: u64,
+}
+
+impl SchedSpec {
+    /// Work-stealing spec (the default execution mode).
+    pub fn ws(policy: Policy, seed: u64) -> Self {
+        SchedSpec { policy, work_stealing: true, seed }
+    }
+
+    /// Single-global-queue spec (the contended baseline).
+    pub fn global(policy: Policy, seed: u64) -> Self {
+        SchedSpec { policy, work_stealing: false, seed }
+    }
+
+    /// Parse `fifo|priority|multiqueue|sweep` (work-stealing) or
+    /// `global-fifo|...` (single shared queue).
+    pub fn parse(s: &str, seed: u64) -> anyhow::Result<Self> {
+        match s.strip_prefix("global-") {
+            Some(rest) => Ok(SchedSpec::global(Policy::parse(rest)?, seed)),
+            None => Ok(SchedSpec::ws(Policy::parse(s)?, seed)),
+        }
+    }
+
+    /// The CLI name (`fifo`, `global-fifo`, ...).
+    pub fn name(&self) -> String {
+        if self.work_stealing {
+            self.policy.name().to_string()
+        } else {
+            format!("global-{}", self.policy.name())
+        }
+    }
+}
+
+impl Default for SchedSpec {
+    fn default() -> Self {
+        SchedSpec::ws(Policy::Fifo, 0)
     }
 }
 
@@ -413,9 +532,26 @@ mod tests {
     #[test]
     fn by_name_builds_all() {
         for name in ["fifo", "priority", "multiqueue", "sweep"] {
-            let mut s = by_name(name, 10, 1);
+            let mut s = by_name(name, 10, 1).unwrap();
             s.push(t(5, 1.0));
             assert_eq!(s.pop().unwrap().vertex, 5);
         }
+    }
+
+    #[test]
+    fn by_name_rejects_unknown_without_panicking() {
+        assert!(by_name("lifo", 10, 1).is_err());
+        assert!(Policy::parse("").is_err());
+    }
+
+    #[test]
+    fn sched_spec_parses_both_modes() {
+        let ws = SchedSpec::parse("multiqueue", 7).unwrap();
+        assert_eq!(ws, SchedSpec::ws(Policy::MultiQueue, 7));
+        assert_eq!(ws.name(), "multiqueue");
+        let gl = SchedSpec::parse("global-priority", 7).unwrap();
+        assert_eq!(gl, SchedSpec::global(Policy::Priority, 7));
+        assert_eq!(gl.name(), "global-priority");
+        assert!(SchedSpec::parse("global-lifo", 0).is_err());
     }
 }

@@ -1,0 +1,260 @@
+//! Per-worker task queues with work stealing (the shared-memory engine's
+//! multi-worker execution structure).
+//!
+//! The original shared engine funneled every `push`/`pop` through one
+//! mutex-guarded scheduler, so the hot path serialized exactly where the
+//! paper parallelizes (Sec. 4.2.2: workers pull update tasks with minimal
+//! contention). [`WorkStealing`] gives each worker its own local queue —
+//! any [`super::Policy`] (FIFO deque, exact-priority heap, multiqueue,
+//! sweep) — and a worker whose queue runs dry steals from a random victim.
+//! Local pushes and pops touch only the worker's own lock, which is
+//! contended only while a steal is in progress.
+//!
+//! **Global dedup.** GraphLab task-set semantics (`T ∪ T'`) must hold
+//! across queues, not just within one: a `home` array records which queue
+//! (if any) currently holds each vertex. A push for a vertex homed in
+//! queue `q` merges into `q` under `q`'s lock (keeping the max priority,
+//! like the single-queue schedulers); a push for an un-homed vertex claims
+//! it for the pusher's own queue. Claim (CAS) and un-claim (store in
+//! `pop`) both happen while holding the owning queue's lock, so the
+//! home array and queue contents can never disagree — the property tests
+//! in `rust/tests/scheduler_props.rs` hammer this.
+//!
+//! **Termination.** `outstanding` counts queued *plus in-flight* tasks:
+//! incremented when a push inserts a new task, decremented by
+//! [`WorkStealing::task_done`] only after the update has executed *and*
+//! published its follow-up tasks. It therefore never reads 0 while work
+//! can still appear, giving the engine a race-free global termination
+//! check (replacing the old pop-then-spin heuristic). Idle workers park in
+//! [`WorkStealing::park`] on a condvar (with a timeout backstop) instead
+//! of spinning; pushes and the final `task_done` wake them.
+//!
+//! With `workers == 1` no stealing or randomness occurs and the structure
+//! degenerates to exactly the underlying policy's single-queue semantics —
+//! preserving the sequential oracle used by the equivalence tests.
+
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::{Policy, Scheduler, Task};
+use crate::util::Rng;
+
+/// Sentinel: vertex is in no queue.
+const NONE: u32 = u32::MAX;
+
+/// Per-worker queues + stealing over a fixed vertex universe.
+pub struct WorkStealing {
+    queues: Vec<Mutex<Box<dyn Scheduler>>>,
+    /// `home[v]`: index of the queue currently holding `v`, or `NONE`.
+    home: Vec<AtomicU32>,
+    /// Queued + in-flight tasks (see module docs).
+    outstanding: AtomicUsize,
+    /// Idle-worker parking lot.
+    idle: Mutex<()>,
+    idle_cv: Condvar,
+}
+
+impl WorkStealing {
+    /// One `policy` queue per worker over `num_vertices` vertices.
+    /// Randomized policies derive per-queue seeds from `seed`.
+    pub fn new(policy: Policy, num_vertices: usize, workers: usize, seed: u64) -> Self {
+        let workers = workers.max(1);
+        assert!(workers < NONE as usize, "worker count overflows home array");
+        WorkStealing {
+            queues: (0..workers)
+                .map(|w| {
+                    Mutex::new(policy.build(
+                        num_vertices,
+                        seed ^ (w as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                    ))
+                })
+                .collect(),
+            home: (0..num_vertices).map(|_| AtomicU32::new(NONE)).collect(),
+            outstanding: AtomicUsize::new(0),
+            idle: Mutex::new(()),
+            idle_cv: Condvar::new(),
+        }
+    }
+
+    /// Number of worker queues.
+    pub fn workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Queued + in-flight task count (0 ⇔ the run has quiesced, provided
+    /// every popped task is matched by a [`WorkStealing::task_done`]).
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::SeqCst)
+    }
+
+    /// Add (or merge) a task from `worker`. New tasks go to `worker`'s own
+    /// queue; tasks already queued elsewhere merge in place (max priority,
+    /// exactly the single-queue dedup semantics).
+    pub fn push(&self, worker: usize, task: Task) {
+        let v = task.vertex as usize;
+        loop {
+            let h = self.home[v].load(Ordering::Acquire);
+            if h == NONE {
+                let mut q = self.queues[worker].lock().unwrap();
+                // Claim under our own queue's lock: a pop of this vertex is
+                // impossible (it is in no queue), and a racing claimer
+                // makes our CAS fail, sending us around to merge.
+                if self.home[v]
+                    .compare_exchange(NONE, worker as u32, Ordering::AcqRel, Ordering::Acquire)
+                    .is_err()
+                {
+                    continue;
+                }
+                q.push(task);
+                // Increment before releasing the lock: a thief cannot pop
+                // this task (and `task_done` it) until the lock drops, so
+                // `outstanding` can never transiently undercount.
+                self.outstanding.fetch_add(1, Ordering::SeqCst);
+                drop(q);
+                self.idle_cv.notify_one();
+                return;
+            }
+            // Merge into the homing queue. Its pop clears `home[v]` while
+            // holding the same lock, so the recheck below is race-free.
+            let mut q = self.queues[h as usize].lock().unwrap();
+            if self.home[v].load(Ordering::Acquire) != h {
+                continue; // popped (or re-homed) meanwhile — retry
+            }
+            q.push(task);
+            return;
+        }
+    }
+
+    fn try_pop_from(&self, qi: usize) -> Option<Task> {
+        let mut q = self.queues[qi].lock().unwrap();
+        let t = q.pop()?;
+        self.home[t.vertex as usize].store(NONE, Ordering::Release);
+        Some(t)
+    }
+
+    /// Remove the next task for `worker`: its own queue first, then steal
+    /// from victims in random rotation. `None` means every queue was empty
+    /// at the moment it was inspected — check [`WorkStealing::outstanding`]
+    /// before concluding the run is over.
+    pub fn pop(&self, worker: usize, rng: &mut Rng) -> Option<Task> {
+        if let Some(t) = self.try_pop_from(worker) {
+            return Some(t);
+        }
+        let k = self.queues.len();
+        if k == 1 {
+            return None;
+        }
+        let start = rng.gen_range(k);
+        for i in 0..k {
+            let victim = (start + i) % k;
+            if victim == worker {
+                continue;
+            }
+            if let Some(t) = self.try_pop_from(victim) {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Report a popped task finished (its update executed — or was
+    /// abandoned — and its follow-up pushes are published). Decrementing
+    /// only here keeps `outstanding` from reading 0 while an in-flight
+    /// update could still schedule work.
+    pub fn task_done(&self) {
+        if self.outstanding.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Reached zero: wake every parked worker so they observe
+            // termination.
+            self.idle_cv.notify_all();
+        }
+    }
+
+    /// Park briefly while there is outstanding work this worker cannot
+    /// reach (all of it in flight on other workers). Returns immediately
+    /// once the pool has drained. The timeout bounds any missed-wakeup
+    /// window.
+    pub fn park(&self) {
+        let guard = self.idle.lock().unwrap();
+        if self.outstanding.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let (_guard, _timed_out) = self
+            .idle_cv
+            .wait_timeout(guard, Duration::from_micros(100))
+            .unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: u32, p: f64) -> Task {
+        Task { vertex: v, priority: p }
+    }
+
+    #[test]
+    fn single_worker_matches_plain_fifo_semantics() {
+        let ws = WorkStealing::new(Policy::Fifo, 16, 1, 0);
+        let mut rng = Rng::new(1);
+        for v in [3u32, 1, 3, 7] {
+            ws.push(0, t(v, 0.0));
+        }
+        assert_eq!(ws.outstanding(), 3);
+        let order: Vec<u32> = std::iter::from_fn(|| ws.pop(0, &mut rng))
+            .map(|x| x.vertex)
+            .collect();
+        assert_eq!(order, vec![3, 1, 7]);
+        for _ in 0..3 {
+            ws.task_done();
+        }
+        assert_eq!(ws.outstanding(), 0);
+    }
+
+    #[test]
+    fn stealing_finds_remote_tasks() {
+        let ws = WorkStealing::new(Policy::Fifo, 64, 4, 9);
+        let mut rng = Rng::new(2);
+        for v in 0..32u32 {
+            ws.push((v % 4) as usize, t(v, 0.0));
+        }
+        // Worker 2 alone can drain everything via steals.
+        let mut got: Vec<u32> = std::iter::from_fn(|| ws.pop(2, &mut rng))
+            .map(|x| x.vertex)
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn merge_keeps_max_priority_across_workers() {
+        let ws = WorkStealing::new(Policy::Priority, 8, 2, 0);
+        let mut rng = Rng::new(3);
+        ws.push(0, t(5, 1.0));
+        ws.push(1, t(5, 9.0)); // merges into worker 0's queue
+        ws.push(1, t(5, 0.5)); // ignored (lower)
+        assert_eq!(ws.outstanding(), 1);
+        let task = ws.pop(1, &mut rng).unwrap();
+        assert_eq!(task.vertex, 5);
+        assert_eq!(task.priority, 9.0);
+        assert!(ws.pop(0, &mut rng).is_none());
+    }
+
+    #[test]
+    fn outstanding_counts_in_flight_tasks() {
+        let ws = WorkStealing::new(Policy::Fifo, 8, 2, 0);
+        let mut rng = Rng::new(4);
+        ws.push(0, t(1, 0.0));
+        let task = ws.pop(0, &mut rng).unwrap();
+        assert_eq!(task.vertex, 1);
+        // Popped but not done: still outstanding (in flight).
+        assert_eq!(ws.outstanding(), 1);
+        ws.push(0, t(2, 0.0)); // follow-up published before done
+        ws.task_done();
+        assert_eq!(ws.outstanding(), 1);
+        assert_eq!(ws.pop(1, &mut rng).unwrap().vertex, 2);
+        ws.task_done();
+        assert_eq!(ws.outstanding(), 0);
+    }
+}

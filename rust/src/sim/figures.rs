@@ -132,7 +132,7 @@ fn fig1(out: &Path) -> Result<()> {
             LockingOpts {
                 machines,
                 maxpending: 32,
-                scheduler: "fifo".into(),
+                scheduler: crate::scheduler::Policy::Fifo,
                 sync_period: Some(Duration::from_millis(25)),
                 max_updates_per_machine: (n as u64 * 25) / machines as u64,
                 on_sync: Some(Box::new(move |e, u, g| {
@@ -346,7 +346,7 @@ fn fig8b(out: &Path) -> Result<()> {
                 LockingOpts {
                     machines: 4,
                     maxpending,
-                    scheduler: "priority".into(),
+                    scheduler: crate::scheduler::Policy::Priority,
                     network: NetworkModel { latency: Duration::from_micros(500) },
                     max_updates_per_machine: n as u64 * 4,
                     ..Default::default()

@@ -59,17 +59,18 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    /// Typed flag with default; panics with a friendly message on a value
-    /// that does not parse (CLI misuse should fail loudly).
-    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    /// Typed flag with default; a value that does not parse is an error
+    /// (CLI misuse should fail loudly — but as a clean `bail!`-style
+    /// error at the boundary, not a panic with a backtrace).
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
     where
         T::Err: std::fmt::Display,
     {
         match self.get(key) {
-            None => default,
+            None => Ok(default),
             Some(v) => v
                 .parse()
-                .unwrap_or_else(|e| panic!("--{key}={v}: {e}")),
+                .map_err(|e| anyhow::anyhow!("--{key}={v}: {e}")),
         }
     }
 
@@ -97,8 +98,8 @@ mod tests {
         let a = parse("run als --nodes 8 --d=20 --verbose");
         assert_eq!(a.pos(0), Some("run"));
         assert_eq!(a.pos(1), Some("als"));
-        assert_eq!(a.num_or("nodes", 0usize), 8);
-        assert_eq!(a.num_or("d", 0usize), 20);
+        assert_eq!(a.num_or("nodes", 0usize).unwrap(), 8);
+        assert_eq!(a.num_or("d", 0usize).unwrap(), 20);
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
     }
@@ -106,20 +107,20 @@ mod tests {
     #[test]
     fn defaults_apply() {
         let a = parse("run");
-        assert_eq!(a.num_or("nodes", 4usize), 4);
+        assert_eq!(a.num_or("nodes", 4usize).unwrap(), 4);
         assert_eq!(a.str_or("engine", "chromatic"), "chromatic");
     }
 
     #[test]
     fn negative_numbers_are_values() {
         let a = parse("x --offset -3");
-        assert_eq!(a.num_or("offset", 0i64), -3);
+        assert_eq!(a.num_or("offset", 0i64).unwrap(), -3);
     }
 
     #[test]
-    #[should_panic(expected = "--nodes=abc")]
-    fn bad_value_panics() {
+    fn bad_value_is_error_not_panic() {
         let a = parse("x --nodes abc");
-        let _: usize = a.num_or("nodes", 0);
+        let err = a.num_or("nodes", 0usize).unwrap_err();
+        assert!(err.to_string().contains("--nodes=abc"), "{err}");
     }
 }

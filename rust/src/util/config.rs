@@ -72,9 +72,19 @@ impl Config {
         self.values.get(key).map(|s| s.as_str())
     }
 
-    /// Typed lookup with default.
-    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Typed lookup with default. A present-but-malformed value is an
+    /// error (it used to fall back to the default silently, which turned
+    /// typos like `--threads=fuor` into surprise single-thread runs).
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("config value {key}={v}: {e}")),
+        }
     }
 
     /// String lookup with default.
@@ -113,10 +123,16 @@ mod tests {
              maxpending = 100\n",
         )
         .unwrap();
-        assert_eq!(cfg.num_or("cluster.machines", 0usize), 8);
+        assert_eq!(cfg.num_or("cluster.machines", 0usize).unwrap(), 8);
         assert_eq!(cfg.str_or("engine.kind", ""), "locking");
-        assert_eq!(cfg.num_or("engine.maxpending", 0u32), 100);
-        assert_eq!(cfg.num_or("missing", 7i32), 7);
+        assert_eq!(cfg.num_or("engine.maxpending", 0u32).unwrap(), 100);
+        assert_eq!(cfg.num_or("missing", 7i32).unwrap(), 7);
+    }
+
+    #[test]
+    fn malformed_value_is_error_not_silent_default() {
+        let cfg = Config::parse("threads = fuor\n").unwrap();
+        assert!(cfg.num_or("threads", 4usize).is_err());
     }
 
     #[test]
@@ -125,8 +141,8 @@ mod tests {
         let mut over = BTreeMap::new();
         over.insert("b".to_string(), "20".to_string());
         cfg.overlay(&over);
-        assert_eq!(cfg.num_or("a", 0i32), 1);
-        assert_eq!(cfg.num_or("b", 0i32), 20);
+        assert_eq!(cfg.num_or("a", 0i32).unwrap(), 1);
+        assert_eq!(cfg.num_or("b", 0i32).unwrap(), 20);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! A small scoped thread pool (no `rayon` offline).
+//! A small persistent scoped thread pool (no `rayon` offline).
 //!
 //! Provides the two primitives the engines need:
 //!
@@ -8,24 +8,140 @@
 //! * [`ThreadPool::parallel_for`] — a chunked dynamic parallel for used by
 //!   data generators and the chromatic engine's per-color vertex sweeps.
 //!
-//! Scoped execution is built on `std::thread::scope`, so borrows of stack
-//! data are allowed without `Arc` gymnastics.
+//! Workers are spawned **once** at construction and parked on a condvar
+//! between jobs, so callers that issue many small phases (the chromatic
+//! engine runs one `parallel_for` per color per sweep) pay a notify/park
+//! handshake per phase instead of an OS thread spawn + join. Borrowed
+//! (non-`'static`) closures remain allowed: `scope_execute` erases the
+//! closure's lifetime and is careful never to return — not even on panic —
+//! until every worker has finished running it, which keeps the borrow live
+//! for exactly as long as it is used.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// Thread-count container; threads are spawned per scoped call rather than
-/// persisted, which keeps lifetimes simple and is cheap at the granularity
-/// the engines use (one spawn per engine phase, not per task).
-#[derive(Clone, Copy, Debug)]
+/// A borrowed job with its lifetime erased. Soundness: [`CompletionGuard`]
+/// pins the real borrow until `remaining == 0`, i.e. until no worker can
+/// still observe the reference.
+type Job = &'static (dyn Fn(usize) + Sync);
+
+struct State {
+    /// Monotonically increasing job id; workers run one job per bump.
+    epoch: u64,
+    /// The current job (valid while `remaining > 0` or until reset).
+    job: Option<Job>,
+    /// Helper threads still executing the current job.
+    remaining: usize,
+    /// Pool is shutting down (set by `Drop`).
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// Signals helpers: new job available (or shutdown).
+    work: Condvar,
+    /// Signals the submitter: a helper finished the current job.
+    done: Condvar,
+    /// A helper panicked while running the current job.
+    panicked: AtomicBool,
+}
+
+/// Persistent worker pool: `workers - 1` helper threads are spawned at
+/// construction and parked between jobs; the submitting thread itself acts
+/// as worker 0. With `workers == 1` no threads exist and every primitive
+/// runs inline (the deterministic single-worker path).
 pub struct ThreadPool {
     workers: usize,
+    inner: Arc<Inner>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes `scope_execute` submitters (the pool runs one job at a
+    /// time; engines only submit from one thread, but `&self` submission
+    /// must stay sound under sharing).
+    submit: Mutex<()>,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("workers", &self.workers).finish()
+    }
+}
+
+/// Waits (in `drop`) until every helper has finished the current job, then
+/// clears it. Runs on both the normal path and the unwind path, so a panic
+/// in the submitter's own shard cannot free the job closure while helpers
+/// still execute it.
+struct CompletionGuard<'a> {
+    inner: &'a Inner,
+}
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.remaining > 0 {
+            st = self.inner.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+    }
+}
+
+fn helper_loop(inner: Arc<Inner>, id: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    seen_epoch = st.epoch;
+                    break st.job.expect("epoch bumped without a job");
+                }
+                st = inner.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(id)));
+        if result.is_err() {
+            inner.panicked.store(true, Ordering::Release);
+        }
+        let mut st = inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            inner.done.notify_all();
+        }
+    }
 }
 
 impl ThreadPool {
-    /// A pool with `workers` worker threads (minimum 1).
+    /// A pool with `workers` worker threads (minimum 1); `workers - 1` OS
+    /// threads are spawned here and live until the pool is dropped.
     pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let handles = (1..workers)
+            .map(|id| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("graphlab-worker-{id}"))
+                    .spawn(move || helper_loop(inner, id))
+                    .expect("spawn pool worker")
+            })
+            .collect();
         ThreadPool {
-            workers: workers.max(1),
+            workers,
+            inner,
+            handles,
+            submit: Mutex::new(()),
         }
     }
 
@@ -35,6 +151,7 @@ impl ThreadPool {
     }
 
     /// Run `f(worker_id)` on every worker concurrently and wait for all.
+    /// The submitting thread participates as worker 0.
     pub fn scope_execute<F>(&self, f: F)
     where
         F: Fn(usize) + Sync,
@@ -43,12 +160,26 @@ impl ThreadPool {
             f(0);
             return;
         }
-        std::thread::scope(|s| {
-            for w in 0..self.workers {
-                let f = &f;
-                s.spawn(move || f(w));
-            }
-        });
+        let _submit = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        self.inner.panicked.store(false, Ordering::Release);
+        {
+            let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+            // SAFETY: the erased borrow of `f` is cleared by
+            // `CompletionGuard` before this function returns (normally or
+            // by unwind), and the guard waits for every helper first.
+            let borrowed: &(dyn Fn(usize) + Sync) = &f;
+            let job: Job = unsafe { std::mem::transmute(borrowed) };
+            st.job = Some(job);
+            st.remaining = self.workers - 1;
+            st.epoch += 1;
+            self.inner.work.notify_all();
+        }
+        let guard = CompletionGuard { inner: &self.inner };
+        f(0);
+        drop(guard); // blocks until all helpers finished this job
+        if self.inner.panicked.load(Ordering::Acquire) {
+            panic!("a ThreadPool worker panicked during scope_execute");
+        }
     }
 
     /// Dynamic parallel for over `0..n` with an atomic chunk cursor:
@@ -81,7 +212,7 @@ impl ThreadPool {
     {
         let cursor = AtomicUsize::new(0);
         let chunk = chunk.max(1);
-        let accs = std::sync::Mutex::new(Vec::new());
+        let accs = Mutex::new(Vec::new());
         self.scope_execute(|_w| {
             let mut acc = init.clone();
             loop {
@@ -94,13 +225,26 @@ impl ThreadPool {
                     fold(&mut acc, i);
                 }
             }
-            accs.lock().unwrap().push(acc);
+            accs.lock().unwrap_or_else(|e| e.into_inner()).push(acc);
         });
         let mut out = init;
         for a in accs.into_inner().unwrap() {
             merge(&mut out, a);
         }
         out
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.shutdown = true;
+            self.inner.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -144,10 +288,43 @@ mod tests {
     #[test]
     fn single_worker_is_inline() {
         let mut hit = false;
-        let hit_ref = std::sync::Mutex::new(&mut hit);
+        let hit_ref = Mutex::new(&mut hit);
         ThreadPool::new(1).scope_execute(|_| {
-            **hit_ref.lock().unwrap() = true;
+            **hit_ref.lock().unwrap_or_else(|e| e.into_inner()) = true;
         });
         assert!(hit);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_phases() {
+        // The persistent pool's reason to exist: many cheap phases on the
+        // same threads. Also exercises the park/notify handshake heavily.
+        let pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        for _ in 0..200 {
+            pool.parallel_for(64, 8, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * 64);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_submitter() {
+        let pool = ThreadPool::new(4);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_execute(|w| {
+                if w == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // Pool must still be usable after a worker panic.
+        let n = AtomicU64::new(0);
+        pool.scope_execute(|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 4);
     }
 }

@@ -97,7 +97,7 @@ fn prop_scheduler_task_conservation() {
         for seed in 0..6u64 {
             let mut rng = Rng::new(seed * 31 + si as u64);
             let n = 200;
-            let mut s = by_name(name, n, seed);
+            let mut s = by_name(name, n, seed).unwrap();
             let mut expected = std::collections::HashSet::new();
             for _ in 0..500 {
                 let v = rng.gen_range(n) as VertexId;

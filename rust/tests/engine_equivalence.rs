@@ -11,7 +11,7 @@ use graphlab::engine::chromatic::{self, ChromaticOpts};
 use graphlab::engine::locking::{self, LockingOpts};
 use graphlab::engine::shared::{self, SharedOpts};
 use graphlab::partition::{Coloring, Partition};
-use graphlab::scheduler::FifoScheduler;
+use graphlab::scheduler::{Policy, SchedSpec};
 
 #[test]
 fn chromatic_machine_count_does_not_change_results() {
@@ -52,7 +52,7 @@ fn all_engines_reach_same_pagerank_fixed_point() {
     let g = pagerank::build(n, &edges, 0.15);
     let (g_shared, _) = shared::run(
         g, &prog, apps::all_vertices(n), vec![],
-        Box::new(FifoScheduler::new(n)),
+        SchedSpec::ws(Policy::Fifo, 1),
         SharedOpts { workers: 4, max_updates: 3_000_000, ..Default::default() },
     );
 
@@ -68,7 +68,7 @@ fn all_engines_reach_same_pagerank_fixed_point() {
     let (g_lock, _) = locking::run(
         g, &partition, &prog, apps::all_vertices(n), vec![],
         LockingOpts {
-            machines: 3, maxpending: 128, scheduler: "fifo".into(),
+            machines: 3, maxpending: 128, scheduler: Policy::Fifo,
             max_updates_per_machine: 2_000_000, ..Default::default()
         },
     );
@@ -78,6 +78,71 @@ fn all_engines_reach_same_pagerank_fixed_point() {
         assert!((r - g_chrom.vertex_data(v).rank).abs() < 1e-5, "chromatic v{v}");
         assert!((r - g_lock.vertex_data(v).rank).abs() < 1e-5, "locking v{v}");
     }
+}
+
+#[test]
+fn shared_engine_scheduler_variants_agree_on_pagerank_fixed_point() {
+    // The work-stealing queue organizations (per policy) and the
+    // single-global-queue baseline must all converge to the same PageRank
+    // fixed point the sequential oracle reaches — execution order may
+    // differ, the answer may not.
+    let n = 500;
+    let edges = graphlab::datagen::web_graph(n, 6, 23);
+    let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-7, n, use_pjrt: false };
+    let run = |spec: SchedSpec, workers: usize| {
+        let g = pagerank::build(n, &edges, 0.15);
+        let (g, stats) = shared::run(
+            g, &prog, apps::all_vertices(n), vec![], spec,
+            SharedOpts { workers, max_updates: 3_000_000, ..Default::default() },
+        );
+        assert!(stats.updates >= n as u64, "{}: {}", spec.name(), stats.updates);
+        g.vertex_ids().map(|v| g.vertex_data(v).rank).collect::<Vec<f32>>()
+    };
+    // Sequential oracle: one worker, plain FIFO.
+    let oracle = run(SchedSpec::ws(Policy::Fifo, 1), 1);
+    for policy in graphlab::scheduler::POLICIES {
+        for spec in [SchedSpec::ws(policy, 11), SchedSpec::global(policy, 11)] {
+            let got = run(spec, 4);
+            for (v, (a, b)) in oracle.iter().zip(&got).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "{} v{v}: oracle={a} got={b}",
+                    spec.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn single_worker_work_stealing_is_deterministic_and_matches_global() {
+    // The determinism contract: with workers = 1 the work-stealing path
+    // degenerates to the plain single-queue scheduler — no stealing, no
+    // randomness — so repeated runs are bit-identical, and for FIFO the
+    // pop order (hence the float-op order) matches the global baseline
+    // exactly.
+    let n = 300;
+    let edges = graphlab::datagen::web_graph(n, 5, 41);
+    let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-7, n, use_pjrt: false };
+    let run = |spec: SchedSpec| {
+        let g = pagerank::build(n, &edges, 0.15);
+        let (g, _) = shared::run(
+            g, &prog, apps::all_vertices(n), vec![], spec,
+            SharedOpts { workers: 1, max_updates: 2_000_000, ..Default::default() },
+        );
+        g.vertex_ids().map(|v| g.vertex_data(v).rank.to_bits()).collect::<Vec<u32>>()
+    };
+    for policy in graphlab::scheduler::POLICIES {
+        let a = run(SchedSpec::ws(policy, 5));
+        let b = run(SchedSpec::ws(policy, 5));
+        assert_eq!(a, b, "workers=1 nondeterministic under {}", policy.name());
+    }
+    // FIFO: work-stealing with one queue == the old global queue, bitwise.
+    assert_eq!(
+        run(SchedSpec::ws(Policy::Fifo, 5)),
+        run(SchedSpec::global(Policy::Fifo, 5)),
+        "single-worker ws-fifo diverged from the global-queue oracle"
+    );
 }
 
 #[test]
@@ -129,7 +194,7 @@ fn locking_engine_respects_consistency_under_contention() {
     let (g, stats) = locking::run(
         g, &partition, &prog, apps::all_vertices(n as usize), vec![],
         LockingOpts {
-            machines: 3, maxpending: 16, scheduler: "fifo".into(),
+            machines: 3, maxpending: 16, scheduler: Policy::Fifo,
             max_updates_per_machine: 100_000, ..Default::default()
         },
     );

@@ -76,7 +76,7 @@ fn lbp_pjrt_runs_in_locking_engine() {
     let (g, stats) = locking::run(
         g, &partition, &prog, apps::all_vertices(n), vec![],
         LockingOpts {
-            machines: 2, maxpending: 64, scheduler: "priority".into(),
+            machines: 2, maxpending: 64, scheduler: graphlab::scheduler::Policy::Priority,
             max_updates_per_machine: n as u64 * 10, ..Default::default()
         },
     );

@@ -1,0 +1,198 @@
+//! Property tests for the work-stealing scheduler
+//! (`scheduler::work_stealing`): task conservation under concurrent
+//! pushes/pops/steals, cross-queue dedup, approximate priority order, and
+//! outstanding-work termination accounting.
+
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+use graphlab::scheduler::{Policy, Task, WorkStealing};
+use graphlab::util::Rng;
+
+fn t(v: u32, p: f64) -> Task {
+    Task { vertex: v, priority: p }
+}
+
+/// Concurrent pushers over *disjoint* vertex ranges racing concurrent
+/// stealers: every task must be popped exactly once — none lost, none
+/// duplicated — and the outstanding counter must drain to zero.
+#[test]
+fn prop_no_task_lost_or_duplicated_under_stealing() {
+    for policy in [Policy::Fifo, Policy::Priority, Policy::MultiQueue] {
+        for seed in 0..4u64 {
+            let workers = 4usize;
+            let per_worker = 500u32;
+            let n = workers as u32 * per_worker;
+            let ws = WorkStealing::new(policy, n as usize, workers, seed);
+            let popped: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+            let total_popped = AtomicUsize::new(0);
+            let barrier = Barrier::new(workers);
+
+            std::thread::scope(|s| {
+                for w in 0..workers {
+                    let ws = &ws;
+                    let popped = &popped;
+                    let total_popped = &total_popped;
+                    let barrier = &barrier;
+                    s.spawn(move || {
+                        let mut rng = Rng::new(seed ^ ((w as u64) << 32));
+                        barrier.wait();
+                        // Interleave pushes of our own disjoint range with
+                        // pops (which may steal other ranges mid-push).
+                        let lo = w as u32 * per_worker;
+                        for v in lo..lo + per_worker {
+                            ws.push(w, t(v, rng.f64()));
+                            if v % 3 == 0 {
+                                if let Some(task) = ws.pop(w, &mut rng) {
+                                    popped[task.vertex as usize].fetch_add(1, Ordering::Relaxed);
+                                    total_popped.fetch_add(1, Ordering::Relaxed);
+                                    ws.task_done();
+                                }
+                            }
+                        }
+                        // Drain cooperatively until global quiescence.
+                        loop {
+                            match ws.pop(w, &mut rng) {
+                                Some(task) => {
+                                    popped[task.vertex as usize].fetch_add(1, Ordering::Relaxed);
+                                    total_popped.fetch_add(1, Ordering::Relaxed);
+                                    ws.task_done();
+                                }
+                                None => {
+                                    if ws.outstanding() == 0 {
+                                        break;
+                                    }
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+
+            assert_eq!(
+                total_popped.load(Ordering::Relaxed),
+                n as usize,
+                "{policy:?} seed={seed}: popped count"
+            );
+            for (v, c) in popped.iter().enumerate() {
+                assert_eq!(
+                    c.load(Ordering::Relaxed),
+                    1,
+                    "{policy:?} seed={seed}: vertex {v} popped {} times",
+                    c.load(Ordering::Relaxed)
+                );
+            }
+            assert_eq!(ws.outstanding(), 0, "{policy:?} seed={seed}");
+        }
+    }
+}
+
+/// Concurrent pushers all pushing the *same* vertex set: after the push
+/// phase completes, draining must yield each vertex exactly once (global
+/// dedup across per-worker queues, the `T ∪ T'` task-set semantics).
+#[test]
+fn prop_cross_queue_dedup_yields_each_vertex_once() {
+    for seed in 0..4u64 {
+        let workers = 4usize;
+        let n = 300u32;
+        let ws = WorkStealing::new(Policy::Priority, n as usize, workers, seed);
+        let barrier = Barrier::new(workers);
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let ws = &ws;
+                let barrier = &barrier;
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed * 17 + w as u64);
+                    barrier.wait();
+                    // Everyone pushes every vertex, shuffled order.
+                    let mut verts: Vec<u32> = (0..n).collect();
+                    rng.shuffle(&mut verts);
+                    for v in verts {
+                        ws.push(w, t(v, w as f64 + v as f64));
+                    }
+                });
+            }
+        });
+        // No pops raced the pushes, so outstanding == distinct vertices.
+        assert_eq!(ws.outstanding(), n as usize, "seed={seed}");
+        let mut rng = Rng::new(9);
+        let mut got: Vec<u32> = std::iter::from_fn(|| ws.pop(0, &mut rng))
+            .map(|task| {
+                ws.task_done();
+                task.vertex
+            })
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..n).collect::<Vec<_>>(), "seed={seed}");
+        assert_eq!(ws.outstanding(), 0);
+    }
+}
+
+/// Priority ordering is approximately respected across the pool: popping
+/// everything from one worker (own queue + steals), the top-decile
+/// priorities must surface early on average, and cross-queue merges keep
+/// the maximum priority.
+#[test]
+fn prop_priority_order_approximately_respected() {
+    let workers = 4usize;
+    let n = 1000u32;
+    let ws = WorkStealing::new(Policy::Priority, n as usize, workers, 3);
+    for v in 0..n {
+        // Scatter across queues like engine-local pushes would.
+        ws.push((v % workers as u32) as usize, t(v, v as f64));
+    }
+    let mut rng = Rng::new(5);
+    let order: Vec<f64> = std::iter::from_fn(|| ws.pop(1, &mut rng))
+        .map(|task| {
+            ws.task_done();
+            task.priority
+        })
+        .collect();
+    assert_eq!(order.len(), n as usize);
+    let top_decile_mean_rank: f64 = order
+        .iter()
+        .enumerate()
+        .filter(|(_, &p)| p >= 900.0)
+        .map(|(i, _)| i as f64)
+        .sum::<f64>()
+        / 100.0;
+    // Exact priority would give mean rank ~50; a random shuffle ~500.
+    // Per-queue exact heaps + random-victim stealing sit well under 400.
+    assert!(
+        top_decile_mean_rank < 400.0,
+        "mean rank of top decile = {top_decile_mean_rank}"
+    );
+}
+
+/// Cross-queue merge keeps the max priority even when the re-push comes
+/// from a different worker than the one homing the vertex.
+#[test]
+fn prop_merge_across_workers_keeps_max_priority() {
+    let ws = WorkStealing::new(Policy::Priority, 64, 4, 0);
+    let mut rng = Rng::new(1);
+    for v in 0..64u32 {
+        ws.push((v % 4) as usize, t(v, 1.0));
+    }
+    // Re-push everything from worker 3 with higher priority for even ids.
+    for v in 0..64u32 {
+        if v % 2 == 0 {
+            ws.push(3, t(v, 100.0 + v as f64));
+        }
+    }
+    assert_eq!(ws.outstanding(), 64);
+    let mut popped: Vec<Task> = std::iter::from_fn(|| ws.pop(2, &mut rng))
+        .map(|task| {
+            ws.task_done();
+            task
+        })
+        .collect();
+    popped.sort_unstable_by_key(|task| task.vertex);
+    for task in popped {
+        if task.vertex % 2 == 0 {
+            assert_eq!(task.priority, 100.0 + task.vertex as f64, "v{}", task.vertex);
+        } else {
+            assert_eq!(task.priority, 1.0, "v{}", task.vertex);
+        }
+    }
+}
