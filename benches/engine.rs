@@ -7,9 +7,7 @@
 use graphlab::apps::{self, als, pagerank};
 use graphlab::bench::{bench, bench_throughput};
 use graphlab::distributed::locks::{LockReq, LockTable, TxnId};
-use graphlab::engine::chromatic::{self, ChromaticOpts};
-use graphlab::engine::locking::{self, LockingOpts};
-use graphlab::engine::shared::{self, SharedOpts};
+use graphlab::engine::{Engine, EngineKind};
 use graphlab::partition::{Coloring, Partition};
 use graphlab::scheduler::{FifoScheduler, Policy, PriorityScheduler, SchedSpec, Scheduler, Task, WorkStealing};
 
@@ -94,11 +92,13 @@ fn bench_shared_engine_thread_sweep() {
         let name = format!("pagerank/shared 4w 2-sweeps {}", spec.name());
         bench_throughput(&name, 1.0, 2 * n, || {
             let g = pagerank::build(n, &edges, 0.15);
-            let (_g, stats) = shared::run(
-                g, &prog, apps::all_vertices(n), vec![], spec,
-                SharedOpts { workers: 4, max_updates: 2 * n as u64, ..Default::default() },
-            );
-            assert!(stats.updates >= n as u64);
+            let exec = Engine::new(EngineKind::Shared)
+                .workers(4)
+                .scheduler(spec)
+                .max_updates(2 * n as u64)
+                .run(g, &prog, apps::all_vertices(n))
+                .unwrap();
+            assert!(exec.stats.updates >= n as u64);
         });
     }
 }
@@ -122,12 +122,12 @@ fn bench_pagerank_engines() {
 
     bench_throughput("pagerank/shared 4w one-sweep", 1.0, n, || {
         let g = pagerank::build(n, &edges, 0.15);
-        let (_g, stats) = shared::run(
-            g, &prog, apps::all_vertices(n), vec![],
-            SchedSpec::ws(Policy::Fifo, 1),
-            SharedOpts { workers: 4, ..Default::default() },
-        );
-        assert_eq!(stats.updates, n as u64);
+        let exec = Engine::new(EngineKind::Shared)
+            .workers(4)
+            .scheduler(SchedSpec::ws(Policy::Fifo, 1))
+            .run(g, &prog, apps::all_vertices(n))
+            .unwrap();
+        assert_eq!(exec.stats.updates, n as u64);
     });
 
     let coloring_g = pagerank::build(n, &edges, 0.15);
@@ -135,23 +135,27 @@ fn bench_pagerank_engines() {
     let partition = Partition::random(n, 4, 3);
     bench_throughput("pagerank/chromatic 4m one-sweep", 1.5, n, || {
         let g = pagerank::build(n, &edges, 0.15);
-        let (_g, stats) = chromatic::run(
-            g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
-            ChromaticOpts { machines: 4, max_sweeps: 1, ..Default::default() },
-        );
-        assert_eq!(stats.updates, n as u64);
+        let exec = Engine::new(EngineKind::Chromatic)
+            .machines(4)
+            .max_sweeps(1)
+            .with_coloring(coloring.clone())
+            .with_partition(partition.clone())
+            .run(g, &prog, apps::all_vertices(n))
+            .unwrap();
+        assert_eq!(exec.stats.updates, n as u64);
     });
 
     bench_throughput("pagerank/locking 4m one-sweep", 2.0, n, || {
         let g = pagerank::build(n, &edges, 0.15);
-        let (_g, _stats) = locking::run(
-            g, &partition, &prog, apps::all_vertices(n), vec![],
-            LockingOpts {
-                machines: 4, maxpending: 256, scheduler: Policy::Fifo,
-                max_updates_per_machine: n as u64 / 4 + 1000,
-                ..Default::default()
-            },
-        );
+        // Per-machine cap n/4 + 1000: the builder splits the total.
+        let _exec = Engine::new(EngineKind::Locking)
+            .machines(4)
+            .maxpending(256)
+            .scheduler(SchedSpec::ws(Policy::Fifo, 1))
+            .max_updates(n as u64 + 4000)
+            .with_partition(partition.clone())
+            .run(g, &prog, apps::all_vertices(n))
+            .unwrap();
     });
 }
 
@@ -162,30 +166,23 @@ fn bench_als_paths() {
     let coloring = Coloring::bipartite(&coloring_g).unwrap();
     let partition = Partition::random(n, 2, 3);
 
-    bench_throughput("als/native d=20 one-sweep", 1.5, n, || {
+    let one_sweep = |use_pjrt: bool| {
         let g = als::build(&data, 20, 1);
-        let prog = als::Als { d: 20, lambda: 0.08, use_pjrt: false };
-        let (_g, _s) = chromatic::run(
-            g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
-            ChromaticOpts { machines: 2, max_sweeps: 1, ..Default::default() },
-        );
-    });
+        let prog = als::Als { d: 20, lambda: 0.08, use_pjrt };
+        let _exec = Engine::new(EngineKind::Chromatic)
+            .machines(2)
+            .max_sweeps(1)
+            .with_coloring(coloring.clone())
+            .with_partition(partition.clone())
+            .run(g, &prog, apps::all_vertices(n))
+            .unwrap();
+    };
+    bench_throughput("als/native d=20 one-sweep", 1.5, n, || one_sweep(false));
 
     if graphlab::runtime::available() {
         // Warm the per-thread executable caches outside the timing loop.
-        let g = als::build(&data, 20, 1);
-        let prog = als::Als { d: 20, lambda: 0.08, use_pjrt: true };
-        let _ = chromatic::run(
-            g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
-            ChromaticOpts { machines: 2, max_sweeps: 1, ..Default::default() },
-        );
-        bench_throughput("als/pjrt d=20 one-sweep", 1.5, n, || {
-            let g = als::build(&data, 20, 1);
-            let (_g, _s) = chromatic::run(
-                g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
-                ChromaticOpts { machines: 2, max_sweeps: 1, ..Default::default() },
-            );
-        });
+        one_sweep(true);
+        bench_throughput("als/pjrt d=20 one-sweep", 1.5, n, || one_sweep(true));
     } else {
         println!("als/pjrt: skipped (run `make artifacts`)");
     }

@@ -1,20 +1,24 @@
 //! Video cosegmentation pipeline (paper Sec. 5.2): synthetic video →
 //! 3-D grid graph → residual-priority LBP + GMM sync on the Locking
-//! engine → per-label segmentation accuracy.
+//! engine (or any other, via `--engine`) → per-label segmentation
+//! accuracy.
 //!
 //! ```text
 //! cargo run --release --example coseg_pipeline [-- --frames 24 --machines 4]
+//! cargo run --release --example coseg_pipeline -- --engine shared
 //! ```
 
 use graphlab::apps::{self, coseg};
-use graphlab::engine::locking::{self, LockingOpts};
+use graphlab::engine::{Engine, EngineKind};
 use graphlab::partition::Partition;
+use graphlab::scheduler::{Policy, SchedSpec};
 use graphlab::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let frames = args.num_or("frames", 16usize)?;
     let machines = args.num_or("machines", 4usize)?;
+    let engine: EngineKind = args.str_or("engine", "locking").parse()?;
     let use_pjrt = graphlab::runtime::available() && !args.flag("no-pjrt");
 
     let data = graphlab::datagen::video(frames, 24, 20, 5, 0.45, 7);
@@ -36,27 +40,28 @@ fn main() -> anyhow::Result<()> {
     };
     println!("appearance-only accuracy: {baseline:.4}");
 
-    // The paper's CoSeg cut: slice across frames.
+    // The paper's CoSeg cut: slice across frames (the builder would
+    // default to the same blocked partition; made explicit here).
     let partition = Partition::blocked(n, machines);
     let prog = coseg::Coseg { labels: 5, eps: 1e-3, sigma2: 0.5, use_pjrt };
-    let (g, stats) = locking::run(
-        g, &partition, &prog,
-        apps::all_vertices(n),
-        vec![Box::new(coseg::gmm_sync(5)), Box::new(coseg::accuracy_sync())],
-        LockingOpts {
-            machines,
-            maxpending: 100,
-            scheduler: graphlab::scheduler::Policy::Priority,
-            sync_period: Some(std::time::Duration::from_millis(100)),
-            max_updates_per_machine: (n as u64 * 50) / machines as u64,
-            on_sync: Some(Box::new(|e, u, gv| {
-                if let Some(a) = gv.get("accuracy") {
-                    println!("epoch {e:>3}: updates={u:>9}  accuracy={:.4}", a[0]);
-                }
-            })),
-            ..Default::default()
-        },
-    );
+    let exec = Engine::new(engine)
+        .machines(machines)
+        .workers(2)
+        .maxpending(100)
+        .scheduler(SchedSpec::ws(Policy::Priority, 1))
+        .sync_period(std::time::Duration::from_millis(100))
+        .max_updates(n as u64 * 50)
+        .max_sweeps(50)
+        .with_partition(partition)
+        .sync(coseg::gmm_sync(5))
+        .sync(coseg::accuracy_sync())
+        .on_progress(|e, u, gv| {
+            if let Some(a) = gv.get("accuracy") {
+                println!("epoch {e:>3}: updates={u:>9}  accuracy={:.4}", a[0]);
+            }
+        })
+        .run(g, &prog, apps::all_vertices(n))?;
+    let (g, stats) = (exec.graph, exec.stats);
     let after = {
         let mut ok = 0;
         for v in g.vertex_ids() {

@@ -1,19 +1,20 @@
 //! Named Entity Recognition via CoEM (paper Sec. 5.3): synthetic
-//! noun-phrase/context co-occurrence graph, chromatic engine.
+//! noun-phrase/context co-occurrence graph, chromatic engine by default
+//! (`--engine` selects another at runtime).
 //!
 //! ```text
 //! cargo run --release --example ner_coem [-- --nps 8000 --machines 4]
 //! ```
 
 use graphlab::apps::{self, ner};
-use graphlab::engine::chromatic::{self, ChromaticOpts};
-use graphlab::partition::{Coloring, Partition};
+use graphlab::engine::{Engine, EngineKind};
 use graphlab::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let nps = args.num_or("nps", 8000usize)?;
     let machines = args.num_or("machines", 4usize)?;
+    let engine: EngineKind = args.str_or("engine", "chromatic").parse()?;
     let use_pjrt = graphlab::runtime::available() && !args.flag("no-pjrt");
 
     let data = graphlab::datagen::ner(nps, nps / 2, 30, 8, 0.1, 5);
@@ -23,25 +24,24 @@ fn main() -> anyhow::Result<()> {
         n, g.num_edges(), data.seeds.len());
     println!("numeric path: {}", if use_pjrt { "PJRT (AOT Pallas CoEM kernel)" } else { "native rust" });
 
-    let coloring = Coloring::bipartite(&g).expect("bipartite");
-    let partition = Partition::random(n, machines, 11);
+    // CoEM needs edge consistency; the builder derives the bipartite
+    // 2-coloring and the machine partition internally.
     let prog = ner::Coem { k: 8, smoothing: 0.01, eps: 1e-4, use_pjrt };
-    let (_g, stats) = chromatic::run(
-        g, &coloring, &partition, &prog,
-        apps::all_vertices(n),
-        vec![Box::new(ner::accuracy_sync())],
-        ChromaticOpts {
-            machines,
-            threads_per_machine: 2,
-            max_sweeps: 15,
-            on_sweep: Some(Box::new(|s, u, gv| {
-                if let Some(a) = gv.get("accuracy") {
-                    println!("sweep {s:>3}: updates={u:>9}  accuracy={:.4}", a[0]);
-                }
-            })),
-            ..Default::default()
-        },
-    );
+    let exec = Engine::new(engine)
+        .machines(machines)
+        .workers(2)
+        .seed(11)
+        .max_sweeps(15)
+        .max_updates(n as u64 * 15)
+        .sync_period(std::time::Duration::from_millis(50))
+        .sync(ner::accuracy_sync())
+        .on_progress(|s, u, gv| {
+            if let Some(a) = gv.get("accuracy") {
+                println!("sweep {s:>3}: updates={u:>9}  accuracy={:.4}", a[0]);
+            }
+        })
+        .run(g, &prog, apps::all_vertices(n))?;
+    let stats = exec.stats;
     println!("---");
     println!("updates: {}, per-machine MB sent: {:?}",
         stats.updates,

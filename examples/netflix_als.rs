@@ -5,13 +5,16 @@
 //!
 //! ```text
 //! cargo run --release --example netflix_als [-- --users 4000 --d 20 --sweeps 30]
+//! cargo run --release --example netflix_als -- --engine locking
 //! ```
 //!
-//! Logs the held-out RMSE curve per sweep and reports throughput.
+//! Logs the held-out RMSE curve per sweep and reports throughput. The
+//! engine is selected at runtime through the unified `Engine` builder
+//! (`--engine shared|chromatic|locking`, default chromatic); the builder
+//! computes the bipartite coloring and the partition internally.
 
 use graphlab::apps::{self, als};
-use graphlab::engine::chromatic::{self, ChromaticOpts};
-use graphlab::partition::{Coloring, Partition};
+use graphlab::engine::{Engine, EngineKind};
 use graphlab::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -21,9 +24,10 @@ fn main() -> anyhow::Result<()> {
     let d = args.num_or("d", 10usize)?;
     let sweeps = args.num_or("sweeps", 10u64)?;
     let machines = args.num_or("machines", 4usize)?;
+    let engine: EngineKind = args.str_or("engine", "chromatic").parse()?;
     let use_pjrt = graphlab::runtime::available() && !args.flag("no-pjrt");
 
-    println!("== netflix ALS end-to-end: {users} users x {movies} movies, d={d}, {machines} machines ==");
+    println!("== netflix ALS end-to-end: {users} users x {movies} movies, d={d}, {machines} machines, {engine} engine ==");
     println!("numeric path: {}", if use_pjrt { "PJRT (AOT Pallas kernels)" } else { "native rust" });
     if use_pjrt {
         println!("note: Pallas kernels run in interpret mode on CPU — wallclock is emulation, \
@@ -45,26 +49,22 @@ fn main() -> anyhow::Result<()> {
     let n = g.num_vertices();
     println!("graph: {} vertices, {} edges (train), {} held-out ratings", n, g.num_edges(), test.len());
 
-    let coloring = Coloring::bipartite(&g).expect("ALS graph is bipartite");
-    let partition = Partition::random(n, machines, 7);
     let prog = als::Als { d, lambda: 0.08, use_pjrt };
     let t0 = std::time::Instant::now();
-    let (g, stats) = chromatic::run(
-        g, &coloring, &partition, &prog,
-        apps::all_vertices(n),
-        vec![Box::new(als::rmse_sync())],
-        ChromaticOpts {
-            machines,
-            threads_per_machine: 2,
-            max_sweeps: sweeps,
-            on_sweep: Some(Box::new(move |s, u, gv| {
-                if let Some(r) = gv.get("rmse") {
-                    println!("sweep {s:>3}: updates={u:>9}  train-rmse={:.5}", r[0]);
-                }
-            })),
-            ..Default::default()
-        },
-    );
+    let exec = Engine::new(engine)
+        .machines(machines)
+        .workers(2)
+        .max_sweeps(sweeps)
+        .max_updates(n as u64 * sweeps)
+        .sync_period(std::time::Duration::from_millis(50))
+        .sync(als::rmse_sync())
+        .on_progress(move |s, u, gv| {
+            if let Some(r) = gv.get("rmse") {
+                println!("sweep {s:>3}: updates={u:>9}  train-rmse={:.5}", r[0]);
+            }
+        })
+        .run(g, &prog, apps::all_vertices(n))?;
+    let (g, stats) = (exec.graph, exec.stats);
     let secs = t0.elapsed().as_secs_f64();
 
     // Held-out evaluation.
@@ -78,9 +78,9 @@ fn main() -> anyhow::Result<()> {
     }
     let test_rmse = (sse / test.len() as f64).sqrt();
     println!("---");
-    println!("updates        : {}", stats.updates);
+    println!("updates        : {} (per machine: {:?})", stats.updates, stats.updates_per_machine);
     println!("wall time      : {secs:.2}s  ({:.0} updates/s)", stats.updates as f64 / secs);
-    println!("network        : {} MB total", stats.bytes_sent.iter().sum::<u64>() / 1_000_000);
+    println!("network        : {} MB total", stats.total_bytes() / 1_000_000);
     println!("test RMSE      : {test_rmse:.5}  (planted rank {}, noise 0.25)", data.true_rank);
     Ok(())
 }

@@ -1,79 +1,63 @@
-//! Quickstart: PageRank on a synthetic web graph, three engines.
+//! Quickstart: PageRank on a synthetic web graph, one update function,
+//! all three engines through the unified `Engine` builder.
 //!
 //! ```text
 //! cargo run --release --example quickstart
 //! ```
 //!
 //! Demonstrates the core GraphLab workflow: build a data graph, define an
-//! update function (here `apps::pagerank::PageRank`), pick a consistency
-//! model + engine, attach a sync operation, and run to quiescence.
+//! update function (here `apps::pagerank::PageRank`), attach a sync
+//! operation, pick an engine *at runtime* with `EngineKind`, and run to
+//! quiescence. The builder computes whatever the chosen engine needs (a
+//! proper coloring for `chromatic`, a vertex partition for the
+//! distributed engines) — the app code is engine-agnostic.
 
 use graphlab::apps::{self, pagerank};
-use graphlab::engine::chromatic::{self, ChromaticOpts};
-use graphlab::engine::locking::{self, LockingOpts};
-use graphlab::engine::shared::{self, SharedOpts};
-use graphlab::partition::Partition;
-use graphlab::scheduler::{Policy, SchedSpec};
+use graphlab::engine::{Engine, EngineKind, ENGINE_KINDS};
 
 fn main() -> anyhow::Result<()> {
     let n = 5_000;
     let edges = graphlab::datagen::web_graph(n, 8, 42);
     println!("web graph: {n} vertices, {} edges", edges.len());
 
-    // --- 1. shared-memory engine (the UAI'10 multicore runtime) --------
-    let g = pagerank::build(n, &edges, 0.15);
-    let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-6, n, use_pjrt: false };
-    let (g1, stats) = shared::run(
-        g,
-        &prog,
-        apps::all_vertices(n),
-        vec![Box::new(pagerank::total_rank_sync())],
-        SchedSpec::ws(Policy::Fifo, 1),
-        SharedOpts { workers: 4, max_updates: 2_000_000, ..Default::default() },
-    );
-    println!("shared   : {:>8} updates in {:.2}s", stats.updates, stats.seconds);
-
-    // --- 2. chromatic engine (distributed, color-stepped) --------------
-    let g = pagerank::build(n, &edges, 0.15);
-    let coloring = chromatic::color_for(&g, graphlab::engine::Consistency::Edge);
-    let partition = Partition::random(n, 4, 7);
-    let (g2, stats) = chromatic::run(
-        g, &coloring, &partition, &prog,
-        apps::all_vertices(n),
-        vec![Box::new(pagerank::total_rank_sync())],
-        ChromaticOpts { machines: 4, max_sweeps: 100, ..Default::default() },
-    );
-    println!(
-        "chromatic: {:>8} updates, {} sweeps, {} colors, {} KB sent",
-        stats.updates, stats.sweeps, coloring.num_colors(),
-        stats.bytes_sent.iter().sum::<u64>() / 1000
-    );
-
-    // --- 3. locking engine (distributed, asynchronous) -----------------
-    let g = pagerank::build(n, &edges, 0.15);
-    // Slightly looser epsilon for the demo: the locking engine pays a
-    // lock-chain round trip per boundary scope, so the tail of tiny-delta
-    // updates is the expensive part.
-    let prog_lock = pagerank::PageRank { alpha: 0.15, eps: 1e-5, n, use_pjrt: false };
-    let (g3, stats) = locking::run(
-        g, &partition, &prog_lock,
-        apps::all_vertices(n),
-        vec![Box::new(pagerank::total_rank_sync())],
-        LockingOpts {
-            machines: 4, maxpending: 256, scheduler: Policy::Fifo,
-            max_updates_per_machine: 500_000, ..Default::default()
-        },
-    );
-    println!("locking  : {:>8} updates, {} KB sent",
-        stats.updates, stats.bytes_sent.iter().sum::<u64>() / 1000);
+    let mut graphs = Vec::new();
+    for kind in ENGINE_KINDS {
+        // Slightly looser epsilon for the locking demo: that engine pays a
+        // lock-chain round trip per boundary scope, so the tail of
+        // tiny-delta updates is the expensive part.
+        let eps = if kind == EngineKind::Locking { 1e-5 } else { 1e-6 };
+        let prog = pagerank::PageRank { alpha: 0.15, eps, n, use_pjrt: false };
+        let g = pagerank::build(n, &edges, 0.15);
+        let exec = Engine::new(kind)
+            .workers(4)
+            .machines(4)
+            .maxpending(256)
+            .max_updates(2_000_000)
+            .max_sweeps(100)
+            .sync(pagerank::total_rank_sync())
+            .run(g, &prog, apps::all_vertices(n))?;
+        let s = &exec.stats;
+        println!(
+            "{:<9}: {:>8} updates, {} epochs in {:.2}s ({} machine(s), balance {:.2}, {} KB sent)",
+            kind.name(),
+            s.updates,
+            s.sweeps,
+            s.seconds,
+            s.machines(),
+            s.balance(),
+            s.total_bytes() / 1000
+        );
+        graphs.push(exec.graph);
+    }
 
     // All three engines agree on the fixed point.
+    let g1 = &graphs[0];
     let mut max_diff = 0.0f32;
     for v in g1.vertex_ids() {
         let r1 = g1.vertex_data(v).rank;
-        max_diff = max_diff
-            .max((r1 - g2.vertex_data(v).rank).abs())
-            .max((r1 - g3.vertex_data(v).rank).abs());
+        for g in &graphs[1..] {
+            max_diff = max_diff.max((r1 - g.vertex_data(v).rank).abs());
+        }
     }
     println!("max rank disagreement across engines: {max_diff:.2e} (locking ran at eps=1e-5)");
     let total: f32 = g1.vertex_ids().map(|v| g1.vertex_data(v).rank).sum();

@@ -250,7 +250,7 @@ pub fn rmse_direct(g: &Graph<AlsVertex, AlsEdge>) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::chromatic::{self, ChromaticOpts};
+    use crate::engine::{Engine, EngineKind};
     use crate::partition::{Coloring, Partition};
 
     fn small_data() -> crate::datagen::NetflixData {
@@ -270,19 +270,15 @@ mod tests {
             lambda: 0.1,
             use_pjrt: false,
         };
-        let (g, stats) = chromatic::run(
-            g,
-            &coloring,
-            &partition,
-            &prog,
-            crate::apps::all_vertices(n),
-            vec![Box::new(rmse_sync())],
-            ChromaticOpts {
-                machines: 2,
-                max_sweeps: 10,
-                ..Default::default()
-            },
-        );
+        let exec = Engine::new(EngineKind::Chromatic)
+            .machines(2)
+            .max_sweeps(10)
+            .with_coloring(coloring)
+            .with_partition(partition)
+            .sync(rmse_sync())
+            .run(g, &prog, crate::apps::all_vertices(n))
+            .unwrap();
+        let (g, stats) = (exec.graph, exec.stats);
         let after = rmse_direct(&g);
         assert!(stats.updates >= n as u64 * 5, "updates={}", stats.updates);
         assert!(
@@ -309,22 +305,18 @@ mod tests {
             lambda: 0.1,
             use_pjrt: false,
         };
-        let (g, _) = chromatic::run(
-            g,
-            &coloring,
-            &partition,
-            &prog,
-            crate::apps::all_vertices(n),
-            vec![Box::new(rmse_sync())],
-            ChromaticOpts {
-                machines: 2,
-                max_sweeps: 8,
-                on_sweep: Some(Box::new(move |_s, _u, g| {
-                    probe2.lock().unwrap().push(g.get("rmse").unwrap()[0]);
-                })),
-                ..Default::default()
-            },
-        );
+        let exec = Engine::new(EngineKind::Chromatic)
+            .machines(2)
+            .max_sweeps(8)
+            .with_coloring(coloring)
+            .with_partition(partition)
+            .sync(rmse_sync())
+            .on_progress(move |_s, _u, g| {
+                probe2.lock().unwrap().push(g.get("rmse").unwrap()[0]);
+            })
+            .run(g, &prog, crate::apps::all_vertices(n))
+            .unwrap();
+        let g = exec.graph;
         let series = probe.lock().unwrap();
         assert_eq!(series.len(), 8);
         // Monotone-ish improvement and agreement with the direct measure.
@@ -355,20 +347,14 @@ mod tests {
                 lambda: 0.1,
                 use_pjrt,
             };
-            let (g, _) = chromatic::run(
-                g,
-                &coloring,
-                &partition,
-                &prog,
-                crate::apps::all_vertices(n),
-                vec![],
-                ChromaticOpts {
-                    machines: 2,
-                    max_sweeps: 5,
-                    ..Default::default()
-                },
-            );
-            rmse_direct(&g)
+            let exec = Engine::new(EngineKind::Chromatic)
+                .machines(2)
+                .max_sweeps(5)
+                .with_coloring(coloring)
+                .with_partition(partition)
+                .run(g, &prog, crate::apps::all_vertices(n))
+                .unwrap();
+            rmse_direct(&exec.graph)
         };
         let native = run(false);
         let pjrt = run(true);

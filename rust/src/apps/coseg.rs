@@ -315,8 +315,9 @@ pub fn accuracy_sync() -> FnSync<CosegVertex> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::locking::{self, LockingOpts};
+    use crate::engine::{Engine, EngineKind};
     use crate::partition::Partition;
+    use crate::scheduler::{Policy, SchedSpec};
 
     fn accuracy(g: &Graph<CosegVertex, CosegEdge>) -> f64 {
         let mut ok = 0usize;
@@ -363,21 +364,18 @@ mod tests {
             }
             ok as f64 / n as f64
         };
-        let (g, stats) = locking::run(
-            g,
-            &partition,
-            &prog,
-            crate::apps::all_vertices(n),
-            vec![Box::new(gmm_sync(5)), Box::new(accuracy_sync())],
-            LockingOpts {
-                machines: 2,
-                maxpending: 32,
-                scheduler: crate::scheduler::Policy::Priority,
-                sync_period: Some(std::time::Duration::from_millis(40)),
-                max_updates_per_machine: 40_000,
-                ..Default::default()
-            },
-        );
+        let exec = Engine::new(EngineKind::Locking)
+            .machines(2)
+            .maxpending(32)
+            .scheduler(SchedSpec::ws(Policy::Priority, 1))
+            .sync_period(std::time::Duration::from_millis(40))
+            .max_updates(80_000)
+            .with_partition(partition)
+            .sync(gmm_sync(5))
+            .sync(accuracy_sync())
+            .run(g, &prog, crate::apps::all_vertices(n))
+            .unwrap();
+        let (g, stats) = (exec.graph, exec.stats);
         let after = accuracy(&g);
         assert!(stats.updates > n as u64 / 2, "updates={}", stats.updates);
         assert!(

@@ -106,7 +106,7 @@ pub fn magnetization_sync() -> FnSync<GibbsVertex> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::shared::{self, SharedOpts};
+    use crate::engine::{Engine, EngineKind};
     use crate::scheduler::{Policy, SchedSpec};
 
     #[test]
@@ -119,17 +119,13 @@ mod tests {
             target_samples: 200,
             seed: 17,
         };
-        let (g, stats) = shared::run(
-            g,
-            &prog,
-            crate::apps::all_vertices(n),
-            vec![Box::new(magnetization_sync())],
-            SchedSpec::ws(Policy::Sweep, 1),
-            SharedOpts {
-                workers: 4,
-                ..Default::default()
-            },
-        );
+        let exec = Engine::new(EngineKind::Shared)
+            .workers(4)
+            .scheduler(SchedSpec::ws(Policy::Sweep, 1))
+            .sync(magnetization_sync())
+            .run(g, &prog, crate::apps::all_vertices(n))
+            .unwrap();
+        let (g, stats) = (exec.graph, exec.stats);
         assert_eq!(stats.updates, n as u64 * 200);
         // The blob with positive field should have high marginals, the
         // negative blob low ones.
@@ -154,17 +150,12 @@ mod tests {
                 target_samples: 50,
                 seed: 5,
             };
-            let (g, _) = shared::run(
-                g,
-                &prog,
-                crate::apps::all_vertices(n),
-                vec![],
-                SchedSpec::ws(Policy::Sweep, 1),
-                SharedOpts {
-                    workers: 1,
-                    ..Default::default()
-                },
-            );
+            let exec = Engine::new(EngineKind::Shared)
+                .workers(1)
+                .scheduler(SchedSpec::ws(Policy::Sweep, 1))
+                .run(g, &prog, crate::apps::all_vertices(n))
+                .unwrap();
+            let g = exec.graph;
             g.vertex_ids().map(|v| g.vertex_data(v).ones).collect::<Vec<u64>>()
         };
         assert_eq!(run(), run());

@@ -219,7 +219,7 @@ pub fn accuracy_sync() -> FnSync<NerVertex> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::chromatic::{self, ChromaticOpts};
+    use crate::engine::{Engine, EngineKind};
     use crate::partition::{Coloring, Partition};
 
     #[test]
@@ -237,24 +237,19 @@ mod tests {
         };
         let probe = std::sync::Arc::new(std::sync::Mutex::new(0.0f64));
         let probe2 = probe.clone();
-        let (_g, stats) = chromatic::run(
-            g,
-            &coloring,
-            &partition,
-            &prog,
-            crate::apps::all_vertices(n),
-            vec![Box::new(accuracy_sync())],
-            ChromaticOpts {
-                machines: 2,
-                max_sweeps: 12,
-                on_sweep: Some(Box::new(move |_s, _u, g| {
-                    *probe2.lock().unwrap() = g.get("accuracy").unwrap()[0];
-                })),
-                ..Default::default()
-            },
-        );
+        let exec = Engine::new(EngineKind::Chromatic)
+            .machines(2)
+            .max_sweeps(12)
+            .with_coloring(coloring)
+            .with_partition(partition)
+            .sync(accuracy_sync())
+            .on_progress(move |_s, _u, g| {
+                *probe2.lock().unwrap() = g.get("accuracy").unwrap()[0];
+            })
+            .run(g, &prog, crate::apps::all_vertices(n))
+            .unwrap();
         let acc = *probe.lock().unwrap();
-        assert!(stats.updates > 0);
+        assert!(exec.stats.updates > 0);
         assert!(acc > 0.6, "CoEM should beat 0.25 chance level clearly: {acc}");
     }
 
@@ -271,19 +266,14 @@ mod tests {
             eps: 1e-4,
             use_pjrt: false,
         };
-        let (g, _) = chromatic::run(
-            g,
-            &coloring,
-            &partition,
-            &prog,
-            crate::apps::all_vertices(n),
-            vec![],
-            ChromaticOpts {
-                machines: 2,
-                max_sweeps: 5,
-                ..Default::default()
-            },
-        );
+        let exec = Engine::new(EngineKind::Chromatic)
+            .machines(2)
+            .max_sweeps(5)
+            .with_coloring(coloring)
+            .with_partition(partition)
+            .run(g, &prog, crate::apps::all_vertices(n))
+            .unwrap();
+        let g = exec.graph;
         for v in g.vertex_ids() {
             if let Some(seed) = g.vertex_data(v).seed {
                 let dist = &g.vertex_data(v).dist;

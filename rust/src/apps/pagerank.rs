@@ -200,7 +200,7 @@ pub fn total_rank_sync() -> crate::engine::sync::FnSync<PrVertex> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::shared::{self, SharedOpts};
+    use crate::engine::{Engine, EngineKind};
     use crate::scheduler::{Policy, SchedSpec};
 
     fn tiny() -> Graph<PrVertex, PrEdge> {
@@ -219,18 +219,14 @@ mod tests {
             n,
             use_pjrt: false,
         };
-        let (g, stats) = shared::run(
-            g,
-            &prog,
-            crate::apps::all_vertices(n),
-            vec![Box::new(total_rank_sync())],
-            SchedSpec::ws(Policy::Fifo, 1),
-            SharedOpts {
-                workers: 2,
-                max_updates: 200_000,
-                ..Default::default()
-            },
-        );
+        let exec = Engine::new(EngineKind::Shared)
+            .workers(2)
+            .scheduler(SchedSpec::ws(Policy::Fifo, 1))
+            .max_updates(200_000)
+            .sync(total_rank_sync())
+            .run(g, &prog, crate::apps::all_vertices(n))
+            .unwrap();
+        let (g, stats) = (exec.graph, exec.stats);
         assert!(stats.updates > 4, "should iterate: {}", stats.updates);
         let total: f32 = g.vertex_ids().map(|v| g.vertex_data(v).rank).sum();
         assert!((total - 1.0).abs() < 1e-3, "total={total}");
@@ -244,7 +240,6 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return;
         }
-        use crate::engine::chromatic::{self, ChromaticOpts};
         use crate::partition::{Coloring, Partition};
         let n = 400;
         let edges = crate::datagen::web_graph(n, 6, 11);
@@ -258,20 +253,15 @@ mod tests {
                 n,
                 use_pjrt,
             };
-            let (g, stats) = chromatic::run(
-                g,
-                &coloring,
-                &partition,
-                &prog,
-                crate::apps::all_vertices(n),
-                vec![],
-                ChromaticOpts {
-                    machines: 2,
-                    max_sweeps: 10,
-                    ..Default::default()
-                },
-            );
-            assert!(stats.updates > 0);
+            let exec = Engine::new(EngineKind::Chromatic)
+                .machines(2)
+                .max_sweeps(10)
+                .with_coloring(coloring)
+                .with_partition(partition)
+                .run(g, &prog, crate::apps::all_vertices(n))
+                .unwrap();
+            assert!(exec.stats.updates > 0);
+            let g = exec.graph;
             g.vertex_ids().map(|v| g.vertex_data(v).rank).collect::<Vec<f32>>()
         };
         let native = run(false);

@@ -1,0 +1,500 @@
+//! The unified execution API: one builder, one stats type, runtime engine
+//! selection.
+//!
+//! The paper's core promise (Sec. 3, Sec. 4.2) is that a single update
+//! function runs unchanged on the shared-memory runtime and on both
+//! distributed engines. [`Engine`] is that promise as an API: pick an
+//! [`EngineKind`] at runtime (e.g. from a `--engine` CLI flag via
+//! `FromStr`), configure the run with builder methods, and call
+//! [`Engine::run`] — the builder computes whatever the chosen engine needs
+//! (a proper coloring for the chromatic engine, a vertex partition for the
+//! distributed engines) and returns one [`Exec`] carrying the transformed
+//! graph plus engine-independent [`ExecStats`].
+//!
+//! ```no_run
+//! use graphlab::apps::{self, pagerank};
+//! use graphlab::engine::{Engine, EngineKind};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let n = 1000;
+//! let edges = graphlab::datagen::web_graph(n, 8, 1);
+//! let g = pagerank::build(n, &edges, 0.15);
+//! let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-6, n, use_pjrt: false };
+//! let exec = Engine::new("chromatic".parse::<EngineKind>()?)
+//!     .machines(4)
+//!     .sync(pagerank::total_rank_sync())
+//!     .max_sweeps(100)
+//!     .run(g, &prog, apps::all_vertices(n))?;
+//! println!("{} updates, {} sweeps", exec.stats.updates, exec.stats.sweeps);
+//! # Ok(())
+//! # }
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::{chromatic, locking, shared, GlobalValues, SyncOp, VertexProgram};
+use crate::distributed::{DataValue, NetworkModel};
+use crate::graph::Graph;
+use crate::partition::{Coloring, Partition};
+use crate::scheduler::{SchedSpec, Task};
+
+/// Which execution engine runs the program (paper Sec. 4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// The UAI'10 multicore runtime: worker threads + per-vertex RW locks.
+    Shared,
+    /// The distributed color-stepped engine (Sec. 4.2.1).
+    Chromatic,
+    /// The distributed pipelined-locking engine (Sec. 4.2.2).
+    Locking,
+}
+
+/// Every engine, in CLI listing order.
+pub const ENGINE_KINDS: [EngineKind; 3] =
+    [EngineKind::Shared, EngineKind::Chromatic, EngineKind::Locking];
+
+impl EngineKind {
+    /// Parse an engine name; unknown names are an error, not a panic.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "shared" => EngineKind::Shared,
+            "chromatic" => EngineKind::Chromatic,
+            "locking" => EngineKind::Locking,
+            other => bail!("unknown engine '{other}' (shared|chromatic|locking)"),
+        })
+    }
+
+    /// The CLI name of this engine.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Shared => "shared",
+            EngineKind::Chromatic => "chromatic",
+            EngineKind::Locking => "locking",
+        }
+    }
+
+    /// Whether this engine runs on the in-process cluster (machines > 1).
+    pub fn is_distributed(self) -> bool {
+        !matches!(self, EngineKind::Shared)
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        EngineKind::parse(s)
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Engine-independent statistics of one execution.
+///
+/// Per-machine vectors have one entry per machine; the shared-memory
+/// engine reports a single machine with zeroed wire traffic (nothing
+/// crosses a network there).
+#[derive(Debug, Clone)]
+pub struct ExecStats {
+    /// Update-function executions, summed over machines.
+    pub updates: u64,
+    /// Engine epochs: color sweeps (chromatic), global sync epochs
+    /// (locking), sync barriers (shared).
+    pub sweeps: u64,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+    /// Updates executed by each machine (load balance; len = machines).
+    pub updates_per_machine: Vec<u64>,
+    /// Modeled wire bytes sent per machine (zeroed for shared).
+    pub bytes_sent: Vec<u64>,
+    /// Messages sent per machine (zeroed for shared).
+    pub msgs_sent: Vec<u64>,
+}
+
+impl ExecStats {
+    /// Machine count of the run.
+    pub fn machines(&self) -> usize {
+        self.updates_per_machine.len().max(1)
+    }
+
+    /// Total modeled wire bytes across machines.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_sent.iter().sum()
+    }
+
+    /// Total messages across machines.
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs_sent.iter().sum()
+    }
+
+    /// Update-load balance: max over machines divided by the mean
+    /// (1.0 = perfectly balanced; 1.0 for empty runs).
+    pub fn balance(&self) -> f64 {
+        let n = self.updates_per_machine.len();
+        if n == 0 || self.updates == 0 {
+            return 1.0;
+        }
+        let max = *self.updates_per_machine.iter().max().unwrap() as f64;
+        let mean = self.updates as f64 / n as f64;
+        max / mean
+    }
+
+    /// Updates per wall-clock second.
+    pub fn updates_per_sec(&self) -> f64 {
+        self.updates as f64 / self.seconds.max(1e-9)
+    }
+}
+
+/// The result of an [`Engine::run`]: the transformed graph + statistics.
+pub struct Exec<V, E> {
+    /// The data graph after execution (all machine copies reconciled).
+    pub graph: Graph<V, E>,
+    /// Engine-independent run statistics.
+    pub stats: ExecStats,
+}
+
+/// Progress callback: `(epoch, updates_so_far, globals)` at every engine
+/// epoch (sweep / sync barrier).
+type ProgressFn = Box<dyn Fn(u64, u64, &GlobalValues) + Send + Sync>;
+
+/// Builder for one engine execution; see the [module docs](self) for an
+/// end-to-end example.
+///
+/// Defaults: 4 workers, 2 machines, work-stealing FIFO scheduling, no
+/// update/sweep caps, lock-pipelining depth 64, no periodic locking sync,
+/// zero-latency network, seed 1. The coloring (chromatic) and partition
+/// (distributed engines) are computed internally from the graph and the
+/// program's consistency model unless overridden with
+/// [`Engine::with_coloring`] / [`Engine::with_partition`].
+pub struct Engine<V> {
+    kind: EngineKind,
+    workers: usize,
+    machines: usize,
+    sched: SchedSpec,
+    syncs: Vec<Box<dyn SyncOp<V>>>,
+    max_updates: u64,
+    max_sweeps: u64,
+    maxpending: usize,
+    sync_period: Option<Duration>,
+    network: NetworkModel,
+    seed: u64,
+    coloring: Option<Coloring>,
+    partition: Option<Partition>,
+    on_progress: Option<ProgressFn>,
+}
+
+impl<V> Engine<V> {
+    /// A builder for `kind` with default configuration.
+    pub fn new(kind: EngineKind) -> Self {
+        Engine {
+            kind,
+            workers: 4,
+            machines: 2,
+            sched: SchedSpec::default(),
+            syncs: Vec::new(),
+            max_updates: u64::MAX,
+            max_sweeps: u64::MAX,
+            maxpending: 64,
+            sync_period: None,
+            network: NetworkModel::default(),
+            seed: 1,
+            coloring: None,
+            partition: None,
+            on_progress: None,
+        }
+    }
+
+    /// The engine this builder targets.
+    pub fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    /// Worker threads: the shared engine's thread count, or threads per
+    /// machine on the chromatic engine (the locking engine is one event
+    /// loop per machine).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// In-process machine count (distributed engines; ignored by shared).
+    pub fn machines(mut self, m: usize) -> Self {
+        self.machines = m.max(1);
+        self
+    }
+
+    /// Task scheduling: queue policy + organization for the shared engine;
+    /// the locking engine uses the spec's pop policy for its per-machine
+    /// queue. The chromatic schedule is static (paper Sec. 3.4) and
+    /// ignores this.
+    pub fn scheduler(mut self, spec: SchedSpec) -> Self {
+        self.sched = spec;
+        self
+    }
+
+    /// Attach a sync operation (may be called repeatedly).
+    pub fn sync(mut self, op: impl SyncOp<V> + 'static) -> Self {
+        self.syncs.push(Box::new(op));
+        self
+    }
+
+    /// Attach a batch of boxed sync operations.
+    pub fn syncs(mut self, ops: Vec<Box<dyn SyncOp<V>>>) -> Self {
+        self.syncs.extend(ops);
+        self
+    }
+
+    /// Cap total update executions across machines (safety net for
+    /// non-converging runs). The locking engine splits the cap into
+    /// per-machine caps of `ceil(cap / machines)`, so it stops within
+    /// `machines - 1` updates of the requested total; the chromatic
+    /// engine's static schedule is capped in whole sweeps via
+    /// [`Engine::max_sweeps`] instead and ignores this.
+    pub fn max_updates(mut self, cap: u64) -> Self {
+        self.max_updates = cap;
+        self
+    }
+
+    /// Cap chromatic sweeps (ignored by the other engines, which are not
+    /// sweep-structured).
+    pub fn max_sweeps(mut self, cap: u64) -> Self {
+        self.max_sweeps = cap;
+        self
+    }
+
+    /// Locking engine: maximum transactions in flight per machine (lock
+    /// pipelining depth, Fig. 8(b)).
+    pub fn maxpending(mut self, depth: usize) -> Self {
+        self.maxpending = depth;
+        self
+    }
+
+    /// Locking engine: period of leader-initiated global sync barriers
+    /// (default: syncs run only at termination).
+    pub fn sync_period(mut self, period: Duration) -> Self {
+        self.sync_period = Some(period);
+        self
+    }
+
+    /// Network model for the in-process cluster (latency injection).
+    pub fn network(mut self, model: NetworkModel) -> Self {
+        self.network = model;
+        self
+    }
+
+    /// Seed for the internally computed partition (chromatic) and the
+    /// locking engine's randomized scheduler. The shared engine's queue
+    /// randomness is seeded by the [`SchedSpec`] passed to
+    /// [`Engine::scheduler`] (the spec travels with its own seed so a
+    /// parsed `--scheduler` flag stays self-contained).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the internally computed coloring (chromatic engine). The
+    /// coloring must discharge the program's consistency model (proper ⇒
+    /// edge, distance-2 ⇒ full, uniform ⇒ vertex).
+    pub fn with_coloring(mut self, coloring: Coloring) -> Self {
+        self.coloring = Some(coloring);
+        self
+    }
+
+    /// Override the internally computed vertex partition (distributed
+    /// engines). Its machine count must match [`Engine::machines`];
+    /// mismatches surface as an error from [`Engine::run`].
+    pub fn with_partition(mut self, partition: Partition) -> Self {
+        self.partition = Some(partition);
+        self
+    }
+
+    /// Progress callback `(epoch, updates_so_far, globals)` invoked at
+    /// every engine epoch (chromatic sweep, locking sync barrier, shared
+    /// sync barrier).
+    pub fn on_progress(
+        mut self,
+        cb: impl Fn(u64, u64, &GlobalValues) + Send + Sync + 'static,
+    ) -> Self {
+        self.on_progress = Some(Box::new(cb));
+        self
+    }
+
+    /// Execute `program` over `graph` from the `initial` task set on the
+    /// configured engine. Consumes the builder (sync operations and
+    /// callbacks move into the run).
+    pub fn run<E, P>(self, graph: Graph<V, E>, program: &P, initial: Vec<Task>) -> Result<Exec<V, E>>
+    where
+        V: DataValue,
+        E: DataValue,
+        P: VertexProgram<V, E>,
+    {
+        let n = graph.num_vertices();
+        match self.kind {
+            EngineKind::Shared => {
+                // Adapt the unified (epoch, updates, globals) callback to
+                // the shared engine's (updates, globals) sync hook by
+                // counting barriers.
+                let on_sync = self.on_progress.map(|cb| {
+                    let barrier = AtomicU64::new(0);
+                    Box::new(move |updates: u64, globals: &GlobalValues| {
+                        let epoch = barrier.fetch_add(1, Ordering::Relaxed) + 1;
+                        cb(epoch, updates, globals)
+                    }) as Box<dyn Fn(u64, &GlobalValues) + Send + Sync>
+                });
+                let (graph, stats) = shared::run(
+                    graph,
+                    program,
+                    initial,
+                    self.syncs,
+                    self.sched,
+                    shared::SharedOpts {
+                        workers: self.workers,
+                        max_updates: self.max_updates,
+                        on_sync,
+                    },
+                );
+                Ok(Exec { graph, stats })
+            }
+            EngineKind::Chromatic => {
+                let coloring = match self.coloring {
+                    Some(c) => c,
+                    None => chromatic::color_for(&graph, program.consistency()),
+                };
+                let partition = match self.partition {
+                    Some(p) => p,
+                    None => Partition::random(n, self.machines, self.seed),
+                };
+                let (graph, stats) = chromatic::run(
+                    graph,
+                    &coloring,
+                    &partition,
+                    program,
+                    initial,
+                    self.syncs,
+                    chromatic::ChromaticOpts {
+                        machines: self.machines,
+                        threads_per_machine: self.workers,
+                        max_sweeps: self.max_sweeps,
+                        network: self.network,
+                        on_sweep: self.on_progress,
+                    },
+                )?;
+                Ok(Exec { graph, stats })
+            }
+            EngineKind::Locking => {
+                let partition = match self.partition {
+                    Some(p) => p,
+                    None => Partition::blocked(n, self.machines),
+                };
+                // Ceiling split: never silently undershoots the requested
+                // total (overshoot is bounded by machines - 1 updates).
+                let per_machine_cap = if self.max_updates == u64::MAX {
+                    u64::MAX
+                } else {
+                    self.max_updates.div_ceil(self.machines as u64)
+                };
+                let (graph, stats) = locking::run(
+                    graph,
+                    &partition,
+                    program,
+                    initial,
+                    self.syncs,
+                    locking::LockingOpts {
+                        machines: self.machines,
+                        maxpending: self.maxpending,
+                        scheduler: self.sched.policy,
+                        network: self.network,
+                        sync_period: self.sync_period,
+                        max_updates_per_machine: per_machine_cap,
+                        on_sync: self.on_progress,
+                        seed: self.seed,
+                    },
+                )?;
+                Ok(Exec { graph, stats })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_names_round_trip() {
+        // Rejection of unknown names is covered by the integration test in
+        // rust/tests/engine_equivalence.rs.
+        for kind in ENGINE_KINDS {
+            assert_eq!(kind.name().parse::<EngineKind>().unwrap(), kind);
+            assert_eq!(format!("{kind}"), kind.name());
+        }
+    }
+
+    #[test]
+    fn exec_stats_derived_metrics() {
+        let stats = ExecStats {
+            updates: 100,
+            sweeps: 3,
+            seconds: 2.0,
+            updates_per_machine: vec![70, 30],
+            bytes_sent: vec![10, 20],
+            msgs_sent: vec![1, 2],
+        };
+        assert_eq!(stats.machines(), 2);
+        assert_eq!(stats.total_bytes(), 30);
+        assert_eq!(stats.total_msgs(), 3);
+        assert!((stats.balance() - 1.4).abs() < 1e-12);
+        assert!((stats.updates_per_sec() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mismatched_config_is_an_error_not_a_panic() {
+        struct Noop;
+        impl VertexProgram<u64, ()> for Noop {
+            fn update(
+                &self,
+                _scope: &mut crate::engine::Scope<u64, ()>,
+                _ctx: &mut crate::engine::Ctx,
+            ) {
+            }
+        }
+        fn ring8() -> Graph<u64, ()> {
+            let mut b = crate::graph::GraphBuilder::new();
+            b.add_vertices(8, |_| 0u64);
+            for i in 0..8u32 {
+                b.add_edge(i, (i + 1) % 8, ());
+            }
+            b.build()
+        }
+        // 3-machine partition on a 2-machine engine: must surface as Err.
+        let res = Engine::new(EngineKind::Locking)
+            .machines(2)
+            .with_partition(Partition::blocked(8, 3))
+            .run(ring8(), &Noop, vec![]);
+        assert!(res.is_err());
+        let res = Engine::new(EngineKind::Chromatic)
+            .machines(4)
+            .with_partition(Partition::blocked(8, 2))
+            .run(ring8(), &Noop, vec![]);
+        assert!(res.is_err());
+        // Coloring built for a different (smaller) graph: Err, not an
+        // index panic inside a machine thread.
+        let small = {
+            let mut b = crate::graph::GraphBuilder::new();
+            b.add_vertices(4, |_| 0u64);
+            b.add_edge(0, 1, ());
+            b.build()
+        };
+        let res = Engine::new(EngineKind::Chromatic)
+            .machines(2)
+            .with_coloring(Coloring::greedy(&small))
+            .run(ring8(), &Noop, vec![]);
+        assert!(res.is_err());
+    }
+}

@@ -20,7 +20,9 @@
 use std::sync::Mutex;
 use std::time::Duration;
 
-use super::{Ctx, GlobalValues, Scope, SyncOp, VertexProgram};
+use anyhow::bail;
+
+use super::{Ctx, ExecStats, GlobalValues, Scope, SyncOp, VertexProgram};
 use crate::distributed::network::{Network, NetworkModel};
 use crate::distributed::{DataValue, LocalGraph};
 use crate::graph::{EdgeId, Graph, SharedStore, VertexId};
@@ -28,24 +30,9 @@ use crate::partition::{Coloring, Partition};
 use crate::scheduler::Task;
 use crate::util::ThreadPool;
 
-/// Statistics of a distributed engine run.
-#[derive(Debug, Clone, Default)]
-pub struct DistStats {
-    /// Total update-function executions across machines.
-    pub updates: u64,
-    /// Full sweeps over the color spectrum (chromatic) / sync epochs
-    /// (locking).
-    pub sweeps: u64,
-    /// Wall-clock seconds.
-    pub seconds: f64,
-    /// Modeled wire bytes sent, per machine.
-    pub bytes_sent: Vec<u64>,
-    /// Messages sent, per machine.
-    pub msgs_sent: Vec<u64>,
-}
-
-/// Options for a chromatic run.
-pub struct ChromaticOpts {
+/// Options for a chromatic run (crate-internal: external callers go
+/// through the `engine::Engine` builder).
+pub(crate) struct ChromaticOpts {
     /// Machine count (cluster size).
     pub machines: usize,
     /// Worker threads per machine for the color-parallel updates.
@@ -125,8 +112,10 @@ fn ghost_bytes<V: DataValue, E: DataValue>(
 ///
 /// `initial` tasks seed the first sweep (priorities are ignored — the
 /// chromatic schedule is static, paper Sec. 3.4). Returns the transformed
-/// graph and statistics.
-pub fn run<V, E, P>(
+/// graph and statistics. Misconfiguration (partition not matching the
+/// machine count or the graph) is an error, not a panic — it surfaces
+/// through the `engine::Engine` builder's `Result`.
+pub(crate) fn run<V, E, P>(
     graph: Graph<V, E>,
     coloring: &Coloring,
     partition: &Partition,
@@ -134,13 +123,33 @@ pub fn run<V, E, P>(
     initial: Vec<Task>,
     syncs: Vec<Box<dyn SyncOp<V>>>,
     opts: ChromaticOpts,
-) -> (Graph<V, E>, DistStats)
+) -> anyhow::Result<(Graph<V, E>, ExecStats)>
 where
     V: DataValue,
     E: DataValue,
     P: VertexProgram<V, E>,
 {
-    assert_eq!(partition.machines(), opts.machines);
+    if partition.machines() != opts.machines {
+        bail!(
+            "chromatic engine: partition is for {} machines but the engine runs {}",
+            partition.machines(),
+            opts.machines
+        );
+    }
+    if partition.num_vertices() != graph.num_vertices() {
+        bail!(
+            "chromatic engine: partition covers {} vertices but the graph has {}",
+            partition.num_vertices(),
+            graph.num_vertices()
+        );
+    }
+    if coloring.num_vertices() != graph.num_vertices() {
+        bail!(
+            "chromatic engine: coloring covers {} vertices but the graph has {}",
+            coloring.num_vertices(),
+            graph.num_vertices()
+        );
+    }
     let start = std::time::Instant::now();
     let machines = opts.machines;
     let num_colors = coloring.num_colors().max(1);
@@ -162,7 +171,9 @@ where
     let on_sweep = &opts.on_sweep;
     let threads_per_machine = opts.threads_per_machine;
     let max_sweeps = opts.max_sweeps;
-    let total_updates = std::sync::atomic::AtomicU64::new(0);
+    // Per-machine update counts (each machine writes its own slot at
+    // exit): the ExecStats load-balance vector.
+    let updates_by_machine: Mutex<Vec<u64>> = Mutex::new(vec![0; machines]);
     let sweeps_done = std::sync::atomic::AtomicU64::new(0);
 
     // Each machine returns (global vid, V) for owned vertices and
@@ -177,7 +188,7 @@ where
             let partition = &partition;
             let initial = &initial;
             let outputs = &outputs;
-            let total_updates = &total_updates;
+            let updates_by_machine = &updates_by_machine;
             let sweeps_done = &sweeps_done;
             s.spawn(move || {
                 let mut lg = lg;
@@ -448,8 +459,6 @@ where
                             .collect();
                         sweep += 1;
                         let cont = total_pending > 0 && sweep < max_sweeps;
-                        total_updates
-                            .store(updates_sum, std::sync::atomic::Ordering::Relaxed);
                         sweeps_done.store(sweep, std::sync::atomic::Ordering::Relaxed);
                         for (k, v) in &values {
                             globals.set(k, v.clone());
@@ -548,6 +557,7 @@ where
                     })
                     .map(|(le, &ge)| (ge, edata[le].clone()))
                     .collect();
+                updates_by_machine.lock().unwrap()[me] = my_updates;
                 outputs.lock().unwrap()[me] = Some((verts, edges));
             });
         }
@@ -568,10 +578,12 @@ where
     let edata: Vec<E> = edata_opt.into_iter().map(|o| o.expect("edge unowned")).collect();
     let graph = Graph::from_parts(vdata, edata, topo);
 
-    let stats = DistStats {
-        updates: total_updates.load(std::sync::atomic::Ordering::Relaxed),
+    let updates_per_machine = updates_by_machine.into_inner().unwrap();
+    let stats = ExecStats {
+        updates: updates_per_machine.iter().sum(),
         sweeps: sweeps_done.load(std::sync::atomic::Ordering::Relaxed),
         seconds: start.elapsed().as_secs_f64(),
+        updates_per_machine,
         bytes_sent: net_stats
             .iter()
             .map(|s| s.bytes_sent.load(std::sync::atomic::Ordering::Relaxed))
@@ -581,5 +593,5 @@ where
             .map(|s| s.msgs_sent.load(std::sync::atomic::Ordering::Relaxed))
             .collect(),
     };
-    (graph, stats)
+    Ok((graph, stats))
 }

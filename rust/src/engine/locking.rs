@@ -30,8 +30,9 @@
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use super::chromatic::DistStats;
-use super::{Consistency, Ctx, GlobalValues, Scope, SyncOp, VertexProgram};
+use anyhow::bail;
+
+use super::{Consistency, Ctx, ExecStats, GlobalValues, Scope, SyncOp, VertexProgram};
 use crate::distributed::locks::{LockReq, LockTable, TxnId};
 use crate::distributed::network::{Network, NetworkModel};
 use crate::distributed::termination::{Termination, Token, TokenAction};
@@ -40,8 +41,9 @@ use crate::graph::{EdgeId, Graph, VertexId};
 use crate::partition::{MachineId, Partition};
 use crate::scheduler::{self, Policy, Task};
 
-/// Options for a locking-engine run.
-pub struct LockingOpts {
+/// Options for a locking-engine run (crate-internal: external callers go
+/// through the `engine::Engine` builder).
+pub(crate) struct LockingOpts {
     /// Machine count.
     pub machines: usize,
     /// Maximum transactions in flight per machine (lock pipelining depth;
@@ -146,21 +148,37 @@ struct Txn {
     next: usize,
 }
 
-/// Run `program` under the distributed locking engine.
-pub fn run<V, E, P>(
+/// Run `program` under the distributed locking engine. Misconfiguration
+/// (partition not matching the machine count or the graph) is an error,
+/// not a panic — it surfaces through the `engine::Engine` builder's
+/// `Result`.
+pub(crate) fn run<V, E, P>(
     graph: Graph<V, E>,
     partition: &Partition,
     program: &P,
     initial: Vec<Task>,
     syncs: Vec<Box<dyn SyncOp<V>>>,
     opts: LockingOpts,
-) -> (Graph<V, E>, DistStats)
+) -> anyhow::Result<(Graph<V, E>, ExecStats)>
 where
     V: DataValue,
     E: DataValue,
     P: VertexProgram<V, E>,
 {
-    assert_eq!(partition.machines(), opts.machines);
+    if partition.machines() != opts.machines {
+        bail!(
+            "locking engine: partition is for {} machines but the engine runs {}",
+            partition.machines(),
+            opts.machines
+        );
+    }
+    if partition.num_vertices() != graph.num_vertices() {
+        bail!(
+            "locking engine: partition covers {} vertices but the graph has {}",
+            partition.num_vertices(),
+            graph.num_vertices()
+        );
+    }
     let start = Instant::now();
     let machines = opts.machines;
     let consistency = program.consistency();
@@ -183,7 +201,10 @@ where
     let cap = opts.max_updates_per_machine;
     let seed = opts.seed;
 
-    let total_updates = std::sync::atomic::AtomicU64::new(0);
+    // Per-machine update counts (each machine writes its own slot at
+    // exit): the ExecStats load-balance vector.
+    let updates_by_machine: std::sync::Mutex<Vec<u64>> =
+        std::sync::Mutex::new(vec![0; machines]);
     let epochs = std::sync::atomic::AtomicU64::new(0);
     type MachineOut<V, E> = (Vec<(VertexId, V)>, Vec<(EdgeId, E)>);
     let outputs: std::sync::Mutex<Vec<Option<MachineOut<V, E>>>> =
@@ -194,7 +215,7 @@ where
             let partition = &partition;
             let initial = &initial;
             let outputs = &outputs;
-            let total_updates = &total_updates;
+            let updates_by_machine = &updates_by_machine;
             let epochs = &epochs;
             s.spawn(move || {
                 let me = ep.me();
@@ -396,10 +417,6 @@ where
                                     for (k, v) in &values {
                                         globals.set(k, v.clone());
                                     }
-                                    total_updates.store(
-                                        gather_updates,
-                                        std::sync::atomic::Ordering::Relaxed,
-                                    );
                                     epochs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                                     if let Some(cb) = on_sync {
                                         cb(sync_epoch, gather_updates, &globals);
@@ -723,7 +740,6 @@ where
                     for (k, v) in &values {
                         globals.set(k, v.clone());
                     }
-                    total_updates.store(updates_sum, std::sync::atomic::Ordering::Relaxed);
                     if let Some(cb) = on_sync {
                         let e = epochs.load(std::sync::atomic::Ordering::Relaxed) + 1;
                         cb(e, updates_sum, &globals);
@@ -744,6 +760,7 @@ where
                     })
                     .map(|(le, &ge)| (ge, lg.edata[le].clone()))
                     .collect();
+                updates_by_machine.lock().unwrap()[me] = my_updates;
                 outputs.lock().unwrap()[me] = Some((verts, edges));
             });
         }
@@ -763,10 +780,12 @@ where
     let edata: Vec<E> = edata_opt.into_iter().map(|o| o.expect("edge unowned")).collect();
     let graph = Graph::from_parts(vdata, edata, topo);
 
-    let stats = DistStats {
-        updates: total_updates.load(std::sync::atomic::Ordering::Relaxed),
+    let updates_per_machine = updates_by_machine.into_inner().unwrap();
+    let stats = ExecStats {
+        updates: updates_per_machine.iter().sum(),
         sweeps: epochs.load(std::sync::atomic::Ordering::Relaxed),
         seconds: start.elapsed().as_secs_f64(),
+        updates_per_machine,
         bytes_sent: net_stats
             .iter()
             .map(|s| s.bytes_sent.load(std::sync::atomic::Ordering::Relaxed))
@@ -776,7 +795,7 @@ where
             .map(|s| s.msgs_sent.load(std::sync::atomic::Ordering::Relaxed))
             .collect(),
     };
-    (graph, stats)
+    Ok((graph, stats))
 }
 
 // ---------------------------------------------------------------------------

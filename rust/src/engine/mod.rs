@@ -9,15 +9,21 @@
 //!   with access rights determined by the [`Consistency`] model.
 //! * [`SyncOp`] — the **sync operation** `(Key, Fold, Merge, Finalize,
 //!   acc(0), tau)` maintaining global aggregates readable from updates.
-//! * Engines: [`shared::run`] (the multicore runtime of the UAI'10
-//!   paper that Distributed GraphLab builds on), [`chromatic`] and
-//!   [`locking`] (the two distributed engines of Sec. 4.2).
+//! * [`Engine`] — the unified execution API: pick an [`EngineKind`]
+//!   ([`shared`], the multicore runtime of the UAI'10 paper that
+//!   Distributed GraphLab builds on, or the two distributed engines of
+//!   Sec. 4.2, [`chromatic`] and [`locking`]) at runtime, configure with
+//!   builder methods, and get back one [`Exec`] with engine-independent
+//!   [`ExecStats`]. The per-engine `run` functions are crate-internal
+//!   implementation details behind this builder.
 
+pub mod api;
 pub mod chromatic;
 pub mod locking;
 pub mod shared;
 pub mod sync;
 
+pub use api::{Engine, EngineKind, Exec, ExecStats, ENGINE_KINDS};
 pub use sync::{GlobalValues, SyncOp};
 
 use crate::graph::{EdgeId, VertexId};

@@ -22,13 +22,14 @@
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
-use super::{Consistency, Ctx, GlobalValues, Scope, SyncOp, VertexProgram};
+use super::{Consistency, Ctx, ExecStats, GlobalValues, Scope, SyncOp, VertexProgram};
 use crate::graph::{Graph, VertexId};
 use crate::scheduler::{SchedSpec, Scheduler, Task, WorkStealing};
 use crate::util::Rng;
 
-/// Options for a shared-memory run.
-pub struct SharedOpts {
+/// Options for a shared-memory run (crate-internal: external callers go
+/// through the `engine::Engine` builder).
+pub(crate) struct SharedOpts {
     /// Worker thread count.
     pub workers: usize,
     /// Hard cap on update executions (safety net for non-converging runs).
@@ -46,17 +47,6 @@ impl Default for SharedOpts {
             on_sync: None,
         }
     }
-}
-
-/// Statistics from an engine run.
-#[derive(Debug, Clone, Default)]
-pub struct RunStats {
-    /// Update-function executions.
-    pub updates: u64,
-    /// Sync barriers executed.
-    pub syncs: u64,
-    /// Wall-clock seconds.
-    pub seconds: f64,
 }
 
 // ---------------------------------------------------------------------------
@@ -329,14 +319,16 @@ impl TaskQueue {
 /// operations `syncs`, using the shared-memory engine. Returns the
 /// transformed graph and run statistics (paper Alg. 2 semantics).
 /// `spec` selects the scheduling policy and queue organization.
-pub fn run<V, E, P>(
+/// `ExecStats::sweeps` counts sync barriers; wire traffic is zeroed
+/// (nothing crosses a network here).
+pub(crate) fn run<V, E, P>(
     graph: Graph<V, E>,
     program: &P,
     initial: Vec<Task>,
     syncs: Vec<Box<dyn SyncOp<V>>>,
     spec: SchedSpec,
     opts: SharedOpts,
-) -> (Graph<V, E>, RunStats)
+) -> (Graph<V, E>, ExecStats)
 where
     V: Clone + Send + Sync + 'static,
     E: Send + Sync + 'static,
@@ -483,10 +475,14 @@ where
     // Terminal sync pass (interval-0 syncs and final refresh).
     run_all_syncs(updates.load(Ordering::Relaxed));
 
-    let stats = RunStats {
-        updates: updates.load(Ordering::Relaxed),
-        syncs: syncs_run.load(Ordering::Relaxed),
+    let total_updates = updates.load(Ordering::Relaxed);
+    let stats = ExecStats {
+        updates: total_updates,
+        sweeps: syncs_run.load(Ordering::Relaxed),
         seconds: start.elapsed().as_secs_f64(),
+        updates_per_machine: vec![total_updates],
+        bytes_sent: vec![0],
+        msgs_sent: vec![0],
     };
     let graph = Graph::from_parts(vstore.into_vec(), estore.into_vec(), topo);
     (graph, stats)
@@ -653,8 +649,8 @@ mod tests {
             },
         );
         // At least the terminal sync plus some interval syncs.
-        assert!(stats.syncs >= 2, "syncs={}", stats.syncs);
-        assert!(fired.load(Ordering::Relaxed) == stats.syncs);
+        assert!(stats.sweeps >= 2, "syncs={}", stats.sweeps);
+        assert!(fired.load(Ordering::Relaxed) == stats.sweeps);
     }
 
     #[test]

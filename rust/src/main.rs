@@ -3,8 +3,9 @@
 //! Subcommands:
 //!
 //! * `run <app>` — run one application end-to-end on synthetic data:
-//!   `pagerank | als | ner | coseg | gibbs`, with
-//!   `--engine shared|chromatic|locking`, `--machines N`, `--threads N`,
+//!   `pagerank | als | ner | coseg | gibbs`. Every app accepts
+//!   `--engine shared|chromatic|locking` (the unified `engine::Engine`
+//!   builder dispatches at runtime), plus `--machines N`, `--threads N`,
 //!   `--scheduler POLICY`, `--pjrt`, app-specific size flags, and
 //!   `--config FILE` overlays. `POLICY` is `fifo|priority|multiqueue|sweep`
 //!   (work-stealing per-worker queues on the shared engine; per-machine
@@ -19,17 +20,19 @@
 //!   cluster model.
 //! * `bench-sched` — shared-engine PageRank updates/sec at 1/2/4/8
 //!   threads, work-stealing vs single-queue, written as JSON (the
-//!   `BENCH_pr2.json` perf-trajectory artifact; also run by CI's
-//!   bench-smoke job).
+//!   `BENCH_pr2.json` perf-trajectory artifact).
+//! * `bench-engines` — the same PageRank workload through all three
+//!   engines (shared vs chromatic vs locking), written as JSON
+//!   (`BENCH_pr3.json`; also run by CI's bench-smoke job).
 //!
 //! Examples:
 //!
 //! ```text
 //! graphlab run als --machines 4 --d 20 --sweeps 20 --pjrt
 //! graphlab run pagerank --engine shared --threads 8 --scheduler multiqueue
+//! graphlab run gibbs --engine locking --machines 4
 //! graphlab figure fig6d --out-dir results/
-//! graphlab run coseg --engine locking --machines 4 --maxpending 100
-//! graphlab bench-sched --out BENCH_pr2.json
+//! graphlab bench-engines --out BENCH_pr3.json
 //! ```
 
 use std::time::Duration;
@@ -37,9 +40,7 @@ use std::time::Duration;
 use anyhow::{bail, Context as _, Result};
 
 use graphlab::apps::{self, als, coseg, gibbs, ner, pagerank};
-use graphlab::engine::chromatic::{self, ChromaticOpts};
-use graphlab::engine::locking::{self, LockingOpts};
-use graphlab::engine::shared::{self, SharedOpts};
+use graphlab::engine::{Engine, EngineKind, ENGINE_KINDS};
 use graphlab::partition::Partition;
 use graphlab::scheduler::{Policy, SchedSpec};
 use graphlab::util::cli::Args;
@@ -62,14 +63,18 @@ fn main() -> Result<()> {
         Some("partition") => partition_demo(&cfg),
         Some("calibrate") => calibrate(&cfg),
         Some("bench-sched") => bench_sched(&cfg),
+        Some("bench-engines") => bench_engines(&cfg),
         _ => {
-            eprintln!("usage: graphlab <run|figure|partition|calibrate|bench-sched> [...]\n");
-            eprintln!("  graphlab run <pagerank|als|ner|coseg|gibbs> [--engine chromatic|locking|shared]");
+            eprintln!(
+                "usage: graphlab <run|figure|partition|calibrate|bench-sched|bench-engines> [...]\n"
+            );
+            eprintln!("  graphlab run <pagerank|als|ner|coseg|gibbs> [--engine shared|chromatic|locking]");
             eprintln!("      [--machines N] [--threads N] [--scheduler fifo|priority|multiqueue|sweep|global-*]");
             eprintln!("      [--pjrt] [--sweeps N] [--d N] [--config FILE]");
             eprintln!("  graphlab figure <table2|fig1|fig5a|fig6a|fig6c|fig6d|fig7a|fig8a|fig8b|fig8c|fig8d|all>");
             eprintln!("      [--out-dir DIR]");
             eprintln!("  graphlab bench-sched [--out FILE] [--n N] [--sweeps N] [--quick]");
+            eprintln!("  graphlab bench-engines [--out FILE] [--n N] [--sweeps N] [--machines N] [--quick]");
             bail!("missing subcommand");
         }
     }
@@ -77,7 +82,10 @@ fn main() -> Result<()> {
 
 fn run_app(args: &Args, cfg: &Config) -> Result<()> {
     let app = args.pos(1).unwrap_or("pagerank");
-    let engine = cfg.str_or("engine", "chromatic");
+    let engine: EngineKind = cfg
+        .str_or("engine", "chromatic")
+        .parse()
+        .context("--engine")?;
     let machines = cfg.num_or("machines", 2usize)?;
     let threads = cfg.num_or("threads", 2usize)?;
     let sweeps = cfg.num_or("sweeps", 20u64)?;
@@ -97,7 +105,7 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
             let edges = graphlab::datagen::web_graph(n, cfg.num_or("avg-degree", 8)?, seed);
             let g = pagerank::build(n, &edges, 0.15);
             let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-6, n, use_pjrt };
-            run_generic(g, prog, engine.as_str(), machines, threads, sweeps, cfg,
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg,
                 vec![Box::new(pagerank::total_rank_sync())], "total_rank")
         }
         "als" => {
@@ -108,7 +116,7 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
             let g = als::build(&data, d, seed);
             println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
             let prog = als::Als { d, lambda: 0.08, use_pjrt };
-            run_generic(g, prog, engine.as_str(), machines, threads, sweeps, cfg,
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg,
                 vec![Box::new(als::rmse_sync())], "rmse")
         }
         "ner" => {
@@ -118,7 +126,7 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
             let g = ner::build(&data);
             println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
             let prog = ner::Coem { k: 8, smoothing: 0.01, eps: 1e-4, use_pjrt };
-            run_generic(g, prog, engine.as_str(), machines, threads, sweeps, cfg,
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg,
                 vec![Box::new(ner::accuracy_sync())], "accuracy")
         }
         "coseg" => {
@@ -128,27 +136,27 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
             let g = coseg::build(&data, 0.8);
             println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
             let prog = coseg::Coseg { labels: 5, eps: 1e-3, sigma2: 0.5, use_pjrt };
-            run_generic(g, prog, engine.as_str(), machines, threads, sweeps, cfg,
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg,
                 vec![Box::new(coseg::gmm_sync(5)), Box::new(coseg::accuracy_sync())], "accuracy")
         }
         "gibbs" => {
             let data = graphlab::datagen::mrf(cfg.num_or("side", 64)?, 0.4, seed);
             let g = gibbs::build(&data);
-            let _n = g.num_vertices();
             let prog = gibbs::Gibbs { coupling: 0.4, target_samples: sweeps.max(10), seed };
-            run_generic(g, prog, engine.as_str(), machines, threads, u64::MAX, cfg,
+            run_generic(g, prog, engine, machines, threads, u64::MAX, cfg,
                 vec![Box::new(gibbs::magnetization_sync())], "magnetization")
         }
         other => bail!("unknown app '{other}'"),
     }
 }
 
-/// Dispatch a (graph, program) pair to the selected engine.
+/// Run a (graph, program) pair on the engine selected by `--engine`: one
+/// builder call covers all three engines.
 #[allow(clippy::too_many_arguments)]
 fn run_generic<V, E, P>(
     g: graphlab::graph::Graph<V, E>,
     prog: P,
-    engine: &str,
+    engine: EngineKind,
     machines: usize,
     threads: usize,
     sweeps: u64,
@@ -164,77 +172,39 @@ where
     let n = g.num_vertices();
     let initial = apps::all_vertices(n);
     let seed = cfg.num_or("seed", 1u64)?;
-    match engine {
-        "chromatic" => {
-            let coloring = chromatic::color_for(&g, prog.consistency());
-            println!("coloring: {} colors", coloring.num_colors());
-            let partition = Partition::random(n, machines, 7);
-            let (_g, stats) = chromatic::run(
-                g, &coloring, &partition, &prog, initial, syncs,
-                ChromaticOpts {
-                    machines,
-                    threads_per_machine: threads,
-                    max_sweeps: sweeps,
-                    on_sweep: Some(Box::new(move |s, u, gv| {
-                        if let Some(v) = gv.get(probe_key) {
-                            println!("sweep {s:>3}: updates={u:>9} {probe_key}={:.5}", v[0]);
-                        }
-                    })),
-                    ..Default::default()
-                },
-            );
-            println!("done: {} updates, {} sweeps, {:.2}s, {} MB sent",
-                stats.updates, stats.sweeps, stats.seconds,
-                stats.bytes_sent.iter().sum::<u64>() / 1_000_000);
-        }
-        "locking" => {
-            let partition = Partition::blocked(n, machines);
-            let cap = cfg.num_or("max-updates", n as u64 * sweeps.min(1000))? / machines as u64;
-            let policy = Policy::parse(&cfg.str_or("scheduler", "priority"))
-                .context("--scheduler (locking engine)")?;
-            let (_g, stats) = locking::run(
-                g, &partition, &prog, initial, syncs,
-                LockingOpts {
-                    machines,
-                    maxpending: cfg.num_or("maxpending", 64usize)?,
-                    scheduler: policy,
-                    sync_period: Some(Duration::from_millis(cfg.num_or("sync-ms", 100u64)?)),
-                    max_updates_per_machine: cap,
-                    on_sync: Some(Box::new(move |e, u, gv| {
-                        if let Some(v) = gv.get(probe_key) {
-                            println!("epoch {e:>3}: updates={u:>9} {probe_key}={:.5}", v[0]);
-                        }
-                    })),
-                    ..Default::default()
-                },
-            );
-            println!("done: {} updates, {} epochs, {:.2}s, {} MB sent",
-                stats.updates, stats.sweeps, stats.seconds,
-                stats.bytes_sent.iter().sum::<u64>() / 1_000_000);
-        }
-        "shared" => {
-            let spec = SchedSpec::parse(&cfg.str_or("scheduler", "fifo"), seed)
-                .context("--scheduler (shared engine)")?;
-            let (_g, stats) = shared::run(
-                g, &prog, initial, syncs, spec,
-                SharedOpts {
-                    // Respect --threads exactly: --threads 1 must give the
-                    // deterministic single-worker run (it used to be
-                    // silently raised to the machine count).
-                    workers: threads,
-                    max_updates: n as u64 * sweeps.min(10_000),
-                    on_sync: Some(Box::new(move |u, gv| {
-                        if let Some(v) = gv.get(probe_key) {
-                            println!("updates={u:>9} {probe_key}={:.5}", v[0]);
-                        }
-                    })),
-                },
-            );
-            println!("done: {} updates, {:.2}s ({} scheduler)",
-                stats.updates, stats.seconds, spec.name());
-        }
-        other => bail!("unknown engine '{other}'"),
-    }
+    let sched_default = if engine == EngineKind::Locking { "priority" } else { "fifo" };
+    let spec = SchedSpec::parse(&cfg.str_or("scheduler", sched_default), seed)
+        .context("--scheduler")?;
+    // Update cap: a safety net for non-converging runs (the chromatic
+    // engine is capped in whole sweeps via max_sweeps instead).
+    let max_updates = cfg.num_or("max-updates", n as u64 * sweeps.min(10_000))?;
+    let exec = Engine::new(engine)
+        .workers(threads)
+        .machines(machines)
+        .scheduler(spec)
+        .seed(seed)
+        .max_updates(max_updates)
+        .max_sweeps(sweeps)
+        .maxpending(cfg.num_or("maxpending", 64usize)?)
+        .sync_period(Duration::from_millis(cfg.num_or("sync-ms", 100u64)?))
+        .syncs(syncs)
+        .on_progress(move |epoch, updates, gv| {
+            if let Some(v) = gv.get(probe_key) {
+                println!("epoch {epoch:>3}: updates={updates:>9} {probe_key}={:.5}", v[0]);
+            }
+        })
+        .run(g, &prog, initial)?;
+    let stats = &exec.stats;
+    println!(
+        "done: {} updates, {} epochs, {:.2}s on {engine} \
+         ({} machine(s), balance {:.2}, {} MB sent)",
+        stats.updates,
+        stats.sweeps,
+        stats.seconds,
+        stats.machines(),
+        stats.balance(),
+        stats.total_bytes() / 1_000_000
+    );
     Ok(())
 }
 
@@ -293,7 +263,7 @@ fn bench_sched(cfg: &Config) -> Result<()> {
 
     // eps = 0 keeps every update rescheduling its neighbors, so the run is
     // scheduler-bound until the max_updates cap — exactly the contention
-    // path this PR changes.
+    // path the scheduler work changes.
     let prog = pagerank::PageRank { alpha: 0.15, eps: 0.0, n, use_pjrt: false };
     struct Row {
         scheduler: String,
@@ -306,15 +276,13 @@ fn bench_sched(cfg: &Config) -> Result<()> {
     for spec in specs {
         for &threads in &thread_counts {
             let g = pagerank::build(n, &edges, 0.15);
-            let (_g, stats) = shared::run(
-                g, &prog, apps::all_vertices(n), vec![], spec,
-                SharedOpts {
-                    workers: threads,
-                    max_updates: n as u64 * sweeps,
-                    ..Default::default()
-                },
-            );
-            let ups = stats.updates as f64 / stats.seconds.max(1e-9);
+            let exec = Engine::new(EngineKind::Shared)
+                .workers(threads)
+                .scheduler(spec)
+                .max_updates(n as u64 * sweeps)
+                .run(g, &prog, apps::all_vertices(n))?;
+            let stats = exec.stats;
+            let ups = stats.updates_per_sec();
             println!(
                 "  {:<16} threads={threads}: {:>9} updates in {:.3}s = {:>12.0} updates/s",
                 spec.name(), stats.updates, stats.seconds, ups
@@ -355,6 +323,97 @@ fn bench_sched(cfg: &Config) -> Result<()> {
          \"command\": \"graphlab bench-sched\",\n  \"n\": {n},\n  \"avg_degree\": 8,\n  \
          \"sweeps\": {sweeps},\n  \"quick\": {quick},\n  \
          \"ws_beats_global_at_4_threads\": {improved},\n  \"results\": [\n{}\n  ]\n}}\n",
+        body.join(",\n")
+    );
+    std::fs::write(&out_path, json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+/// Cross-engine PageRank comparison through the unified `Engine` builder:
+/// the same workload on shared vs chromatic vs locking, updates/sec per
+/// engine, written as JSON (`BENCH_pr3.json`, reusing the `bench-sched`
+/// schema). `--quick` shrinks the workload for CI smoke.
+fn bench_engines(cfg: &Config) -> Result<()> {
+    let quick = cfg.bool_or("quick", false);
+    let n = cfg.num_or("n", if quick { 3_000 } else { 10_000usize })?;
+    let sweeps = cfg.num_or("sweeps", if quick { 3 } else { 10u64 })?;
+    let machines = cfg.num_or("machines", 4usize)?;
+    let threads = cfg.num_or("threads", 4usize)?;
+    let out_path = cfg.str_or("out", "BENCH_pr3.json");
+
+    let edges = graphlab::datagen::web_graph(n, 8, 1);
+    println!(
+        "== bench-engines: PageRank, n={n}, {} edges, {sweeps} sweeps, all engines ==",
+        edges.len()
+    );
+    // eps = 0: every update reschedules its neighbors, so every engine
+    // executes a full `sweeps`-worth of updates before hitting its cap —
+    // the same amount of numeric work on every engine.
+    let prog = pagerank::PageRank { alpha: 0.15, eps: 0.0, n, use_pjrt: false };
+    struct Row {
+        engine: &'static str,
+        parallelism: usize,
+        updates: u64,
+        seconds: f64,
+        ups: f64,
+        mbytes: u64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    for kind in ENGINE_KINDS {
+        let g = pagerank::build(n, &edges, 0.15);
+        let exec = Engine::new(kind)
+            .workers(if kind == EngineKind::Shared { threads } else { 1 })
+            .machines(machines)
+            .seed(1)
+            .max_updates(n as u64 * sweeps)
+            .max_sweeps(sweeps)
+            .maxpending(256)
+            .run(g, &prog, apps::all_vertices(n))?;
+        let stats = exec.stats;
+        let parallelism = if kind == EngineKind::Shared { threads } else { machines };
+        let ups = stats.updates_per_sec();
+        println!(
+            "  {:<10} x{parallelism}: {:>9} updates in {:.3}s = {:>12.0} updates/s, \
+             balance {:.2}, {} MB sent",
+            kind.name(),
+            stats.updates,
+            stats.seconds,
+            ups,
+            stats.balance(),
+            stats.total_bytes() / 1_000_000
+        );
+        rows.push(Row {
+            engine: kind.name(),
+            parallelism,
+            updates: stats.updates,
+            seconds: stats.seconds,
+            ups,
+            mbytes: stats.total_bytes() / 1_000_000,
+        });
+    }
+
+    let fastest = rows
+        .iter()
+        .max_by(|a, b| a.ups.partial_cmp(&b.ups).unwrap())
+        .map(|r| r.engine)
+        .unwrap_or("none");
+    println!("fastest engine on this workload: {fastest}");
+
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"engine\": \"{}\", \"threads\": {}, \"updates\": {}, \"seconds\": {:.6}, \"updates_per_sec\": {:.1}, \"mb_sent\": {}}}",
+                r.engine, r.parallelism, r.updates, r.seconds, r.ups, r.mbytes
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"cross-engine PageRank comparison (PR 3, unified Engine API)\",\n  \
+         \"command\": \"graphlab bench-engines\",\n  \"n\": {n},\n  \"avg_degree\": 8,\n  \
+         \"sweeps\": {sweeps},\n  \"machines\": {machines},\n  \"quick\": {quick},\n  \
+         \"fastest_engine\": \"{fastest}\",\n  \"results\": [\n{}\n  ]\n}}\n",
         body.join(",\n")
     );
     std::fs::write(&out_path, json).with_context(|| format!("writing {out_path}"))?;

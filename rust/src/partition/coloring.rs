@@ -130,6 +130,11 @@ impl Coloring {
         self.num_colors
     }
 
+    /// Number of vertices this coloring covers (engine-config validation).
+    pub fn num_vertices(&self) -> usize {
+        self.colors.len()
+    }
+
     /// Vertices grouped by color.
     pub fn by_color(&self) -> Vec<Vec<VertexId>> {
         let mut groups = vec![Vec::new(); self.num_colors as usize];

@@ -46,10 +46,9 @@ fn mpi(nodes: usize, w: &WorkloadModel) -> IterCost {
 }
 use crate::apps::{self, als, coseg, ner};
 use crate::distributed::network::NetworkModel;
-use crate::engine::chromatic::{self, ChromaticOpts};
-use crate::engine::locking::{self, LockingOpts};
-use crate::engine::Consistency;
+use crate::engine::{Consistency, Engine, EngineKind};
 use crate::partition::{Coloring, Partition};
+use crate::scheduler::{Policy, SchedSpec};
 use crate::util::csv::{f, CsvWriter};
 
 const NODE_SWEEP: [usize; 6] = [4, 8, 16, 24, 32, 64];
@@ -123,26 +122,20 @@ fn fig1(out: &Path) -> Result<()> {
         };
         let series = Arc::new(Mutex::new(Vec::<(u64, u64, f64)>::new()));
         let series2 = series.clone();
-        let (_g, _stats) = locking::run(
-            g,
-            &partition,
-            &prog,
-            apps::all_vertices(n),
-            vec![Box::new(als::rmse_sync())],
-            LockingOpts {
-                machines,
-                maxpending: 32,
-                scheduler: crate::scheduler::Policy::Fifo,
-                sync_period: Some(Duration::from_millis(25)),
-                max_updates_per_machine: (n as u64 * 25) / machines as u64,
-                on_sync: Some(Box::new(move |e, u, g| {
-                    if let Some(r) = g.get("rmse") {
-                        series2.lock().unwrap().push((e, u, r[0]));
-                    }
-                })),
-                ..Default::default()
-            },
-        );
+        let _exec = Engine::new(EngineKind::Locking)
+            .machines(machines)
+            .maxpending(32)
+            .scheduler(SchedSpec::ws(Policy::Fifo, 1))
+            .sync_period(Duration::from_millis(25))
+            .max_updates(n as u64 * 25)
+            .with_partition(partition)
+            .sync(als::rmse_sync())
+            .on_progress(move |e, u, g| {
+                if let Some(r) = g.get("rmse") {
+                    series2.lock().unwrap().push((e, u, r[0]));
+                }
+            })
+            .run(g, &prog, apps::all_vertices(n))?;
         for (e, u, r) in series.lock().unwrap().iter() {
             w.rowd(&[&mode, e, u, &f(*r)])?;
         }
@@ -195,12 +188,14 @@ fn fig5a(out: &Path) -> Result<()> {
         let coloring = Coloring::bipartite(&g).expect("bipartite");
         let partition = Partition::random(n, 4, 5);
         let prog = als::Als { d, lambda: 0.2, use_pjrt: false };
-        let (g, _) = chromatic::run(
-            g, &coloring, &partition, &prog,
-            apps::all_vertices(n),
-            vec![Box::new(als::rmse_sync())],
-            ChromaticOpts { machines: 4, max_sweeps: 30, ..Default::default() },
-        );
+        let exec = Engine::new(EngineKind::Chromatic)
+            .machines(4)
+            .max_sweeps(30)
+            .with_coloring(coloring)
+            .with_partition(partition)
+            .sync(als::rmse_sync())
+            .run(g, &prog, apps::all_vertices(n))?;
+        let g = exec.graph;
         let train_rmse = als::rmse_direct(&g);
         let mut sse = 0.0f64;
         for &(u, m, r) in test {
@@ -337,21 +332,17 @@ fn fig8b(out: &Path) -> Result<()> {
                 Partition::blocked(n, 4)
             };
             let prog = coseg::Coseg { labels: 5, eps: 5e-3, sigma2: 0.5, use_pjrt: false };
-            let (_g, stats) = locking::run(
-                g,
-                &partition,
-                &prog,
-                apps::all_vertices(n),
-                vec![],
-                LockingOpts {
-                    machines: 4,
-                    maxpending,
-                    scheduler: crate::scheduler::Policy::Priority,
-                    network: NetworkModel { latency: Duration::from_micros(500) },
-                    max_updates_per_machine: n as u64 * 4,
-                    ..Default::default()
-                },
-            );
+            // Per-machine cap of 4 sweeps' worth: the builder splits
+            // max_updates evenly across the 4 machines.
+            let exec = Engine::new(EngineKind::Locking)
+                .machines(4)
+                .maxpending(maxpending)
+                .scheduler(SchedSpec::ws(Policy::Priority, 1))
+                .network(NetworkModel { latency: Duration::from_micros(500) })
+                .max_updates(n as u64 * 16)
+                .with_partition(partition)
+                .run(g, &prog, apps::all_vertices(n))?;
+            let stats = exec.stats;
             println!(
                 "fig8b {pname} maxpending={maxpending}: {:.2}s ({} updates)",
                 stats.seconds, stats.updates
@@ -418,21 +409,19 @@ fn fig8d(out: &Path) -> Result<()> {
         // compute test RMSE at the end of each d-run (end point), plus the
         // sync series for the curve shape.
         let rows2 = rows.clone();
-        let (g, _) = chromatic::run(
-            g0, &coloring, &partition, &prog,
-            apps::all_vertices(n),
-            vec![Box::new(als::rmse_sync())],
-            ChromaticOpts {
-                machines: 4,
-                max_sweeps: 30,
-                on_sweep: Some(Box::new(move |s, _u, gv| {
-                    if let Some(r) = gv.get("rmse") {
-                        rows2.lock().unwrap().push((s, r[0]));
-                    }
-                })),
-                ..Default::default()
-            },
-        );
+        let exec = Engine::new(EngineKind::Chromatic)
+            .machines(4)
+            .max_sweeps(30)
+            .with_coloring(coloring)
+            .with_partition(partition)
+            .sync(als::rmse_sync())
+            .on_progress(move |s, _u, gv| {
+                if let Some(r) = gv.get("rmse") {
+                    rows2.lock().unwrap().push((s, r[0]));
+                }
+            })
+            .run(g0, &prog, apps::all_vertices(n))?;
+        let g = exec.graph;
         // Final held-out RMSE anchors the curve; the sync series gives the
         // per-sweep shape (train RMSE scaled to end at the test value).
         let mut sse = 0.0f64;

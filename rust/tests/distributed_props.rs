@@ -121,7 +121,7 @@ fn prop_ghost_copies_coherent_after_chromatic_run() {
     // result graph (assembled from owner copies) by re-running: any
     // incoherence manifests as nondeterminism vs the 1-machine run.
     use graphlab::apps::{self, pagerank};
-    use graphlab::engine::chromatic::{self, ChromaticOpts};
+    use graphlab::engine::{Engine, EngineKind};
     for seed in 0..5 {
         let n = 150;
         let edges = graphlab::datagen::web_graph(n, 5, 100 + seed);
@@ -130,10 +130,14 @@ fn prop_ghost_copies_coherent_after_chromatic_run() {
             let coloring = Coloring::greedy(&g);
             let partition = Partition::random(n, machines, seed);
             let prog = pagerank::PageRank { alpha: 0.15, eps: 0.0, n, use_pjrt: false };
-            let (g, _) = chromatic::run(
-                g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
-                ChromaticOpts { machines, max_sweeps: 4, ..Default::default() },
-            );
+            let exec = Engine::new(EngineKind::Chromatic)
+                .machines(machines)
+                .max_sweeps(4)
+                .with_coloring(coloring)
+                .with_partition(partition)
+                .run(g, &prog, apps::all_vertices(n))
+                .unwrap();
+            let g = exec.graph;
             g.vertex_ids().map(|v| g.vertex_data(v).rank).collect::<Vec<f32>>()
         };
         let r1 = run(1);

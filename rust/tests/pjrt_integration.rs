@@ -3,9 +3,9 @@
 //! `make artifacts` has not been run).
 
 use graphlab::apps::{self, als, coseg, ner};
-use graphlab::engine::chromatic::{self, ChromaticOpts};
-use graphlab::engine::locking::{self, LockingOpts};
+use graphlab::engine::{Engine, EngineKind};
 use graphlab::partition::{Coloring, Partition};
+use graphlab::scheduler::{Policy, SchedSpec};
 
 fn artifacts() -> bool {
     if graphlab::runtime::available() {
@@ -28,11 +28,14 @@ fn als_pjrt_equals_native_distributed() {
         let coloring = Coloring::bipartite(&g).unwrap();
         let partition = Partition::random(n, 3, 3);
         let prog = als::Als { d: 10, lambda: 0.08, use_pjrt };
-        let (g, _) = chromatic::run(
-            g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
-            ChromaticOpts { machines: 3, max_sweeps: 6, ..Default::default() },
-        );
-        als::rmse_direct(&g)
+        let exec = Engine::new(EngineKind::Chromatic)
+            .machines(3)
+            .max_sweeps(6)
+            .with_coloring(coloring)
+            .with_partition(partition)
+            .run(g, &prog, apps::all_vertices(n))
+            .unwrap();
+        als::rmse_direct(&exec.graph)
     };
     let (nat, pj) = (rmse(false), rmse(true));
     assert!((nat - pj).abs() < 5e-3, "native={nat} pjrt={pj}");
@@ -51,10 +54,14 @@ fn coem_pjrt_equals_native_distributed() {
         let coloring = Coloring::bipartite(&g).unwrap();
         let partition = Partition::random(n, 2, 3);
         let prog = ner::Coem { k: 8, smoothing: 0.01, eps: 1e-4, use_pjrt };
-        let (g, _) = chromatic::run(
-            g, &coloring, &partition, &prog, apps::all_vertices(n), vec![],
-            ChromaticOpts { machines: 2, max_sweeps: 6, ..Default::default() },
-        );
+        let exec = Engine::new(EngineKind::Chromatic)
+            .machines(2)
+            .max_sweeps(6)
+            .with_coloring(coloring)
+            .with_partition(partition)
+            .run(g, &prog, apps::all_vertices(n))
+            .unwrap();
+        let g = exec.graph;
         g.vertex_ids().flat_map(|v| g.vertex_data(v).dist.clone()).collect::<Vec<f32>>()
     };
     let nat = final_dists(false);
@@ -73,13 +80,15 @@ fn lbp_pjrt_runs_in_locking_engine() {
     let n = g.num_vertices();
     let partition = Partition::blocked(n, 2);
     let prog = coseg::Coseg { labels: 5, eps: 5e-3, sigma2: 0.5, use_pjrt: true };
-    let (g, stats) = locking::run(
-        g, &partition, &prog, apps::all_vertices(n), vec![],
-        LockingOpts {
-            machines: 2, maxpending: 64, scheduler: graphlab::scheduler::Policy::Priority,
-            max_updates_per_machine: n as u64 * 10, ..Default::default()
-        },
-    );
+    let exec = Engine::new(EngineKind::Locking)
+        .machines(2)
+        .maxpending(64)
+        .scheduler(SchedSpec::ws(Policy::Priority, 1))
+        .max_updates(n as u64 * 20)
+        .with_partition(partition)
+        .run(g, &prog, apps::all_vertices(n))
+        .unwrap();
+    let (g, stats) = (exec.graph, exec.stats);
     assert!(stats.updates >= n as u64 / 2);
     // Beliefs are normalized distributions.
     for v in g.vertex_ids() {
