@@ -15,17 +15,17 @@
 //! reduced host-side (the contraction is linear) and a single batched
 //! `als_solve` performs the Cholesky solves.
 
-use crate::distributed::DataValue;
 use crate::engine::sync::FnSync;
 use crate::engine::{Consistency, Ctx, Scope, VertexProgram};
 use crate::graph::{Graph, GraphBuilder};
 use crate::runtime::{self, Input};
 use crate::util::matrix::{self, Mat};
 use crate::util::Rng;
+use crate::wire::{self, Wire};
 
 /// Vertex data: latent factor plus local-error bookkeeping for the RMSE
-/// sync (paper Table 2: vertex data `8d + 13` bytes — ours is `4d + 9`
-/// modeled, f32 instead of f64).
+/// sync (paper Table 2: vertex data `8d + 13` bytes — ours encodes
+/// `4d + 13`, f32 instead of f64).
 #[derive(Debug, Clone, PartialEq)]
 pub struct AlsVertex {
     /// Latent factor (row of U for users, column of V for movies).
@@ -39,22 +39,40 @@ pub struct AlsVertex {
     pub is_user: bool,
 }
 
-impl DataValue for AlsVertex {
-    fn wire_bytes(&self) -> u64 {
-        4 * self.factor.len() as u64 + 9
+/// `4d + 13` bytes on the wire: length-prefixed factor + sse + cnt + flag.
+impl Wire for AlsVertex {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.factor.encode(out);
+        self.sse.encode(out);
+        self.cnt.encode(out);
+        self.is_user.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(AlsVertex {
+            factor: Vec::<f32>::decode(input)?,
+            sse: f32::decode(input)?,
+            cnt: f32::decode(input)?,
+            is_user: bool::decode(input)?,
+        })
     }
 }
 
-/// Edge data: the rating (Table 2: 16 bytes; ours 4 modeled).
+/// Edge data: the rating (Table 2: 16 bytes; ours encodes 4).
 #[derive(Debug, Clone, PartialEq)]
 pub struct AlsEdge {
     /// Observed rating.
     pub rating: f32,
 }
 
-impl DataValue for AlsEdge {
-    fn wire_bytes(&self) -> u64 {
-        4
+/// 4 bytes on the wire (one f32 rating).
+impl Wire for AlsEdge {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.rating.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(AlsEdge {
+            rating: f32::decode(input)?,
+        })
     }
 }
 

@@ -15,12 +15,12 @@
 //! updates read them back through `Ctx::global("gmm")` to refresh node
 //! potentials.
 
-use crate::distributed::DataValue;
 use crate::engine::sync::FnSync;
 use crate::engine::{Consistency, Ctx, Scope, VertexProgram};
 use crate::graph::{Graph, GraphBuilder};
 use crate::runtime::{self, Input};
 use crate::util::matrix;
+use crate::wire::{self, Wire};
 
 /// Vertex data: one super-pixel.
 #[derive(Debug, Clone, PartialEq)]
@@ -35,10 +35,22 @@ pub struct CosegVertex {
     pub truth: u8,
 }
 
-impl DataValue for CosegVertex {
-    fn wire_bytes(&self) -> u64 {
-        // Paper Table 2: 392 bytes. Ours: 3 banks of 4L + 1.
-        12 * self.belief.len() as u64 + 1
+/// Paper Table 2: 392 bytes. Ours encodes three length-prefixed f32 banks
+/// plus the truth byte.
+impl Wire for CosegVertex {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.belief.encode(out);
+        self.npot.encode(out);
+        self.appearance.encode(out);
+        self.truth.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(CosegVertex {
+            belief: Vec::<f32>::decode(input)?,
+            npot: Vec::<f32>::decode(input)?,
+            appearance: Vec::<f32>::decode(input)?,
+            truth: u8::decode(input)?,
+        })
     }
 }
 
@@ -53,10 +65,19 @@ pub struct CosegEdge {
     pub lam: f32,
 }
 
-impl DataValue for CosegEdge {
-    fn wire_bytes(&self) -> u64 {
-        // Paper Table 2: 80 bytes.
-        8 * self.msg_to_lo.len() as u64 + 4
+/// Paper Table 2: 80 bytes. Ours encodes both directed messages + lam.
+impl Wire for CosegEdge {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.msg_to_lo.encode(out);
+        self.msg_to_hi.encode(out);
+        self.lam.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(CosegEdge {
+            msg_to_lo: Vec::<f32>::decode(input)?,
+            msg_to_hi: Vec::<f32>::decode(input)?,
+            lam: f32::decode(input)?,
+        })
     }
 }
 

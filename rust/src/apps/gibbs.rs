@@ -10,11 +10,11 @@
 //! Randomness is derived deterministically from (vertex, sample counter),
 //! keeping the update function stateless as the abstraction demands.
 
-use crate::distributed::DataValue;
 use crate::engine::sync::FnSync;
 use crate::engine::{Consistency, Ctx, Scope, VertexProgram};
 use crate::graph::{Graph, GraphBuilder};
 use crate::util::Rng;
+use crate::wire::{self, Wire};
 
 /// Vertex data: spin + external field + marginal bookkeeping.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,9 +29,21 @@ pub struct GibbsVertex {
     pub samples: u64,
 }
 
-impl DataValue for GibbsVertex {
-    fn wire_bytes(&self) -> u64 {
-        21
+/// 21 bytes on the wire: spin + field + the two sample counters.
+impl Wire for GibbsVertex {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.spin.encode(out);
+        self.field.encode(out);
+        self.ones.encode(out);
+        self.samples.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(GibbsVertex {
+            spin: u8::decode(input)?,
+            field: f32::decode(input)?,
+            ones: u64::decode(input)?,
+            samples: u64::decode(input)?,
+        })
     }
 }
 

@@ -7,12 +7,12 @@
 //! the paper's light-weight, network-stressing workload: O(deg) float
 //! work against `4K + small` bytes of vertex data.
 
-use crate::distributed::DataValue;
 use crate::engine::sync::FnSync;
 use crate::engine::{Consistency, Ctx, Scope, VertexProgram};
 use crate::graph::{Graph, GraphBuilder};
 use crate::runtime::{self, Input};
 use crate::util::matrix;
+use crate::wire::{self, Wire};
 
 /// Vertex data: type distribution + evaluation bookkeeping.
 #[derive(Debug, Clone, PartialEq)]
@@ -27,10 +27,22 @@ pub struct NerVertex {
     pub truth: Option<u8>,
 }
 
-impl DataValue for NerVertex {
-    fn wire_bytes(&self) -> u64 {
-        // Paper Table 2 lists 816-byte NER vertex data; ours is 4K+4.
-        4 * self.dist.len() as u64 + 4
+/// Paper Table 2 lists 816-byte NER vertex data; ours encodes the
+/// length-prefixed distribution plus three tag bytes.
+impl Wire for NerVertex {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.dist.encode(out);
+        self.is_np.encode(out);
+        self.seed.encode(out);
+        self.truth.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(NerVertex {
+            dist: Vec::<f32>::decode(input)?,
+            is_np: bool::decode(input)?,
+            seed: Option::<u8>::decode(input)?,
+            truth: Option::<u8>::decode(input)?,
+        })
     }
 }
 
@@ -41,9 +53,15 @@ pub struct NerEdge {
     pub count: f32,
 }
 
-impl DataValue for NerEdge {
-    fn wire_bytes(&self) -> u64 {
-        4
+/// 4 bytes on the wire (one f32 count).
+impl Wire for NerEdge {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.count.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(NerEdge {
+            count: f32::decode(input)?,
+        })
     }
 }
 

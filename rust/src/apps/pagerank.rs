@@ -12,10 +12,10 @@
 //! rounds feeding the previous partial sum back through `base` (the
 //! reduction is linear).
 
-use crate::distributed::DataValue;
 use crate::engine::{Consistency, Ctx, Scope, VertexProgram};
 use crate::graph::{Graph, GraphBuilder};
 use crate::runtime::{self, Input};
+use crate::wire::{self, Wire};
 
 /// Vertex data: current rank estimate.
 #[derive(Debug, Clone, PartialEq)]
@@ -24,9 +24,15 @@ pub struct PrVertex {
     pub rank: f32,
 }
 
-impl DataValue for PrVertex {
-    fn wire_bytes(&self) -> u64 {
-        4
+/// 4 bytes on the wire (one f32 rank).
+impl Wire for PrVertex {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.rank.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(PrVertex {
+            rank: f32::decode(input)?,
+        })
     }
 }
 
@@ -40,9 +46,17 @@ pub struct PrEdge {
     pub to_hi: f32,
 }
 
-impl DataValue for PrEdge {
-    fn wire_bytes(&self) -> u64 {
-        8
+/// 8 bytes on the wire (two directed f32 weights).
+impl Wire for PrEdge {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.to_lo.encode(out);
+        self.to_hi.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(PrEdge {
+            to_lo: f32::decode(input)?,
+            to_hi: f32::decode(input)?,
+        })
     }
 }
 

@@ -8,9 +8,13 @@
 //! ids.
 
 use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context as _};
 
 use crate::graph::{EdgeId, Graph, VertexId};
-use crate::partition::{MachineId, Partition};
+use crate::partition::{atoms, MachineId, Partition};
+use crate::wire::Wire;
 
 /// Local vertex index (dense, machine-private).
 pub type LocalVid = u32;
@@ -149,6 +153,162 @@ impl<V: Clone, E: Clone> LocalGraph<V, E> {
             mirrors,
             edge_mirror,
         }
+    }
+
+    /// Build machine `machine`'s local graph by replaying **only its own
+    /// atom journals** from the on-disk store at `dir` (paper Sec. 4.1:
+    /// "Each atom file is a simple binary compressed journal of graph
+    /// generating commands" — Distributed GraphLab, arXiv 1204.6078).
+    ///
+    /// `atom_to_machine` is the phase-2 placement from
+    /// [`atoms::AtomStore::place`]. The replay runs the same construction
+    /// algorithm as [`LocalGraph::build`] over the journal records (whose
+    /// adjacency is stored in global CSR order), so the result is
+    /// field-for-field identical to the in-memory build with the matching
+    /// partition — property-tested in `rust/tests/atoms_disk.rs`.
+    pub fn from_atom_files(
+        dir: &Path,
+        atom_to_machine: &[MachineId],
+        machine: MachineId,
+    ) -> anyhow::Result<Self>
+    where
+        V: Wire,
+        E: Wire,
+    {
+        let store = atoms::AtomStore::open(dir)?;
+        store.check_types::<V, E>()?;
+        if atom_to_machine.len() != store.atoms.num_atoms() {
+            bail!(
+                "atom placement covers {} atoms but the store has {}",
+                atom_to_machine.len(),
+                store.atoms.num_atoms()
+            );
+        }
+        let n = store.num_vertices;
+        let owner_of = |v: VertexId| atom_to_machine[store.atoms.atom(v)];
+
+        // Replay this machine's journals into lookup maps.
+        let mut vdata_map: HashMap<VertexId, V> = HashMap::new();
+        let mut adj_map: HashMap<VertexId, Vec<(VertexId, EdgeId)>> = HashMap::new();
+        let mut edge_map: HashMap<EdgeId, (VertexId, VertexId, E)> = HashMap::new();
+        for atom in 0..store.atoms.num_atoms() {
+            if atom_to_machine[atom] != machine {
+                continue;
+            }
+            let (verts, ghosts, edges) = atoms::read_atom_file::<V, E>(dir, atom)?;
+            for (v, adj, data) in verts {
+                vdata_map.insert(v, data);
+                adj_map.insert(v, adj);
+            }
+            for (v, data) in ghosts {
+                // Ghost snapshots may duplicate vertices owned by another
+                // of this machine's atoms; interior records win.
+                vdata_map.entry(v).or_insert(data);
+            }
+            for (e, a, b, data) in edges {
+                edge_map.entry(e).or_insert((a, b, data));
+            }
+        }
+
+        // From here on: the same construction as `build`, reading the
+        // journal maps instead of the global graph.
+        let mut l2g: Vec<VertexId> = Vec::new();
+        let mut g2l: HashMap<VertexId, LocalVid> = HashMap::new();
+        for v in 0..n as VertexId {
+            if owner_of(v) == machine {
+                g2l.insert(v, l2g.len() as LocalVid);
+                l2g.push(v);
+            }
+        }
+        let owned = l2g.len();
+        fn nbrs_of<'a>(
+            adj_map: &'a HashMap<VertexId, Vec<(VertexId, EdgeId)>>,
+            v: VertexId,
+        ) -> anyhow::Result<&'a [(VertexId, EdgeId)]> {
+            adj_map
+                .get(&v)
+                .map(Vec::as_slice)
+                .with_context(|| format!("atom store: owned vertex {v} has no journal record"))
+        }
+        for i in 0..owned {
+            let v = l2g[i];
+            for &(u, _) in nbrs_of(&adj_map, v)? {
+                if owner_of(u) != machine && !g2l.contains_key(&u) {
+                    g2l.insert(u, l2g.len() as LocalVid);
+                    l2g.push(u);
+                }
+            }
+        }
+        let mut le2g: Vec<EdgeId> = Vec::new();
+        let mut ge2l: HashMap<EdgeId, LocalEid> = HashMap::new();
+        let mut adj_offsets = vec![0u32; owned + 1];
+        let mut adj: Vec<(LocalVid, LocalEid)> = Vec::new();
+        for i in 0..owned {
+            let v = l2g[i];
+            for &(u, e) in nbrs_of(&adj_map, v)? {
+                let le = *ge2l.entry(e).or_insert_with(|| {
+                    le2g.push(e);
+                    (le2g.len() - 1) as LocalEid
+                });
+                adj.push((g2l[&u], le));
+            }
+            adj_offsets[i + 1] = adj.len() as u32;
+        }
+        let mut vdata: Vec<V> = Vec::with_capacity(l2g.len());
+        for &v in &l2g {
+            let Some(data) = vdata_map.remove(&v) else {
+                bail!("atom store: vertex {v} (local to machine {machine}) has no data record");
+            };
+            vdata.push(data);
+        }
+        let mut edata: Vec<E> = Vec::with_capacity(le2g.len());
+        let mut edge_mirror: Vec<Option<MachineId>> = Vec::with_capacity(le2g.len());
+        for &e in &le2g {
+            let Some((a, b, data)) = edge_map.remove(&e) else {
+                bail!("atom store: edge {e} (local to machine {machine}) has no data record");
+            };
+            let (oa, ob) = (owner_of(a), owner_of(b));
+            edge_mirror.push(if oa == machine && ob != machine {
+                Some(ob)
+            } else if ob == machine && oa != machine {
+                Some(oa)
+            } else {
+                None
+            });
+            edata.push(data);
+        }
+        let owner: Vec<MachineId> = l2g.iter().map(|&v| owner_of(v)).collect();
+        let mut mirrors = vec![Vec::new(); owned];
+        for i in 0..owned {
+            let v = l2g[i];
+            let mut ms: Vec<MachineId> = nbrs_of(&adj_map, v)?
+                .iter()
+                .map(|&(u, _)| owner_of(u))
+                .filter(|&o| o != machine)
+                .collect();
+            ms.sort_unstable();
+            ms.dedup();
+            mirrors[i] = ms;
+        }
+        let n_local = l2g.len();
+        let n_edges = le2g.len();
+        Ok(LocalGraph {
+            machine,
+            l2g,
+            g2l,
+            owned,
+            owner,
+            vdata,
+            vversion: vec![0; n_local],
+            adj_offsets,
+            adj,
+            le2g,
+            ge2l,
+            edata,
+            eversion: vec![0; n_edges],
+            mirrors,
+            edge_mirror,
+        })
     }
 
     /// Whether local vertex `lv` is owned by this machine.

@@ -16,6 +16,7 @@ use std::collections::{HashMap, VecDeque};
 
 use crate::graph::VertexId;
 use crate::partition::MachineId;
+use crate::wire::Wire;
 
 /// Globally unique transaction id: (machine, local sequence).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -24,6 +25,21 @@ pub struct TxnId {
     pub machine: MachineId,
     /// Per-machine sequence number.
     pub seq: u64,
+}
+
+/// Transaction ids travel in every lock-protocol frame: machine (as u32 —
+/// cluster sizes are small) + sequence.
+impl Wire for TxnId {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.machine as u32).encode(out);
+        self.seq.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> crate::wire::Result<Self> {
+        Ok(TxnId {
+            machine: u32::decode(input)? as MachineId,
+            seq: u64::decode(input)?,
+        })
+    }
 }
 
 /// A lock request.

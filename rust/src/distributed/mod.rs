@@ -4,11 +4,15 @@
 //! The paper runs on 64 EC2 nodes over TCP; here a *cluster* is a set of
 //! in-process machines (one OS thread each) communicating exclusively by
 //! message passing over [`network`] endpoints — no shared mutable state —
-//! with full byte accounting (for Fig. 6(b)) and optional injected latency
+//! with every message serialized through the [`crate::wire`] codec into a
+//! real length-prefixed frame, so byte accounting (for Fig. 6(b)) is a
+//! measurement of the encoded traffic, with optional injected latency
 //! (for the Fig. 8(b) lock-pipelining study). Every machine holds a
 //! [`localgraph::LocalGraph`]: its owned partition plus **ghost** copies of
 //! boundary vertices/edges with version-based cache coherence (paper Sec.
-//! 4.1, Fig. 4(b)).
+//! 4.1, Fig. 4(b)), built either from an in-memory global graph or by
+//! replaying this machine's on-disk atom journals
+//! ([`localgraph::LocalGraph::from_atom_files`]).
 //!
 //! [`locks`] is the distributed reader–writer lock table with FIFO wait
 //! queues (paper Sec. 4.2.2); [`termination`] is the Misra/Safra-style
@@ -22,55 +26,38 @@ pub mod termination;
 pub use localgraph::LocalGraph;
 pub use network::{Endpoint, Network, NetworkModel};
 
+use crate::wire::Wire;
+
 /// Application data stored on vertices/edges of a distributed graph.
 ///
-/// `wire_bytes` is the modeled serialized size: the in-process transport
-/// moves values by `Clone`, but every message's wire size is accounted so
-/// network figures (Fig. 6(b)) reflect what a TCP deployment would send.
-pub trait DataValue: Clone + Send + Sync + 'static {
-    /// Modeled serialized size in bytes.
-    fn wire_bytes(&self) -> u64;
-}
+/// Every such value must speak the [`Wire`] codec: the in-process network
+/// serializes each message into a real frame (counting the encoded bytes
+/// in [`network::NetStats`]) and the atom store writes the same encoding
+/// to disk. The trait is a blanket alias — implement [`Wire`] (plus the
+/// usual `Clone + Send + Sync`) and `DataValue` comes for free.
+pub trait DataValue: Clone + Send + Sync + Wire + 'static {}
 
-macro_rules! impl_datavalue_prim {
-    ($($t:ty),*) => {
-        $(impl DataValue for $t {
-            fn wire_bytes(&self) -> u64 {
-                std::mem::size_of::<$t>() as u64
-            }
-        })*
-    };
-}
-
-impl_datavalue_prim!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64, usize, isize);
-
-impl DataValue for () {
-    fn wire_bytes(&self) -> u64 {
-        0
-    }
-}
-
-impl<T: DataValue> DataValue for Vec<T> {
-    fn wire_bytes(&self) -> u64 {
-        4 + self.iter().map(|x| x.wire_bytes()).sum::<u64>()
-    }
-}
-
-impl<A: DataValue, B: DataValue> DataValue for (A, B) {
-    fn wire_bytes(&self) -> u64 {
-        self.0.wire_bytes() + self.1.wire_bytes()
-    }
-}
+impl<T: Clone + Send + Sync + Wire + 'static> DataValue for T {}
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::wire;
+
+    fn assert_datavalue<T: DataValue>() {}
 
     #[test]
-    fn wire_sizes() {
-        assert_eq!(3.0f32.wire_bytes(), 4);
-        assert_eq!(vec![1.0f32; 8].wire_bytes(), 4 + 32);
-        assert_eq!(().wire_bytes(), 0);
-        assert_eq!((1u32, 2.0f64).wire_bytes(), 12);
+    fn primitive_and_container_data_values_encode() {
+        // The blanket impl covers everything Wire covers.
+        assert_datavalue::<f32>();
+        assert_datavalue::<()>();
+        assert_datavalue::<Vec<f32>>();
+        assert_datavalue::<(u32, f64)>();
+        // Encoded sizes are the codec's, not a model: f32 = 4, Vec adds a
+        // u32 length prefix, tuples concatenate.
+        assert_eq!(wire::encoded_len(&3.0f32), 4);
+        assert_eq!(wire::encoded_len(&vec![1.0f32; 8]), 4 + 32);
+        assert_eq!(wire::encoded_len(&()), 0);
+        assert_eq!(wire::encoded_len(&(1u32, 2.0f64)), 12);
     }
 }

@@ -1,12 +1,18 @@
-//! In-process message-passing network with byte accounting and injected
-//! latency.
+//! In-process message-passing network with **real encoded frames**, byte
+//! accounting, and injected latency.
 //!
 //! Machines communicate only through [`Endpoint`]s (mpsc channels), which
 //! preserves the FIFO-per-channel property of the paper's TCP sockets —
 //! the ordering guarantee the ghost-coherence and lock protocols rely on.
-//! Every send records modeled wire bytes into per-machine [`NetStats`]
-//! (Fig. 6(b) plots these). A [`NetworkModel`] latency delays *delivery*
-//! (not send), emulating one-way network latency for the Fig. 8(b)
+//! Every send serializes its message through the [`Wire`] codec into a
+//! length-prefixed frame; the frame's encoded length is what lands in the
+//! per-machine [`NetStats`] (Fig. 6(b) plots these), and the receiver
+//! decodes the frame back — so the byte counters are measurements of real
+//! serialization, not size models. Self-sends skip the frame copy (the
+//! value is delivered in-memory) but still run the encoder, so every
+//! message pays the same measurement path; they account zero *network*
+//! bytes, as before. A [`NetworkModel`] latency delays *delivery* (not
+//! send), emulating one-way network latency for the Fig. 8(b)
 //! lock-pipelining experiment.
 
 use std::collections::VecDeque;
@@ -15,17 +21,19 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::partition::MachineId;
+use crate::wire::Wire;
 
-/// Per-machine traffic counters.
+/// Per-machine traffic counters (all byte counts are encoded frame
+/// lengths, including the 4-byte length prefix).
 #[derive(Default)]
 pub struct NetStats {
-    /// Bytes sent by this machine (modeled wire size).
+    /// Frame bytes sent by this machine to other machines.
     pub bytes_sent: AtomicU64,
-    /// Messages sent by this machine.
+    /// Messages sent by this machine to other machines.
     pub msgs_sent: AtomicU64,
-    /// Bytes received.
+    /// Frame bytes received from other machines.
     pub bytes_recv: AtomicU64,
-    /// Messages received.
+    /// Messages received from other machines.
     pub msgs_recv: AtomicU64,
 }
 
@@ -44,11 +52,21 @@ impl Default for NetworkModel {
     }
 }
 
+/// What travels down the channel: remote messages go as encoded frames
+/// (decoded by the receiver), self-sends skip the copy.
+enum Payload<M> {
+    /// The un-serialized value (self-send fast path).
+    Inline(M),
+    /// `[u32 len][payload]` frame, decoded on receipt.
+    Frame(Vec<u8>),
+}
+
 struct EnvelopeInner<M> {
     src: MachineId,
+    /// Frame bytes accounted at the receiver (0 for self-sends).
     bytes: u64,
     deliver_at: Instant,
-    msg: M,
+    payload: Payload<M>,
 }
 
 /// Construction handle: build one, split into per-machine endpoints.
@@ -69,7 +87,7 @@ pub struct Endpoint<M> {
     model: NetworkModel,
 }
 
-impl<M: Send> Network<M> {
+impl<M: Send + Wire> Network<M> {
     /// Create a fully-connected network of `machines` endpoints.
     pub fn new(machines: usize, model: NetworkModel) -> Self {
         let stats: Arc<Vec<NetStats>> =
@@ -116,7 +134,7 @@ pub struct Received<M> {
     pub msg: M,
 }
 
-impl<M: Send> Endpoint<M> {
+impl<M: Send + Wire> Endpoint<M> {
     /// This machine's id.
     pub fn me(&self) -> MachineId {
         self.me
@@ -132,15 +150,29 @@ impl<M: Send> Endpoint<M> {
         self.stats.clone()
     }
 
-    /// Send `msg` (modeled `bytes` on the wire) to `dst`.
+    /// Serialize `msg` into a frame and send it to `dst`. The frame's
+    /// encoded length (payload + 4-byte length prefix) is recorded in
+    /// [`NetStats`].
     ///
     /// Sending to self is allowed and delivered through the same path
-    /// (simplifies engine loops) but accounts zero network bytes.
-    pub fn send(&self, dst: MachineId, bytes: u64, msg: M) {
-        let wire = if dst == self.me { 0 } else { bytes };
+    /// (simplifies engine loops); it still encodes — parity with remote
+    /// accounting — but skips the frame copy and counts zero network
+    /// bytes (nothing crosses the wire).
+    pub fn send(&self, dst: MachineId, msg: M) {
+        let mut frame = Vec::with_capacity(64);
+        frame.extend_from_slice(&[0u8; 4]);
+        msg.encode(&mut frame);
+        let payload_len = (frame.len() - 4) as u32;
+        frame[..4].copy_from_slice(&payload_len.to_le_bytes());
         let s = &self.stats[self.me];
-        s.bytes_sent.fetch_add(wire, Ordering::Relaxed);
-        s.msgs_sent.fetch_add((dst != self.me) as u64, Ordering::Relaxed);
+        let (bytes, payload) = if dst == self.me {
+            (0, Payload::Inline(msg))
+        } else {
+            let wire = frame.len() as u64;
+            s.bytes_sent.fetch_add(wire, Ordering::Relaxed);
+            s.msgs_sent.fetch_add(1, Ordering::Relaxed);
+            (wire, Payload::Frame(frame))
+        };
         let deliver_at = if dst == self.me {
             Instant::now()
         } else {
@@ -149,17 +181,28 @@ impl<M: Send> Endpoint<M> {
         // Receiver may have exited (engine shutdown); drop silently then.
         let _ = self.senders[dst].send(EnvelopeInner {
             src: self.me,
-            bytes: wire,
+            bytes,
             deliver_at,
-            msg,
+            payload,
         });
     }
 
-    fn account_recv(&self, env: &EnvelopeInner<M>) {
+    fn open(&self, env: EnvelopeInner<M>) -> Received<M> {
         let s = &self.stats[self.me];
         s.bytes_recv.fetch_add(env.bytes, Ordering::Relaxed);
         s.msgs_recv
             .fetch_add((env.src != self.me) as u64, Ordering::Relaxed);
+        let msg = match env.payload {
+            Payload::Inline(m) => m,
+            Payload::Frame(buf) => {
+                let mut slice = &buf[4..];
+                let m = M::decode(&mut slice)
+                    .expect("wire: frame decode failed (codec bug — encode/decode disagree)");
+                debug_assert!(slice.is_empty(), "wire: frame has trailing bytes");
+                m
+            }
+        };
+        Received { src: env.src, msg }
     }
 
     /// Non-blocking receive honoring delivery latency.
@@ -171,11 +214,7 @@ impl<M: Send> Endpoint<M> {
         if let Some(front) = self.pending.front() {
             if front.deliver_at <= Instant::now() {
                 let env = self.pending.pop_front().unwrap();
-                self.account_recv(&env);
-                return Some(Received {
-                    src: env.src,
-                    msg: env.msg,
-                });
+                return Some(self.open(env));
             }
         }
         None
@@ -218,30 +257,41 @@ impl<M: Send> Endpoint<M> {
 mod tests {
     use super::*;
 
+    /// Encoded frame length of one message (length prefix + payload).
+    fn frame_len<M: Wire>(msg: &M) -> u64 {
+        4 + crate::wire::encoded_len(msg) as u64
+    }
+
     #[test]
     fn point_to_point_delivery_and_accounting() {
-        let net: Network<u32> = Network::new(3, NetworkModel::default());
+        let net: Network<(u32, Vec<u8>)> = Network::new(3, NetworkModel::default());
         let stats = net.stats();
         let mut eps = net.into_endpoints();
-        eps[0].send(2, 100, 7);
-        eps[0].send(2, 50, 8);
+        let m1 = (7u32, vec![1u8, 2, 3]);
+        let m2 = (8u32, Vec::new());
+        let expect = frame_len(&m1) + frame_len(&m2);
+        eps[0].send(2, m1.clone());
+        eps[0].send(2, m2.clone());
         let r1 = eps[2].recv_timeout(Duration::from_secs(1)).unwrap();
         let r2 = eps[2].recv_timeout(Duration::from_secs(1)).unwrap();
-        assert_eq!((r1.src, r1.msg), (0, 7));
-        assert_eq!((r2.src, r2.msg), (0, 8)); // FIFO per channel
-        assert_eq!(stats[0].bytes_sent.load(Ordering::Relaxed), 150);
-        assert_eq!(stats[2].bytes_recv.load(Ordering::Relaxed), 150);
+        assert_eq!((r1.src, r1.msg), (0, m1));
+        assert_eq!((r2.src, r2.msg), (0, m2)); // FIFO per channel
+        // Bytes counted are the encoded frame lengths, at both ends.
+        assert_eq!(stats[0].bytes_sent.load(Ordering::Relaxed), expect);
+        assert_eq!(stats[2].bytes_recv.load(Ordering::Relaxed), expect);
         assert_eq!(stats[2].msgs_recv.load(Ordering::Relaxed), 2);
     }
 
     #[test]
-    fn self_send_costs_nothing() {
+    fn self_send_costs_no_network_bytes() {
         let net: Network<u32> = Network::new(1, NetworkModel::default());
         let stats = net.stats();
         let mut eps = net.into_endpoints();
-        eps[0].send(0, 999, 1);
-        assert!(eps[0].recv_timeout(Duration::from_secs(1)).is_some());
+        eps[0].send(0, 1);
+        let r = eps[0].recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(r.msg, 1);
         assert_eq!(stats[0].bytes_sent.load(Ordering::Relaxed), 0);
+        assert_eq!(stats[0].msgs_sent.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -251,7 +301,7 @@ mod tests {
         });
         let mut eps = net.into_endpoints();
         let t0 = Instant::now();
-        eps[0].send(1, 8, 42);
+        eps[0].send(1, 42);
         let r = eps[1].recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(r.msg, 42);
         assert!(
@@ -273,7 +323,7 @@ mod tests {
                     // what it receives.
                     for d in 0..ep.machines() {
                         if d != ep.me() {
-                            ep.send(d, 8, ep.me() as u64);
+                            ep.send(d, ep.me() as u64);
                         }
                     }
                     let mut sum = 0;
@@ -289,5 +339,26 @@ mod tests {
         for (m, s) in sums.iter().enumerate() {
             assert_eq!(*s, 6 - m as u64);
         }
+    }
+
+    #[test]
+    fn structured_message_survives_the_frame() {
+        // A message shaped like the engines' protocol frames: enum-free
+        // but nested (Vec of tuples + Option + String).
+        type M = (Vec<(u32, u64, f32)>, Option<(String, Vec<f64>)>);
+        let msg: M = (
+            vec![(1, 2, 3.5), (4, 5, -0.25)],
+            Some(("total_rank".to_string(), vec![1.0, 2.0])),
+        );
+        let net: Network<M> = Network::new(2, NetworkModel::default());
+        let stats = net.stats();
+        let mut eps = net.into_endpoints();
+        eps[0].send(1, msg.clone());
+        let r = eps[1].recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(r.msg, msg);
+        assert_eq!(
+            stats[0].bytes_sent.load(Ordering::Relaxed),
+            frame_len(&msg)
+        );
     }
 }

@@ -10,6 +10,7 @@
 //! its messages — so the protocol is unit-testable without threads.
 
 use crate::partition::MachineId;
+use crate::wire::Wire;
 
 /// The circulating token.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -20,6 +21,22 @@ pub struct Token {
     pub black: bool,
     /// Detection round (monotone; diagnostic only).
     pub round: u64,
+}
+
+/// The token rides the locking engine's frames: 17 bytes on the wire.
+impl Wire for Token {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.count.encode(out);
+        self.black.encode(out);
+        self.round.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> crate::wire::Result<Self> {
+        Ok(Token {
+            count: i64::decode(input)?,
+            black: bool::decode(input)?,
+            round: u64::decode(input)?,
+        })
+    }
 }
 
 /// Per-machine detector state.

@@ -30,6 +30,7 @@
 //! # }
 //! ```
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
@@ -38,6 +39,7 @@ use anyhow::{bail, Result};
 use super::{chromatic, locking, shared, GlobalValues, SyncOp, VertexProgram};
 use crate::distributed::{DataValue, NetworkModel};
 use crate::graph::Graph;
+use crate::partition::atoms::{AtomPlacement, AtomStore};
 use crate::partition::{Coloring, Partition};
 use crate::scheduler::{SchedSpec, Task};
 
@@ -111,7 +113,8 @@ pub struct ExecStats {
     pub seconds: f64,
     /// Updates executed by each machine (load balance; len = machines).
     pub updates_per_machine: Vec<u64>,
-    /// Modeled wire bytes sent per machine (zeroed for shared).
+    /// Measured wire bytes sent per machine — encoded frame lengths from
+    /// the `wire` codec, not a size model (zeroed for shared).
     pub bytes_sent: Vec<u64>,
     /// Messages sent per machine (zeroed for shared).
     pub msgs_sent: Vec<u64>,
@@ -123,7 +126,7 @@ impl ExecStats {
         self.updates_per_machine.len().max(1)
     }
 
-    /// Total modeled wire bytes across machines.
+    /// Total measured wire bytes across machines.
     pub fn total_bytes(&self) -> u64 {
         self.bytes_sent.iter().sum()
     }
@@ -186,6 +189,7 @@ pub struct Engine<V> {
     seed: u64,
     coloring: Option<Coloring>,
     partition: Option<Partition>,
+    atoms_dir: Option<PathBuf>,
     on_progress: Option<ProgressFn>,
 }
 
@@ -206,6 +210,7 @@ impl<V> Engine<V> {
             seed: 1,
             coloring: None,
             partition: None,
+            atoms_dir: None,
             on_progress: None,
         }
     }
@@ -314,6 +319,22 @@ impl<V> Engine<V> {
         self
     }
 
+    /// Route the distributed engines through the on-disk atom store at
+    /// `dir` (`graphlab partition <app> --atoms-dir` writes one): phase-2
+    /// placement runs on the stored meta-graph and **each machine replays
+    /// only its own atom journals** instead of slicing the in-memory
+    /// graph. The graph passed to [`Engine::run`] must describe the same
+    /// dataset (load it with [`crate::partition::atoms::load_graph`]) —
+    /// it supplies the topology for result reassembly; vertex/edge data
+    /// enters the machines from disk. Mutually exclusive with
+    /// [`Engine::with_partition`] (the store's atom placement *is* the
+    /// partition); ignored by the shared engine, which has no machine
+    /// load step.
+    pub fn atoms_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.atoms_dir = Some(dir.into());
+        self
+    }
+
     /// Progress callback `(epoch, updates_so_far, globals)` invoked at
     /// every engine epoch (chromatic sweep, locking sync barrier, shared
     /// sync barrier).
@@ -335,6 +356,30 @@ impl<V> Engine<V> {
         P: VertexProgram<V, E>,
     {
         let n = graph.num_vertices();
+        // Disk path: open the atom store once, place atoms on machines
+        // (phase 2 over the stored meta-graph), and derive the vertex
+        // partition from that placement so the engines and the per-machine
+        // journal replays agree on ownership.
+        let atoms = match (&self.atoms_dir, self.kind.is_distributed()) {
+            (Some(dir), true) => {
+                if self.partition.is_some() {
+                    bail!(
+                        "atoms_dir and with_partition are mutually exclusive: \
+                         the atom placement determines the partition"
+                    );
+                }
+                let store = AtomStore::open(dir)?;
+                if store.num_vertices != n {
+                    bail!(
+                        "atom store {} holds {} vertices but the graph has {n}",
+                        dir.display(),
+                        store.num_vertices
+                    );
+                }
+                Some(store.place(self.machines))
+            }
+            _ => None,
+        };
         match self.kind {
             EngineKind::Shared => {
                 // Adapt the unified (epoch, updates, globals) callback to
@@ -366,10 +411,10 @@ impl<V> Engine<V> {
                     Some(c) => c,
                     None => chromatic::color_for(&graph, program.consistency()),
                 };
-                let partition = match self.partition {
+                let (partition, placement) = split_placement(atoms, || match self.partition {
                     Some(p) => p,
                     None => Partition::random(n, self.machines, self.seed),
-                };
+                });
                 let (graph, stats) = chromatic::run(
                     graph,
                     &coloring,
@@ -383,15 +428,16 @@ impl<V> Engine<V> {
                         max_sweeps: self.max_sweeps,
                         network: self.network,
                         on_sweep: self.on_progress,
+                        atoms: placement,
                     },
                 )?;
                 Ok(Exec { graph, stats })
             }
             EngineKind::Locking => {
-                let partition = match self.partition {
+                let (partition, placement) = split_placement(atoms, || match self.partition {
                     Some(p) => p,
                     None => Partition::blocked(n, self.machines),
-                };
+                });
                 // Ceiling split: never silently undershoots the requested
                 // total (overshoot is bounded by machines - 1 updates).
                 let per_machine_cap = if self.max_updates == u64::MAX {
@@ -414,11 +460,24 @@ impl<V> Engine<V> {
                         max_updates_per_machine: per_machine_cap,
                         on_sync: self.on_progress,
                         seed: self.seed,
+                        atoms: placement,
                     },
                 )?;
                 Ok(Exec { graph, stats })
             }
         }
+    }
+}
+
+/// Unzip the optional atoms placement, falling back to the in-memory
+/// partition when no atom store is in play.
+fn split_placement(
+    atoms: Option<(Partition, AtomPlacement)>,
+    fallback: impl FnOnce() -> Partition,
+) -> (Partition, Option<AtomPlacement>) {
+    match atoms {
+        Some((partition, placement)) => (partition, Some(placement)),
+        None => (fallback(), None),
     }
 }
 

@@ -26,9 +26,11 @@ use super::{Ctx, ExecStats, GlobalValues, Scope, SyncOp, VertexProgram};
 use crate::distributed::network::{Network, NetworkModel};
 use crate::distributed::{DataValue, LocalGraph};
 use crate::graph::{EdgeId, Graph, SharedStore, VertexId};
+use crate::partition::atoms::AtomPlacement;
 use crate::partition::{Coloring, Partition};
 use crate::scheduler::Task;
 use crate::util::ThreadPool;
+use crate::wire::{self, Wire};
 
 /// Options for a chromatic run (crate-internal: external callers go
 /// through the `engine::Engine` builder).
@@ -45,6 +47,9 @@ pub(crate) struct ChromaticOpts {
     /// globals).
     #[allow(clippy::type_complexity)]
     pub on_sweep: Option<Box<dyn Fn(u64, u64, &GlobalValues) + Send + Sync>>,
+    /// When set, each machine replays its own on-disk atom journals
+    /// instead of slicing the in-memory graph (the paper's load path).
+    pub atoms: Option<AtomPlacement>,
 }
 
 impl Default for ChromaticOpts {
@@ -55,6 +60,7 @@ impl Default for ChromaticOpts {
             max_sweeps: u64::MAX,
             network: NetworkModel::default(),
             on_sweep: None,
+            atoms: None,
         }
     }
 }
@@ -98,14 +104,73 @@ enum Msg<V, E> {
     },
 }
 
-fn ghost_bytes<V: DataValue, E: DataValue>(
-    verts: &[(VertexId, u64, V)],
-    edges: &[(EdgeId, u64, E)],
-    tasks: &[Task],
-) -> u64 {
-    let vb: u64 = verts.iter().map(|(_, _, v)| 12 + v.wire_bytes()).sum();
-    let eb: u64 = edges.iter().map(|(_, _, e)| 12 + e.wire_bytes()).sum();
-    16 + vb + eb + tasks.len() as u64 * 12
+/// The chromatic protocol's frame grammar: one discriminant byte, then
+/// the variant's fields in declaration order (DESIGN.md §Wire-format).
+impl<V: Wire, E: Wire> Wire for Msg<V, E> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Msg::Ghost {
+                sweep,
+                verts,
+                edges,
+                tasks,
+            } => {
+                out.push(0);
+                sweep.encode(out);
+                verts.encode(out);
+                edges.encode(out);
+                tasks.encode(out);
+            }
+            Msg::ColorDone { color } => {
+                out.push(1);
+                color.encode(out);
+            }
+            Msg::Report {
+                pending,
+                updates,
+                accs,
+            } => {
+                out.push(2);
+                pending.encode(out);
+                updates.encode(out);
+                accs.encode(out);
+            }
+            Msg::Decision { cont, values } => {
+                out.push(3);
+                cont.encode(out);
+                values.encode(out);
+            }
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(match u8::decode(input)? {
+            0 => Msg::Ghost {
+                sweep: u64::decode(input)?,
+                verts: Vec::<(VertexId, u64, V)>::decode(input)?,
+                edges: Vec::<(EdgeId, u64, E)>::decode(input)?,
+                tasks: Vec::<Task>::decode(input)?,
+            },
+            1 => Msg::ColorDone {
+                color: u32::decode(input)?,
+            },
+            2 => Msg::Report {
+                pending: u64::decode(input)?,
+                updates: u64::decode(input)?,
+                accs: Vec::<Vec<f64>>::decode(input)?,
+            },
+            3 => Msg::Decision {
+                cont: bool::decode(input)?,
+                values: Vec::<(String, Vec<f64>)>::decode(input)?,
+            },
+            tag => {
+                return Err(wire::WireError::BadTag {
+                    what: "chromatic::Msg",
+                    tag,
+                })
+            }
+        })
+    }
 }
 
 /// Run `program` on `graph` under the chromatic engine.
@@ -159,11 +224,24 @@ where
     let net_stats = net.stats();
     let endpoints = net.into_endpoints();
 
-    // Build each machine's local graph up front (the paper's "merge your
-    // atom files" load step).
-    let locals: Vec<LocalGraph<V, E>> = (0..machines)
-        .map(|m| LocalGraph::build(&graph, partition, m))
-        .collect();
+    // Build each machine's local graph up front: the paper's "merge your
+    // atom files" load step — literally, when an atom directory is given.
+    let locals: Vec<LocalGraph<V, E>> = match &opts.atoms {
+        None => (0..machines)
+            .map(|m| LocalGraph::build(&graph, partition, m))
+            .collect(),
+        Some(placement) => {
+            let mut ls = Vec::with_capacity(machines);
+            for m in 0..machines {
+                ls.push(LocalGraph::from_atom_files(
+                    &placement.dir,
+                    &placement.atom_to_machine,
+                    m,
+                )?);
+            }
+            ls
+        }
+    };
     let (_, _, topo) = graph.into_parts();
     let endpoints_ref = &topo.endpoints;
 
@@ -350,10 +428,9 @@ where
                                 continue;
                             }
                             if !verts.is_empty() || !edges.is_empty() || !tasks.is_empty() {
-                                let bytes = ghost_bytes(&verts, &edges, &tasks);
-                                ep.send(peer, bytes, Msg::Ghost { sweep, verts, edges, tasks });
+                                ep.send(peer, Msg::Ghost { sweep, verts, edges, tasks });
                             }
-                            ep.send(peer, 8, Msg::ColorDone { color });
+                            ep.send(peer, Msg::ColorDone { color });
                         }
 
                         // --- barrier: apply peers' data until all done ---
@@ -413,11 +490,8 @@ where
                             acc
                         })
                         .collect();
-                    let report_bytes =
-                        16 + accs.iter().map(|a| 8 * a.len() as u64 + 4).sum::<u64>();
                     ep.send(
                         0,
-                        report_bytes,
                         Msg::Report {
                             pending,
                             updates: my_updates,
@@ -466,14 +540,9 @@ where
                         if let Some(cb) = on_sweep {
                             cb(sweep, updates_sum, &globals);
                         }
-                        let dec_bytes = 8 + values
-                            .iter()
-                            .map(|(k, v)| k.len() as u64 + 8 * v.len() as u64)
-                            .sum::<u64>();
                         for peer in 1..machines {
                             ep.send(
                                 peer,
-                                dec_bytes,
                                 Msg::Decision {
                                     cont,
                                     values: values.clone(),
@@ -594,4 +663,45 @@ where
             .collect(),
     };
     Ok((graph, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Round-trip by re-encoding (Msg derives no PartialEq), plus prefix
+    /// totality: truncated frames are errors, never panics.
+    fn round_trip(msg: Msg<f32, u64>) {
+        let bytes = wire::to_bytes(&msg);
+        let back: Msg<f32, u64> = wire::from_bytes(&bytes).unwrap();
+        assert_eq!(wire::to_bytes(&back), bytes);
+        for cut in 0..bytes.len() {
+            assert!(wire::from_bytes::<Msg<f32, u64>>(&bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn every_chromatic_frame_variant_round_trips() {
+        round_trip(Msg::Ghost {
+            sweep: 2,
+            verts: vec![(1, 3, 0.5), (2, 1, -1.5)],
+            edges: vec![(0, 1, 42)],
+            tasks: vec![Task { vertex: 7, priority: 1.0 }],
+        });
+        round_trip(Msg::ColorDone { color: 5 });
+        round_trip(Msg::Report {
+            pending: 9,
+            updates: 100,
+            accs: vec![vec![1.0], vec![2.0, 3.0]],
+        });
+        round_trip(Msg::Decision {
+            cont: true,
+            values: vec![("total_rank".to_string(), vec![1.0])],
+        });
+    }
+
+    #[test]
+    fn unknown_discriminant_is_an_error() {
+        assert!(wire::from_bytes::<Msg<f32, u64>>(&[9]).is_err());
+    }
 }

@@ -38,8 +38,10 @@ use crate::distributed::network::{Network, NetworkModel};
 use crate::distributed::termination::{Termination, Token, TokenAction};
 use crate::distributed::{DataValue, LocalGraph};
 use crate::graph::{EdgeId, Graph, VertexId};
+use crate::partition::atoms::AtomPlacement;
 use crate::partition::{MachineId, Partition};
 use crate::scheduler::{self, Policy, Task};
+use crate::wire::{self, Wire};
 
 /// Options for a locking-engine run (crate-internal: external callers go
 /// through the `engine::Engine` builder).
@@ -66,6 +68,9 @@ pub(crate) struct LockingOpts {
     pub on_sync: Option<Box<dyn Fn(u64, u64, &GlobalValues) + Send + Sync>>,
     /// Seed for the multiqueue scheduler.
     pub seed: u64,
+    /// When set, each machine replays its own on-disk atom journals
+    /// instead of slicing the in-memory graph (the paper's load path).
+    pub atoms: Option<AtomPlacement>,
 }
 
 impl Default for LockingOpts {
@@ -79,6 +84,7 @@ impl Default for LockingOpts {
             max_updates_per_machine: u64::MAX,
             on_sync: None,
             seed: 0,
+            atoms: None,
         }
     }
 }
@@ -131,6 +137,145 @@ enum Msg<V, E> {
         accs: Vec<Vec<f64>>,
         updates: u64,
     },
+}
+
+/// The locking protocol's frame grammar: one discriminant byte, then the
+/// variant's fields in declaration order (see DESIGN.md §Wire-format).
+impl<V: Wire, E: Wire> Wire for Msg<V, E> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Msg::LockReq {
+                txn,
+                vertex,
+                write,
+                vver,
+                edge,
+            } => {
+                out.push(0);
+                txn.encode(out);
+                vertex.encode(out);
+                write.encode(out);
+                vver.encode(out);
+                edge.encode(out);
+            }
+            Msg::Grant {
+                txn_seq,
+                vertex,
+                vdata,
+                edata,
+            } => {
+                out.push(1);
+                txn_seq.encode(out);
+                vertex.encode(out);
+                vdata.encode(out);
+                edata.encode(out);
+            }
+            Msg::Release {
+                txn,
+                unlocks,
+                vwrites,
+                ewrites,
+                tasks,
+            } => {
+                out.push(2);
+                txn.encode(out);
+                unlocks.encode(out);
+                vwrites.encode(out);
+                ewrites.encode(out);
+                tasks.encode(out);
+            }
+            Msg::GhostPush { verts, edges } => {
+                out.push(3);
+                verts.encode(out);
+                edges.encode(out);
+            }
+            Msg::SyncBegin { epoch } => {
+                out.push(4);
+                epoch.encode(out);
+            }
+            Msg::SyncPartial {
+                epoch,
+                accs,
+                updates,
+                capped,
+            } => {
+                out.push(5);
+                epoch.encode(out);
+                accs.encode(out);
+                updates.encode(out);
+                capped.encode(out);
+            }
+            Msg::SyncEnd { epoch, values } => {
+                out.push(6);
+                epoch.encode(out);
+                values.encode(out);
+            }
+            Msg::Token(tok) => {
+                out.push(7);
+                tok.encode(out);
+            }
+            Msg::Halt => out.push(8),
+            Msg::FinalReport { accs, updates } => {
+                out.push(9);
+                accs.encode(out);
+                updates.encode(out);
+            }
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(match u8::decode(input)? {
+            0 => Msg::LockReq {
+                txn: TxnId::decode(input)?,
+                vertex: VertexId::decode(input)?,
+                write: bool::decode(input)?,
+                vver: u64::decode(input)?,
+                edge: Option::<(EdgeId, u64)>::decode(input)?,
+            },
+            1 => Msg::Grant {
+                txn_seq: u64::decode(input)?,
+                vertex: VertexId::decode(input)?,
+                vdata: Option::<(u64, V)>::decode(input)?,
+                edata: Option::<(EdgeId, u64, E)>::decode(input)?,
+            },
+            2 => Msg::Release {
+                txn: TxnId::decode(input)?,
+                unlocks: Vec::<(VertexId, bool)>::decode(input)?,
+                vwrites: Vec::<(VertexId, u64, V)>::decode(input)?,
+                ewrites: Vec::<(EdgeId, u64, E)>::decode(input)?,
+                tasks: Vec::<Task>::decode(input)?,
+            },
+            3 => Msg::GhostPush {
+                verts: Vec::<(VertexId, u64, V)>::decode(input)?,
+                edges: Vec::<(EdgeId, u64, E)>::decode(input)?,
+            },
+            4 => Msg::SyncBegin {
+                epoch: u64::decode(input)?,
+            },
+            5 => Msg::SyncPartial {
+                epoch: u64::decode(input)?,
+                accs: Vec::<Vec<f64>>::decode(input)?,
+                updates: u64::decode(input)?,
+                capped: bool::decode(input)?,
+            },
+            6 => Msg::SyncEnd {
+                epoch: u64::decode(input)?,
+                values: Vec::<(String, Vec<f64>)>::decode(input)?,
+            },
+            7 => Msg::Token(Token::decode(input)?),
+            8 => Msg::Halt,
+            9 => Msg::FinalReport {
+                accs: Vec::<Vec<f64>>::decode(input)?,
+                updates: u64::decode(input)?,
+            },
+            tag => {
+                return Err(wire::WireError::BadTag {
+                    what: "locking::Msg",
+                    tag,
+                })
+            }
+        })
+    }
 }
 
 /// Metadata for queued remote lock requests, keyed by (txn, vertex):
@@ -187,9 +332,24 @@ where
     let net: Network<Msg<V, E>> = Network::new(machines, opts.network);
     let net_stats = net.stats();
     let endpoints = net.into_endpoints();
-    let locals: Vec<LocalGraph<V, E>> = (0..machines)
-        .map(|m| LocalGraph::build(&graph, partition, m))
-        .collect();
+    // The paper's load step: merge your atom files (disk path) or slice
+    // the already-loaded global graph (in-memory path, same result).
+    let locals: Vec<LocalGraph<V, E>> = match &opts.atoms {
+        None => (0..machines)
+            .map(|m| LocalGraph::build(&graph, partition, m))
+            .collect(),
+        Some(placement) => {
+            let mut ls = Vec::with_capacity(machines);
+            for m in 0..machines {
+                ls.push(LocalGraph::from_atom_files(
+                    &placement.dir,
+                    &placement.atom_to_machine,
+                    m,
+                )?);
+            }
+            ls
+        }
+    };
     let (_, _, topo) = graph.into_parts();
     let endpoints_ref = &topo.endpoints;
 
@@ -421,16 +581,10 @@ where
                                     if let Some(cb) = on_sync {
                                         cb(sync_epoch, gather_updates, &globals);
                                     }
-                                    let bytes = 16
-                                        + values
-                                            .iter()
-                                            .map(|(k, v)| k.len() as u64 + 8 * v.len() as u64)
-                                            .sum::<u64>();
                                     for peer in 0..machines {
                                         if peer != me {
                                             ep.send(
                                                 peer,
-                                                bytes,
                                                 Msg::SyncEnd {
                                                     epoch: sync_epoch,
                                                     values: values.clone(),
@@ -444,7 +598,7 @@ where
                                     // stop even though tasks remain.
                                     if gather_capped {
                                         for peer in 1..machines {
-                                            ep.send(peer, 1, Msg::Halt);
+                                            ep.send(peer, Msg::Halt);
                                         }
                                         halted = true;
                                     }
@@ -466,12 +620,12 @@ where
                                 );
                                 match term.on_token(tok, idle) {
                                     TokenAction::Forward(t) => {
-                                        ep.send((me + 1) % machines, 17, Msg::Token(t));
+                                        ep.send((me + 1) % machines, Msg::Token(t));
                                     }
                                     TokenAction::Terminate => {
                                         for peer in 0..machines {
                                             if peer != me {
-                                                ep.send(peer, 1, Msg::Halt);
+                                                ep.send(peer, Msg::Halt);
                                             }
                                         }
                                         halted = true;
@@ -512,11 +666,8 @@ where
                                 acc
                             })
                             .collect();
-                        let bytes =
-                            24 + accs.iter().map(|a| 8 * a.len() as u64 + 4).sum::<u64>();
                         ep.send(
                             0,
-                            bytes,
                             Msg::SyncPartial {
                                 epoch: sync_epoch,
                                 accs,
@@ -621,7 +772,7 @@ where
                                 gather_capped = true;
                                 gather_count = 0;
                                 for peer in 1..machines {
-                                    ep.send(peer, 9, Msg::SyncBegin { epoch: sync_epoch });
+                                    ep.send(peer, Msg::SyncBegin { epoch: sync_epoch });
                                 }
                                 progressed = true;
                             }
@@ -634,7 +785,7 @@ where
                         if let Some(action) = term.leader_try_start(idle) {
                             match action {
                                 TokenAction::Forward(t) => {
-                                    ep.send(1 % machines, 17, Msg::Token(t));
+                                    ep.send(1 % machines, Msg::Token(t));
                                 }
                                 TokenAction::Terminate => {
                                     halted = true;
@@ -651,13 +802,13 @@ where
                             match term.maybe_forward(tok, idle) {
                                 TokenAction::Forward(t) => {
                                     held_token = None;
-                                    ep.send((me + 1) % machines, 17, Msg::Token(t));
+                                    ep.send((me + 1) % machines, Msg::Token(t));
                                 }
                                 TokenAction::Terminate => {
                                     held_token = None;
                                     for peer in 0..machines {
                                         if peer != me {
-                                            ep.send(peer, 1, Msg::Halt);
+                                            ep.send(peer, Msg::Halt);
                                         }
                                     }
                                     halted = true;
@@ -697,10 +848,8 @@ where
                             acc
                         })
                         .collect();
-                    let bytes = 24 + accs.iter().map(|a| 8 * a.len() as u64 + 4).sum::<u64>();
                     ep.send(
                         0,
-                        bytes,
                         Msg::FinalReport {
                             accs,
                             updates: my_updates,
@@ -836,12 +985,8 @@ fn send_grant<V: DataValue, E: DataValue>(
             None
         }
     });
-    let bytes = 24
-        + vdata.as_ref().map(|(_, v)| 12 + v.wire_bytes()).unwrap_or(0)
-        + edata.as_ref().map(|(_, _, e)| 16 + e.wire_bytes()).unwrap_or(0);
     ep.send(
         txn.machine,
-        bytes,
         Msg::Grant {
             txn_seq: txn.seq,
             vertex,
@@ -927,7 +1072,6 @@ fn pump_txn<V: DataValue, E: DataValue>(
         };
         ep.send(
             owner,
-            33,
             Msg::LockReq {
                 txn: txn_id,
                 vertex: v,
@@ -1086,10 +1230,8 @@ fn execute_batch<V, E, P>(
             let ver = lg.vversion[center_lv];
             let val = lg.vdata[center_lv].clone();
             for &peer in &lg.mirrors[center_lv] {
-                let bytes = 16 + val.wire_bytes();
                 ep.send(
                     peer,
-                    bytes,
                     Msg::GhostPush {
                         verts: vec![(center_g, ver, val.clone())],
                         edges: vec![],
@@ -1115,21 +1257,9 @@ fn execute_batch<V, E, P>(
                     }
                 }
             } else {
-                let bytes = 16
-                    + unlocks.len() as u64 * 9
-                    + vwrites
-                        .iter()
-                        .map(|(_, _, v)| 12 + v.wire_bytes())
-                        .sum::<u64>()
-                    + ewrites
-                        .iter()
-                        .map(|(_, _, e)| 16 + e.wire_bytes())
-                        .sum::<u64>()
-                    + tasks.len() as u64 * 12;
                 term.on_send();
                 ep.send(
                     owner,
-                    bytes,
                     Msg::Release {
                         txn: txn_id,
                         unlocks,
@@ -1140,5 +1270,76 @@ fn execute_batch<V, E, P>(
                 );
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Round-trip by re-encoding (Msg derives no PartialEq), plus prefix
+    /// totality: truncated frames are errors, never panics.
+    fn round_trip(msg: Msg<f32, u64>) {
+        let bytes = wire::to_bytes(&msg);
+        let back: Msg<f32, u64> = wire::from_bytes(&bytes).unwrap();
+        assert_eq!(wire::to_bytes(&back), bytes);
+        for cut in 0..bytes.len() {
+            assert!(wire::from_bytes::<Msg<f32, u64>>(&bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn every_locking_frame_variant_round_trips() {
+        let txn = TxnId { machine: 1, seq: 9 };
+        round_trip(Msg::LockReq {
+            txn,
+            vertex: 4,
+            write: true,
+            vver: 7,
+            edge: Some((3, 2)),
+        });
+        round_trip(Msg::Grant {
+            txn_seq: 5,
+            vertex: 2,
+            vdata: Some((1, 0.5)),
+            edata: Some((8, 3, 77)),
+        });
+        round_trip(Msg::Release {
+            txn,
+            unlocks: vec![(1, true), (2, false)],
+            vwrites: vec![(1, 2, 1.5)],
+            ewrites: vec![(0, 1, 99)],
+            tasks: vec![Task { vertex: 3, priority: 2.0 }],
+        });
+        round_trip(Msg::GhostPush {
+            verts: vec![(6, 1, -0.25)],
+            edges: vec![(1, 1, 7)],
+        });
+        round_trip(Msg::SyncBegin { epoch: 3 });
+        round_trip(Msg::SyncPartial {
+            epoch: 3,
+            accs: vec![vec![1.0, 2.0], vec![]],
+            updates: 8,
+            capped: false,
+        });
+        round_trip(Msg::SyncEnd {
+            epoch: 3,
+            values: vec![("rmse".to_string(), vec![2.0])],
+        });
+        round_trip(Msg::Token(Token {
+            count: -2,
+            black: true,
+            round: 4,
+        }));
+        round_trip(Msg::Halt);
+        round_trip(Msg::FinalReport {
+            accs: vec![vec![0.0; 3]],
+            updates: 11,
+        });
+    }
+
+    #[test]
+    fn unknown_discriminant_is_an_error() {
+        assert!(wire::from_bytes::<Msg<f32, u64>>(&[42]).is_err());
     }
 }

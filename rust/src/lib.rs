@@ -29,6 +29,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod sim;
 pub mod util;
+pub mod wire;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -14,8 +14,12 @@
 //! * `figure <name>` — regenerate a paper table/figure (`table2`, `fig1`,
 //!   `fig5a`, `fig6a`..`fig8d`, or `all`) into `--out-dir` (default
 //!   `results/`).
-//! * `partition` — two-phase partitioning demo: atoms → meta-graph →
-//!   machine assignment quality report.
+//! * `partition [<app>]` — with an app name, build that app's data graph
+//!   and write it to disk as the paper's atom store (`--atoms-dir DIR`,
+//!   default `atoms/`; `--atoms K` controls the over-partition size);
+//!   `graphlab run <app> --atoms-dir DIR` then loads the same store on
+//!   any machine count, each machine replaying only its own atom
+//!   journals. Without an app: the two-phase partitioning quality demo.
 //! * `calibrate` — print the measured per-update costs feeding the
 //!   cluster model.
 //! * `bench-sched` — shared-engine PageRank updates/sec at 1/2/4/8
@@ -24,6 +28,9 @@
 //! * `bench-engines` — the same PageRank workload through all three
 //!   engines (shared vs chromatic vs locking), written as JSON
 //!   (`BENCH_pr3.json`; also run by CI's bench-smoke job).
+//! * `bench-wire` — wire-codec encode/decode throughput plus atom-store
+//!   save/load timings, written as JSON (`BENCH_pr4.json`; also run by
+//!   CI's bench-smoke job).
 //!
 //! Examples:
 //!
@@ -31,6 +38,8 @@
 //! graphlab run als --machines 4 --d 20 --sweeps 20 --pjrt
 //! graphlab run pagerank --engine shared --threads 8 --scheduler multiqueue
 //! graphlab run gibbs --engine locking --machines 4
+//! graphlab partition pagerank --atoms-dir atoms/ --atoms 64
+//! graphlab run pagerank --engine locking --atoms-dir atoms/
 //! graphlab figure fig6d --out-dir results/
 //! graphlab bench-engines --out BENCH_pr3.json
 //! ```
@@ -41,6 +50,7 @@ use anyhow::{bail, Context as _, Result};
 
 use graphlab::apps::{self, als, coseg, gibbs, ner, pagerank};
 use graphlab::engine::{Engine, EngineKind, ENGINE_KINDS};
+use graphlab::partition::atoms::{self, AtomSet};
 use graphlab::partition::Partition;
 use graphlab::scheduler::{Policy, SchedSpec};
 use graphlab::util::cli::Args;
@@ -60,21 +70,28 @@ fn main() -> Result<()> {
             let out = cfg.str_or("out-dir", "results");
             graphlab::sim::figures::run_figure(&name, std::path::Path::new(&out))
         }
-        Some("partition") => partition_demo(&cfg),
+        Some("partition") => match args.pos(1) {
+            Some(app) => partition_app(app, &cfg),
+            None => partition_demo(&cfg),
+        },
         Some("calibrate") => calibrate(&cfg),
         Some("bench-sched") => bench_sched(&cfg),
         Some("bench-engines") => bench_engines(&cfg),
+        Some("bench-wire") => bench_wire(&cfg),
         _ => {
             eprintln!(
-                "usage: graphlab <run|figure|partition|calibrate|bench-sched|bench-engines> [...]\n"
+                "usage: graphlab <run|figure|partition|calibrate|bench-sched|bench-engines|bench-wire> [...]\n"
             );
             eprintln!("  graphlab run <pagerank|als|ner|coseg|gibbs> [--engine shared|chromatic|locking]");
             eprintln!("      [--machines N] [--threads N] [--scheduler fifo|priority|multiqueue|sweep|global-*]");
-            eprintln!("      [--pjrt] [--sweeps N] [--d N] [--config FILE]");
+            eprintln!("      [--pjrt] [--sweeps N] [--d N] [--atoms-dir DIR] [--config FILE]");
+            eprintln!("  graphlab partition <pagerank|als|ner|coseg|gibbs> [--atoms-dir DIR] [--atoms K]");
+            eprintln!("      (writes the app's data graph as an on-disk atom store; omit the app for the demo)");
             eprintln!("  graphlab figure <table2|fig1|fig5a|fig6a|fig6c|fig6d|fig7a|fig8a|fig8b|fig8c|fig8d|all>");
             eprintln!("      [--out-dir DIR]");
             eprintln!("  graphlab bench-sched [--out FILE] [--n N] [--sweeps N] [--quick]");
             eprintln!("  graphlab bench-engines [--out FILE] [--n N] [--sweeps N] [--machines N] [--quick]");
+            eprintln!("  graphlab bench-wire [--out FILE] [--n N] [--quick]");
             bail!("missing subcommand");
         }
     }
@@ -97,53 +114,92 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
         );
     }
     let seed = cfg.num_or("seed", 1u64)?;
+    // When --atoms-dir is given, the data graph is loaded from the on-disk
+    // atom store (written by `graphlab partition <app>`) instead of being
+    // regenerated; the distributed engines additionally replay each
+    // machine's own atom journals (routed via `Engine::atoms_dir`).
+    let atoms_dir = atoms_dir_flag(cfg);
     println!("== graphlab run {app} (engine={engine}, machines={machines}) ==");
 
     match app {
         "pagerank" => {
-            let n = cfg.num_or("n", 10_000usize)?;
-            let edges = graphlab::datagen::web_graph(n, cfg.num_or("avg-degree", 8)?, seed);
-            let g = pagerank::build(n, &edges, 0.15);
+            let g = match &atoms_dir {
+                Some(dir) => atoms::load_graph(dir)?.0,
+                None => {
+                    let n = cfg.num_or("n", 10_000usize)?;
+                    let edges =
+                        graphlab::datagen::web_graph(n, cfg.num_or("avg-degree", 8)?, seed);
+                    pagerank::build(n, &edges, 0.15)
+                }
+            };
+            let n = g.num_vertices();
             let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-6, n, use_pjrt };
-            run_generic(g, prog, engine, machines, threads, sweeps, cfg,
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(),
                 vec![Box::new(pagerank::total_rank_sync())], "total_rank")
         }
         "als" => {
-            let d = cfg.num_or("d", 20usize)?;
-            let data = graphlab::datagen::netflix(
-                cfg.num_or("users", 2000)?, cfg.num_or("movies", 1000)?,
-                cfg.num_or("ratings-per-user", 30)?, 8, 0.2, seed);
-            let g = als::build(&data, d, seed);
+            let g = match &atoms_dir {
+                Some(dir) => atoms::load_graph(dir)?.0,
+                None => {
+                    let data = graphlab::datagen::netflix(
+                        cfg.num_or("users", 2000)?, cfg.num_or("movies", 1000)?,
+                        cfg.num_or("ratings-per-user", 30)?, 8, 0.2, seed);
+                    als::build(&data, cfg.num_or("d", 20usize)?, seed)
+                }
+            };
             println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
+            anyhow::ensure!(g.num_vertices() > 0, "empty graph: nothing to run");
+            // The latent dimension travels with the stored factors.
+            let d = g.vertex_data(0).factor.len();
             let prog = als::Als { d, lambda: 0.08, use_pjrt };
-            run_generic(g, prog, engine, machines, threads, sweeps, cfg,
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(),
                 vec![Box::new(als::rmse_sync())], "rmse")
         }
         "ner" => {
-            let data = graphlab::datagen::ner(
-                cfg.num_or("nps", 5000)?, cfg.num_or("contexts", 2500)?,
-                cfg.num_or("edges-per-np", 30)?, 8, 0.1, seed);
-            let g = ner::build(&data);
+            let g = match &atoms_dir {
+                Some(dir) => atoms::load_graph(dir)?.0,
+                None => {
+                    let data = graphlab::datagen::ner(
+                        cfg.num_or("nps", 5000)?, cfg.num_or("contexts", 2500)?,
+                        cfg.num_or("edges-per-np", 30)?, 8, 0.1, seed);
+                    ner::build(&data)
+                }
+            };
             println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
-            let prog = ner::Coem { k: 8, smoothing: 0.01, eps: 1e-4, use_pjrt };
-            run_generic(g, prog, engine, machines, threads, sweeps, cfg,
+            anyhow::ensure!(g.num_vertices() > 0, "empty graph: nothing to run");
+            let k = g.vertex_data(0).dist.len();
+            let prog = ner::Coem { k, smoothing: 0.01, eps: 1e-4, use_pjrt };
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(),
                 vec![Box::new(ner::accuracy_sync())], "accuracy")
         }
         "coseg" => {
-            let data = graphlab::datagen::video(
-                cfg.num_or("frames", 16)?, cfg.num_or("width", 24)?,
-                cfg.num_or("height", 20)?, 5, 0.4, seed);
-            let g = coseg::build(&data, 0.8);
+            let g = match &atoms_dir {
+                Some(dir) => atoms::load_graph(dir)?.0,
+                None => {
+                    let data = graphlab::datagen::video(
+                        cfg.num_or("frames", 16)?, cfg.num_or("width", 24)?,
+                        cfg.num_or("height", 20)?, 5, 0.4, seed);
+                    coseg::build(&data, 0.8)
+                }
+            };
             println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
-            let prog = coseg::Coseg { labels: 5, eps: 1e-3, sigma2: 0.5, use_pjrt };
-            run_generic(g, prog, engine, machines, threads, sweeps, cfg,
-                vec![Box::new(coseg::gmm_sync(5)), Box::new(coseg::accuracy_sync())], "accuracy")
+            anyhow::ensure!(g.num_vertices() > 0, "empty graph: nothing to run");
+            let labels = g.vertex_data(0).belief.len();
+            let prog = coseg::Coseg { labels, eps: 1e-3, sigma2: 0.5, use_pjrt };
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(),
+                vec![Box::new(coseg::gmm_sync(labels)), Box::new(coseg::accuracy_sync())],
+                "accuracy")
         }
         "gibbs" => {
-            let data = graphlab::datagen::mrf(cfg.num_or("side", 64)?, 0.4, seed);
-            let g = gibbs::build(&data);
+            let g = match &atoms_dir {
+                Some(dir) => atoms::load_graph(dir)?.0,
+                None => {
+                    let data = graphlab::datagen::mrf(cfg.num_or("side", 64)?, 0.4, seed);
+                    gibbs::build(&data)
+                }
+            };
             let prog = gibbs::Gibbs { coupling: 0.4, target_samples: sweeps.max(10), seed };
-            run_generic(g, prog, engine, machines, threads, u64::MAX, cfg,
+            run_generic(g, prog, engine, machines, threads, u64::MAX, cfg, atoms_dir.as_deref(),
                 vec![Box::new(gibbs::magnetization_sync())], "magnetization")
         }
         other => bail!("unknown app '{other}'"),
@@ -161,6 +217,7 @@ fn run_generic<V, E, P>(
     threads: usize,
     sweeps: u64,
     cfg: &Config,
+    atoms_dir: Option<&std::path::Path>,
     syncs: Vec<Box<dyn graphlab::engine::SyncOp<V>>>,
     probe_key: &'static str,
 ) -> Result<()>
@@ -178,7 +235,7 @@ where
     // Update cap: a safety net for non-converging runs (the chromatic
     // engine is capped in whole sweeps via max_sweeps instead).
     let max_updates = cfg.num_or("max-updates", n as u64 * sweeps.min(10_000))?;
-    let exec = Engine::new(engine)
+    let mut builder = Engine::new(engine)
         .workers(threads)
         .machines(machines)
         .scheduler(spec)
@@ -192,8 +249,12 @@ where
             if let Some(v) = gv.get(probe_key) {
                 println!("epoch {epoch:>3}: updates={updates:>9} {probe_key}={:.5}", v[0]);
             }
-        })
-        .run(g, &prog, initial)?;
+        });
+    if let Some(dir) = atoms_dir {
+        // Distributed machines replay their own on-disk atom journals.
+        builder = builder.atoms_dir(dir);
+    }
+    let exec = builder.run(g, &prog, initial)?;
     let stats = &exec.stats;
     println!(
         "done: {} updates, {} epochs, {:.2}s on {engine} \
@@ -204,6 +265,91 @@ where
         stats.machines(),
         stats.balance(),
         stats.total_bytes() / 1_000_000
+    );
+    Ok(())
+}
+
+/// `--atoms-dir [DIR]`: an explicit DIR wins; a bare flag resolves the
+/// default the cwd-robust way (`GRAPHLAB_ATOMS`, `atoms/`, workspace-root
+/// `atoms/`) so `run` and `partition` agree on where the store lives.
+fn atoms_dir_flag(cfg: &Config) -> Option<std::path::PathBuf> {
+    cfg.get("atoms-dir").map(|v| {
+        if v == "true" {
+            atoms::resolve_atoms_dir(None)
+        } else {
+            std::path::PathBuf::from(v)
+        }
+    })
+}
+
+/// `graphlab partition <app>`: build the app's data graph (same flags and
+/// datagen as `run`) and write it to disk as the paper's atom store — one
+/// journal file per atom plus `meta.bin` — ready for `run --atoms-dir` on
+/// any machine count.
+fn partition_app(app: &str, cfg: &Config) -> Result<()> {
+    let dir = atoms_dir_flag(cfg).unwrap_or_else(|| atoms::resolve_atoms_dir(None));
+    let k = cfg.num_or("atoms", 128usize)?;
+    let seed = cfg.num_or("seed", 1u64)?;
+    match app {
+        "pagerank" => {
+            let n = cfg.num_or("n", 10_000usize)?;
+            let edges = graphlab::datagen::web_graph(n, cfg.num_or("avg-degree", 8)?, seed);
+            save_atom_store(&pagerank::build(n, &edges, 0.15), k, seed, &dir)
+        }
+        "als" => {
+            let data = graphlab::datagen::netflix(
+                cfg.num_or("users", 2000)?, cfg.num_or("movies", 1000)?,
+                cfg.num_or("ratings-per-user", 30)?, 8, 0.2, seed);
+            save_atom_store(&als::build(&data, cfg.num_or("d", 20usize)?, seed), k, seed, &dir)
+        }
+        "ner" => {
+            let data = graphlab::datagen::ner(
+                cfg.num_or("nps", 5000)?, cfg.num_or("contexts", 2500)?,
+                cfg.num_or("edges-per-np", 30)?, 8, 0.1, seed);
+            save_atom_store(&ner::build(&data), k, seed, &dir)
+        }
+        "coseg" => {
+            let data = graphlab::datagen::video(
+                cfg.num_or("frames", 16)?, cfg.num_or("width", 24)?,
+                cfg.num_or("height", 20)?, 5, 0.4, seed);
+            save_atom_store(&coseg::build(&data, 0.8), k, seed, &dir)
+        }
+        "gibbs" => {
+            let data = graphlab::datagen::mrf(cfg.num_or("side", 64)?, 0.4, seed);
+            save_atom_store(&gibbs::build(&data), k, seed, &dir)
+        }
+        other => bail!("unknown app '{other}'"),
+    }
+}
+
+/// Over-partition `g` into `k` BFS atoms and persist the store to `dir`.
+fn save_atom_store<V, E>(
+    g: &graphlab::graph::Graph<V, E>,
+    k: usize,
+    seed: u64,
+    dir: &std::path::Path,
+) -> Result<()>
+where
+    V: graphlab::wire::Wire,
+    E: graphlab::wire::Wire,
+{
+    let t0 = std::time::Instant::now();
+    let atom_set = AtomSet::grow_bfs(g, k, seed);
+    atom_set.save_atoms(g, dir)?;
+    let sizes = atom_set.sizes();
+    println!(
+        "wrote {} atom journals (+meta.bin) for {} vertices / {} edges to {} in {:.2}s",
+        atom_set.num_atoms(),
+        g.num_vertices(),
+        g.num_edges(),
+        dir.display(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "atom sizes: min {} / max {} vertices; load with `graphlab run <app> --atoms-dir {}`",
+        sizes.iter().min().unwrap_or(&0),
+        sizes.iter().max().unwrap_or(&0),
+        dir.display()
     );
     Ok(())
 }
@@ -415,6 +561,103 @@ fn bench_engines(cfg: &Config) -> Result<()> {
          \"sweeps\": {sweeps},\n  \"machines\": {machines},\n  \"quick\": {quick},\n  \
          \"fastest_engine\": \"{fastest}\",\n  \"results\": [\n{}\n  ]\n}}\n",
         body.join(",\n")
+    );
+    std::fs::write(&out_path, json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+/// Wire-codec + atom-store benchmark: encode/decode throughput over a
+/// ghost-flush-shaped payload, then save/load timings for an on-disk
+/// PageRank atom store, written as JSON (`BENCH_pr4.json`; CI's
+/// bench-smoke job runs the `--quick` variant).
+fn bench_wire(cfg: &Config) -> Result<()> {
+    use graphlab::wire::{self, Wire};
+    let quick = cfg.bool_or("quick", false);
+    let n = cfg.num_or("n", if quick { 4_000 } else { 20_000usize })?;
+    let out_path = cfg.str_or("out", "BENCH_pr4.json");
+    println!("== bench-wire: codec throughput + atom-store load, n={n} ==");
+
+    // --- codec throughput over a realistic payload ---------------------
+    // The shape of a chromatic ghost flush: (vertex, version, data)
+    // triples with ALS d=20 factors (the heaviest common vertex type).
+    let d = 20usize;
+    let payload: Vec<(u32, u64, als::AlsVertex)> = (0..1024u32)
+        .map(|i| {
+            (i, i as u64, als::AlsVertex {
+                factor: vec![0.1; d],
+                sse: 1.0,
+                cnt: 3.0,
+                is_user: i % 2 == 0,
+            })
+        })
+        .collect();
+    let mut buf = Vec::new();
+    payload.encode(&mut buf);
+    let frame_bytes = buf.len();
+    let reps = if quick { 50usize } else { 400 };
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        buf.clear();
+        payload.encode(&mut buf);
+    }
+    let encode_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let mut decoded_elems = 0usize;
+    for _ in 0..reps {
+        let v: Vec<(u32, u64, als::AlsVertex)> = wire::from_bytes(&buf)?;
+        decoded_elems += v.len();
+    }
+    let decode_s = t0.elapsed().as_secs_f64();
+    let encode_mbps = (frame_bytes * reps) as f64 / encode_s.max(1e-9) / 1e6;
+    let decode_mbps = (frame_bytes * reps) as f64 / decode_s.max(1e-9) / 1e6;
+    println!(
+        "  codec: {frame_bytes} B payload x {reps}: encode {encode_mbps:.0} MB/s, \
+         decode {decode_mbps:.0} MB/s ({decoded_elems} elements decoded)"
+    );
+
+    // --- atom store: save, per-machine load, full replay ----------------
+    let edges = graphlab::datagen::web_graph(n, 8, 1);
+    let g = pagerank::build(n, &edges, 0.15);
+    let k = if quick { 32usize } else { 128 };
+    let machines = 4usize;
+    let dir = std::env::temp_dir().join(format!("graphlab-bench-wire-{}", std::process::id()));
+    let atom_set = AtomSet::grow_bfs(&g, k, 1);
+    let t0 = std::time::Instant::now();
+    atom_set.save_atoms(&g, &dir)?;
+    let save_s = t0.elapsed().as_secs_f64();
+    let store = atoms::AtomStore::open(&dir)?;
+    let (_partition, placement) = store.place(machines);
+    let t0 = std::time::Instant::now();
+    let lg: graphlab::distributed::LocalGraph<pagerank::PrVertex, pagerank::PrEdge> =
+        graphlab::distributed::LocalGraph::from_atom_files(
+            &dir,
+            &placement.atom_to_machine,
+            0,
+        )?;
+    let local_load_s = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let (g2, _) = atoms::load_graph::<pagerank::PrVertex, pagerank::PrEdge>(&dir)?;
+    let full_load_s = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(
+        g2.num_vertices() == g.num_vertices() && g2.num_edges() == g.num_edges(),
+        "atom-store round trip changed the graph shape"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    println!(
+        "  atoms: {k} journals for n={n}: save {save_s:.3}s, machine-0 load \
+         {local_load_s:.3}s ({} owned vertices), full replay {full_load_s:.3}s",
+        lg.owned
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"wire codec + on-disk atom store (PR 4)\",\n  \
+         \"command\": \"graphlab bench-wire\",\n  \"n\": {n},\n  \"atoms\": {k},\n  \
+         \"machines\": {machines},\n  \"quick\": {quick},\n  \"results\": {{\n    \
+         \"codec_payload_bytes\": {frame_bytes},\n    \"codec_reps\": {reps},\n    \
+         \"encode_mb_per_sec\": {encode_mbps:.1},\n    \"decode_mb_per_sec\": {decode_mbps:.1},\n    \
+         \"atoms_save_seconds\": {save_s:.6},\n    \"machine0_load_seconds\": {local_load_s:.6},\n    \
+         \"full_replay_seconds\": {full_load_s:.6}\n  }}\n}}\n"
     );
     std::fs::write(&out_path, json).with_context(|| format!("writing {out_path}"))?;
     println!("wrote {out_path}");

@@ -10,11 +10,26 @@
 //! number of crossing edges — and run a fast balanced greedy partition of
 //! the meta-graph onto the actual machine count. The same atom set serves
 //! any cluster size without re-partitioning the full graph.
+//!
+//! **On disk** (Distributed GraphLab, arXiv 1204.6078): the paper stores
+//! "each atom as a separate file" — a journal of graph-construction
+//! commands replayed at load time. [`AtomSet::save_atoms`] writes exactly
+//! that: one [`crate::wire`]-encoded journal per atom (interior vertices
+//! with their adjacency, ghost-vertex data snapshots, incident edges)
+//! plus a `meta.bin` holding the vertex→atom assignment and the
+//! meta-graph, so phase 2 runs at load time without touching the data
+//! graph. [`crate::distributed::LocalGraph::from_atom_files`] rebuilds a
+//! machine's partition + ghosts by replaying only that machine's atoms;
+//! [`load_graph`] replays everything (driver-side reassembly and the
+//! shared engine's load path).
 
 use super::{MachineId, Partition};
-use crate::graph::{Graph, VertexId};
+use crate::graph::{EdgeId, Graph, GraphBuilder, VertexId};
 use crate::util::Rng;
+use crate::wire::{self, Wire, WIRE_VERSION};
+use anyhow::{bail, Context as _};
 use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
 
 /// Atom id (phase-1 part index).
 pub type AtomId = usize;
@@ -194,6 +209,372 @@ impl MetaGraph {
         }
         assignment
     }
+}
+
+// ---------------------------------------------------------------------------
+// the on-disk atom store
+// ---------------------------------------------------------------------------
+
+/// File magics (little-endian u32) for the two file kinds.
+const META_MAGIC: u32 = u32::from_le_bytes(*b"GLAM");
+const ATOM_MAGIC: u32 = u32::from_le_bytes(*b"GLAA");
+
+/// One interior vertex of an atom journal: global id, adjacency in global
+/// CSR order (`(neighbor gvid, global edge id)`), vertex data.
+type VertexRecord<V> = (VertexId, Vec<(VertexId, EdgeId)>, V);
+/// One ghost snapshot: global id + data at save time.
+type GhostRecord<V> = (VertexId, V);
+/// One incident edge: global edge id, both endpoints in insertion order,
+/// edge data.
+type EdgeRecord<E> = (EdgeId, VertexId, VertexId, E);
+
+/// The decoded body of one atom journal.
+type AtomBody<V, E> = (Vec<VertexRecord<V>>, Vec<GhostRecord<V>>, Vec<EdgeRecord<E>>);
+
+fn atom_file_name(atom: AtomId) -> String {
+    format!("atom_{atom}.bin")
+}
+
+fn check_header(input: &mut &[u8], magic: u32, path: &Path) -> anyhow::Result<()> {
+    let got_magic = u32::decode(input).with_context(|| format!("{}", path.display()))?;
+    if got_magic != magic {
+        bail!(
+            "{}: bad magic {got_magic:#010x} (expected {magic:#010x})",
+            path.display()
+        );
+    }
+    let version = u32::decode(input)?;
+    if version != WIRE_VERSION {
+        bail!(
+            "{}: wire version {version} (this build speaks {WIRE_VERSION})",
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+impl AtomSet {
+    /// Write this over-partition of `g` to `dir` as the paper's on-disk
+    /// atom store: one journal file per atom plus `meta.bin` (assignment +
+    /// meta-graph). Any cluster size can later load the same directory.
+    pub fn save_atoms<V: Wire, E: Wire>(&self, g: &Graph<V, E>, dir: &Path) -> anyhow::Result<()> {
+        let n = g.num_vertices();
+        if self.assignment.len() != n {
+            bail!(
+                "atom set covers {} vertices but the graph has {n}",
+                self.assignment.len()
+            );
+        }
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating atoms dir {}", dir.display()))?;
+
+        // meta.bin: counts + assignment + the (tiny) meta-graph, so load
+        // time never needs the data graph for phase-2 placement.
+        let meta_graph = MetaGraph::build(g, self);
+        let mut buf = Vec::new();
+        META_MAGIC.encode(&mut buf);
+        WIRE_VERSION.encode(&mut buf);
+        (n as u64).encode(&mut buf);
+        (g.num_edges() as u64).encode(&mut buf);
+        (self.num_atoms as u32).encode(&mut buf);
+        // Data-type tags: loading a store with the wrong app's types is a
+        // clear error up front, not a confusing decode failure mid-file.
+        std::any::type_name::<V>().to_string().encode(&mut buf);
+        std::any::type_name::<E>().to_string().encode(&mut buf);
+        let assignment32: Vec<u32> = self.assignment.iter().map(|&a| a as u32).collect();
+        assignment32.encode(&mut buf);
+        meta_graph.atom_weight.encode(&mut buf);
+        let adjacency32: Vec<Vec<(u32, u64)>> = meta_graph
+            .adjacency
+            .iter()
+            .map(|adj| adj.iter().map(|&(b, w)| (b as u32, w)).collect())
+            .collect();
+        adjacency32.encode(&mut buf);
+        let meta_path = dir.join("meta.bin");
+        std::fs::write(&meta_path, &buf)
+            .with_context(|| format!("writing {}", meta_path.display()))?;
+
+        // One journal per atom: interior vertices (with adjacency in
+        // global CSR order — the replay needs the exact order to rebuild
+        // identical local graphs), ghost data snapshots, incident edges.
+        // Bucket vertices by atom in one pass (ascending id within each
+        // bucket) rather than rescanning all n vertices per atom.
+        let mut by_atom: Vec<Vec<VertexId>> = vec![Vec::new(); self.num_atoms];
+        for v in 0..n as VertexId {
+            by_atom[self.atom(v)].push(v);
+        }
+        for (atom, members) in by_atom.iter().enumerate() {
+            let mut verts: Vec<VertexRecord<&V>> = Vec::new();
+            let mut ghosts: Vec<GhostRecord<&V>> = Vec::new();
+            let mut edges: Vec<EdgeRecord<&E>> = Vec::new();
+            let mut ghost_seen = std::collections::HashSet::new();
+            let mut edge_seen = std::collections::HashSet::new();
+            for &v in members {
+                let adj: Vec<(VertexId, EdgeId)> = g.neighbors(v).to_vec();
+                for &(u, e) in &adj {
+                    if self.atom(u) != atom && ghost_seen.insert(u) {
+                        ghosts.push((u, g.vertex_data(u)));
+                    }
+                    if edge_seen.insert(e) {
+                        let (a, b) = g.endpoints(e);
+                        edges.push((e, a, b, g.edge_data(e)));
+                    }
+                }
+                verts.push((v, adj, g.vertex_data(v)));
+            }
+            let mut buf = Vec::new();
+            ATOM_MAGIC.encode(&mut buf);
+            WIRE_VERSION.encode(&mut buf);
+            (atom as u32).encode(&mut buf);
+            (verts.len() as u32).encode(&mut buf);
+            for (v, adj, data) in &verts {
+                v.encode(&mut buf);
+                adj.encode(&mut buf);
+                data.encode(&mut buf);
+            }
+            (ghosts.len() as u32).encode(&mut buf);
+            for (v, data) in &ghosts {
+                v.encode(&mut buf);
+                data.encode(&mut buf);
+            }
+            (edges.len() as u32).encode(&mut buf);
+            for (e, a, b, data) in &edges {
+                e.encode(&mut buf);
+                a.encode(&mut buf);
+                b.encode(&mut buf);
+                data.encode(&mut buf);
+            }
+            let path = dir.join(atom_file_name(atom));
+            std::fs::write(&path, &buf)
+                .with_context(|| format!("writing {}", path.display()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Read and decode one atom journal.
+pub(crate) fn read_atom_file<V: Wire, E: Wire>(
+    dir: &Path,
+    atom: AtomId,
+) -> anyhow::Result<AtomBody<V, E>> {
+    let path = dir.join(atom_file_name(atom));
+    let buf =
+        std::fs::read(&path).with_context(|| format!("reading atom file {}", path.display()))?;
+    let mut input = &buf[..];
+    check_header(&mut input, ATOM_MAGIC, &path)?;
+    let stored_atom = u32::decode(&mut input)?;
+    if stored_atom as usize != atom {
+        bail!("{}: holds atom {stored_atom}, expected {atom}", path.display());
+    }
+    let body = (|| -> wire::Result<AtomBody<V, E>> {
+        let nverts = u32::decode(&mut input)? as usize;
+        let mut verts = Vec::with_capacity(nverts.min(input.len()));
+        for _ in 0..nverts {
+            verts.push(<VertexRecord<V>>::decode(&mut input)?);
+        }
+        let nghosts = u32::decode(&mut input)? as usize;
+        let mut ghosts = Vec::with_capacity(nghosts.min(input.len().max(1)));
+        for _ in 0..nghosts {
+            ghosts.push(<GhostRecord<V>>::decode(&mut input)?);
+        }
+        let nedges = u32::decode(&mut input)? as usize;
+        let mut edges = Vec::with_capacity(nedges.min(input.len().max(1)));
+        for _ in 0..nedges {
+            edges.push(<EdgeRecord<E>>::decode(&mut input)?);
+        }
+        if !input.is_empty() {
+            return Err(wire::WireError::Trailing { extra: input.len() });
+        }
+        Ok((verts, ghosts, edges))
+    })()
+    .with_context(|| format!("decoding atom file {}", path.display()))?;
+    Ok(body)
+}
+
+/// The opened metadata of an on-disk atom store (`meta.bin`): everything
+/// phase-2 placement needs without reading a single atom journal.
+#[derive(Debug, Clone)]
+pub struct AtomStore {
+    /// The phase-1 vertex → atom assignment.
+    pub atoms: AtomSet,
+    /// The stored meta-graph (phase-2 input).
+    pub meta: MetaGraph,
+    /// `type_name` of the stored vertex data.
+    pub vtype: String,
+    /// `type_name` of the stored edge data.
+    pub etype: String,
+    /// Vertex count of the stored graph.
+    pub num_vertices: usize,
+    /// Edge count of the stored graph.
+    pub num_edges: usize,
+    /// The directory this store was opened from.
+    pub dir: PathBuf,
+}
+
+impl AtomStore {
+    /// Open `dir/meta.bin`.
+    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("meta.bin");
+        let buf = std::fs::read(&path)
+            .with_context(|| format!("reading atom store meta {}", path.display()))?;
+        let mut input = &buf[..];
+        check_header(&mut input, META_MAGIC, &path)?;
+        let num_vertices = u64::decode(&mut input)? as usize;
+        let num_edges = u64::decode(&mut input)? as usize;
+        let num_atoms = u32::decode(&mut input)? as usize;
+        let vtype = String::decode(&mut input)
+            .with_context(|| format!("decoding {}", path.display()))?;
+        let etype = String::decode(&mut input)?;
+        let assignment32 = Vec::<u32>::decode(&mut input)?;
+        let atom_weight = Vec::<u64>::decode(&mut input)?;
+        let adjacency32 = Vec::<Vec<(u32, u64)>>::decode(&mut input)?;
+        // Range-check everything that later code indexes with: a corrupt
+        // store must error here, never panic downstream.
+        if assignment32.len() != num_vertices
+            || atom_weight.len() != num_atoms
+            || adjacency32.len() != num_atoms
+        {
+            bail!("{}: inconsistent counts", path.display());
+        }
+        if assignment32.iter().any(|&a| a as usize >= num_atoms)
+            || adjacency32
+                .iter()
+                .flatten()
+                .any(|&(b, _)| b as usize >= num_atoms)
+        {
+            bail!("{}: atom id out of range", path.display());
+        }
+        Ok(AtomStore {
+            atoms: AtomSet {
+                assignment: assignment32.into_iter().map(|a| a as AtomId).collect(),
+                num_atoms,
+            },
+            meta: MetaGraph {
+                atom_weight,
+                adjacency: adjacency32
+                    .into_iter()
+                    .map(|adj| adj.into_iter().map(|(b, w)| (b as AtomId, w)).collect())
+                    .collect(),
+            },
+            vtype,
+            etype,
+            num_vertices,
+            num_edges,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Check the stored vertex/edge data types against the ones the
+    /// caller is about to decode: a store written by a different app
+    /// fails here with both names, not with a decode error mid-journal.
+    pub fn check_types<V, E>(&self) -> anyhow::Result<()> {
+        let (v, e) = (std::any::type_name::<V>(), std::any::type_name::<E>());
+        if self.vtype != v || self.etype != e {
+            bail!(
+                "atom store {} holds {} / {} data but {} / {} was requested",
+                self.dir.display(),
+                self.vtype,
+                self.etype,
+                v,
+                e
+            );
+        }
+        Ok(())
+    }
+
+    /// Phase 2 for this store: place atoms on `machines` machines and
+    /// expand to the vertex-level [`Partition`] plus the
+    /// [`AtomPlacement`] the distributed engines' disk loaders need.
+    pub fn place(&self, machines: usize) -> (Partition, AtomPlacement) {
+        let atom_to_machine = self.meta.partition(machines);
+        let assignment: Vec<MachineId> = (0..self.num_vertices as VertexId)
+            .map(|v| atom_to_machine[self.atoms.atom(v)])
+            .collect();
+        (
+            Partition::from_assignment(assignment, machines),
+            AtomPlacement {
+                dir: self.dir.clone(),
+                atom_to_machine,
+            },
+        )
+    }
+}
+
+/// Disk-load routing for a distributed engine: where the atom journals
+/// live and which machine each atom landed on (phase-2 output).
+#[derive(Debug, Clone)]
+pub struct AtomPlacement {
+    /// The atom store directory.
+    pub dir: PathBuf,
+    /// Atom → machine assignment.
+    pub atom_to_machine: Vec<MachineId>,
+}
+
+/// Replay every atom journal in `dir` into a full data graph (the driver
+/// side reassembly / shared-engine load path). Returns the graph plus the
+/// opened store metadata.
+pub fn load_graph<V: Wire, E: Wire>(dir: &Path) -> anyhow::Result<(Graph<V, E>, AtomStore)> {
+    let store = AtomStore::open(dir)?;
+    store.check_types::<V, E>()?;
+    let n = store.num_vertices;
+    let m = store.num_edges;
+    let mut vdata: Vec<Option<V>> = (0..n).map(|_| None).collect();
+    let mut edges: Vec<Option<(VertexId, VertexId, E)>> = (0..m).map(|_| None).collect();
+    for atom in 0..store.atoms.num_atoms() {
+        let (verts, _ghosts, atom_edges) = read_atom_file::<V, E>(dir, atom)?;
+        for (v, _adj, data) in verts {
+            let slot = vdata
+                .get_mut(v as usize)
+                .with_context(|| format!("atom {atom}: vertex {v} out of range"))?;
+            *slot = Some(data);
+        }
+        for (e, a, b, data) in atom_edges {
+            let slot = edges
+                .get_mut(e as usize)
+                .with_context(|| format!("atom {atom}: edge {e} out of range"))?;
+            if slot.is_none() {
+                *slot = Some((a, b, data));
+            }
+        }
+    }
+    let mut builder = GraphBuilder::with_capacity(n, m);
+    for (v, slot) in vdata.into_iter().enumerate() {
+        let Some(data) = slot else {
+            bail!("atom store {}: vertex {v} missing from every atom", dir.display());
+        };
+        builder.add_vertex(data);
+    }
+    // Re-add edges in global edge-id order: the rebuilt CSR (and therefore
+    // every downstream local graph) is bit-identical to the original.
+    for (e, slot) in edges.into_iter().enumerate() {
+        let Some((a, b, data)) = slot else {
+            bail!("atom store {}: edge {e} missing from every atom", dir.display());
+        };
+        builder.add_edge(a, b, data);
+    }
+    Ok((builder.build(), store))
+}
+
+/// Resolve an atoms directory the same cwd-robust way as the artifacts
+/// dir: an explicit argument wins, then `GRAPHLAB_ATOMS`, then `atoms/`
+/// relative to the cwd, then `atoms/` next to the workspace root (cargo
+/// runs test binaries with cwd = the package dir `rust/`).
+pub fn resolve_atoms_dir(arg: Option<&str>) -> PathBuf {
+    if let Some(dir) = arg {
+        return PathBuf::from(dir);
+    }
+    if let Ok(dir) = std::env::var("GRAPHLAB_ATOMS") {
+        return PathBuf::from(dir);
+    }
+    let local = PathBuf::from("atoms");
+    if local.exists() {
+        return local;
+    }
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("atoms");
+    if repo_root.exists() {
+        return repo_root;
+    }
+    local
 }
 
 /// The full two-phase pipeline: atoms → meta-graph → machine assignment.

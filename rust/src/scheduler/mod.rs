@@ -28,6 +28,7 @@ pub use work_stealing::WorkStealing;
 use anyhow::bail;
 
 use crate::graph::VertexId;
+use crate::wire::Wire;
 use crate::util::Rng;
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -38,6 +39,21 @@ pub struct Task {
     pub vertex: VertexId,
     /// Priority (higher runs earlier under priority scheduling).
     pub priority: f64,
+}
+
+/// Tasks cross machines inside the distributed engines' ghost/release
+/// frames: 12 bytes (vertex + priority).
+impl Wire for Task {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.vertex.encode(out);
+        self.priority.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> crate::wire::Result<Self> {
+        Ok(Task {
+            vertex: VertexId::decode(input)?,
+            priority: f64::decode(input)?,
+        })
+    }
 }
 
 /// Common scheduler interface (single consumer; engines wrap in a mutex

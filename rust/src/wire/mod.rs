@@ -1,0 +1,374 @@
+//! The **wire codec**: the one serialization story for everything that
+//! crosses a machine boundary or touches disk.
+//!
+//! The paper's distributed layer rides on TCP frames (Sec. 4.1 versioned
+//! ghost coherence, Sec. 4.2 lock/update protocols) and on atom files —
+//! journals of graph-construction commands replayed at load time
+//! (Distributed GraphLab, arXiv 1204.6078). Both need actual bytes, so
+//! this module defines [`Wire`]: a little-endian, length-prefixed,
+//! dependency-free codec implemented by hand for every primitive,
+//! container, app vertex/edge type, and distributed message enum in the
+//! tree. The in-process network ([`crate::distributed::network`]) encodes
+//! every message into a frame and counts the *encoded* length, so wire
+//! metrics (Fig. 6(b)) are measurements, not models; the atom store
+//! ([`crate::partition::atoms`]) writes the same records to disk.
+//!
+//! # Encoding rules (version [`WIRE_VERSION`])
+//!
+//! * integers and floats: fixed-width little-endian (`usize`/`isize`
+//!   travel as 8-byte `u64`/`i64` so files are portable across hosts);
+//! * `bool` / `Option` tags: one byte, `0` or `1` — anything else is a
+//!   decode error, not a silent coercion;
+//! * `Vec<T>` / `String`: `u32` element count, then the elements
+//!   (strings are UTF-8 validated on decode);
+//! * tuples and structs: fields in declaration order, no padding;
+//! * enums: one discriminant byte, then the variant's fields.
+//!
+//! Decoding is total: truncated input, bad tags, and invalid UTF-8 come
+//! back as [`WireError`], never a panic (property-tested over random
+//! values and all strict prefixes in `rust/tests/wire_props.rs`).
+
+use std::fmt;
+
+/// Codec version. Frames between in-process endpoints don't carry it
+/// (both ends are the same build; a TCP deployment would negotiate it at
+/// connection setup) but every atom file embeds it in its header.
+pub const WIRE_VERSION: u32 = 1;
+
+/// A decode failure. Encoding is infallible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// Input ended before the value did.
+    Truncated {
+        /// Bytes the decoder needed.
+        needed: usize,
+        /// Bytes it had.
+        have: usize,
+    },
+    /// An enum discriminant / bool / Option tag held an invalid value.
+    BadTag {
+        /// The type being decoded.
+        what: &'static str,
+        /// The offending byte.
+        tag: u8,
+    },
+    /// A `String` payload was not valid UTF-8.
+    BadUtf8,
+    /// [`from_bytes`] finished with unconsumed input.
+    Trailing {
+        /// Leftover byte count.
+        extra: usize,
+    },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { needed, have } => {
+                write!(f, "wire: truncated input (needed {needed} bytes, have {have})")
+            }
+            WireError::BadTag { what, tag } => {
+                write!(f, "wire: invalid tag {tag} while decoding {what}")
+            }
+            WireError::BadUtf8 => write!(f, "wire: string payload is not valid UTF-8"),
+            WireError::Trailing { extra } => {
+                write!(f, "wire: {extra} trailing bytes after value")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Codec result.
+pub type Result<T> = std::result::Result<T, WireError>;
+
+/// Consume exactly `n` bytes from the front of `input`.
+#[inline]
+pub fn take<'a>(input: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
+    if input.len() < n {
+        return Err(WireError::Truncated {
+            needed: n,
+            have: input.len(),
+        });
+    }
+    let (head, tail) = input.split_at(n);
+    *input = tail;
+    Ok(head)
+}
+
+/// Anything that can be serialized onto the wire and back.
+pub trait Wire: Sized {
+    /// Append this value's encoding to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+
+    /// Decode one value from the front of `input`, advancing it past the
+    /// consumed bytes.
+    fn decode(input: &mut &[u8]) -> Result<Self>;
+}
+
+/// Encode a value into a fresh buffer.
+pub fn to_bytes<W: Wire>(value: &W) -> Vec<u8> {
+    let mut out = Vec::new();
+    value.encode(&mut out);
+    out
+}
+
+/// Decode a value that must occupy the whole buffer (leftover bytes are a
+/// [`WireError::Trailing`] error — the strict mode used for file records).
+pub fn from_bytes<W: Wire>(mut input: &[u8]) -> Result<W> {
+    let v = W::decode(&mut input)?;
+    if !input.is_empty() {
+        return Err(WireError::Trailing { extra: input.len() });
+    }
+    Ok(v)
+}
+
+/// Encoded size of a value (one throwaway encode; diagnostics/tests only —
+/// hot paths encode once into the frame and read `frame.len()`).
+pub fn encoded_len<W: Wire>(value: &W) -> usize {
+    to_bytes(value).len()
+}
+
+// ---------------------------------------------------------------------------
+// primitives
+// ---------------------------------------------------------------------------
+
+macro_rules! impl_wire_fixed {
+    ($($t:ty),*) => {
+        $(impl Wire for $t {
+            #[inline]
+            fn encode(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            #[inline]
+            fn decode(input: &mut &[u8]) -> Result<Self> {
+                let b = take(input, std::mem::size_of::<$t>())?;
+                Ok(<$t>::from_le_bytes(b.try_into().unwrap()))
+            }
+        })*
+    };
+}
+
+impl_wire_fixed!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64);
+
+impl Wire for usize {
+    #[inline]
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as u64).encode(out);
+    }
+    #[inline]
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(u64::decode(input)? as usize)
+    }
+}
+
+impl Wire for isize {
+    #[inline]
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as i64).encode(out);
+    }
+    #[inline]
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(i64::decode(input)? as isize)
+    }
+}
+
+impl Wire for bool {
+    #[inline]
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(*self as u8);
+    }
+    #[inline]
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        match u8::decode(input)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            tag => Err(WireError::BadTag { what: "bool", tag }),
+        }
+    }
+}
+
+impl Wire for () {
+    #[inline]
+    fn encode(&self, _out: &mut Vec<u8>) {}
+    #[inline]
+    fn decode(_input: &mut &[u8]) -> Result<Self> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// containers
+// ---------------------------------------------------------------------------
+
+impl<T: Wire> Wire for Option<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            None => out.push(0),
+            Some(v) => {
+                out.push(1);
+                v.encode(out);
+            }
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        match u8::decode(input)? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(input)?)),
+            tag => Err(WireError::BadTag { what: "Option", tag }),
+        }
+    }
+}
+
+impl<T: Wire> Wire for Vec<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.len() as u32).encode(out);
+        for v in self {
+            v.encode(out);
+        }
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        let len = u32::decode(input)? as usize;
+        // Cap the preallocation by the remaining input so a corrupt length
+        // prefix cannot force a huge allocation before the Truncated error.
+        let mut v = Vec::with_capacity(len.min(input.len().max(1)));
+        for _ in 0..len {
+            v.push(T::decode(input)?);
+        }
+        Ok(v)
+    }
+}
+
+impl Wire for String {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.len() as u32).encode(out);
+        out.extend_from_slice(self.as_bytes());
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        let len = u32::decode(input)? as usize;
+        let b = take(input, len)?;
+        String::from_utf8(b.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+}
+
+impl<A: Wire, B: Wire> Wire for (A, B) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok((A::decode(input)?, B::decode(input)?))
+    }
+}
+
+impl<A: Wire, B: Wire, C: Wire> Wire for (A, B, C) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+        self.2.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok((A::decode(input)?, B::decode(input)?, C::decode(input)?))
+    }
+}
+
+impl<A: Wire, B: Wire, C: Wire, D: Wire> Wire for (A, B, C, D) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+        self.2.encode(out);
+        self.3.encode(out);
+    }
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok((
+            A::decode(input)?,
+            B::decode(input)?,
+            C::decode(input)?,
+            D::decode(input)?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip<W: Wire + PartialEq + std::fmt::Debug>(v: W) {
+        let b = to_bytes(&v);
+        assert_eq!(from_bytes::<W>(&b).unwrap(), v);
+    }
+
+    #[test]
+    fn primitives_round_trip() {
+        round_trip(0u8);
+        round_trip(0xA5u8);
+        round_trip(0xBEEFu16);
+        round_trip(0xDEADBEEFu32);
+        round_trip(u64::MAX);
+        round_trip(-7i8);
+        round_trip(i16::MIN);
+        round_trip(-123456789i32);
+        round_trip(i64::MIN);
+        round_trip(3.5f32);
+        round_trip(f64::NEG_INFINITY);
+        round_trip(usize::MAX >> 1);
+        round_trip(-42isize);
+        round_trip(true);
+        round_trip(false);
+        round_trip(());
+    }
+
+    #[test]
+    fn containers_round_trip() {
+        round_trip(Option::<u32>::None);
+        round_trip(Some(9u32));
+        round_trip(vec![1u16, 2, 3]);
+        round_trip(Vec::<f64>::new());
+        round_trip("héllo wire".to_string());
+        round_trip((1u8, 2.5f32));
+        round_trip((1u32, 2u64, vec![3.0f32]));
+        round_trip((1u32, true, "k".to_string(), vec![(7u32, 8u64)]));
+        round_trip(vec![vec![1.0f64, 2.0], vec![]]);
+    }
+
+    #[test]
+    fn layout_is_little_endian_and_length_prefixed() {
+        assert_eq!(to_bytes(&0x0102_0304u32), [4, 3, 2, 1]);
+        assert_eq!(to_bytes(&vec![1u8, 2]), [2, 0, 0, 0, 1, 2]);
+        assert_eq!(to_bytes(&"ab".to_string()), [2, 0, 0, 0, b'a', b'b']);
+        assert_eq!(to_bytes(&Some(7u8)), [1, 7]);
+        assert_eq!(to_bytes(&5usize).len(), 8); // usize travels as u64
+    }
+
+    #[test]
+    fn truncated_input_is_an_error_not_a_panic() {
+        let b = to_bytes(&(1u64, vec![2u32, 3], "xyz".to_string()));
+        for cut in 0..b.len() {
+            let err = from_bytes::<(u64, Vec<u32>, String)>(&b[..cut]);
+            assert!(err.is_err(), "prefix of {cut} bytes decoded");
+        }
+    }
+
+    #[test]
+    fn bad_tags_and_trailing_bytes_error() {
+        assert_eq!(
+            from_bytes::<bool>(&[2]),
+            Err(WireError::BadTag { what: "bool", tag: 2 })
+        );
+        assert_eq!(
+            from_bytes::<Option<u8>>(&[9, 0]),
+            Err(WireError::BadTag { what: "Option", tag: 9 })
+        );
+        assert_eq!(from_bytes::<String>(&[1, 0, 0, 0, 0xFF]), Err(WireError::BadUtf8));
+        assert_eq!(from_bytes::<u8>(&[1, 2]), Err(WireError::Trailing { extra: 1 }));
+    }
+
+    #[test]
+    fn corrupt_vec_length_does_not_overallocate() {
+        // Claims u32::MAX elements with 1 byte of payload: must error fast.
+        let mut b = to_bytes(&u32::MAX);
+        b.push(0);
+        assert!(from_bytes::<Vec<u64>>(&b).is_err());
+    }
+}

@@ -203,14 +203,19 @@ fn locking_engine_respects_consistency_under_contention() {
     // Counter app where each update increments the center and all
     // neighbor-visible sums must stay exact (full consistency): any lost
     // update or torn read breaks the total.
-    use graphlab::distributed::DataValue;
     use graphlab::engine::{Consistency, Ctx, Scope, VertexProgram};
     use graphlab::graph::GraphBuilder;
+    use graphlab::wire::Wire;
 
     #[derive(Clone, Debug, PartialEq)]
     struct C(u64);
-    impl DataValue for C {
-        fn wire_bytes(&self) -> u64 { 8 }
+    impl Wire for C {
+        fn encode(&self, out: &mut Vec<u8>) {
+            self.0.encode(out);
+        }
+        fn decode(input: &mut &[u8]) -> graphlab::wire::Result<Self> {
+            Ok(C(u64::decode(input)?))
+        }
     }
     struct IncAll {
         rounds: u64,
