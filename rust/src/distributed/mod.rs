@@ -1,13 +1,16 @@
 //! Distributed substrate: the machinery under both distributed engines
 //! (paper Sec. 4).
 //!
-//! The paper runs on 64 EC2 nodes over TCP; here a *cluster* is a set of
-//! in-process machines (one OS thread each) communicating exclusively by
-//! message passing over [`network`] endpoints — no shared mutable state —
-//! with every message serialized through the [`crate::wire`] codec into a
-//! real length-prefixed frame, so byte accounting (for Fig. 6(b)) is a
-//! measurement of the encoded traffic, with optional injected latency
-//! (for the Fig. 8(b) lock-pipelining study). Every machine holds a
+//! The paper runs on 64 EC2 nodes over TCP. Here the substrate is split
+//! into two layers, mirroring that deployment: the [`network`] framing
+//! layer ([`Endpoint`]s speak typed messages, serialized through the
+//! [`crate::wire`] codec into real length-prefixed frames, so byte
+//! accounting for Fig. 6(b) is a measurement of the encoded traffic) and
+//! the byte-level [`transport`] backends underneath — `InProc` (mpsc
+//! channels, one thread per machine, optional injected latency for the
+//! Fig. 8(b) lock-pipelining study) and `Tcp` (real `std::net` sockets:
+//! a loopback full mesh in one process, or one endpoint per worker
+//! process in `graphlab worker` cluster mode). Every machine holds a
 //! [`localgraph::LocalGraph`]: its owned partition plus **ghost** copies of
 //! boundary vertices/edges with version-based cache coherence (paper Sec.
 //! 4.1, Fig. 4(b)), built either from an in-memory global graph or by
@@ -22,9 +25,17 @@ pub mod localgraph;
 pub mod locks;
 pub mod network;
 pub mod termination;
+pub mod transport;
 
 pub use localgraph::LocalGraph;
 pub use network::{Endpoint, Network, NetworkModel};
+pub use transport::{ClusterConfig, TransportKind};
+
+use std::sync::Arc;
+
+use crate::graph::{Graph, GraphTopology};
+use crate::partition::atoms::AtomPlacement;
+use crate::partition::{MachineId, Partition};
 
 use crate::wire::Wire;
 
@@ -38,6 +49,118 @@ use crate::wire::Wire;
 pub trait DataValue: Clone + Send + Sync + Wire + 'static {}
 
 impl<T: Clone + Send + Sync + Wire + 'static> DataValue for T {}
+
+/// Everything a distributed engine needs before spawning its machine
+/// loops, assembled in the one order that works on every backend: pick
+/// the local ranks, load their [`LocalGraph`]s, form the mesh, split the
+/// input graph into topology plus (cluster-mode-only) reassembly
+/// fallback data.
+pub(crate) struct ClusterSetup<V, E, M> {
+    /// One local graph per locally-run machine (rank order).
+    pub locals: Vec<LocalGraph<V, E>>,
+    /// One endpoint per locally-run machine (same order).
+    pub endpoints: Vec<Endpoint<M>>,
+    /// Per-machine wire counters (all slots; only local ones written).
+    pub stats: Arc<Vec<network::NetStats>>,
+    /// Input vertex data, retained only in cluster mode as the
+    /// reassembly fallback for slots owned by other processes.
+    pub vfallback: Option<Vec<V>>,
+    /// Input edge data, ditto.
+    pub efallback: Option<Vec<E>>,
+    /// The input graph's topology (reassembly + canonical edge owners).
+    pub topo: GraphTopology,
+}
+
+/// The shared front half of both distributed engines' `run`:
+/// ranks → local graphs → mesh → topology/fallback split. Local graphs
+/// are loaded **before** the mesh forms so that, in cluster mode,
+/// per-process journal-replay skew burns the generous connect window
+/// rather than the protocol's barrier timeouts.
+pub(crate) fn cluster_setup<V, E, M>(
+    graph: Graph<V, E>,
+    partition: &Partition,
+    atoms: Option<&AtomPlacement>,
+    machines: usize,
+    model: NetworkModel,
+    transport: TransportKind,
+    cluster: Option<&ClusterConfig>,
+) -> anyhow::Result<ClusterSetup<V, E, M>>
+where
+    V: Clone + Wire,
+    E: Clone + Wire,
+    M: Send + Wire,
+{
+    // Which machines run in this process: all of them on the in-process
+    // backends, exactly one in multi-process cluster mode.
+    let ranks: Vec<MachineId> = match cluster {
+        Some(c) => vec![c.me],
+        None => (0..machines).collect(),
+    };
+    // The paper's load step: merge your atom files (disk path) or slice
+    // the already-loaded global graph (in-memory path, same result).
+    let locals: Vec<LocalGraph<V, E>> = match atoms {
+        None => ranks
+            .iter()
+            .map(|&m| LocalGraph::build(&graph, partition, m))
+            .collect(),
+        Some(placement) => {
+            let mut ls = Vec::with_capacity(ranks.len());
+            for &m in &ranks {
+                ls.push(LocalGraph::from_atom_files(
+                    &placement.dir,
+                    &placement.atom_to_machine,
+                    m,
+                )?);
+            }
+            ls
+        }
+    };
+    let (endpoints, stats) = network::cluster_endpoints::<M>(machines, model, transport, cluster)?;
+    debug_assert!(endpoints.iter().map(|ep| ep.me()).eq(ranks.iter().copied()));
+    // Cluster mode keeps the input data as the reassembly fallback for
+    // slots owned by other worker processes; in-process runs free it
+    // right here (every machine already holds its LocalGraph copy — no
+    // reason to double the graph's memory for the whole run).
+    let (vdata0, edata0, topo) = graph.into_parts();
+    let (vfallback, efallback) = if cluster.is_some() {
+        (Some(vdata0), Some(edata0))
+    } else {
+        drop(vdata0);
+        drop(edata0);
+        (None, None)
+    };
+    Ok(ClusterSetup {
+        locals,
+        endpoints,
+        stats,
+        vfallback,
+        efallback,
+        topo,
+    })
+}
+
+/// Reassemble one global data vector from per-machine outputs (both
+/// engines' final step). An in-process run must cover every slot — an
+/// uncovered one is a partition/ownership bug and panics loudly — while
+/// a cluster-mode run supplies the input data as `fallback` for the
+/// slots owned by other worker processes.
+pub(crate) fn reassemble<T>(
+    slots: Vec<Option<T>>,
+    fallback: Option<Vec<T>>,
+    what: &str,
+) -> Vec<T> {
+    match fallback {
+        Some(orig) => slots
+            .into_iter()
+            .zip(orig)
+            .map(|(slot, fb)| slot.unwrap_or(fb))
+            .collect(),
+        None => slots
+            .into_iter()
+            .map(|slot| slot.unwrap_or_else(|| panic!("{what} unowned")))
+            .collect(),
+    }
+}
 
 #[cfg(test)]
 mod tests {

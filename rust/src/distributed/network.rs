@@ -1,27 +1,40 @@
-//! In-process message-passing network with **real encoded frames**, byte
-//! accounting, and injected latency.
+//! The **framing layer**: typed messages over a byte-level
+//! [`Transport`], with byte accounting and a self-send fast path.
 //!
-//! Machines communicate only through [`Endpoint`]s (mpsc channels), which
-//! preserves the FIFO-per-channel property of the paper's TCP sockets —
-//! the ordering guarantee the ghost-coherence and lock protocols rely on.
-//! Every send serializes its message through the [`Wire`] codec into a
-//! length-prefixed frame; the frame's encoded length is what lands in the
-//! per-machine [`NetStats`] (Fig. 6(b) plots these), and the receiver
-//! decodes the frame back — so the byte counters are measurements of real
-//! serialization, not size models. Self-sends skip the frame copy (the
-//! value is delivered in-memory) but still run the encoder, so every
+//! Machines communicate only through [`Endpoint`]s. Every send serializes
+//! its message through the [`Wire`] codec into a `[u32 len][payload]`
+//! frame; the frame's encoded length is what lands in the per-machine
+//! [`NetStats`] (Fig. 6(b) plots these), and the receiver decodes the
+//! frame back — the byte counters are measurements of real serialization,
+//! not size models. The frames travel over whichever
+//! [`Transport`](crate::distributed::transport::Transport) backend the
+//! run selected:
+//!
+//! * **InProc** (default): mpsc channels, FIFO per peer like the paper's
+//!   TCP sockets, with [`NetworkModel`] latency applied as a delivery
+//!   hold-back. A frame that fails to decode here is a codec bug (both
+//!   ends are the same build) and panics.
+//! * **Tcp**: real sockets (loopback mesh in one process, or one endpoint
+//!   per worker process). Frames from the network are untrusted: a
+//!   malformed frame surfaces as a typed [`PeerError`] and a disconnect
+//!   of that peer via [`Endpoint::peer_errors`], never a process abort.
+//!
+//! Self-sends skip the transport entirely (the value is delivered
+//! in-memory through a local queue) but still run the encoder, so every
 //! message pays the same measurement path; they account zero *network*
-//! bytes, as before. A [`NetworkModel`] latency delays *delivery* (not
-//! send), emulating one-way network latency for the Fig. 8(b)
-//! lock-pipelining experiment.
+//! bytes, as before.
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+use crate::distributed::transport::{
+    tcp_loopback_mesh, FrameError, InProcTransport, PeerError, TcpBound, TcpConfig, Transport,
+};
 use crate::partition::MachineId;
 use crate::wire::Wire;
+
+pub use crate::distributed::transport::NetworkModel;
 
 /// Per-machine traffic counters (all byte counts are encoded frame
 /// lengths, including the 4-byte length prefix).
@@ -37,93 +50,131 @@ pub struct NetStats {
     pub msgs_recv: AtomicU64,
 }
 
-/// Network shape parameters.
-#[derive(Debug, Clone, Copy)]
-pub struct NetworkModel {
-    /// One-way delivery latency injected at the receiver.
-    pub latency: Duration,
-}
-
-impl Default for NetworkModel {
-    fn default() -> Self {
-        NetworkModel {
-            latency: Duration::ZERO,
-        }
-    }
-}
-
-/// What travels down the channel: remote messages go as encoded frames
-/// (decoded by the receiver), self-sends skip the copy.
-enum Payload<M> {
-    /// The un-serialized value (self-send fast path).
-    Inline(M),
-    /// `[u32 len][payload]` frame, decoded on receipt.
-    Frame(Vec<u8>),
-}
-
-struct EnvelopeInner<M> {
-    src: MachineId,
-    /// Frame bytes accounted at the receiver (0 for self-sends).
-    bytes: u64,
-    deliver_at: Instant,
-    payload: Payload<M>,
-}
-
 /// Construction handle: build one, split into per-machine endpoints.
+///
+/// In a multi-process cluster ([`Network::tcp_cluster`]) the network
+/// holds a *single* endpoint — this process's machine — and the stats
+/// vector still has one slot per machine, of which only the local slot
+/// is ever written.
 pub struct Network<M> {
     endpoints: Vec<Endpoint<M>>,
+    stats: Arc<Vec<NetStats>>,
 }
 
-/// One machine's connection to the cluster.
+/// One machine's connection to the cluster: the typed, accounted framing
+/// layer over a byte-level transport backend.
 pub struct Endpoint<M> {
     me: MachineId,
     machines: usize,
-    senders: Vec<mpsc::Sender<EnvelopeInner<M>>>,
-    rx: mpsc::Receiver<EnvelopeInner<M>>,
-    /// Messages received from the channel but not yet deliverable
-    /// (latency hold-back queue; FIFO order preserved).
-    pending: VecDeque<EnvelopeInner<M>>,
+    transport: Box<dyn Transport>,
+    /// Self-send fast path: messages to `me` skip the transport (and the
+    /// frame copy) and are delivered through this in-memory queue.
+    self_tx: mpsc::Sender<M>,
+    self_rx: mpsc::Receiver<M>,
+    /// Peers disconnected after a framing-layer decode error (their
+    /// later frames drop — the stream is producing untrustable bytes).
+    dead: Vec<bool>,
+    /// Typed errors from untrusted peers, drained by [`Endpoint::peer_errors`].
+    errors: Vec<PeerError>,
     stats: Arc<Vec<NetStats>>,
-    model: NetworkModel,
+}
+
+fn new_stats(machines: usize) -> Arc<Vec<NetStats>> {
+    Arc::new((0..machines).map(|_| NetStats::default()).collect())
 }
 
 impl<M: Send + Wire> Network<M> {
-    /// Create a fully-connected network of `machines` endpoints.
+    /// Create a fully-connected **in-process** network of `machines`
+    /// endpoints (mpsc channels + injected latency).
     pub fn new(machines: usize, model: NetworkModel) -> Self {
-        let stats: Arc<Vec<NetStats>> =
-            Arc::new((0..machines).map(|_| NetStats::default()).collect());
-        let mut senders = Vec::with_capacity(machines);
-        let mut receivers = Vec::with_capacity(machines);
-        for _ in 0..machines {
-            let (tx, rx) = mpsc::channel();
-            senders.push(tx);
-            receivers.push(rx);
-        }
-        let endpoints = receivers
+        let stats = new_stats(machines);
+        let endpoints = InProcTransport::mesh(machines, model)
             .into_iter()
-            .enumerate()
-            .map(|(me, rx)| Endpoint {
-                me,
-                machines,
-                senders: senders.clone(),
-                rx,
-                pending: VecDeque::new(),
-                stats: stats.clone(),
-                model,
-            })
+            .map(|t| Endpoint::from_transport(Box::new(t), stats.clone()))
             .collect();
-        Network { endpoints }
+        Network { endpoints, stats }
     }
 
-    /// Split into the per-machine endpoints (index = machine id).
+    /// Create a fully-connected network of `machines` endpoints over
+    /// **real loopback TCP sockets** (ephemeral ports, full mesh, one
+    /// listener + writer/reader threads per machine) — same API, actual
+    /// kernel sockets under every frame.
+    pub fn tcp_loopback(machines: usize) -> anyhow::Result<Self> {
+        let stats = new_stats(machines);
+        let endpoints = tcp_loopback_mesh(machines, std::any::type_name::<M>())?
+            .into_iter()
+            .map(|t| Endpoint::from_transport(Box::new(t), stats.clone()))
+            .collect();
+        Ok(Network { endpoints, stats })
+    }
+
+    /// Join a **multi-process** cluster as machine `me` of
+    /// `hosts.len()`: bind the listener at `hosts[me]`, handshake with
+    /// every peer (machine id + wire version + message type tag), and
+    /// return a network holding this machine's single endpoint.
+    pub fn tcp_cluster(me: MachineId, hosts: &[String]) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            me < hosts.len(),
+            "machine id {me} out of range for a {}-machine cluster",
+            hosts.len()
+        );
+        let stats = new_stats(hosts.len());
+        let cfg = TcpConfig::new(hosts.len(), std::any::type_name::<M>());
+        let transport = TcpBound::bind(me, &hosts[me], cfg)?.connect(hosts)?;
+        let endpoints = vec![Endpoint::from_transport(Box::new(transport), stats.clone())];
+        Ok(Network { endpoints, stats })
+    }
+
+    /// Split into the per-machine endpoints. For the in-process
+    /// constructors the index is the machine id; for
+    /// [`Network::tcp_cluster`] there is exactly one endpoint (machine
+    /// `me`).
     pub fn into_endpoints(self) -> Vec<Endpoint<M>> {
         self.endpoints
     }
 
     /// Shared stats handle (read by the harness after the run).
     pub fn stats(&self) -> Arc<Vec<NetStats>> {
-        self.endpoints[0].stats.clone()
+        self.stats.clone()
     }
+}
+
+/// Build the endpoints a distributed engine runs locally, for any
+/// backend combination:
+///
+/// * `cluster = None`, `InProc` — the classic in-process cluster (all
+///   `machines` endpoints over channels, with `model` latency);
+/// * `cluster = None`, `Tcp` — all `machines` endpoints in this process
+///   over a real loopback-socket mesh (`model` is ignored — real wires
+///   have real latency);
+/// * `cluster = Some(c)` — this process is machine `c.me` of a
+///   multi-process cluster; exactly one endpoint comes back.
+///
+/// The stats vector always has one slot per machine; only locally-run
+/// machines ever write theirs.
+pub(crate) fn cluster_endpoints<M: Send + Wire>(
+    machines: usize,
+    model: NetworkModel,
+    transport: crate::distributed::transport::TransportKind,
+    cluster: Option<&crate::distributed::transport::ClusterConfig>,
+) -> anyhow::Result<(Vec<Endpoint<M>>, Arc<Vec<NetStats>>)> {
+    use crate::distributed::transport::TransportKind;
+    let net = match cluster {
+        Some(c) => {
+            anyhow::ensure!(
+                c.hosts.len() == machines,
+                "cluster hosts file lists {} machines but the engine runs {machines}",
+                c.hosts.len()
+            );
+            Network::tcp_cluster(c.me, &c.hosts)?
+        }
+        None => match transport {
+            TransportKind::InProc => Network::new(machines, model),
+            TransportKind::Tcp => Network::tcp_loopback(machines)?,
+        },
+    };
+    let stats = net.stats();
+    Ok((net.into_endpoints(), stats))
 }
 
 /// Received message with its source.
@@ -135,6 +186,30 @@ pub struct Received<M> {
 }
 
 impl<M: Send + Wire> Endpoint<M> {
+    /// Wrap a ready byte-level transport in the typed framing layer.
+    /// `stats` must have one slot per machine; this endpoint writes only
+    /// its own. (Public so tests and tooling can drive hand-built
+    /// transports; engine code goes through [`Network`].)
+    pub fn from_transport(transport: Box<dyn Transport>, stats: Arc<Vec<NetStats>>) -> Self {
+        let (self_tx, self_rx) = mpsc::channel();
+        let machines = transport.machines();
+        assert_eq!(
+            stats.len(),
+            machines,
+            "stats vector must have one slot per machine"
+        );
+        Endpoint {
+            me: transport.me(),
+            machines,
+            transport,
+            self_tx,
+            self_rx,
+            dead: vec![false; machines],
+            errors: Vec::new(),
+            stats,
+        }
+    }
+
     /// This machine's id.
     pub fn me(&self) -> MachineId {
         self.me
@@ -154,73 +229,111 @@ impl<M: Send + Wire> Endpoint<M> {
     /// encoded length (payload + 4-byte length prefix) is recorded in
     /// [`NetStats`].
     ///
-    /// Sending to self is allowed and delivered through the same path
-    /// (simplifies engine loops); it still encodes — parity with remote
-    /// accounting — but skips the frame copy and counts zero network
-    /// bytes (nothing crosses the wire).
+    /// Sending to self is allowed (simplifies engine loops); it still
+    /// encodes — parity with remote accounting — but skips the frame
+    /// copy and counts zero network bytes (nothing crosses the wire).
     pub fn send(&self, dst: MachineId, msg: M) {
         let mut frame = Vec::with_capacity(64);
         frame.extend_from_slice(&[0u8; 4]);
         msg.encode(&mut frame);
         let payload_len = (frame.len() - 4) as u32;
         frame[..4].copy_from_slice(&payload_len.to_le_bytes());
+        if dst == self.me {
+            // Fast path: deliver the value in-memory (receiver may have
+            // stopped draining at shutdown; drop silently then).
+            let _ = self.self_tx.send(msg);
+            return;
+        }
         let s = &self.stats[self.me];
-        let (bytes, payload) = if dst == self.me {
-            (0, Payload::Inline(msg))
-        } else {
-            let wire = frame.len() as u64;
-            s.bytes_sent.fetch_add(wire, Ordering::Relaxed);
-            s.msgs_sent.fetch_add(1, Ordering::Relaxed);
-            (wire, Payload::Frame(frame))
-        };
-        let deliver_at = if dst == self.me {
-            Instant::now()
-        } else {
-            Instant::now() + self.model.latency
-        };
-        // Receiver may have exited (engine shutdown); drop silently then.
-        let _ = self.senders[dst].send(EnvelopeInner {
-            src: self.me,
-            bytes,
-            deliver_at,
-            payload,
-        });
+        s.bytes_sent.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        s.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        self.transport.send_frame(dst, frame);
     }
 
-    fn open(&self, env: EnvelopeInner<M>) -> Received<M> {
+    /// Decode one transport frame. `None` means the frame was bad and
+    /// the peer is now disconnected (untrusted backends only; for the
+    /// in-process backend a decode failure is a codec bug and panics).
+    fn open(&mut self, src: MachineId, frame: Vec<u8>) -> Option<Received<M>> {
+        if self.dead[src] {
+            return None; // disconnected peer: drop its residual frames
+        }
         let s = &self.stats[self.me];
-        s.bytes_recv.fetch_add(env.bytes, Ordering::Relaxed);
-        s.msgs_recv
-            .fetch_add((env.src != self.me) as u64, Ordering::Relaxed);
-        let msg = match env.payload {
-            Payload::Inline(m) => m,
-            Payload::Frame(buf) => {
-                let mut slice = &buf[4..];
-                let m = M::decode(&mut slice)
-                    .expect("wire: frame decode failed (codec bug — encode/decode disagree)");
-                debug_assert!(slice.is_empty(), "wire: frame has trailing bytes");
-                m
+        s.bytes_recv.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        s.msgs_recv.fetch_add(1, Ordering::Relaxed);
+        let mut slice = &frame[4..];
+        match M::decode(&mut slice) {
+            Ok(msg) if slice.is_empty() => Some(Received { src, msg }),
+            Ok(_) if self.transport.trusted() => {
+                panic!("wire: frame has trailing bytes (codec bug — encode/decode disagree)")
             }
-        };
-        Received { src: env.src, msg }
+            Ok(_) => {
+                self.disconnect(src, FrameError::Trailing { extra: slice.len() });
+                None
+            }
+            Err(e) if self.transport.trusted() => {
+                panic!("wire: frame decode failed (codec bug — encode/decode disagree): {e}")
+            }
+            Err(e) => {
+                self.disconnect(src, FrameError::Decode(e));
+                None
+            }
+        }
     }
 
-    /// Non-blocking receive honoring delivery latency.
+    fn disconnect(&mut self, peer: MachineId, error: FrameError) {
+        self.dead[peer] = true;
+        self.errors.push(PeerError { peer, error });
+    }
+
+    /// Pull transport-level errors (stream failures, oversized frames)
+    /// into the endpoint's typed error list. Deliberately does NOT mark
+    /// the peer dead: a reader thread records its error strictly *after*
+    /// pushing every frame it successfully read, then stops — so frames
+    /// already queued predate the failure and must still be delivered
+    /// (a finished peer's final `Halt`/`FinalReport`/`Decision` races
+    /// its own EOF). Only framing-layer decode errors disconnect a peer,
+    /// because that stream keeps producing bytes we can no longer trust.
+    fn absorb_transport_errors(&mut self) {
+        for e in self.transport.take_errors() {
+            self.errors.push(e);
+        }
+    }
+
+    /// Drain the typed per-peer errors collected so far (frame decode
+    /// failures, truncated/oversized frames, stream errors). A peer that
+    /// appears here produces no further frames; one that failed at the
+    /// framing layer (decode/trailing) is disconnected — its residual
+    /// frames are dropped.
+    pub fn peer_errors(&mut self) -> Vec<PeerError> {
+        self.absorb_transport_errors();
+        std::mem::take(&mut self.errors)
+    }
+
+    /// Whether `peer` is still trusted at the framing layer (no decoded
+    /// garbage from it). Stream-level failures are reported through
+    /// [`Endpoint::peer_errors`] instead — their already-received frames
+    /// remain deliverable.
+    pub fn peer_alive(&mut self, peer: MachineId) -> bool {
+        self.absorb_transport_errors();
+        !self.dead[peer]
+    }
+
+    /// Non-blocking receive honoring the backend's delivery semantics
+    /// (hold-back latency on InProc, socket arrival on TCP).
     pub fn try_recv(&mut self) -> Option<Received<M>> {
-        // Pull everything currently in the channel into the hold-back queue.
-        while let Ok(env) = self.rx.try_recv() {
-            self.pending.push_back(env);
+        if let Ok(msg) = self.self_rx.try_recv() {
+            return Some(Received { src: self.me, msg });
         }
-        if let Some(front) = self.pending.front() {
-            if front.deliver_at <= Instant::now() {
-                let env = self.pending.pop_front().unwrap();
-                return Some(self.open(env));
+        while let Some((src, frame)) = self.transport.recv_frame() {
+            if let Some(r) = self.open(src, frame) {
+                return Some(r);
             }
         }
+        self.absorb_transport_errors();
         None
     }
 
-    /// Blocking receive with timeout, honoring delivery latency.
+    /// Blocking receive with timeout.
     pub fn recv_timeout(&mut self, timeout: Duration) -> Option<Received<M>> {
         let deadline = Instant::now() + timeout;
         loop {
@@ -231,23 +344,10 @@ impl<M: Send + Wire> Endpoint<M> {
             if now >= deadline {
                 return None;
             }
-            // Sleep until the earliest of: held-back delivery time, deadline,
-            // or a short poll for new channel arrivals.
-            let mut wait = deadline - now;
-            if let Some(front) = self.pending.front() {
-                let until = front.deliver_at.saturating_duration_since(now);
-                wait = wait.min(until);
-            } else {
-                match self.rx.recv_timeout(wait.min(Duration::from_millis(1))) {
-                    Ok(env) => {
-                        self.pending.push_back(env);
-                        continue;
-                    }
-                    Err(_) => continue,
+            if let Some((src, frame)) = self.transport.recv_frame_timeout(deadline - now) {
+                if let Some(r) = self.open(src, frame) {
+                    return Some(r);
                 }
-            }
-            if !wait.is_zero() {
-                std::thread::sleep(wait.min(Duration::from_millis(1)));
             }
         }
     }
@@ -360,5 +460,27 @@ mod tests {
             stats[0].bytes_sent.load(Ordering::Relaxed),
             frame_len(&msg)
         );
+    }
+
+    #[test]
+    fn tcp_loopback_delivers_typed_messages_with_accounting() {
+        // The same framing-layer semantics over real loopback sockets.
+        type M = (u32, Vec<u8>, Option<String>);
+        let net: Network<M> = Network::tcp_loopback(2).unwrap();
+        let stats = net.stats();
+        let mut eps = net.into_endpoints();
+        let msg: M = (9, vec![1, 2, 3, 4], Some("over tcp".into()));
+        eps[0].send(1, msg.clone());
+        eps[0].send(1, (0, vec![], None));
+        let r1 = eps[1].recv_timeout(Duration::from_secs(5)).unwrap();
+        let r2 = eps[1].recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!((r1.src, r1.msg), (0, msg.clone()));
+        assert_eq!((r2.src, r2.msg), (0, (0, vec![], None))); // FIFO per peer
+        assert_eq!(
+            stats[0].bytes_sent.load(Ordering::Relaxed),
+            frame_len(&msg) + frame_len(&(0u32, Vec::<u8>::new(), Option::<String>::None))
+        );
+        assert!(stats[1].bytes_recv.load(Ordering::Relaxed) > 0);
+        assert!(eps[1].peer_errors().is_empty());
     }
 }

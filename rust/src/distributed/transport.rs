@@ -1,0 +1,1048 @@
+//! The **byte-level transport** under the framing layer: how encoded
+//! frames move between machines.
+//!
+//! [`crate::distributed::network::Endpoint`] owns the codec and the byte
+//! accounting; everything below it speaks only `[u32 len][payload]`
+//! frames through the object-safe [`Transport`] trait. Two backends:
+//!
+//! * [`InProcTransport`] — the in-process cluster: one mpsc channel per
+//!   machine carrying frames, with the [`NetworkModel`] latency applied as
+//!   a delivery hold-back at the receiver. This is the default substrate
+//!   for tests, figures, and single-host runs; a frame that fails to
+//!   decode here is a *codec bug* (both ends are the same build), so the
+//!   backend reports itself as [`Transport::trusted`].
+//! * [`TcpTransport`] — real sockets (`std::net`, no external deps): a
+//!   full mesh of loopback-or-LAN TCP connections, one listener per
+//!   machine, a **handshake** on every connection carrying the sender's
+//!   machine id, the wire version, the cluster size, and the application
+//!   type tag (so a PageRank worker cannot join an ALS cluster), one
+//!   **writer thread per peer** draining a frame queue, and **reader
+//!   threads** feeding the shared receive queue. Frames from the network
+//!   are *untrusted*: malformed input surfaces as a typed [`PeerError`]
+//!   and a disconnect of that peer, never a process abort.
+//!
+//! Construction paths: [`tcp_loopback_mesh`] builds all `N` transports in
+//! one process over real `127.0.0.1` sockets (the test/bench harness and
+//! `--transport tcp`); [`TcpBound::bind`] + [`TcpBound::connect`] build
+//! one machine's transport in its own process (the `graphlab worker` /
+//! `run --cluster` path, the paper's actual deployment shape).
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context as _};
+
+use crate::partition::MachineId;
+use crate::wire::{self, Wire, WireError, WIRE_VERSION};
+
+/// Which byte-level substrate carries the frames of a distributed run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process channels (one thread per machine, the default).
+    InProc,
+    /// Real TCP sockets — loopback full mesh in one process, or one
+    /// socket endpoint per worker process in cluster mode.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a CLI name; unknown names are an error, not a panic.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "inproc" => TransportKind::InProc,
+            "tcp" => TransportKind::Tcp,
+            other => bail!("unknown transport '{other}' (inproc|tcp)"),
+        })
+    }
+
+    /// The CLI name of this transport.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        TransportKind::parse(s)
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One process's place in a multi-process cluster: which machine it is
+/// and where every machine listens (`host:port`, index = machine id).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// This process's machine id.
+    pub me: MachineId,
+    /// Listen addresses of all machines, index = machine id.
+    pub hosts: Vec<String>,
+}
+
+/// Network shape parameters (the injected one-way delivery latency of the
+/// in-process backend; the TCP backend has real wires and ignores it).
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    /// One-way delivery latency injected at the receiver (InProc only).
+    pub latency: Duration,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel {
+            latency: Duration::ZERO,
+        }
+    }
+}
+
+/// A transport-level failure attributed to one peer.
+#[derive(Debug, Clone)]
+pub struct PeerError {
+    /// The peer the failure is attributed to.
+    pub peer: MachineId,
+    /// What went wrong.
+    pub error: FrameError,
+}
+
+impl std::fmt::Display for PeerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "peer {}: {}", self.peer, self.error)
+    }
+}
+
+/// What can go wrong with a frame (or the stream carrying it) from an
+/// untrusted peer.
+#[derive(Debug, Clone)]
+pub enum FrameError {
+    /// The frame payload failed to decode as the expected message type.
+    Decode(WireError),
+    /// The frame decoded but left unconsumed payload bytes.
+    Trailing {
+        /// Leftover byte count.
+        extra: usize,
+    },
+    /// The length prefix exceeded the frame-size cap.
+    Oversized {
+        /// Claimed payload length.
+        len: u32,
+        /// The configured cap.
+        max: u32,
+    },
+    /// The stream died mid-frame (truncated input, reset, …).
+    Io(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Decode(e) => write!(f, "frame decode failed: {e}"),
+            FrameError::Trailing { extra } => {
+                write!(f, "frame has {extra} trailing bytes")
+            }
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame length {len} exceeds cap {max}")
+            }
+            FrameError::Io(e) => write!(f, "stream error: {e}"),
+        }
+    }
+}
+
+/// The byte-level substrate under an `Endpoint`: moves opaque
+/// `[u32 len][payload]` frames between machines. Object-safe; `send` is
+/// `&self` (engines send while holding shared borrows), receive is
+/// `&mut self` (each endpoint is owned by exactly one machine loop).
+pub trait Transport: Send {
+    /// This machine's id.
+    fn me(&self) -> MachineId;
+
+    /// Cluster size.
+    fn machines(&self) -> usize;
+
+    /// Queue `frame` for delivery to `dst`. Infallible by design: a peer
+    /// that is gone (engine shutdown) swallows the frame, matching the
+    /// "receiver may have exited" semantics engines already rely on.
+    fn send_frame(&self, dst: MachineId, frame: Vec<u8>);
+
+    /// Non-blocking receive: the next deliverable frame, if any.
+    fn recv_frame(&mut self) -> Option<(MachineId, Vec<u8>)>;
+
+    /// Blocking receive with timeout.
+    fn recv_frame_timeout(&mut self, timeout: Duration) -> Option<(MachineId, Vec<u8>)>;
+
+    /// Drain transport-level peer errors (stream failures, oversized
+    /// frames). The framing layer adds its own decode errors on top.
+    fn take_errors(&mut self) -> Vec<PeerError>;
+
+    /// Whether frames are trusted: `true` for the in-process backend
+    /// (both ends are the same build, so a decode failure is a local
+    /// codec bug and panicking is the correct invariant), `false` for
+    /// anything that crossed a process boundary.
+    fn trusted(&self) -> bool;
+
+    /// Which backend this is (for logs and stats labels).
+    fn kind(&self) -> TransportKind;
+}
+
+// ---------------------------------------------------------------------------
+// InProc backend
+// ---------------------------------------------------------------------------
+
+struct InProcEnvelope {
+    src: MachineId,
+    deliver_at: Instant,
+    frame: Vec<u8>,
+}
+
+/// The in-process backend: today's mpsc channels carrying encoded frames,
+/// with the [`NetworkModel`] latency applied as a delivery hold-back at
+/// the receiver (FIFO order preserved).
+pub struct InProcTransport {
+    me: MachineId,
+    machines: usize,
+    senders: Vec<mpsc::Sender<InProcEnvelope>>,
+    rx: mpsc::Receiver<InProcEnvelope>,
+    /// Frames received from the channel but not yet deliverable.
+    pending: VecDeque<InProcEnvelope>,
+    latency: Duration,
+}
+
+impl InProcTransport {
+    /// Build a fully-connected in-process mesh of `machines` transports.
+    pub fn mesh(machines: usize, model: NetworkModel) -> Vec<InProcTransport> {
+        let mut senders = Vec::with_capacity(machines);
+        let mut receivers = Vec::with_capacity(machines);
+        for _ in 0..machines {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(me, rx)| InProcTransport {
+                me,
+                machines,
+                senders: senders.clone(),
+                rx,
+                pending: VecDeque::new(),
+                latency: model.latency,
+            })
+            .collect()
+    }
+
+    /// Pull everything currently in the channel into the hold-back queue,
+    /// then pop the front if its delivery time has arrived.
+    fn pop_deliverable(&mut self) -> Option<(MachineId, Vec<u8>)> {
+        while let Ok(env) = self.rx.try_recv() {
+            self.pending.push_back(env);
+        }
+        if let Some(front) = self.pending.front() {
+            if front.deliver_at <= Instant::now() {
+                let env = self.pending.pop_front().unwrap();
+                return Some((env.src, env.frame));
+            }
+        }
+        None
+    }
+}
+
+impl Transport for InProcTransport {
+    fn me(&self) -> MachineId {
+        self.me
+    }
+
+    fn machines(&self) -> usize {
+        self.machines
+    }
+
+    fn send_frame(&self, dst: MachineId, frame: Vec<u8>) {
+        // Receiver may have exited (engine shutdown); drop silently then.
+        let _ = self.senders[dst].send(InProcEnvelope {
+            src: self.me,
+            deliver_at: Instant::now() + self.latency,
+            frame,
+        });
+    }
+
+    fn recv_frame(&mut self) -> Option<(MachineId, Vec<u8>)> {
+        self.pop_deliverable()
+    }
+
+    fn recv_frame_timeout(&mut self, timeout: Duration) -> Option<(MachineId, Vec<u8>)> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(f) = self.pop_deliverable() {
+                return Some(f);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let wait = deadline - now;
+            if let Some(front) = self.pending.front() {
+                // Held-back frame: sleep until the earliest of its delivery
+                // time, the deadline, or a short poll for new arrivals.
+                let until = front.deliver_at.saturating_duration_since(now);
+                let nap = wait.min(until).min(Duration::from_millis(1));
+                if !nap.is_zero() {
+                    std::thread::sleep(nap);
+                }
+            } else {
+                match self.rx.recv_timeout(wait.min(Duration::from_millis(1))) {
+                    Ok(env) => self.pending.push_back(env),
+                    Err(_) => continue,
+                }
+            }
+        }
+    }
+
+    fn take_errors(&mut self) -> Vec<PeerError> {
+        Vec::new()
+    }
+
+    fn trusted(&self) -> bool {
+        true
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::InProc
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP backend
+// ---------------------------------------------------------------------------
+
+/// Connection-handshake magic (`"GLTC"`, little-endian).
+pub const TCP_MAGIC: u32 = u32::from_le_bytes(*b"GLTC");
+
+/// Hard cap on the encoded handshake (type tags are short).
+const MAX_HANDSHAKE: u32 = 4096;
+
+/// TCP backend parameters.
+#[derive(Debug, Clone)]
+pub struct TcpConfig {
+    /// Cluster size (handshakes from clusters of a different size are
+    /// rejected).
+    pub machines: usize,
+    /// Application type tag carried in the handshake — the framing layer
+    /// uses the message type's name, so two apps (or two incompatible
+    /// builds of one app) cannot form a cluster by accident.
+    pub tag: String,
+    /// How long [`TcpBound::connect`] retries outbound connections and
+    /// the acceptor waits for inbound ones.
+    pub connect_timeout: Duration,
+    /// Reject frames whose length prefix exceeds this (a garbage prefix
+    /// must not trigger a giant allocation).
+    pub max_frame: u32,
+}
+
+impl TcpConfig {
+    /// Defaults for `machines` machines exchanging `tag`-typed messages:
+    /// 30 s connect window (override with `GRAPHLAB_CONNECT_TIMEOUT_SECS`
+    /// — manual multi-host startups can easily take longer than any fixed
+    /// default), 256 MiB frame cap.
+    pub fn new(machines: usize, tag: impl Into<String>) -> Self {
+        let secs = std::env::var("GRAPHLAB_CONNECT_TIMEOUT_SECS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .filter(|&s| s > 0)
+            .unwrap_or(30);
+        TcpConfig {
+            machines,
+            tag: tag.into(),
+            connect_timeout: Duration::from_secs(secs),
+            max_frame: 256 << 20,
+        }
+    }
+}
+
+/// The decoded contents of a connection handshake.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Handshake {
+    /// Sender's machine id.
+    pub sender: u32,
+    /// Sender's cluster size.
+    pub machines: u32,
+    /// Sender's wire-codec version.
+    pub wire_version: u32,
+    /// Sender's application type tag.
+    pub tag: String,
+}
+
+/// Write a handshake (public so tests and diagnostic tooling can speak
+/// the protocol — including deliberately wrong versions/tags).
+pub fn write_handshake(
+    stream: &mut TcpStream,
+    sender: MachineId,
+    machines: usize,
+    wire_version: u32,
+    tag: &str,
+) -> std::io::Result<()> {
+    let mut body = Vec::with_capacity(64);
+    TCP_MAGIC.encode(&mut body);
+    wire_version.encode(&mut body);
+    (sender as u32).encode(&mut body);
+    (machines as u32).encode(&mut body);
+    tag.to_string().encode(&mut body);
+    let mut msg = Vec::with_capacity(body.len() + 4);
+    (body.len() as u32).encode(&mut msg);
+    msg.extend_from_slice(&body);
+    stream.write_all(&msg)
+}
+
+fn io_invalid(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Read one handshake off `stream` (magic checked; version/size/tag are
+/// returned for the caller to validate).
+pub fn read_handshake(stream: &mut TcpStream) -> std::io::Result<Handshake> {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4);
+    if len == 0 || len > MAX_HANDSHAKE {
+        return Err(io_invalid(format!("handshake length {len} out of range")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    stream.read_exact(&mut buf)?;
+    let mut input = &buf[..];
+    let parsed = (|| -> wire::Result<Handshake> {
+        let magic = u32::decode(&mut input)?;
+        if magic != TCP_MAGIC {
+            return Err(WireError::BadTag {
+                what: "transport handshake magic",
+                tag: magic as u8,
+            });
+        }
+        let wire_version = u32::decode(&mut input)?;
+        let sender = u32::decode(&mut input)?;
+        let machines = u32::decode(&mut input)?;
+        let tag = String::decode(&mut input)?;
+        Ok(Handshake {
+            sender,
+            machines,
+            wire_version,
+            tag,
+        })
+    })();
+    parsed.map_err(|e| io_invalid(format!("handshake decode failed: {e}")))
+}
+
+/// Read the one-byte handshake ack: `Ok(true)` = accepted, `Ok(false)` =
+/// explicitly rejected, `Err` = connection dropped before answering.
+pub fn read_ack(stream: &mut TcpStream) -> std::io::Result<bool> {
+    let mut b = [0u8; 1];
+    stream.read_exact(&mut b)?;
+    Ok(b[0] == 1)
+}
+
+/// After a reject ack (`0`), the acceptor sends a wire-encoded reason
+/// string naming the exact mismatched field. Best-effort: the peer may
+/// have closed without one.
+pub fn read_reject_reason(stream: &mut TcpStream) -> Option<String> {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4).ok()?;
+    let len = u32::from_le_bytes(len4);
+    if len > MAX_HANDSHAKE {
+        return None;
+    }
+    let mut buf = vec![0u8; len as usize];
+    stream.read_exact(&mut buf).ok()?;
+    String::from_utf8(buf).ok()
+}
+
+/// Shared state between the acceptor/reader threads and the transport.
+struct TcpShared {
+    frames_tx: mpsc::Sender<(MachineId, Vec<u8>)>,
+    errors: Mutex<Vec<PeerError>>,
+    stop: AtomicBool,
+}
+
+impl TcpShared {
+    fn record(&self, peer: MachineId, error: FrameError) {
+        if let Ok(mut errs) = self.errors.lock() {
+            errs.push(PeerError { peer, error });
+        }
+    }
+}
+
+/// A machine's TCP listener, bound and accepting: the first half of
+/// transport construction. `bind` starts the acceptor thread immediately,
+/// so peers can complete their handshakes before this machine calls
+/// [`TcpBound::connect`] — that is what lets a single thread construct a
+/// whole loopback mesh sequentially.
+pub struct TcpBound {
+    me: MachineId,
+    cfg: TcpConfig,
+    local_addr: SocketAddr,
+    shared: Arc<TcpShared>,
+    frames_rx: Option<mpsc::Receiver<(MachineId, Vec<u8>)>>,
+    acceptor: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+impl Drop for TcpBound {
+    /// Abandoned before the mesh formed (construction error, handshake
+    /// rejection, test teardown): tell the acceptor to stop so it frees
+    /// the listen port promptly instead of running out its deadline.
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl TcpBound {
+    /// Bind machine `me`'s listener at `addr` (`host:port`; port 0 picks
+    /// an ephemeral port — read it back with [`TcpBound::local_addr`])
+    /// and start accepting peer connections in a background thread.
+    pub fn bind(me: MachineId, addr: &str, cfg: TcpConfig) -> anyhow::Result<TcpBound> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("machine {me}: binding TCP listener at {addr}"))?;
+        let local_addr = listener.local_addr()?;
+        let (frames_tx, frames_rx) = mpsc::channel();
+        let shared = Arc::new(TcpShared {
+            frames_tx,
+            errors: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+        });
+        let expected = cfg.machines.saturating_sub(1);
+        let acceptor = if expected == 0 {
+            None
+        } else {
+            let shared = shared.clone();
+            let cfg = cfg.clone();
+            let claimed = Arc::new(Mutex::new(vec![false; cfg.machines]));
+            listener.set_nonblocking(true)?;
+            Some(std::thread::spawn(move || {
+                accept_peers(me, &listener, &cfg, &shared, &claimed)
+            }))
+        };
+        Ok(TcpBound {
+            me,
+            cfg,
+            local_addr,
+            shared,
+            frames_rx: Some(frames_rx),
+            acceptor,
+        })
+    }
+
+    /// The bound listen address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Establish the outbound half of the mesh: connect to every peer in
+    /// `peers` (index = machine id; the own slot is ignored), handshake,
+    /// and start one writer thread per peer. The acceptor keeps running;
+    /// call [`TcpHalfConnected::finish`] to wait for the inbound half.
+    pub fn connect_outbound(self, peers: &[String]) -> anyhow::Result<TcpHalfConnected> {
+        if peers.len() != self.cfg.machines {
+            bail!(
+                "machine {}: {} peer addresses for a {}-machine cluster",
+                self.me,
+                peers.len(),
+                self.cfg.machines
+            );
+        }
+        let deadline = Instant::now() + self.cfg.connect_timeout;
+        let mut writers: Vec<Option<mpsc::Sender<Vec<u8>>>> = Vec::new();
+        let mut writer_handles = Vec::new();
+        for (dst, addr) in peers.iter().enumerate() {
+            if dst == self.me {
+                writers.push(None);
+                continue;
+            }
+            let mut stream = connect_retry(addr, deadline)
+                .with_context(|| format!("machine {}: connecting to machine {dst} at {addr}", self.me))?;
+            stream.set_nodelay(true).ok();
+            write_handshake(&mut stream, self.me, self.cfg.machines, WIRE_VERSION, &self.cfg.tag)
+                .with_context(|| format!("machine {}: handshake to machine {dst}", self.me))?;
+            stream.set_read_timeout(Some(self.cfg.connect_timeout))?;
+            let accepted = read_ack(&mut stream).with_context(|| {
+                format!("machine {}: no handshake ack from machine {dst}", self.me)
+            })?;
+            if !accepted {
+                let why = read_reject_reason(&mut stream).unwrap_or_else(|| {
+                    "no reason received (wire-version, cluster-size, or \
+                     app/--engine tag mismatch)"
+                        .to_string()
+                });
+                bail!(
+                    "machine {}: machine {dst} rejected the handshake: {why}",
+                    self.me
+                );
+            }
+            stream.set_read_timeout(None)?;
+            let (tx, rx) = mpsc::channel::<Vec<u8>>();
+            let shared = self.shared.clone();
+            writer_handles.push(std::thread::spawn(move || {
+                write_loop(dst, stream, rx, &shared)
+            }));
+            writers.push(Some(tx));
+        }
+        Ok(TcpHalfConnected {
+            bound: self,
+            writers,
+            writer_handles,
+        })
+    }
+
+    /// Outbound + inbound in one call (the per-process cluster path; for
+    /// a single-thread loopback mesh use [`tcp_loopback_mesh`], which
+    /// needs the two phases separated).
+    pub fn connect(self, peers: &[String]) -> anyhow::Result<TcpTransport> {
+        self.connect_outbound(peers)?.finish()
+    }
+}
+
+/// A transport with its outbound connections established, still waiting
+/// for the inbound half (the acceptor thread).
+pub struct TcpHalfConnected {
+    bound: TcpBound,
+    writers: Vec<Option<mpsc::Sender<Vec<u8>>>>,
+    writer_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl TcpHalfConnected {
+    /// Wait for every peer's inbound connection to complete its
+    /// handshake, then return the ready transport.
+    pub fn finish(self) -> anyhow::Result<TcpTransport> {
+        let TcpHalfConnected {
+            mut bound,
+            writers,
+            writer_handles,
+        } = self;
+        if let Some(handle) = bound.acceptor.take() {
+            match handle.join() {
+                Ok(result) => result?,
+                Err(_) => bail!("machine {}: acceptor thread panicked", bound.me),
+            }
+        }
+        // `bound` has a Drop impl (acceptor stop flag), so its fields are
+        // extracted rather than destructured; the drop itself is a no-op
+        // here — the acceptor has already been joined.
+        let frames_rx = bound
+            .frames_rx
+            .take()
+            .expect("transport receive queue already taken");
+        Ok(TcpTransport {
+            me: bound.me,
+            machines: bound.cfg.machines,
+            writers,
+            writer_handles,
+            frames_rx,
+            shared: bound.shared.clone(),
+        })
+    }
+}
+
+/// Retry `TcpStream::connect` until `deadline` (peers bind their
+/// listeners at their own pace during cluster startup).
+fn connect_retry(addr: &str, deadline: Instant) -> anyhow::Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!("connect to {addr} timed out (last error: {e})");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Acceptor loop: accept until every peer has one validated inbound
+/// connection (or the deadline passes). Each accepted connection is
+/// handshaken on its own thread — a silent or hostile connection must
+/// not head-of-line-block the legitimate peers behind it — and rejected
+/// handshakes do not count toward the mesh.
+fn accept_peers(
+    me: MachineId,
+    listener: &TcpListener,
+    cfg: &TcpConfig,
+    shared: &Arc<TcpShared>,
+    claimed: &Arc<Mutex<Vec<bool>>>,
+) -> anyhow::Result<()> {
+    let deadline = Instant::now() + cfg.connect_timeout;
+    let all_in = || {
+        claimed
+            .lock()
+            .map(|cl| (0..cfg.machines).filter(|&m| m != me).all(|m| cl[m]))
+            .unwrap_or(false)
+    };
+    while !all_in() {
+        if shared.stop.load(Ordering::Relaxed) {
+            bail!("machine {me}: transport shut down during accept");
+        }
+        if Instant::now() >= deadline {
+            let absent: Vec<usize> = match claimed.lock() {
+                Ok(cl) => (0..cfg.machines).filter(|&m| m != me && !cl[m]).collect(),
+                Err(_) => Vec::new(),
+            };
+            bail!("machine {me}: peers {absent:?} never connected within {:?}", cfg.connect_timeout);
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let shared = shared.clone();
+                let claimed = claimed.clone();
+                let cfg = cfg.clone();
+                // Detached: validates the greeting, then (on success)
+                // becomes the peer's reader thread.
+                std::thread::spawn(move || {
+                    handshake_then_read(me, stream, &cfg, &shared, &claimed)
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => bail!("machine {me}: accept failed: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Validate one inbound connection's handshake; on success, claim the
+/// sender's slot (duplicates are rejected), ack, and keep running as
+/// that peer's reader.
+fn handshake_then_read(
+    me: MachineId,
+    mut stream: TcpStream,
+    cfg: &TcpConfig,
+    shared: &Arc<TcpShared>,
+    claimed: &Arc<Mutex<Vec<bool>>>,
+) {
+    // The stream must block for the handshake (the listener is
+    // nonblocking and accepted sockets inherit no timeout of ours).
+    stream.set_nonblocking(false).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    let Ok(hs) = read_handshake(&mut stream) else {
+        return; // garbage greeting: drop the connection
+    };
+    let sender = hs.sender as usize;
+    // Name the exact mismatched field: the rejected side relays this to
+    // the operator (an `--engine` mismatch shows up as a tag mismatch —
+    // the tag is the engine's message type).
+    let mut reject: Option<String> = if hs.wire_version != WIRE_VERSION {
+        Some(format!(
+            "wire version {} != this build's {WIRE_VERSION}",
+            hs.wire_version
+        ))
+    } else if hs.machines as usize != cfg.machines {
+        Some(format!(
+            "cluster size {} != this cluster's {}",
+            hs.machines, cfg.machines
+        ))
+    } else if hs.tag != cfg.tag {
+        Some(format!(
+            "app/engine tag {:?} != expected {:?} (every process must run the \
+             same app AND the same --engine)",
+            hs.tag, cfg.tag
+        ))
+    } else if sender >= cfg.machines || sender == me {
+        Some(format!("invalid sender machine id {sender}"))
+    } else {
+        None
+    };
+    // Claim + ack atomically under the lock (the ack is one byte into a
+    // fresh socket buffer — it cannot meaningfully block): by the time
+    // the acceptor's all-connected check can see this slot, the peer has
+    // its ack. A peer that dies before the ack is never claimed, so the
+    // acceptor keeps waiting and a reconnect can land.
+    if reject.is_none() {
+        match claimed.lock() {
+            Ok(mut cl) => {
+                if cl[sender] {
+                    reject = Some(format!("machine {sender} is already connected"));
+                } else if stream.write_all(&[1u8]).is_ok() {
+                    cl[sender] = true;
+                } else {
+                    return;
+                }
+            }
+            Err(_) => reject = Some("acceptor state poisoned".to_string()),
+        }
+    }
+    if let Some(reason) = reject {
+        let mut buf = Vec::with_capacity(reason.len() + 8);
+        buf.push(0u8);
+        reason.encode(&mut buf);
+        let _ = stream.write_all(&buf);
+        let _ = stream.shutdown(Shutdown::Both);
+        return;
+    }
+    stream.set_read_timeout(None).ok();
+    stream.set_nodelay(true).ok();
+    read_loop(sender, stream, cfg.max_frame, shared);
+}
+
+/// Reader thread: `[u32 len][payload]` frames off one inbound stream into
+/// the shared receive queue. Stream problems become [`PeerError`]s; the
+/// frame handed upward includes its length prefix (accounting parity with
+/// the in-process backend).
+fn read_loop(src: MachineId, mut stream: TcpStream, max_frame: u32, shared: &Arc<TcpShared>) {
+    // Payloads are read through this bounded scratch buffer so the frame
+    // vector grows with bytes that actually arrived — a hostile length
+    // prefix must not trigger a giant upfront allocation.
+    let mut scratch = vec![0u8; 64 * 1024];
+    loop {
+        let mut len4 = [0u8; 4];
+        match stream.read_exact(&mut len4) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                // A FIN at a frame boundary: clean for a peer whose run
+                // has finished, but indistinguishable from a mid-run
+                // process death — so it is recorded. Engines consult
+                // these only when stuck or timed out, so a normal
+                // teardown's EOF is never reported to anyone.
+                shared.record(src, FrameError::Io("connection closed by peer".to_string()));
+                return;
+            }
+            Err(e) => {
+                shared.record(src, FrameError::Io(e.to_string()));
+                return;
+            }
+        }
+        let len = u32::from_le_bytes(len4);
+        if len > max_frame {
+            shared.record(src, FrameError::Oversized { len, max: max_frame });
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+        let mut frame = Vec::with_capacity((len as usize).min(scratch.len()) + 4);
+        frame.extend_from_slice(&len4);
+        let mut remaining = len as usize;
+        while remaining > 0 {
+            let take = remaining.min(scratch.len());
+            if let Err(e) = stream.read_exact(&mut scratch[..take]) {
+                // Truncated frame: the peer died (or lied) mid-payload.
+                shared.record(src, FrameError::Io(e.to_string()));
+                return;
+            }
+            frame.extend_from_slice(&scratch[..take]);
+            remaining -= take;
+        }
+        if shared.frames_tx.send((src, frame)).is_err() {
+            return; // transport dropped; nobody is listening
+        }
+    }
+}
+
+/// Writer thread: drain one peer's frame queue onto its stream; on
+/// channel close (transport drop), flush and close the write half so the
+/// peer's reader sees a clean EOF.
+fn write_loop(
+    dst: MachineId,
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<Vec<u8>>,
+    shared: &Arc<TcpShared>,
+) {
+    while let Ok(frame) = rx.recv() {
+        if let Err(e) = stream.write_all(&frame) {
+            shared.record(dst, FrameError::Io(e.to_string()));
+            return;
+        }
+    }
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+/// The ready TCP backend: writer thread + queue per peer, reader threads
+/// feeding one shared receive queue.
+pub struct TcpTransport {
+    me: MachineId,
+    machines: usize,
+    writers: Vec<Option<mpsc::Sender<Vec<u8>>>>,
+    writer_handles: Vec<std::thread::JoinHandle<()>>,
+    frames_rx: mpsc::Receiver<(MachineId, Vec<u8>)>,
+    shared: Arc<TcpShared>,
+}
+
+impl Transport for TcpTransport {
+    fn me(&self) -> MachineId {
+        self.me
+    }
+
+    fn machines(&self) -> usize {
+        self.machines
+    }
+
+    fn send_frame(&self, dst: MachineId, frame: Vec<u8>) {
+        if let Some(Some(tx)) = self.writers.get(dst) {
+            // Writer gone (peer dead / shutdown): drop, as documented.
+            let _ = tx.send(frame);
+        }
+    }
+
+    fn recv_frame(&mut self) -> Option<(MachineId, Vec<u8>)> {
+        self.frames_rx.try_recv().ok()
+    }
+
+    fn recv_frame_timeout(&mut self, timeout: Duration) -> Option<(MachineId, Vec<u8>)> {
+        self.frames_rx.recv_timeout(timeout).ok()
+    }
+
+    fn take_errors(&mut self) -> Vec<PeerError> {
+        match self.shared.errors.lock() {
+            Ok(mut errs) => std::mem::take(&mut *errs),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    fn trusted(&self) -> bool {
+        false
+    }
+
+    fn kind(&self) -> TransportKind {
+        TransportKind::Tcp
+    }
+}
+
+impl Drop for TcpTransport {
+    /// Clean shutdown: close every writer queue (writers flush what is
+    /// already queued, then close the socket's write half so peers see
+    /// EOF) and join them so queued frames are on the wire before the
+    /// machine loop returns. Reader threads are detached — they exit on
+    /// their peer's EOF or when the receive queue drops.
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        for w in &mut self.writers {
+            *w = None;
+        }
+        for h in self.writer_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Build a full in-process mesh of `machines` TCP transports over real
+/// loopback sockets (ephemeral ports): the harness behind
+/// `--transport tcp`, the transport tests, and `bench-net`. Single
+/// threaded construction works because every listener's acceptor thread
+/// runs from `bind` time.
+pub fn tcp_loopback_mesh(machines: usize, tag: &str) -> anyhow::Result<Vec<TcpTransport>> {
+    let mut bounds = Vec::with_capacity(machines);
+    for me in 0..machines {
+        bounds.push(TcpBound::bind(me, "127.0.0.1:0", TcpConfig::new(machines, tag))?);
+    }
+    let addrs: Vec<String> = bounds.iter().map(|b| b.local_addr().to_string()).collect();
+    let halves: Vec<TcpHalfConnected> = bounds
+        .into_iter()
+        .map(|b| b.connect_outbound(&addrs))
+        .collect::<anyhow::Result<_>>()?;
+    halves.into_iter().map(|h| h.finish()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parses_and_rejects() {
+        assert_eq!("tcp".parse::<TransportKind>().unwrap(), TransportKind::Tcp);
+        assert_eq!(
+            "inproc".parse::<TransportKind>().unwrap(),
+            TransportKind::InProc
+        );
+        assert!("udp".parse::<TransportKind>().is_err());
+        assert_eq!(TransportKind::Tcp.to_string(), "tcp");
+    }
+
+    #[test]
+    fn inproc_frames_round_trip_with_fifo_order() {
+        let mut mesh = InProcTransport::mesh(2, NetworkModel::default());
+        let t1 = mesh.pop().unwrap();
+        let mut t0 = mesh.pop().unwrap();
+        t1.send_frame(0, vec![1, 2, 3]);
+        t1.send_frame(0, vec![4]);
+        let (src, f) = t0.recv_frame_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!((src, f), (1, vec![1, 2, 3]));
+        let (src, f) = t0.recv_frame_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!((src, f), (1, vec![4]));
+        assert!(t0.recv_frame().is_none());
+        assert!(t0.take_errors().is_empty());
+        assert!(t0.trusted());
+    }
+
+    #[test]
+    fn inproc_latency_holds_back_delivery() {
+        let mut mesh = InProcTransport::mesh(2, NetworkModel {
+            latency: Duration::from_millis(30),
+        });
+        let t1 = mesh.pop().unwrap();
+        let mut t0 = mesh.pop().unwrap();
+        let start = Instant::now();
+        t1.send_frame(0, vec![9]);
+        let got = t0.recv_frame_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(got.1, vec![9]);
+        assert!(start.elapsed() >= Duration::from_millis(28));
+    }
+
+    #[test]
+    fn tcp_loopback_mesh_exchanges_frames() {
+        let mut mesh = tcp_loopback_mesh(3, "test-tag").unwrap();
+        assert!(!mesh[0].trusted());
+        mesh[0].send_frame(2, frame_of(&[7, 7]));
+        mesh[1].send_frame(2, frame_of(&[8]));
+        let mut got = Vec::new();
+        for _ in 0..2 {
+            let (src, frame) = mesh[2]
+                .recv_frame_timeout(Duration::from_secs(5))
+                .expect("frame over loopback");
+            got.push((src, frame));
+        }
+        got.sort();
+        assert_eq!(got, vec![(0, frame_of(&[7, 7])), (1, frame_of(&[8]))]);
+    }
+
+    #[test]
+    fn tcp_fifo_per_peer() {
+        let mut mesh = tcp_loopback_mesh(2, "fifo").unwrap();
+        for i in 0..50u8 {
+            mesh[0].send_frame(1, frame_of(&[i]));
+        }
+        for i in 0..50u8 {
+            let (src, frame) = mesh[1]
+                .recv_frame_timeout(Duration::from_secs(5))
+                .expect("frame");
+            assert_eq!((src, frame), (0, frame_of(&[i])));
+        }
+    }
+
+    #[test]
+    fn mismatched_tag_is_rejected() {
+        // One bound endpoint; a client with the wrong tag must get ack 0.
+        let bound = TcpBound::bind(0, "127.0.0.1:0", TcpConfig::new(2, "right-tag")).unwrap();
+        let addr = bound.local_addr();
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_handshake(&mut s, 1, 2, WIRE_VERSION, "wrong-tag").unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let accepted = read_ack(&mut s).unwrap_or(false);
+        assert!(!accepted, "wrong tag must be rejected");
+        // The right tag on a fresh connection is accepted.
+        let mut s2 = TcpStream::connect(addr).unwrap();
+        write_handshake(&mut s2, 1, 2, WIRE_VERSION, "right-tag").unwrap();
+        s2.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        assert!(read_ack(&mut s2).unwrap());
+    }
+
+    /// `[u32 len][payload]` helper for the raw-frame tests.
+    fn frame_of(payload: &[u8]) -> Vec<u8> {
+        let mut f = Vec::with_capacity(payload.len() + 4);
+        f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        f.extend_from_slice(payload);
+        f
+    }
+}

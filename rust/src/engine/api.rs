@@ -37,7 +37,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use super::{chromatic, locking, shared, GlobalValues, SyncOp, VertexProgram};
-use crate::distributed::{DataValue, NetworkModel};
+use crate::distributed::{ClusterConfig, DataValue, NetworkModel, TransportKind};
 use crate::graph::Graph;
 use crate::partition::atoms::{AtomPlacement, AtomStore};
 use crate::partition::{Coloring, Partition};
@@ -171,7 +171,9 @@ type ProgressFn = Box<dyn Fn(u64, u64, &GlobalValues) + Send + Sync>;
 ///
 /// Defaults: 4 workers, 2 machines, work-stealing FIFO scheduling, no
 /// update/sweep caps, lock-pipelining depth 64, no periodic locking sync,
-/// zero-latency network, seed 1. The coloring (chromatic) and partition
+/// zero-latency in-process transport (swap in real loopback sockets with
+/// [`Engine::transport`], or a real multi-process cluster with
+/// [`Engine::cluster`]), seed 1. The coloring (chromatic) and partition
 /// (distributed engines) are computed internally from the graph and the
 /// program's consistency model unless overridden with
 /// [`Engine::with_coloring`] / [`Engine::with_partition`].
@@ -186,6 +188,8 @@ pub struct Engine<V> {
     maxpending: usize,
     sync_period: Option<Duration>,
     network: NetworkModel,
+    transport: TransportKind,
+    cluster: Option<ClusterConfig>,
     seed: u64,
     coloring: Option<Coloring>,
     partition: Option<Partition>,
@@ -207,6 +211,8 @@ impl<V> Engine<V> {
             maxpending: 64,
             sync_period: None,
             network: NetworkModel::default(),
+            transport: TransportKind::InProc,
+            cluster: None,
             seed: 1,
             coloring: None,
             partition: None,
@@ -288,8 +294,40 @@ impl<V> Engine<V> {
     }
 
     /// Network model for the in-process cluster (latency injection).
+    /// The TCP transport ignores it — real wires have real latency.
     pub fn network(mut self, model: NetworkModel) -> Self {
         self.network = model;
+        self
+    }
+
+    /// Which byte-level substrate carries the distributed engines'
+    /// frames: [`TransportKind::InProc`] (channels, the default) or
+    /// [`TransportKind::Tcp`] (a real loopback-socket mesh inside this
+    /// process — same `Exec` result, actual kernel sockets under every
+    /// frame). Ignored by the shared engine, which has no network.
+    pub fn transport(mut self, kind: TransportKind) -> Self {
+        self.transport = kind;
+        self
+    }
+
+    /// Multi-process cluster mode: this process runs **only** machine
+    /// `me` of `hosts.len()`, over TCP to the other worker processes
+    /// (`hosts[i]` is machine `i`'s `host:port` listen address). Implies
+    /// the TCP transport and overrides [`Engine::machines`] with
+    /// `hosts.len()`.
+    ///
+    /// Every process must construct the identical graph and partition —
+    /// route the run through an atom store ([`Engine::atoms_dir`], the
+    /// paper's startup path) so placement is derived deterministically
+    /// from `meta.bin` on every machine. The returned [`Exec`] is
+    /// **local**: its graph carries authoritative data only for the
+    /// vertices machine `me` owns (the rest keep their input values),
+    /// and per-machine stats vectors are filled only in slot `me`.
+    /// Global sync values (via [`Engine::sync`] / the progress callback)
+    /// are still true cluster-wide reductions.
+    pub fn cluster(mut self, me: usize, hosts: Vec<String>) -> Self {
+        self.transport = TransportKind::Tcp;
+        self.cluster = Some(ClusterConfig { me, hosts });
         self
     }
 
@@ -349,13 +387,32 @@ impl<V> Engine<V> {
     /// Execute `program` over `graph` from the `initial` task set on the
     /// configured engine. Consumes the builder (sync operations and
     /// callbacks move into the run).
-    pub fn run<E, P>(self, graph: Graph<V, E>, program: &P, initial: Vec<Task>) -> Result<Exec<V, E>>
+    pub fn run<E, P>(
+        mut self,
+        graph: Graph<V, E>,
+        program: &P,
+        initial: Vec<Task>,
+    ) -> Result<Exec<V, E>>
     where
         V: DataValue,
         E: DataValue,
         P: VertexProgram<V, E>,
     {
         let n = graph.num_vertices();
+        // Cluster mode: the hosts file is the authority on cluster size.
+        if let Some(c) = &self.cluster {
+            if !self.kind.is_distributed() {
+                bail!("cluster mode needs a distributed engine (chromatic|locking), not shared");
+            }
+            if c.me >= c.hosts.len() {
+                bail!(
+                    "cluster machine id {} out of range for {} hosts",
+                    c.me,
+                    c.hosts.len()
+                );
+            }
+            self.machines = c.hosts.len();
+        }
         // Disk path: open the atom store once, place atoms on machines
         // (phase 2 over the stored meta-graph), and derive the vertex
         // partition from that placement so the engines and the per-machine
@@ -427,6 +484,8 @@ impl<V> Engine<V> {
                         threads_per_machine: self.workers,
                         max_sweeps: self.max_sweeps,
                         network: self.network,
+                        transport: self.transport,
+                        cluster: self.cluster,
                         on_sweep: self.on_progress,
                         atoms: placement,
                     },
@@ -456,6 +515,8 @@ impl<V> Engine<V> {
                         maxpending: self.maxpending,
                         scheduler: self.sched.policy,
                         network: self.network,
+                        transport: self.transport,
+                        cluster: self.cluster,
                         sync_period: self.sync_period,
                         max_updates_per_machine: per_machine_cap,
                         on_sync: self.on_progress,

@@ -23,8 +23,9 @@ use std::time::Duration;
 use anyhow::bail;
 
 use super::{Ctx, ExecStats, GlobalValues, Scope, SyncOp, VertexProgram};
-use crate::distributed::network::{Network, NetworkModel};
-use crate::distributed::{DataValue, LocalGraph};
+use crate::distributed::network::NetworkModel;
+use crate::distributed::transport::{ClusterConfig, TransportKind};
+use crate::distributed::{cluster_setup, ClusterSetup, DataValue};
 use crate::graph::{EdgeId, Graph, SharedStore, VertexId};
 use crate::partition::atoms::AtomPlacement;
 use crate::partition::{Coloring, Partition};
@@ -41,8 +42,14 @@ pub(crate) struct ChromaticOpts {
     pub threads_per_machine: usize,
     /// Maximum sweeps before forced stop.
     pub max_sweeps: u64,
-    /// Network model (latency injection).
+    /// Network model (latency injection; InProc transport only).
     pub network: NetworkModel,
+    /// Which byte-level substrate carries the frames (ignored when
+    /// `cluster` is set — a multi-process cluster is always TCP).
+    pub transport: TransportKind,
+    /// Multi-process mode: run **only** machine `cluster.me` in this
+    /// process, over TCP to the other worker processes.
+    pub cluster: Option<ClusterConfig>,
     /// Leader-side callback after every sweep: (sweep, total updates,
     /// globals).
     #[allow(clippy::type_complexity)]
@@ -59,6 +66,8 @@ impl Default for ChromaticOpts {
             threads_per_machine: 1,
             max_sweeps: u64::MAX,
             network: NetworkModel::default(),
+            transport: TransportKind::InProc,
+            cluster: None,
             on_sweep: None,
             atoms: None,
         }
@@ -220,29 +229,25 @@ where
     let num_colors = coloring.num_colors().max(1);
     let consistency = program.consistency();
 
-    let net: Network<Msg<V, E>> = Network::new(machines, opts.network);
-    let net_stats = net.stats();
-    let endpoints = net.into_endpoints();
-
-    // Build each machine's local graph up front: the paper's "merge your
-    // atom files" load step — literally, when an atom directory is given.
-    let locals: Vec<LocalGraph<V, E>> = match &opts.atoms {
-        None => (0..machines)
-            .map(|m| LocalGraph::build(&graph, partition, m))
-            .collect(),
-        Some(placement) => {
-            let mut ls = Vec::with_capacity(machines);
-            for m in 0..machines {
-                ls.push(LocalGraph::from_atom_files(
-                    &placement.dir,
-                    &placement.atom_to_machine,
-                    m,
-                )?);
-            }
-            ls
-        }
-    };
-    let (_, _, topo) = graph.into_parts();
+    // Ranks, local graphs (the paper's "merge your atom files" load
+    // step, literal when an atom directory is given), mesh, and the
+    // topology/fallback split — the shared distributed-engine front half.
+    let ClusterSetup {
+        locals,
+        endpoints,
+        stats: net_stats,
+        vfallback,
+        efallback,
+        topo,
+    } = cluster_setup::<V, E, Msg<V, E>>(
+        graph,
+        partition,
+        opts.atoms.as_ref(),
+        machines,
+        opts.network,
+        opts.transport,
+        opts.cluster.as_ref(),
+    )?;
     let endpoints_ref = &topo.endpoints;
 
     let syncs = &syncs;
@@ -437,9 +442,12 @@ where
                         let target = (machines as u64 - 1) * (sweep + 1);
                         while color_done[color as usize] < target {
                             let Some(rcv) = ep.recv_timeout(Duration::from_secs(30)) else {
+                                // Name the transport failure (decode error,
+                                // dead stream) that actually stranded the
+                                // barrier, not just the timeout.
                                 panic!(
-                                    "chromatic: color barrier timeout (machine {me}, sweep {sweep}, color {color}, have {} want {target}, dist {:?})",
-                                    color_done[color as usize], color_done
+                                    "chromatic: color barrier timeout (machine {me}, sweep {sweep}, color {color}, have {} want {target}, dist {:?}, peer errors: {:?})",
+                                    color_done[color as usize], color_done, ep.peer_errors()
                                 );
                             };
                             match rcv.msg {
@@ -508,7 +516,10 @@ where
                         let mut got = 0;
                         while got < machines {
                             let Some(rcv) = ep.recv_timeout(Duration::from_secs(30)) else {
-                                panic!("chromatic: sweep barrier timeout");
+                                panic!(
+                                    "chromatic: sweep barrier timeout (machine {me}, sweep {sweep}, peer errors: {:?})",
+                                    ep.peer_errors()
+                                );
                             };
                             match rcv.msg {
                                 Msg::Report {
@@ -554,7 +565,10 @@ where
                         // Follower: wait for the decision.
                         loop {
                             let Some(rcv) = ep.recv_timeout(Duration::from_secs(30)) else {
-                                panic!("chromatic: decision timeout (machine {me}, sweep {sweep}, dist {color_done:?})");
+                                panic!(
+                                    "chromatic: decision timeout (machine {me}, sweep {sweep}, dist {color_done:?}, peer errors: {:?})",
+                                    ep.peer_errors()
+                                );
                             };
                             match rcv.msg {
                                 Msg::Decision { cont, values } => {
@@ -608,6 +622,12 @@ where
                     }
                 }
 
+                // Every machine records how many sweeps it saw (the
+                // leader also stores per sweep): in cluster mode a
+                // follower process is the only local machine, and its
+                // count is the one reported.
+                sweeps_done.fetch_max(sweep, std::sync::atomic::Ordering::Relaxed);
+
                 // Return owned vertex data + canonically-owned edge data.
                 let vdata = vstore.into_vec();
                 let edata = estore.into_vec();
@@ -632,7 +652,11 @@ where
         }
     });
 
-    // Reassemble the global graph from machine outputs.
+    // Reassemble the global graph from machine outputs. In-process runs
+    // must cover every slot (an uncovered one is a partition/ownership
+    // bug, kept as a loud invariant); in cluster mode only this process's
+    // machine reported, so the rest keep the input data (the
+    // authoritative copies live in the other worker processes).
     let mut vdata_opt: Vec<Option<V>> = (0..topo.adj_offsets.len() - 1).map(|_| None).collect();
     let mut edata_opt: Vec<Option<E>> = (0..topo.endpoints.len()).map(|_| None).collect();
     for out in outputs.into_inner().unwrap().into_iter().flatten() {
@@ -643,8 +667,8 @@ where
             edata_opt[e as usize] = Some(d);
         }
     }
-    let vdata: Vec<V> = vdata_opt.into_iter().map(|o| o.expect("vertex unowned")).collect();
-    let edata: Vec<E> = edata_opt.into_iter().map(|o| o.expect("edge unowned")).collect();
+    let vdata = crate::distributed::reassemble(vdata_opt, vfallback, "vertex");
+    let edata = crate::distributed::reassemble(edata_opt, efallback, "edge");
     let graph = Graph::from_parts(vdata, edata, topo);
 
     let updates_per_machine = updates_by_machine.into_inner().unwrap();

@@ -34,9 +34,10 @@ use anyhow::bail;
 
 use super::{Consistency, Ctx, ExecStats, GlobalValues, Scope, SyncOp, VertexProgram};
 use crate::distributed::locks::{LockReq, LockTable, TxnId};
-use crate::distributed::network::{Network, NetworkModel};
+use crate::distributed::network::NetworkModel;
 use crate::distributed::termination::{Termination, Token, TokenAction};
-use crate::distributed::{DataValue, LocalGraph};
+use crate::distributed::transport::{ClusterConfig, TransportKind};
+use crate::distributed::{cluster_setup, ClusterSetup, DataValue, LocalGraph};
 use crate::graph::{EdgeId, Graph, VertexId};
 use crate::partition::atoms::AtomPlacement;
 use crate::partition::{MachineId, Partition};
@@ -54,8 +55,14 @@ pub(crate) struct LockingOpts {
     /// Scheduler policy (parsed at the CLI boundary via
     /// [`Policy::parse`], so unknown names fail with an error up front).
     pub scheduler: Policy,
-    /// Network model (latency injection for Fig. 8(b)).
+    /// Network model (latency injection for Fig. 8(b); InProc only).
     pub network: NetworkModel,
+    /// Which byte-level substrate carries the frames (ignored when
+    /// `cluster` is set — a multi-process cluster is always TCP).
+    pub transport: TransportKind,
+    /// Multi-process mode: run **only** machine `cluster.me` in this
+    /// process, over TCP to the other worker processes.
+    pub cluster: Option<ClusterConfig>,
     /// Period of leader-initiated global sync barriers (None = only at
     /// termination). The paper's tau is counted in updates; a wall-clock
     /// period is allowed by its footnote 2 ("the resolution of the
@@ -80,6 +87,8 @@ impl Default for LockingOpts {
             maxpending: 64,
             scheduler: Policy::Fifo,
             network: NetworkModel::default(),
+            transport: TransportKind::InProc,
+            cluster: None,
             sync_period: None,
             max_updates_per_machine: u64::MAX,
             on_sync: None,
@@ -329,28 +338,25 @@ where
     let consistency = program.consistency();
     let n_global = graph.num_vertices();
 
-    let net: Network<Msg<V, E>> = Network::new(machines, opts.network);
-    let net_stats = net.stats();
-    let endpoints = net.into_endpoints();
-    // The paper's load step: merge your atom files (disk path) or slice
-    // the already-loaded global graph (in-memory path, same result).
-    let locals: Vec<LocalGraph<V, E>> = match &opts.atoms {
-        None => (0..machines)
-            .map(|m| LocalGraph::build(&graph, partition, m))
-            .collect(),
-        Some(placement) => {
-            let mut ls = Vec::with_capacity(machines);
-            for m in 0..machines {
-                ls.push(LocalGraph::from_atom_files(
-                    &placement.dir,
-                    &placement.atom_to_machine,
-                    m,
-                )?);
-            }
-            ls
-        }
-    };
-    let (_, _, topo) = graph.into_parts();
+    // Ranks, local graphs (the paper's load step: merge your atom files,
+    // or slice the in-memory graph), mesh, and the topology/fallback
+    // split — the shared distributed-engine front half.
+    let ClusterSetup {
+        locals,
+        endpoints,
+        stats: net_stats,
+        vfallback,
+        efallback,
+        topo,
+    } = cluster_setup::<V, E, Msg<V, E>>(
+        graph,
+        partition,
+        opts.atoms.as_ref(),
+        machines,
+        opts.network,
+        opts.transport,
+        opts.cluster.as_ref(),
+    )?;
     let endpoints_ref = &topo.endpoints;
 
     let syncs = &syncs;
@@ -408,6 +414,12 @@ where
                 let mut gather_updates = 0u64;
                 let mut gather_capped = true;
                 let mut gather_count = 0usize;
+                // Leader: FinalReports that arrive while the main loop is
+                // still draining (consumed here, credited in the final
+                // gather after the loop).
+                let mut final_accs: Vec<Vec<f64>> = Vec::new();
+                let mut final_updates_in = 0u64;
+                let mut final_got = 0usize;
                 let batch_w = program.batch_width().max(1);
 
                 // ---------------------------------------------------------
@@ -417,6 +429,11 @@ where
                 // ---------------------------------------------------------
 
                 let mut idle_spins: u32 = 0;
+                // Peer failures seen while idle; the run aborts once any
+                // have been pending for longer than the grace window.
+                let mut pending_peer_failure: Vec<crate::distributed::transport::PeerError> =
+                    Vec::new();
+                let mut peer_failure_since: Option<Instant> = None;
                 'main: loop {
                     let mut progressed = false;
 
@@ -639,16 +656,22 @@ where
                                 halted = true;
                             }
                             Msg::FinalReport { accs, updates } => {
+                                // A fast follower can halt, report, and
+                                // exit while the leader is still draining
+                                // its own pipeline. Keep these strictly
+                                // apart from the sync-barrier `gather`
+                                // state (they are different protocols) and
+                                // carry them into the final gather below.
                                 debug_assert_eq!(me, 0);
-                                if gather.is_empty() {
-                                    gather = accs;
+                                if final_accs.is_empty() {
+                                    final_accs = accs;
                                 } else {
                                     for (i, a) in accs.into_iter().enumerate() {
-                                        syncs[i].merge(&mut gather[i], &a);
+                                        syncs[i].merge(&mut final_accs[i], &a);
                                     }
                                 }
-                                gather_updates += updates;
-                                gather_count += 1;
+                                final_updates_in += updates;
+                                final_got += 1;
                             }
                         }
                     }
@@ -820,6 +843,28 @@ where
 
                     // ---- 6. park briefly when nothing to do --------------
                     if !progressed {
+                        // A disconnected peer (frame decode failure, dead
+                        // stream, EOF from a killed process) can never
+                        // unblock this loop — surface the typed transport
+                        // error loudly instead of hanging forever. The
+                        // abort fires only after a grace window of
+                        // *continuous idleness* (`peer_failure_since`
+                        // resets on every productive iteration): frames
+                        // sent before the failure (e.g. a Halt racing a
+                        // finished peer's EOF) may still be in flight and
+                        // must win, and a machine that is still making
+                        // progress off its other peers is not stuck.
+                        let mut errs = ep.peer_errors();
+                        pending_peer_failure.append(&mut errs);
+                        if !pending_peer_failure.is_empty() {
+                            let since =
+                                *peer_failure_since.get_or_insert_with(Instant::now);
+                            if since.elapsed() > Duration::from_secs(5) {
+                                panic!(
+                                    "locking engine machine {me}: peer failure, cannot make progress: {pending_peer_failure:?}"
+                                );
+                            }
+                        }
                         // Spin briefly (remote lock-chain latency is a
                         // multiple of the wake interval — §Perf), then
                         // yield, then sleep once genuinely idle.
@@ -833,6 +878,9 @@ where
                         }
                     } else {
                         idle_spins = 0;
+                        // Progress re-anchors the peer-failure grace
+                        // window: only continuous idleness counts.
+                        peer_failure_since = None;
                     }
                 }
 
@@ -856,7 +904,9 @@ where
                         },
                     );
                 } else {
-                    // Leader: gather final reports from everyone else.
+                    // Leader: gather final reports from everyone else,
+                    // starting from any that already arrived during the
+                    // main loop's drain.
                     let mut acc0: Vec<Vec<f64>> = syncs
                         .iter()
                         .map(|op| {
@@ -867,8 +917,11 @@ where
                             acc
                         })
                         .collect();
-                    let mut updates_sum = my_updates;
-                    let mut got = 1;
+                    for (i, a) in final_accs.iter().enumerate() {
+                        syncs[i].merge(&mut acc0[i], a);
+                    }
+                    let mut updates_sum = my_updates + final_updates_in;
+                    let mut got = 1 + final_got;
                     let deadline = Instant::now() + Duration::from_secs(30);
                     while got < machines && Instant::now() < deadline {
                         if let Some(rcv) = ep.recv_timeout(Duration::from_millis(50)) {
@@ -880,6 +933,19 @@ where
                                 got += 1;
                             }
                         }
+                    }
+                    if got < machines {
+                        // Loud, not silent: the published globals would
+                        // otherwise masquerade as cluster-wide values.
+                        // Include errors already drained during the main
+                        // loop — they are usually the explanation.
+                        let mut errs = pending_peer_failure;
+                        errs.extend(ep.peer_errors());
+                        eprintln!(
+                            "WARNING: locking engine leader: final sync gather incomplete \
+                             ({got}/{machines} machines reported within 30s; peer errors: {errs:?}) \
+                             — published global values are partial"
+                        );
                     }
                     let values: Vec<(String, Vec<f64>)> = syncs
                         .iter()
@@ -915,6 +981,11 @@ where
         }
     });
 
+    // Reassemble from machine outputs. In-process runs must cover every
+    // slot (an uncovered one is a partition/ownership bug, kept as a loud
+    // invariant); in cluster mode only this process's machine reported,
+    // so unreported slots keep the input data (the authoritative copies
+    // live in the other worker processes).
     let mut vdata_opt: Vec<Option<V>> = (0..topo.adj_offsets.len() - 1).map(|_| None).collect();
     let mut edata_opt: Vec<Option<E>> = (0..topo.endpoints.len()).map(|_| None).collect();
     for out in outputs.into_inner().unwrap().into_iter().flatten() {
@@ -925,8 +996,8 @@ where
             edata_opt[e as usize] = Some(d);
         }
     }
-    let vdata: Vec<V> = vdata_opt.into_iter().map(|o| o.expect("vertex unowned")).collect();
-    let edata: Vec<E> = edata_opt.into_iter().map(|o| o.expect("edge unowned")).collect();
+    let vdata = crate::distributed::reassemble(vdata_opt, vfallback, "vertex");
+    let edata = crate::distributed::reassemble(edata_opt, efallback, "edge");
     let graph = Graph::from_parts(vdata, edata, topo);
 
     let updates_per_machine = updates_by_machine.into_inner().unwrap();

@@ -6,11 +6,23 @@
 //!   `pagerank | als | ner | coseg | gibbs`. Every app accepts
 //!   `--engine shared|chromatic|locking` (the unified `engine::Engine`
 //!   builder dispatches at runtime), plus `--machines N`, `--threads N`,
-//!   `--scheduler POLICY`, `--pjrt`, app-specific size flags, and
-//!   `--config FILE` overlays. `POLICY` is `fifo|priority|multiqueue|sweep`
-//!   (work-stealing per-worker queues on the shared engine; per-machine
-//!   queues on the locking engine) or `global-<policy>` (single shared
-//!   queue — the contended baseline, shared engine only).
+//!   `--scheduler POLICY`, `--transport inproc|tcp` (real loopback
+//!   sockets under the distributed engines), `--pjrt`, app-specific size
+//!   flags, and `--config FILE` overlays. `POLICY` is
+//!   `fifo|priority|multiqueue|sweep` (work-stealing per-worker queues on
+//!   the shared engine; per-machine queues on the locking engine) or
+//!   `global-<policy>` (single shared queue — the contended baseline,
+//!   shared engine only). With `--cluster HOSTS` the run becomes machine
+//!   0 of a real multi-process cluster (one `host:port` line per machine
+//!   in HOSTS); requires `--atoms-dir` so every process derives the same
+//!   placement from the stored meta-graph.
+//! * `worker [<app>] --me N --hosts HOSTS --atoms-dir DIR` — join a
+//!   multi-process cluster as machine N: build machine N's engine state
+//!   by replaying its own atom journals and speak the engine protocol
+//!   over TCP. (The process also replays the full store once for the
+//!   global topology — coloring and result reassembly; making workers
+//!   fully journal-local is a ROADMAP item.) The app is inferred from
+//!   the atom store's stored type tags when omitted.
 //! * `figure <name>` — regenerate a paper table/figure (`table2`, `fig1`,
 //!   `fig5a`, `fig6a`..`fig8d`, or `all`) into `--out-dir` (default
 //!   `results/`).
@@ -31,6 +43,10 @@
 //! * `bench-wire` — wire-codec encode/decode throughput plus atom-store
 //!   save/load timings, written as JSON (`BENCH_pr4.json`; also run by
 //!   CI's bench-smoke job).
+//! * `bench-net` — transport comparison: in-proc vs loopback-TCP frame
+//!   round-trip latency/throughput plus a 2-machine PageRank on each
+//!   backend, written as JSON (`BENCH_pr5.json`; also run by CI's
+//!   bench-smoke job).
 //!
 //! Examples:
 //!
@@ -38,8 +54,11 @@
 //! graphlab run als --machines 4 --d 20 --sweeps 20 --pjrt
 //! graphlab run pagerank --engine shared --threads 8 --scheduler multiqueue
 //! graphlab run gibbs --engine locking --machines 4
+//! graphlab run pagerank --machines 2 --transport tcp
 //! graphlab partition pagerank --atoms-dir atoms/ --atoms 64
 //! graphlab run pagerank --engine locking --atoms-dir atoms/
+//! graphlab worker --me 1 --hosts hosts.txt --atoms-dir atoms/   # then, elsewhere:
+//! graphlab run pagerank --cluster hosts.txt --atoms-dir atoms/
 //! graphlab figure fig6d --out-dir results/
 //! graphlab bench-engines --out BENCH_pr3.json
 //! ```
@@ -49,6 +68,7 @@ use std::time::Duration;
 use anyhow::{bail, Context as _, Result};
 
 use graphlab::apps::{self, als, coseg, gibbs, ner, pagerank};
+use graphlab::distributed::{ClusterConfig, TransportKind};
 use graphlab::engine::{Engine, EngineKind, ENGINE_KINDS};
 use graphlab::partition::atoms::{self, AtomSet};
 use graphlab::partition::Partition;
@@ -64,7 +84,21 @@ fn main() -> Result<()> {
     }
     cfg.overlay(args.flags());
     match args.pos(0) {
-        Some("run") => run_app(&args, &cfg),
+        Some("run") => {
+            let app = args.pos(1).unwrap_or("pagerank").to_string();
+            // --cluster HOSTS: this process is machine `--me` (default 0,
+            // the driver) of a real multi-process TCP cluster.
+            let cluster = match cfg.get("cluster") {
+                Some(path) if path != "true" => Some(ClusterConfig {
+                    me: cfg.num_or("me", 0usize)?,
+                    hosts: read_hosts(path)?,
+                }),
+                Some(_) => bail!("--cluster needs a hosts file (one host:port per machine)"),
+                None => None,
+            };
+            run_app(&app, &cfg, cluster)
+        }
+        Some("worker") => worker(&args, &cfg),
         Some("figure") => {
             let name = args.pos(1).unwrap_or("all").to_string();
             let out = cfg.str_or("out-dir", "results");
@@ -78,13 +112,17 @@ fn main() -> Result<()> {
         Some("bench-sched") => bench_sched(&cfg),
         Some("bench-engines") => bench_engines(&cfg),
         Some("bench-wire") => bench_wire(&cfg),
+        Some("bench-net") => bench_net(&cfg),
         _ => {
             eprintln!(
-                "usage: graphlab <run|figure|partition|calibrate|bench-sched|bench-engines|bench-wire> [...]\n"
+                "usage: graphlab <run|worker|figure|partition|calibrate|bench-sched|bench-engines|bench-wire|bench-net> [...]\n"
             );
             eprintln!("  graphlab run <pagerank|als|ner|coseg|gibbs> [--engine shared|chromatic|locking]");
             eprintln!("      [--machines N] [--threads N] [--scheduler fifo|priority|multiqueue|sweep|global-*]");
-            eprintln!("      [--pjrt] [--sweeps N] [--d N] [--atoms-dir DIR] [--config FILE]");
+            eprintln!("      [--transport inproc|tcp] [--cluster HOSTS] [--pjrt] [--sweeps N] [--d N]");
+            eprintln!("      [--atoms-dir DIR] [--config FILE]");
+            eprintln!("  graphlab worker [<app>] --me N --hosts HOSTS --atoms-dir DIR [--engine E]");
+            eprintln!("      (join a multi-process cluster as machine N; app inferred from the store)");
             eprintln!("  graphlab partition <pagerank|als|ner|coseg|gibbs> [--atoms-dir DIR] [--atoms K]");
             eprintln!("      (writes the app's data graph as an on-disk atom store; omit the app for the demo)");
             eprintln!("  graphlab figure <table2|fig1|fig5a|fig6a|fig6c|fig6d|fig7a|fig8a|fig8b|fig8c|fig8d|all>");
@@ -92,13 +130,88 @@ fn main() -> Result<()> {
             eprintln!("  graphlab bench-sched [--out FILE] [--n N] [--sweeps N] [--quick]");
             eprintln!("  graphlab bench-engines [--out FILE] [--n N] [--sweeps N] [--machines N] [--quick]");
             eprintln!("  graphlab bench-wire [--out FILE] [--n N] [--quick]");
+            eprintln!("  graphlab bench-net [--out FILE] [--n N] [--quick]");
             bail!("missing subcommand");
         }
     }
 }
 
-fn run_app(args: &Args, cfg: &Config) -> Result<()> {
-    let app = args.pos(1).unwrap_or("pagerank");
+/// Parse a hosts file: one `host:port` per line; blank lines and `#`
+/// comments are skipped, so the machine id is the index among the
+/// *remaining* lines — commenting a host out renumbers every machine
+/// after it (keep `--me` values in sync).
+fn read_hosts(path: &str) -> Result<Vec<String>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading hosts file {path}"))?;
+    let hosts: Vec<String> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect();
+    if hosts.is_empty() {
+        bail!("hosts file {path} lists no machines");
+    }
+    Ok(hosts)
+}
+
+/// Map an atom store's stored vertex type name to the app that wrote it,
+/// so `graphlab worker` can join a cluster knowing only the store. Reads
+/// only the store's type tags (`peek_types`), not the whole meta file.
+fn infer_app(dir: &std::path::Path) -> Result<&'static str> {
+    let (vtype, _etype) = atoms::peek_types(dir)?;
+    for (needle, app) in [
+        ("pagerank::PrVertex", "pagerank"),
+        ("als::AlsVertex", "als"),
+        ("ner::NerVertex", "ner"),
+        ("coseg::CosegVertex", "coseg"),
+        ("gibbs::GibbsVertex", "gibbs"),
+    ] {
+        if vtype.ends_with(needle) {
+            return Ok(app);
+        }
+    }
+    bail!(
+        "atom store {} holds unrecognized vertex type {vtype} — name the app explicitly",
+        dir.display()
+    );
+}
+
+/// `graphlab worker [<app>] --me N --hosts FILE --atoms-dir DIR`: join a
+/// multi-process cluster as machine N. Identical engine code path to
+/// `run --cluster`; only the machine id differs.
+///
+/// Every process derives its engine configuration from its OWN command
+/// line — the handshake validates wire version, cluster size, and app
+/// type, but not runtime flags. Launch all processes with identical
+/// `--engine`/`--sweeps`/`--max-updates`/`--maxpending`/`--scheduler`/
+/// `--seed` values (only `--me` differs), or per-machine behavior (e.g.
+/// the locking engine's per-machine update caps) silently diverges.
+fn worker(args: &Args, cfg: &Config) -> Result<()> {
+    let Some(me_raw) = cfg.get("me") else {
+        bail!("worker requires --me N (this process's machine id)");
+    };
+    let me: usize = me_raw
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--me={me_raw}: {e}"))?;
+    let Some(hosts_path) = cfg.get("hosts") else {
+        bail!("worker requires --hosts FILE (one host:port per machine)");
+    };
+    let hosts = read_hosts(hosts_path)?;
+    let Some(dir) = atoms_dir_flag(cfg) else {
+        bail!(
+            "worker requires --atoms-dir DIR: every process must replay the same \
+             atom store (write one with `graphlab partition <app>`)"
+        );
+    };
+    let app = match args.pos(1) {
+        Some(a) => a.to_string(),
+        None => infer_app(&dir)?.to_string(),
+    };
+    run_app(&app, cfg, Some(ClusterConfig { me, hosts }))
+}
+
+fn run_app(app: &str, cfg: &Config, cluster: Option<ClusterConfig>) -> Result<()> {
     let engine: EngineKind = cfg
         .str_or("engine", "chromatic")
         .parse()
@@ -119,7 +232,25 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
     // regenerated; the distributed engines additionally replay each
     // machine's own atom journals (routed via `Engine::atoms_dir`).
     let atoms_dir = atoms_dir_flag(cfg);
-    println!("== graphlab run {app} (engine={engine}, machines={machines}) ==");
+    if let Some(c) = &cluster {
+        if atoms_dir.is_none() {
+            bail!(
+                "cluster mode requires --atoms-dir: every process must derive the \
+                 identical graph and placement from one stored atom set \
+                 (run `graphlab partition {app}` first)"
+            );
+        }
+        println!(
+            "== graphlab run {app} (engine={engine}, cluster machine {}/{} over tcp) ==",
+            c.me,
+            c.hosts.len()
+        );
+    } else {
+        let transport = cfg.str_or("transport", "inproc");
+        println!(
+            "== graphlab run {app} (engine={engine}, machines={machines}, transport={transport}) =="
+        );
+    }
 
     match app {
         "pagerank" => {
@@ -134,7 +265,7 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
             };
             let n = g.num_vertices();
             let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-6, n, use_pjrt };
-            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(),
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(), cluster,
                 vec![Box::new(pagerank::total_rank_sync())], "total_rank")
         }
         "als" => {
@@ -152,7 +283,7 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
             // The latent dimension travels with the stored factors.
             let d = g.vertex_data(0).factor.len();
             let prog = als::Als { d, lambda: 0.08, use_pjrt };
-            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(),
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(), cluster,
                 vec![Box::new(als::rmse_sync())], "rmse")
         }
         "ner" => {
@@ -169,7 +300,7 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
             anyhow::ensure!(g.num_vertices() > 0, "empty graph: nothing to run");
             let k = g.vertex_data(0).dist.len();
             let prog = ner::Coem { k, smoothing: 0.01, eps: 1e-4, use_pjrt };
-            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(),
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(), cluster,
                 vec![Box::new(ner::accuracy_sync())], "accuracy")
         }
         "coseg" => {
@@ -186,7 +317,7 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
             anyhow::ensure!(g.num_vertices() > 0, "empty graph: nothing to run");
             let labels = g.vertex_data(0).belief.len();
             let prog = coseg::Coseg { labels, eps: 1e-3, sigma2: 0.5, use_pjrt };
-            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(),
+            run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(), cluster,
                 vec![Box::new(coseg::gmm_sync(labels)), Box::new(coseg::accuracy_sync())],
                 "accuracy")
         }
@@ -199,7 +330,7 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
                 }
             };
             let prog = gibbs::Gibbs { coupling: 0.4, target_samples: sweeps.max(10), seed };
-            run_generic(g, prog, engine, machines, threads, u64::MAX, cfg, atoms_dir.as_deref(),
+            run_generic(g, prog, engine, machines, threads, u64::MAX, cfg, atoms_dir.as_deref(), cluster,
                 vec![Box::new(gibbs::magnetization_sync())], "magnetization")
         }
         other => bail!("unknown app '{other}'"),
@@ -207,7 +338,8 @@ fn run_app(args: &Args, cfg: &Config) -> Result<()> {
 }
 
 /// Run a (graph, program) pair on the engine selected by `--engine`: one
-/// builder call covers all three engines.
+/// builder call covers all three engines (and, with `cluster`, one
+/// machine of a real multi-process TCP cluster).
 #[allow(clippy::too_many_arguments)]
 fn run_generic<V, E, P>(
     g: graphlab::graph::Graph<V, E>,
@@ -218,6 +350,7 @@ fn run_generic<V, E, P>(
     sweeps: u64,
     cfg: &Config,
     atoms_dir: Option<&std::path::Path>,
+    cluster: Option<ClusterConfig>,
     syncs: Vec<Box<dyn graphlab::engine::SyncOp<V>>>,
     probe_key: &'static str,
 ) -> Result<()>
@@ -232,14 +365,20 @@ where
     let sched_default = if engine == EngineKind::Locking { "priority" } else { "fifo" };
     let spec = SchedSpec::parse(&cfg.str_or("scheduler", sched_default), seed)
         .context("--scheduler")?;
+    let transport: TransportKind = cfg
+        .str_or("transport", "inproc")
+        .parse()
+        .context("--transport")?;
     // Update cap: a safety net for non-converging runs (the chromatic
     // engine is capped in whole sweeps via max_sweeps instead).
     let max_updates = cfg.num_or("max-updates", n as u64 * sweeps.min(10_000))?;
+    let me = cluster.as_ref().map(|c| c.me);
     let mut builder = Engine::new(engine)
         .workers(threads)
         .machines(machines)
         .scheduler(spec)
         .seed(seed)
+        .transport(transport)
         .max_updates(max_updates)
         .max_sweeps(sweeps)
         .maxpending(cfg.num_or("maxpending", 64usize)?)
@@ -250,22 +389,42 @@ where
                 println!("epoch {epoch:>3}: updates={updates:>9} {probe_key}={:.5}", v[0]);
             }
         });
+    if let Some(c) = cluster {
+        builder = builder.cluster(c.me, c.hosts);
+    }
     if let Some(dir) = atoms_dir {
         // Distributed machines replay their own on-disk atom journals.
         builder = builder.atoms_dir(dir);
     }
     let exec = builder.run(g, &prog, initial)?;
     let stats = &exec.stats;
-    println!(
-        "done: {} updates, {} epochs, {:.2}s on {engine} \
-         ({} machine(s), balance {:.2}, {} MB sent)",
-        stats.updates,
-        stats.sweeps,
-        stats.seconds,
-        stats.machines(),
-        stats.balance(),
-        stats.total_bytes() / 1_000_000
-    );
+    match me {
+        // Cluster mode: per-machine stats are local to this process.
+        Some(me) => println!(
+            "done (machine {me}): {} updates, {} epochs, {:.2}s on {engine}, \
+             {} bytes sent / {} msgs over tcp",
+            stats.updates,
+            stats.sweeps,
+            stats.seconds,
+            stats.bytes_sent.get(me).copied().unwrap_or(0),
+            stats.msgs_sent.get(me).copied().unwrap_or(0),
+        ),
+        None => {
+            println!(
+                "done: {} updates, {} epochs, {:.2}s on {engine} \
+                 ({} machine(s), balance {:.2}, {} MB sent)",
+                stats.updates,
+                stats.sweeps,
+                stats.seconds,
+                stats.machines(),
+                stats.balance(),
+                stats.total_bytes() / 1_000_000
+            );
+            if engine.is_distributed() {
+                println!("bytes sent per machine: {:?}", stats.bytes_sent);
+            }
+        }
+    }
     Ok(())
 }
 
@@ -658,6 +817,133 @@ fn bench_wire(cfg: &Config) -> Result<()> {
          \"encode_mb_per_sec\": {encode_mbps:.1},\n    \"decode_mb_per_sec\": {decode_mbps:.1},\n    \
          \"atoms_save_seconds\": {save_s:.6},\n    \"machine0_load_seconds\": {local_load_s:.6},\n    \
          \"full_replay_seconds\": {full_load_s:.6}\n  }}\n}}\n"
+    );
+    std::fs::write(&out_path, json).with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+/// Transport comparison: in-proc channels vs real loopback-TCP sockets —
+/// framing-layer ping-pong round trips, then a 2-machine chromatic
+/// PageRank on each backend — written as JSON (`BENCH_pr5.json`; CI's
+/// bench-smoke job runs the `--quick` variant).
+fn bench_net(cfg: &Config) -> Result<()> {
+    use graphlab::distributed::{Network, NetworkModel};
+    let quick = cfg.bool_or("quick", false);
+    let n = cfg.num_or("n", if quick { 3_000 } else { 10_000usize })?;
+    let sweeps = cfg.num_or("sweeps", if quick { 3 } else { 10u64 })?;
+    let reps = cfg.num_or("reps", if quick { 500usize } else { 5_000 })?;
+    let out_path = cfg.str_or("out", "BENCH_pr5.json");
+    println!("== bench-net: in-proc vs loopback-TCP, {reps} round trips + PageRank n={n} ==");
+
+    // --- framing-layer ping-pong: 4 KiB frames between 2 machines -------
+    let payload = vec![7u8; 4096];
+    // The bytes NetStats actually counts per frame: 4-byte frame prefix
+    // + the Vec codec's own length prefix + the payload.
+    let frame_bytes = graphlab::wire::encoded_len(&payload) + 4;
+    struct RtRow {
+        transport: &'static str,
+        rt_us: f64,
+        mbps: f64,
+    }
+    let mut rt_rows: Vec<RtRow> = Vec::new();
+    for transport in [TransportKind::InProc, TransportKind::Tcp] {
+        let net: Network<Vec<u8>> = match transport {
+            TransportKind::InProc => Network::new(2, NetworkModel::default()),
+            TransportKind::Tcp => Network::tcp_loopback(2)?,
+        };
+        let mut eps = net.into_endpoints();
+        let ep1 = eps.pop().unwrap();
+        let mut ep0 = eps.pop().unwrap();
+        let echo = std::thread::spawn(move || {
+            let mut ep1 = ep1;
+            for _ in 0..reps {
+                let r = ep1.recv_timeout(Duration::from_secs(30)).expect("ping lost");
+                ep1.send(0, r.msg);
+            }
+        });
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            ep0.send(1, payload.clone());
+            ep0.recv_timeout(Duration::from_secs(30)).expect("pong lost");
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        echo.join().map_err(|_| anyhow::anyhow!("echo thread panicked"))?;
+        let rt_us = secs / reps as f64 * 1e6;
+        let mbps = (frame_bytes * 2 * reps) as f64 / secs.max(1e-9) / 1e6;
+        println!(
+            "  {:<7} frame round trip: {rt_us:>8.1} µs ({mbps:>8.1} MB/s both ways)",
+            transport.name()
+        );
+        rt_rows.push(RtRow { transport: transport.name(), rt_us, mbps });
+    }
+
+    // --- 2-machine chromatic PageRank: same workload, both backends -----
+    let edges = graphlab::datagen::web_graph(n, 8, 1);
+    // eps = 0: every update reschedules its neighbors, so both backends
+    // execute identical work; only the substrate differs.
+    let prog = pagerank::PageRank { alpha: 0.15, eps: 0.0, n, use_pjrt: false };
+    struct PrRow {
+        transport: &'static str,
+        updates: u64,
+        seconds: f64,
+        ups: f64,
+        bytes: u64,
+    }
+    let mut pr_rows: Vec<PrRow> = Vec::new();
+    for transport in [TransportKind::InProc, TransportKind::Tcp] {
+        let g = pagerank::build(n, &edges, 0.15);
+        let exec = Engine::new(EngineKind::Chromatic)
+            .machines(2)
+            .transport(transport)
+            .max_sweeps(sweeps)
+            .sync(pagerank::total_rank_sync())
+            .run(g, &prog, apps::all_vertices(n))?;
+        let s = exec.stats;
+        let ups = s.updates_per_sec();
+        println!(
+            "  {:<7} pagerank x2 machines: {:>9} updates in {:.3}s = {:>12.0} updates/s, \
+             {} bytes sent",
+            transport.name(),
+            s.updates,
+            s.seconds,
+            ups,
+            s.total_bytes()
+        );
+        pr_rows.push(PrRow {
+            transport: transport.name(),
+            updates: s.updates,
+            seconds: s.seconds,
+            ups,
+            bytes: s.total_bytes(),
+        });
+    }
+
+    let rt_body: Vec<String> = rt_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"transport\": \"{}\", \"round_trip_us\": {:.2}, \"mb_per_sec\": {:.1}}}",
+                r.transport, r.rt_us, r.mbps
+            )
+        })
+        .collect();
+    let pr_body: Vec<String> = pr_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"transport\": \"{}\", \"updates\": {}, \"seconds\": {:.6}, \"updates_per_sec\": {:.1}, \"bytes_sent\": {}}}",
+                r.transport, r.updates, r.seconds, r.ups, r.bytes
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"transport comparison: in-proc vs loopback TCP (PR 5)\",\n  \
+         \"command\": \"graphlab bench-net\",\n  \"n\": {n},\n  \"sweeps\": {sweeps},\n  \
+         \"frame_bytes\": {frame_bytes},\n  \"round_trips\": {reps},\n  \"quick\": {quick},\n  \
+         \"frame_round_trips\": [\n{}\n  ],\n  \"pagerank_2_machines\": [\n{}\n  ]\n}}\n",
+        rt_body.join(",\n"),
+        pr_body.join(",\n")
     );
     std::fs::write(&out_path, json).with_context(|| format!("writing {out_path}"))?;
     println!("wrote {out_path}");

@@ -411,6 +411,31 @@ pub struct AtomStore {
     pub dir: PathBuf,
 }
 
+/// Read only the stored vertex/edge type tags from `dir/meta.bin`,
+/// without parsing the O(V) assignment or the meta-graph (the tags sit
+/// in the file's first bytes). This is what `graphlab worker` uses to
+/// infer the app — cheap even for huge stores.
+pub fn peek_types(dir: &Path) -> anyhow::Result<(String, String)> {
+    use std::io::Read as _;
+    let path = dir.join("meta.bin");
+    let f = std::fs::File::open(&path)
+        .with_context(|| format!("reading atom store meta {}", path.display()))?;
+    // Type names are short; 64 KiB comfortably covers the header.
+    let mut head = Vec::with_capacity(4096);
+    f.take(64 * 1024)
+        .read_to_end(&mut head)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut input = &head[..];
+    check_header(&mut input, META_MAGIC, &path)?;
+    let _num_vertices = u64::decode(&mut input)?;
+    let _num_edges = u64::decode(&mut input)?;
+    let _num_atoms = u32::decode(&mut input)?;
+    let vtype =
+        String::decode(&mut input).with_context(|| format!("decoding {}", path.display()))?;
+    let etype = String::decode(&mut input)?;
+    Ok((vtype, etype))
+}
+
 impl AtomStore {
     /// Open `dir/meta.bin`.
     pub fn open(dir: &Path) -> anyhow::Result<Self> {

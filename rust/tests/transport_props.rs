@@ -1,0 +1,349 @@
+//! Transport-layer properties: the TCP backend must be a drop-in
+//! substrate under the engines (same fixed points, measured bytes), its
+//! handshake must reject incompatible peers, and malformed bytes at the
+//! socket boundary must surface as typed per-peer errors — never a
+//! process abort.
+//!
+//! The PageRank tests here are the acceptance criterion for the
+//! pluggable-transport refactor: a loopback-TCP run (real kernel
+//! sockets, in-process harness) produces the same ranks as the
+//! in-process channel transport within 1e-4, with `bytes_sent > 0` on
+//! every machine. The `#[ignore]`d smoke goes one step further and
+//! spawns actual `graphlab worker` / `graphlab run --cluster` processes
+//! (CI's cluster-smoke job runs it with `--ignored`).
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use graphlab::apps::{self, pagerank};
+use graphlab::distributed::network::{Endpoint, NetStats};
+use graphlab::distributed::transport::{
+    read_ack, read_handshake, write_handshake, TcpBound, TcpConfig,
+};
+use graphlab::distributed::TransportKind;
+use graphlab::engine::{Engine, EngineKind};
+use graphlab::wire::WIRE_VERSION;
+
+/// Run PageRank to its fixed point on `kind` over `transport`, returning
+/// the final ranks and the per-machine measured wire bytes.
+fn pagerank_ranks(
+    kind: EngineKind,
+    transport: TransportKind,
+    machines: usize,
+    n: usize,
+    edges: &[(u32, u32)],
+) -> (Vec<f32>, Vec<u64>) {
+    let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-7, n, use_pjrt: false };
+    let g = pagerank::build(n, edges, 0.15);
+    let exec = Engine::new(kind)
+        .machines(machines)
+        .transport(transport)
+        .maxpending(128)
+        .max_updates(3_000_000)
+        .max_sweeps(500)
+        .run(g, &prog, apps::all_vertices(n))
+        .unwrap_or_else(|e| panic!("{kind} over {transport} failed: {e}"));
+    let bytes = exec.stats.bytes_sent.clone();
+    let g = exec.graph;
+    (g.vertex_ids().map(|v| g.vertex_data(v).rank).collect(), bytes)
+}
+
+#[test]
+fn tcp_loopback_chromatic_matches_inproc_pagerank() {
+    let n = 400;
+    let edges = graphlab::datagen::web_graph(n, 6, 17);
+    for machines in [2usize, 4] {
+        let (inproc, _) =
+            pagerank_ranks(EngineKind::Chromatic, TransportKind::InProc, machines, n, &edges);
+        let (tcp, bytes) =
+            pagerank_ranks(EngineKind::Chromatic, TransportKind::Tcp, machines, n, &edges);
+        for (v, (a, b)) in inproc.iter().zip(&tcp).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "chromatic x{machines} v{v}: inproc={a} tcp={b}"
+            );
+        }
+        // Real sockets, real traffic: every machine measured sent bytes.
+        assert_eq!(bytes.len(), machines);
+        assert!(
+            bytes.iter().all(|&b| b > 0),
+            "chromatic x{machines}: a machine sent zero bytes over TCP: {bytes:?}"
+        );
+    }
+}
+
+#[test]
+fn tcp_loopback_locking_matches_inproc_pagerank() {
+    let n = 400;
+    let edges = graphlab::datagen::web_graph(n, 6, 17);
+    let (inproc, _) =
+        pagerank_ranks(EngineKind::Locking, TransportKind::InProc, 3, n, &edges);
+    let (tcp, bytes) = pagerank_ranks(EngineKind::Locking, TransportKind::Tcp, 3, n, &edges);
+    for (v, (a, b)) in inproc.iter().zip(&tcp).enumerate() {
+        assert!((a - b).abs() < 1e-4, "locking v{v}: inproc={a} tcp={b}");
+    }
+    assert!(
+        bytes.iter().all(|&b| b > 0),
+        "locking: a machine sent zero bytes over TCP: {bytes:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// handshake
+// ---------------------------------------------------------------------------
+
+#[test]
+fn handshake_rejects_wrong_wire_version() {
+    let bound = TcpBound::bind(0, "127.0.0.1:0", TcpConfig::new(2, "vtest")).unwrap();
+    let mut s = TcpStream::connect(bound.local_addr()).unwrap();
+    write_handshake(&mut s, 1, 2, WIRE_VERSION + 1, "vtest").unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    // Rejected: explicit ack 0, or the acceptor closed the connection.
+    assert!(!read_ack(&mut s).unwrap_or(false), "future wire version must be rejected");
+}
+
+#[test]
+fn handshake_rejects_wrong_app_tag() {
+    let bound = TcpBound::bind(0, "127.0.0.1:0", TcpConfig::new(2, "pagerank-msgs")).unwrap();
+    let mut s = TcpStream::connect(bound.local_addr()).unwrap();
+    write_handshake(&mut s, 1, 2, WIRE_VERSION, "als-msgs").unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert!(!read_ack(&mut s).unwrap_or(false), "foreign app tag must be rejected");
+    // A matching handshake on a fresh connection still gets in: the
+    // rejection did not wedge the acceptor.
+    let mut ok = TcpStream::connect(bound.local_addr()).unwrap();
+    write_handshake(&mut ok, 1, 2, WIRE_VERSION, "pagerank-msgs").unwrap();
+    ok.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert!(read_ack(&mut ok).unwrap());
+}
+
+#[test]
+fn handshake_rejects_wrong_cluster_size() {
+    let bound = TcpBound::bind(0, "127.0.0.1:0", TcpConfig::new(2, "size")).unwrap();
+    let mut s = TcpStream::connect(bound.local_addr()).unwrap();
+    write_handshake(&mut s, 1, 5, WIRE_VERSION, "size").unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert!(!read_ack(&mut s).unwrap_or(false), "mismatched cluster size must be rejected");
+}
+
+// ---------------------------------------------------------------------------
+// malformed frames at the socket boundary
+// ---------------------------------------------------------------------------
+
+/// Stand up a 2-machine "cluster" where machine 1 is a raw-socket puppet
+/// the test drives by hand, returning machine 0's typed endpoint and the
+/// puppet's two streams (inbound-to-0 for sending it bytes, and the
+/// accepted outbound-from-0).
+fn endpoint_with_puppet(tag: &str) -> (Endpoint<u32>, TcpStream, TcpStream) {
+    let bound = TcpBound::bind(0, "127.0.0.1:0", TcpConfig::new(2, tag)).unwrap();
+    let addr0 = bound.local_addr();
+    let puppet_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr1 = puppet_listener.local_addr().unwrap();
+    let tag_owned = tag.to_string();
+    let puppet = std::thread::spawn(move || {
+        // Accept machine 0's outbound connection and ack its handshake.
+        let (mut from0, _) = puppet_listener.accept().unwrap();
+        let hs = read_handshake(&mut from0).unwrap();
+        assert_eq!((hs.sender, hs.machines), (0, 2));
+        from0.write_all(&[1u8]).unwrap();
+        // Open the inbound connection and handshake as machine 1.
+        let mut to0 = TcpStream::connect(addr0).unwrap();
+        write_handshake(&mut to0, 1, 2, WIRE_VERSION, &tag_owned).unwrap();
+        to0.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        assert!(read_ack(&mut to0).unwrap());
+        (to0, from0)
+    });
+    let transport = bound
+        .connect(&[addr0.to_string(), addr1.to_string()])
+        .expect("mesh with puppet");
+    let (to0, from0) = puppet.join().unwrap();
+    let stats: Arc<Vec<NetStats>> = Arc::new(vec![NetStats::default(), NetStats::default()]);
+    (Endpoint::from_transport(Box::new(transport), stats), to0, from0)
+}
+
+#[test]
+fn garbage_frame_is_a_typed_error_not_a_panic() {
+    let (mut ep, mut to0, _from0) = endpoint_with_puppet("garbage");
+    // A well-formed length prefix whose payload is not a valid u32
+    // encoding (5 bytes: decode consumes 4, leaving trailing garbage).
+    to0.write_all(&5u32.to_le_bytes()).unwrap();
+    to0.write_all(&[0xff; 5]).unwrap();
+    to0.flush().unwrap();
+    // The frame must be swallowed (no message, no panic)…
+    assert!(ep.recv_timeout(Duration::from_secs(2)).is_none());
+    // …and surfaced as a typed error that disconnects the peer.
+    let errs = ep.peer_errors();
+    assert!(
+        errs.iter().any(|e| e.peer == 1),
+        "expected a typed error for peer 1, got {errs:?}"
+    );
+    assert!(!ep.peer_alive(1));
+}
+
+#[test]
+fn truncated_stream_is_a_typed_error_not_a_panic() {
+    let (mut ep, mut to0, _from0) = endpoint_with_puppet("truncated");
+    // Claim an 80-byte payload, send 3, and vanish: the reader hits EOF
+    // mid-frame.
+    to0.write_all(&80u32.to_le_bytes()).unwrap();
+    to0.write_all(&[1, 2, 3]).unwrap();
+    to0.flush().unwrap();
+    drop(to0);
+    assert!(ep.recv_timeout(Duration::from_secs(2)).is_none());
+    let errs = ep.peer_errors();
+    assert!(
+        errs.iter().any(|e| e.peer == 1),
+        "expected a typed stream error for peer 1, got {errs:?}"
+    );
+}
+
+#[test]
+fn oversized_length_prefix_is_a_typed_error_not_an_allocation() {
+    let (mut ep, mut to0, _from0) = endpoint_with_puppet("oversized");
+    // A hostile length prefix (4 GiB): must be refused before allocation.
+    to0.write_all(&u32::MAX.to_le_bytes()).unwrap();
+    to0.flush().unwrap();
+    assert!(ep.recv_timeout(Duration::from_secs(2)).is_none());
+    let errs = ep.peer_errors();
+    assert!(
+        errs.iter().any(|e| e.peer == 1),
+        "expected an oversized-frame error for peer 1, got {errs:?}"
+    );
+}
+
+#[test]
+fn valid_frames_still_flow_after_construction() {
+    // Sanity check on the puppet harness itself: a correctly encoded
+    // frame from the raw socket decodes into a typed message.
+    let (mut ep, mut to0, _from0) = endpoint_with_puppet("valid");
+    let payload = 0xDEADBEEFu32.to_le_bytes();
+    to0.write_all(&4u32.to_le_bytes()).unwrap();
+    to0.write_all(&payload).unwrap();
+    to0.flush().unwrap();
+    let got = ep.recv_timeout(Duration::from_secs(5)).expect("typed message");
+    assert_eq!((got.src, got.msg), (1, 0xDEADBEEF));
+    assert!(ep.peer_errors().is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// multi-process smoke (ignored by default; CI cluster-smoke runs it)
+// ---------------------------------------------------------------------------
+
+fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0")
+        .unwrap()
+        .local_addr()
+        .unwrap()
+        .port()
+}
+
+/// One attempt at the two-process run: write a hosts file on fresh
+/// ports, launch the worker, drive the cluster as machine 0, and check
+/// both processes' results. Returns `Err` (instead of panicking) for
+/// failures that a port-collision retry can fix.
+fn try_cluster_run(bin: &str, dir: &std::path::Path, atoms_s: &str) -> Result<(), String> {
+    use std::process::{Command, Stdio};
+    let hosts = dir.join("hosts.txt");
+    std::fs::write(&hosts, format!("127.0.0.1:{}\n127.0.0.1:{}\n", free_port(), free_port()))
+        .unwrap();
+    let hosts_s = hosts.to_str().unwrap();
+
+    // Launch machine 1 as a real worker process…
+    let mut worker = Command::new(bin)
+        .args(["worker", "--me", "1", "--hosts", hosts_s, "--atoms-dir", atoms_s])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn graphlab worker");
+
+    // …and drive the run as machine 0.
+    let out = Command::new(bin)
+        .args(["run", "pagerank", "--cluster", hosts_s, "--atoms-dir", atoms_s])
+        .output()
+        .expect("spawn graphlab run --cluster");
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    let stderr = String::from_utf8_lossy(&out.stderr).to_string();
+    if !out.status.success() {
+        worker.kill().ok();
+        worker.wait().ok();
+        return Err(format!("driver failed:\n{stdout}\n{stderr}"));
+    }
+    if !stdout.contains("done (machine 0)") {
+        worker.kill().ok();
+        worker.wait().ok();
+        return Err(format!("driver did not report per-machine completion:\n{stdout}"));
+    }
+    // Measured traffic crossed a process boundary: parse the number
+    // before the word "bytes" on the completion line.
+    let bytes: u64 = stdout
+        .lines()
+        .find(|l| l.contains("bytes sent"))
+        .map(|l| {
+            let toks: Vec<&str> = l.split_whitespace().collect();
+            toks.iter()
+                .position(|&t| t == "bytes")
+                .and_then(|i| i.checked_sub(1))
+                .and_then(|i| toks[i].parse().ok())
+                .unwrap_or(0)
+        })
+        .unwrap_or(0);
+    assert!(bytes > 0, "driver reported zero wire bytes:\n{stdout}");
+
+    // The worker must terminate cleanly on its own.
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    let status = loop {
+        match worker.try_wait().expect("poll worker") {
+            Some(s) => break s,
+            None if std::time::Instant::now() > deadline => {
+                worker.kill().ok();
+                worker.wait().ok();
+                panic!("worker did not exit within 120s");
+            }
+            None => std::thread::sleep(Duration::from_millis(200)),
+        }
+    };
+    assert!(status.success(), "worker exited with {status}");
+    Ok(())
+}
+
+/// The paper's startup path as real processes: `partition` once, launch a
+/// `worker`, then `run --cluster` as machine 0 — both processes replay
+/// only their own atom journals and speak the chromatic protocol over
+/// loopback TCP. Ports are picked by bind-and-release, which can race
+/// with other processes on a busy host, so connection-phase failures are
+/// retried on fresh ports.
+#[test]
+#[ignore = "spawns real graphlab processes on loopback ports; run with --ignored (CI cluster-smoke)"]
+fn multi_process_worker_smoke() {
+    use std::process::Command;
+    let bin = env!("CARGO_BIN_EXE_graphlab");
+    let dir = std::env::temp_dir().join(format!("graphlab-cluster-smoke-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let atoms = dir.join("atoms");
+    let atoms_s = atoms.to_str().unwrap().to_string();
+
+    // Partition once: one atom store feeds every process and attempt.
+    let st = Command::new(bin)
+        .args(["partition", "pagerank", "--atoms-dir", &atoms_s, "--n", "2000", "--atoms", "32"])
+        .status()
+        .expect("spawn graphlab partition");
+    assert!(st.success(), "graphlab partition failed");
+
+    let mut last_err = String::new();
+    for attempt in 0..3 {
+        match try_cluster_run(bin, &dir, &atoms_s) {
+            Ok(()) => {
+                std::fs::remove_dir_all(&dir).ok();
+                return;
+            }
+            Err(e) => {
+                eprintln!("cluster smoke attempt {attempt} failed, retrying on fresh ports: {e}");
+                last_err = e;
+            }
+        }
+    }
+    panic!("cluster smoke failed on 3 port sets; last error:\n{last_err}");
+}
