@@ -24,13 +24,16 @@
 pub mod localgraph;
 pub mod locks;
 pub mod network;
+pub mod snapshot;
 pub mod termination;
 pub mod transport;
 
 pub use localgraph::LocalGraph;
 pub use network::{Endpoint, Network, NetworkModel};
-pub use transport::{ClusterConfig, TransportKind};
+pub use snapshot::SnapshotTrigger;
+pub use transport::{ClusterConfig, FaultPlan, Faulty, TransportKind};
 
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::graph::{Graph, GraphTopology};
@@ -72,10 +75,18 @@ pub(crate) struct ClusterSetup<V, E, M> {
 }
 
 /// The shared front half of both distributed engines' `run`:
-/// ranks → local graphs → mesh → topology/fallback split. Local graphs
-/// are loaded **before** the mesh forms so that, in cluster mode,
-/// per-process journal-replay skew burns the generous connect window
-/// rather than the protocol's barrier timeouts.
+/// ranks → local graphs → (restore overlay) → mesh → topology/fallback
+/// split. Local graphs are loaded **before** the mesh forms so that, in
+/// cluster mode, per-process journal-replay skew burns the generous
+/// connect window rather than the protocol's barrier timeouts.
+///
+/// `restore` is the recovery path (paper Sec. 4.3): after the journals
+/// rebuild each local graph at version 0, the newest *complete*
+/// `snapshot_<epoch>/` under the given directory is overlaid
+/// version-gated; torn snapshot directories are skipped. `fault` wraps
+/// every transport in a [`Faulty`] decorator for deterministic failure
+/// testing.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn cluster_setup<V, E, M>(
     graph: Graph<V, E>,
     partition: &Partition,
@@ -84,6 +95,8 @@ pub(crate) fn cluster_setup<V, E, M>(
     model: NetworkModel,
     transport: TransportKind,
     cluster: Option<&ClusterConfig>,
+    fault: Option<&FaultPlan>,
+    restore: Option<&Path>,
 ) -> anyhow::Result<ClusterSetup<V, E, M>>
 where
     V: Clone + Wire,
@@ -98,7 +111,7 @@ where
     };
     // The paper's load step: merge your atom files (disk path) or slice
     // the already-loaded global graph (in-memory path, same result).
-    let locals: Vec<LocalGraph<V, E>> = match atoms {
+    let mut locals: Vec<LocalGraph<V, E>> = match atoms {
         None => ranks
             .iter()
             .map(|&m| LocalGraph::build(&graph, partition, m))
@@ -115,7 +128,21 @@ where
             ls
         }
     };
-    let (endpoints, stats) = network::cluster_endpoints::<M>(machines, model, transport, cluster)?;
+    if let Some(root) = restore {
+        if let Some(snap) = snapshot::latest_complete::<V, E>(root)? {
+            anyhow::ensure!(
+                snap.machines == machines,
+                "snapshot under {} was cut by {} machines, run uses {machines}",
+                root.display(),
+                snap.machines
+            );
+            for lg in &mut locals {
+                snapshot::overlay(lg, &snap);
+            }
+        }
+    }
+    let (endpoints, stats) =
+        network::cluster_endpoints::<M>(machines, model, transport, cluster, fault)?;
     debug_assert!(endpoints.iter().map(|ep| ep.me()).eq(ranks.iter().copied()));
     // Cluster mode keeps the input data as the reassembly fallback for
     // slots owned by other worker processes; in-process runs free it

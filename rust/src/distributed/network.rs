@@ -29,7 +29,8 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::distributed::transport::{
-    tcp_loopback_mesh, FrameError, InProcTransport, PeerError, TcpBound, TcpConfig, Transport,
+    tcp_loopback_mesh, FaultPlan, Faulty, FrameError, InProcTransport, PeerError, TcpBound,
+    TcpConfig, Transport,
 };
 use crate::partition::MachineId;
 use crate::wire::Wire;
@@ -157,8 +158,46 @@ pub(crate) fn cluster_endpoints<M: Send + Wire>(
     model: NetworkModel,
     transport: crate::distributed::transport::TransportKind,
     cluster: Option<&crate::distributed::transport::ClusterConfig>,
+    fault: Option<&FaultPlan>,
 ) -> anyhow::Result<(Vec<Endpoint<M>>, Arc<Vec<NetStats>>)> {
     use crate::distributed::transport::TransportKind;
+    // With a fault plan, every backend's transports are wrapped in
+    // `Faulty` before the framing layer sees them; a plan that injects
+    // nothing takes the plain path.
+    if let Some(plan) = fault.filter(|p| !p.is_empty()) {
+        let stats = new_stats(machines);
+        let endpoints: Vec<Endpoint<M>> = match cluster {
+            Some(c) => {
+                anyhow::ensure!(
+                    c.hosts.len() == machines,
+                    "cluster hosts file lists {} machines but the engine runs {machines}",
+                    c.hosts.len()
+                );
+                let cfg = TcpConfig::new(machines, std::any::type_name::<M>());
+                let t = TcpBound::bind(c.me, &c.hosts[c.me], cfg)?.connect(&c.hosts)?;
+                vec![Endpoint::from_transport(
+                    Box::new(Faulty::new(t, plan.clone())),
+                    stats.clone(),
+                )]
+            }
+            None => match transport {
+                TransportKind::InProc => {
+                    Faulty::wrap_mesh(InProcTransport::mesh(machines, model), plan.clone())
+                        .into_iter()
+                        .map(|t| Endpoint::from_transport(Box::new(t), stats.clone()))
+                        .collect()
+                }
+                TransportKind::Tcp => Faulty::wrap_mesh(
+                    tcp_loopback_mesh(machines, std::any::type_name::<M>())?,
+                    plan.clone(),
+                )
+                .into_iter()
+                .map(|t| Endpoint::from_transport(Box::new(t), stats.clone()))
+                .collect(),
+            },
+        };
+        return Ok((endpoints, stats));
+    }
     let net = match cluster {
         Some(c) => {
             anyhow::ensure!(

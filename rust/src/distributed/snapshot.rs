@@ -1,0 +1,664 @@
+//! Chandy–Lamport **distributed snapshots** and crash recovery (paper
+//! Sec. 4.3).
+//!
+//! The paper expresses its asynchronous snapshot as a vertex-program-like
+//! protocol: a machine that starts (or first hears about) snapshot epoch
+//! `e` immediately records its local state, then emits a *token* (a
+//! marker message) on every outbound channel. Channels are FIFO, so
+//! everything a peer sent *before* its token belongs to the cut and is
+//! recorded as channel state; everything after it belongs to the next
+//! epoch. Once a machine has received tokens from every peer, its part of
+//! the cut is final and is committed to disk.
+//!
+//! # On-disk layout
+//!
+//! A snapshot lives in a `snapshot_<epoch>/` directory next to the atom
+//! store, one file per machine (`machine_<m>.bin`), each reusing the atom
+//! store's journal conventions: a `magic + WIRE_VERSION` header
+//! ([`SNAP_MAGIC`]) followed by [`Wire`]-encoded records. Files are
+//! written to a temp name and committed with an atomic `rename`, so a
+//! torn file is never observable under its committed name; a crash
+//! between machines' commits leaves the directory *incomplete*, which
+//! [`latest_complete`] skips and [`load`] reports as a typed error —
+//! never a panic.
+//!
+//! # Recovery
+//!
+//! Restore replays the atom journals (the PR-4 load path rebuilds every
+//! machine's [`LocalGraph`] at version 0), then [`overlay`]s the newest
+//! complete snapshot: each machine applies every record it holds locally,
+//! gated on the recorded version being newer than what it has. Owner
+//! records therefore refresh both the owner copy and every ghost of a
+//! vertex, and the recorded in-flight channel writes land idempotently
+//! (a record that lost the version race is already covered by a newer
+//! one). The result is exactly the consistent cut the tokens delimited.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context as _};
+
+use crate::distributed::localgraph::LocalGraph;
+use crate::graph::{EdgeId, VertexId};
+use crate::partition::atoms::check_header;
+use crate::partition::MachineId;
+use crate::wire::{self, Wire, WIRE_VERSION};
+
+/// Snapshot-file magic (`"GLSN"`, little-endian), sharing the atom
+/// store's header grammar.
+pub const SNAP_MAGIC: u32 = u32::from_le_bytes(*b"GLSN");
+
+/// When the snapshot leader cuts a new epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotTrigger {
+    /// Cut after this many updates since the previous cut.
+    Updates(u64),
+    /// Cut after this much wall-clock time since the previous cut.
+    Interval(Duration),
+}
+
+impl SnapshotTrigger {
+    /// Parse the `--snapshot-every` argument: a bare integer is an
+    /// update count, an integer with an `s` suffix is seconds.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if let Some(secs) = s.strip_suffix('s') {
+            let secs: u64 = secs
+                .parse()
+                .with_context(|| format!("--snapshot-every: bad seconds value '{s}'"))?;
+            anyhow::ensure!(secs > 0, "--snapshot-every: interval must be positive");
+            Ok(SnapshotTrigger::Interval(Duration::from_secs(secs)))
+        } else {
+            let k: u64 = s.parse().with_context(|| {
+                format!("--snapshot-every: expected an update count or '<secs>s', got '{s}'")
+            })?;
+            anyhow::ensure!(k > 0, "--snapshot-every: update count must be positive");
+            Ok(SnapshotTrigger::Updates(k))
+        }
+    }
+}
+
+impl std::fmt::Display for SnapshotTrigger {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotTrigger::Updates(k) => write!(f, "{k} updates"),
+            SnapshotTrigger::Interval(d) => write!(f, "{}s", d.as_secs()),
+        }
+    }
+}
+
+/// Where and how often a run snapshots (threaded from the [`Engine`]
+/// builder into both distributed engines).
+///
+/// [`Engine`]: crate::engine::Engine
+#[derive(Debug, Clone)]
+pub struct SnapshotCfg {
+    /// Directory the `snapshot_<epoch>/` directories are created in
+    /// (normally the atom-store directory).
+    pub root: PathBuf,
+    /// When the leader cuts a new epoch.
+    pub trigger: SnapshotTrigger,
+}
+
+/// The merged records of one complete snapshot.
+pub struct SnapshotData<V, E> {
+    /// The snapshot epoch.
+    pub epoch: u64,
+    /// How many machines cut this snapshot.
+    pub machines: usize,
+    /// Recorded vertex copies: `(global id, version, data)`.
+    pub verts: Vec<(VertexId, u64, V)>,
+    /// Recorded edge copies: `(global edge id, version, data)`.
+    pub edges: Vec<(EdgeId, u64, E)>,
+}
+
+fn dir_name(epoch: u64) -> String {
+    format!("snapshot_{epoch}")
+}
+
+fn machine_file(m: MachineId) -> String {
+    format!("machine_{m}.bin")
+}
+
+/// Snapshot epochs present under `root` (complete or torn), unsorted.
+fn epochs_under(root: &Path) -> Vec<u64> {
+    let Ok(entries) = std::fs::read_dir(root) else {
+        return Vec::new();
+    };
+    entries
+        .flatten()
+        .filter_map(|e| {
+            e.file_name()
+                .to_str()
+                .and_then(|n| n.strip_prefix("snapshot_"))
+                .and_then(|n| n.parse::<u64>().ok())
+        })
+        .collect()
+}
+
+/// The epoch the next snapshot under `root` must use: one above anything
+/// already on disk (complete or torn), so a restarted run never collides
+/// with its predecessor's directories.
+pub fn next_epoch(root: &Path) -> u64 {
+    epochs_under(root).into_iter().max().unwrap_or(0) + 1
+}
+
+/// Write machine `me`'s part of snapshot `epoch` under `root`,
+/// committing with an atomic rename (a torn file is never visible under
+/// its committed name).
+pub fn write_machine<V: Wire, E: Wire>(
+    root: &Path,
+    epoch: u64,
+    me: MachineId,
+    machines: usize,
+    verts: &[(VertexId, u64, V)],
+    edges: &[(EdgeId, u64, E)],
+) -> anyhow::Result<PathBuf> {
+    let dir = root.join(dir_name(epoch));
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating snapshot dir {}", dir.display()))?;
+    let mut buf = Vec::with_capacity(64 + verts.len() * 16 + edges.len() * 16);
+    SNAP_MAGIC.encode(&mut buf);
+    WIRE_VERSION.encode(&mut buf);
+    epoch.encode(&mut buf);
+    (me as u32).encode(&mut buf);
+    (machines as u32).encode(&mut buf);
+    (verts.len() as u32).encode(&mut buf);
+    for (v, ver, data) in verts {
+        v.encode(&mut buf);
+        ver.encode(&mut buf);
+        data.encode(&mut buf);
+    }
+    (edges.len() as u32).encode(&mut buf);
+    for (e, ver, data) in edges {
+        e.encode(&mut buf);
+        ver.encode(&mut buf);
+        data.encode(&mut buf);
+    }
+    let committed = dir.join(machine_file(me));
+    let tmp = dir.join(format!("machine_{me}.bin.tmp"));
+    std::fs::write(&tmp, &buf)
+        .with_context(|| format!("writing snapshot part {}", tmp.display()))?;
+    std::fs::rename(&tmp, &committed)
+        .with_context(|| format!("committing snapshot part {}", committed.display()))?;
+    Ok(committed)
+}
+
+struct MachinePart<V, E> {
+    epoch: u64,
+    me: u32,
+    machines: u32,
+    verts: Vec<(VertexId, u64, V)>,
+    edges: Vec<(EdgeId, u64, E)>,
+}
+
+fn decode_part<V: Wire, E: Wire>(input: &mut &[u8]) -> wire::Result<MachinePart<V, E>> {
+    Ok(MachinePart {
+        epoch: u64::decode(input)?,
+        me: u32::decode(input)?,
+        machines: u32::decode(input)?,
+        verts: Vec::decode(input)?,
+        edges: Vec::decode(input)?,
+    })
+}
+
+fn read_machine_file<V: Wire, E: Wire>(path: &Path) -> anyhow::Result<MachinePart<V, E>> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading snapshot part {}", path.display()))?;
+    let mut input = &buf[..];
+    check_header(&mut input, SNAP_MAGIC, path)?;
+    let part = decode_part::<V, E>(&mut input)
+        .with_context(|| format!("{}: truncated or corrupt snapshot part", path.display()))?;
+    if !input.is_empty() {
+        bail!(
+            "{}: {} trailing bytes after snapshot records",
+            path.display(),
+            input.len()
+        );
+    }
+    Ok(part)
+}
+
+/// Load one `snapshot_<epoch>/` directory. Incomplete (missing machine
+/// parts), truncated, or corrupt snapshots are typed errors — never
+/// panics.
+pub fn load<V: Wire, E: Wire>(dir: &Path) -> anyhow::Result<SnapshotData<V, E>> {
+    let first = dir.join(machine_file(0));
+    if !first.exists() {
+        bail!(
+            "{}: incomplete snapshot (missing {})",
+            dir.display(),
+            machine_file(0)
+        );
+    }
+    let part0 = read_machine_file::<V, E>(&first)?;
+    if part0.me != 0 {
+        bail!("{}: holds machine {}, expected 0", first.display(), part0.me);
+    }
+    let machines = part0.machines as usize;
+    if machines == 0 {
+        bail!("{}: snapshot claims zero machines", first.display());
+    }
+    let mut data = SnapshotData {
+        epoch: part0.epoch,
+        machines,
+        verts: part0.verts,
+        edges: part0.edges,
+    };
+    for m in 1..machines {
+        let path = dir.join(machine_file(m));
+        if !path.exists() {
+            bail!(
+                "{}: incomplete snapshot (missing {})",
+                dir.display(),
+                machine_file(m)
+            );
+        }
+        let part = read_machine_file::<V, E>(&path)?;
+        if part.epoch != data.epoch || part.machines as usize != machines || part.me as usize != m
+        {
+            bail!(
+                "{}: inconsistent snapshot part (epoch {} of {} machines, holds machine {}; \
+                 expected epoch {} of {machines} machines, machine {m})",
+                path.display(),
+                part.epoch,
+                part.machines,
+                part.me,
+                data.epoch
+            );
+        }
+        data.verts.extend(part.verts);
+        data.edges.extend(part.edges);
+    }
+    Ok(data)
+}
+
+/// The newest *complete* snapshot under `root`: scan `snapshot_<epoch>/`
+/// directories in descending epoch order and return the first that loads
+/// cleanly. Torn directories — the expected debris of a crash mid-cut —
+/// are skipped, not errors; `Ok(None)` means nothing restorable exists.
+pub fn latest_complete<V: Wire, E: Wire>(
+    root: &Path,
+) -> anyhow::Result<Option<SnapshotData<V, E>>> {
+    let mut epochs = epochs_under(root);
+    epochs.sort_unstable_by(|a, b| b.cmp(a));
+    for epoch in epochs {
+        if let Ok(data) = load::<V, E>(&root.join(dir_name(epoch))) {
+            return Ok(Some(data));
+        }
+    }
+    Ok(None)
+}
+
+/// Apply a snapshot to one machine's freshly-built local graph: every
+/// record the machine holds locally (owned or ghost) lands if its
+/// recorded version is newer than the local copy's. Order-independent:
+/// the highest version wins regardless of which machine's part supplied
+/// it.
+pub fn overlay<V: Clone, E: Clone>(lg: &mut LocalGraph<V, E>, snap: &SnapshotData<V, E>) {
+    for (v, ver, data) in &snap.verts {
+        if let Some(&lv) = lg.g2l.get(v) {
+            if *ver > lg.vversion[lv as usize] {
+                lg.vdata[lv as usize] = data.clone();
+                lg.vversion[lv as usize] = *ver;
+            }
+        }
+    }
+    for (e, ver, data) in &snap.edges {
+        if let Some(&le) = lg.ge2l.get(e) {
+            if *ver > lg.eversion[le as usize] {
+                lg.edata[le as usize] = data.clone();
+                lg.eversion[le as usize] = *ver;
+            }
+        }
+    }
+}
+
+/// Record every local copy a [`LocalGraph`] still holding its data makes
+/// — the "own state" half of a cut for callers that did not move the
+/// data into engine-private stores.
+pub(crate) fn record_from_graph<V: Clone, E: Clone>(
+    lg: &LocalGraph<V, E>,
+    verts: &mut Vec<(VertexId, u64, V)>,
+    edges: &mut Vec<(EdgeId, u64, E)>,
+) {
+    verts.reserve(lg.l2g.len());
+    for (i, &gv) in lg.l2g.iter().enumerate() {
+        verts.push((gv, lg.vversion[i], lg.vdata[i].clone()));
+    }
+    edges.reserve(lg.le2g.len());
+    for (i, &ge) in lg.le2g.iter().enumerate() {
+        edges.push((ge, lg.eversion[i], lg.edata[i].clone()));
+    }
+}
+
+/// One machine's view of the token protocol, owned by its engine loop.
+///
+/// The engine calls [`SnapshotSession::due`] + [`SnapshotSession::begin`]
+/// on the leader to initiate a cut, [`SnapshotSession::on_token`] for
+/// every snapshot-token message, and
+/// [`SnapshotSession::record_vertex`]/[`record_edge`] when applying a
+/// remote write that might be channel state. Both `begin` and `on_token`
+/// take a `record` closure that appends the machine's current local
+/// state (owned + ghosts), because each engine keeps that state in its
+/// own shape ([`record_from_graph`] covers the plain-`LocalGraph` case).
+/// The session commits its machine file the moment the last peer token
+/// arrives.
+///
+/// [`record_edge`]: SnapshotSession::record_edge
+pub(crate) struct SnapshotSession<V, E> {
+    root: PathBuf,
+    trigger: SnapshotTrigger,
+    me: MachineId,
+    machines: usize,
+    /// The epoch currently being recorded, if any.
+    active: Option<u64>,
+    /// Peers whose token for the active epoch is still outstanding.
+    pending: Vec<bool>,
+    pending_count: usize,
+    verts: Vec<(VertexId, u64, V)>,
+    edges: Vec<(EdgeId, u64, E)>,
+    /// Highest epoch started or heard of (tokens below this are stale).
+    highest_seen: u64,
+    last_cut_updates: u64,
+    last_cut_at: Instant,
+    /// Cuts this machine committed to disk (diagnostics).
+    pub committed: u64,
+}
+
+impl<V: Clone + Wire, E: Clone + Wire> SnapshotSession<V, E> {
+    pub fn new(cfg: &SnapshotCfg, me: MachineId, machines: usize) -> Self {
+        SnapshotSession {
+            root: cfg.root.clone(),
+            trigger: cfg.trigger,
+            me,
+            machines,
+            active: None,
+            pending: vec![false; machines],
+            pending_count: 0,
+            verts: Vec::new(),
+            edges: Vec::new(),
+            // Resume numbering above anything already on disk so a
+            // restarted run never overwrites its predecessor's cuts.
+            highest_seen: next_epoch(&cfg.root).saturating_sub(1),
+            last_cut_updates: 0,
+            last_cut_at: Instant::now(),
+            committed: 0,
+        }
+    }
+
+    /// Leader-side trigger check: is a new cut due, given the updates
+    /// completed so far? (Never true while a cut is in flight.)
+    pub fn due(&self, updates_done: u64) -> bool {
+        if self.active.is_some() {
+            return false;
+        }
+        match self.trigger {
+            SnapshotTrigger::Updates(k) => {
+                updates_done.saturating_sub(self.last_cut_updates) >= k
+            }
+            SnapshotTrigger::Interval(d) => self.last_cut_at.elapsed() >= d,
+        }
+    }
+
+    /// Initiate a cut: record local state now (via `record`) and return
+    /// the epoch whose token the caller must send on every outbound
+    /// channel.
+    pub fn begin<F>(&mut self, updates_done: u64, record: F) -> anyhow::Result<u64>
+    where
+        F: FnOnce(&mut Vec<(VertexId, u64, V)>, &mut Vec<(EdgeId, u64, E)>),
+    {
+        let epoch = self.highest_seen + 1;
+        self.start(epoch, record)?;
+        self.last_cut_updates = updates_done;
+        self.last_cut_at = Instant::now();
+        Ok(epoch)
+    }
+
+    fn start<F>(&mut self, epoch: u64, record: F) -> anyhow::Result<()>
+    where
+        F: FnOnce(&mut Vec<(VertexId, u64, V)>, &mut Vec<(EdgeId, u64, E)>),
+    {
+        self.highest_seen = epoch;
+        self.active = Some(epoch);
+        self.pending = vec![true; self.machines];
+        self.pending[self.me] = false;
+        self.pending_count = self.machines - 1;
+        self.verts.clear();
+        self.edges.clear();
+        record(&mut self.verts, &mut self.edges);
+        if self.pending_count == 0 {
+            self.commit()?;
+        }
+        Ok(())
+    }
+
+    /// Handle a token from `src` for `epoch`. `Ok(true)` means a cut just
+    /// started at this machine and the caller must broadcast the token on
+    /// every outbound channel (the Chandy–Lamport marker rule).
+    pub fn on_token<F>(&mut self, src: MachineId, epoch: u64, record: F) -> anyhow::Result<bool>
+    where
+        F: FnOnce(&mut Vec<(VertexId, u64, V)>, &mut Vec<(EdgeId, u64, E)>),
+    {
+        match self.active {
+            Some(e) if epoch == e => {
+                self.clear_pending(src)?;
+                Ok(false)
+            }
+            Some(e) if epoch < e => Ok(false), // stale: a cut we already superseded
+            None if epoch <= self.highest_seen => Ok(false), // stale: already committed
+            _ => {
+                // First token of a new epoch (possibly abandoning an
+                // older in-flight cut — never committed here, so its
+                // directory stays incomplete and restore skips it).
+                self.start(epoch, record)?;
+                self.clear_pending(src)?;
+                Ok(true)
+            }
+        }
+    }
+
+    fn clear_pending(&mut self, src: MachineId) -> anyhow::Result<()> {
+        if self.active.is_some() && self.pending[src] {
+            self.pending[src] = false;
+            self.pending_count -= 1;
+            if self.pending_count == 0 {
+                self.commit()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Whether in-flight writes from `src` are still channel state of the
+    /// active cut (i.e. `src`'s token has not arrived yet).
+    pub fn recording_from(&self, src: MachineId) -> bool {
+        self.active.is_some() && self.pending[src]
+    }
+
+    /// Record an in-flight remote vertex write as channel state. The
+    /// caller guards with [`SnapshotSession::recording_from`].
+    pub fn record_vertex(&mut self, v: VertexId, ver: u64, data: &V) {
+        self.verts.push((v, ver, data.clone()));
+    }
+
+    /// Record an in-flight remote edge write as channel state.
+    pub fn record_edge(&mut self, e: EdgeId, ver: u64, data: &E) {
+        self.edges.push((e, ver, data.clone()));
+    }
+
+    fn commit(&mut self) -> anyhow::Result<()> {
+        let epoch = self
+            .active
+            .take()
+            .expect("snapshot commit without an active cut");
+        write_machine(
+            &self.root,
+            epoch,
+            self.me,
+            self.machines,
+            &self.verts,
+            &self.edges,
+        )?;
+        self.verts.clear();
+        self.edges.clear();
+        self.committed += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::partition::Partition;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "graphlab-snap-{name}-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn trigger_parses_updates_and_seconds() {
+        assert_eq!(
+            SnapshotTrigger::parse("500").unwrap(),
+            SnapshotTrigger::Updates(500)
+        );
+        assert_eq!(
+            SnapshotTrigger::parse("5s").unwrap(),
+            SnapshotTrigger::Interval(Duration::from_secs(5))
+        );
+        for bad in ["", "0", "0s", "-3", "5m", "s"] {
+            assert!(SnapshotTrigger::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn write_load_round_trip_merges_machine_parts() {
+        let root = tmp("roundtrip");
+        write_machine::<u32, u32>(&root, 3, 0, 2, &[(0, 1, 10), (1, 2, 20)], &[(0, 1, 7)])
+            .unwrap();
+        write_machine::<u32, u32>(&root, 3, 1, 2, &[(2, 5, 30)], &[]).unwrap();
+        let snap = load::<u32, u32>(&root.join("snapshot_3")).unwrap();
+        assert_eq!((snap.epoch, snap.machines), (3, 2));
+        assert_eq!(snap.verts.len(), 3);
+        assert_eq!(snap.edges, vec![(0, 1, 7)]);
+        assert_eq!(next_epoch(&root), 4);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn torn_snapshots_are_typed_errors_and_skipped_by_discovery() {
+        let root = tmp("torn");
+        // Epoch 1: complete and loadable.
+        write_machine::<u32, u32>(&root, 1, 0, 1, &[(0, 1, 99)], &[]).unwrap();
+        // Epoch 2: missing machine 1's part.
+        write_machine::<u32, u32>(&root, 2, 0, 2, &[(0, 7, 1)], &[]).unwrap();
+        // Epoch 3: machine 0's part truncated mid-record.
+        let p3 = write_machine::<u32, u32>(&root, 3, 0, 1, &[(0, 9, 5)], &[]).unwrap();
+        let bytes = std::fs::read(&p3).unwrap();
+        std::fs::write(&p3, &bytes[..bytes.len() - 3]).unwrap();
+        // Epoch 4: garbage magic.
+        let d4 = root.join("snapshot_4");
+        std::fs::create_dir_all(&d4).unwrap();
+        std::fs::write(d4.join("machine_0.bin"), b"not a snapshot").unwrap();
+
+        for epoch in [2u64, 3, 4] {
+            let err = load::<u32, u32>(&root.join(format!("snapshot_{epoch}")));
+            assert!(err.is_err(), "epoch {epoch} should be a typed error");
+        }
+        // Discovery skips every torn epoch and lands on the complete one.
+        let best = latest_complete::<u32, u32>(&root).unwrap().unwrap();
+        assert_eq!(best.epoch, 1);
+        assert_eq!(best.verts, vec![(0, 1, 99)]);
+        // And numbering still resumes above the torn debris.
+        assert_eq!(next_epoch(&root), 5);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn empty_root_has_no_restorable_snapshot() {
+        let root = tmp("empty");
+        assert!(latest_complete::<u32, u32>(&root).unwrap().is_none());
+        assert!(latest_complete::<u32, u32>(&root.join("absent")).unwrap().is_none());
+        assert_eq!(next_epoch(&root), 1);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    /// 2-machine path graph for session tests.
+    fn locals() -> Vec<LocalGraph<u32, u32>> {
+        let mut b = GraphBuilder::new();
+        b.add_vertices(4, |i| i as u32);
+        for i in 0..3u32 {
+            b.add_edge(i, i + 1, 100 + i);
+        }
+        let g = b.build();
+        let part = Partition::from_assignment(vec![0, 0, 1, 1], 2);
+        (0..2).map(|m| LocalGraph::build(&g, &part, m)).collect()
+    }
+
+    #[test]
+    fn token_session_commits_when_all_tokens_arrive() {
+        let root = tmp("session");
+        let cfg = SnapshotCfg {
+            root: root.clone(),
+            trigger: SnapshotTrigger::Updates(10),
+        };
+        let mut lgs = locals();
+        let mut s0: SnapshotSession<u32, u32> = SnapshotSession::new(&cfg, 0, 2);
+        let mut s1: SnapshotSession<u32, u32> = SnapshotSession::new(&cfg, 1, 2);
+        assert!(s0.due(10));
+        let epoch = s0
+            .begin(10, |vs, es| record_from_graph(&lgs[0], vs, es))
+            .unwrap();
+        assert_eq!(epoch, 1);
+        assert!(!s0.due(10), "no overlapping cuts");
+        // Machine 1 first hears of the cut via the token: records its
+        // state, must broadcast.
+        assert!(s1
+            .on_token(0, epoch, |vs, es| record_from_graph(&lgs[1], vs, es))
+            .unwrap());
+        assert_eq!(s1.committed, 1, "2-machine cut completes on one token");
+        // A write from machine 1 racing its token is channel state at 0.
+        assert!(s0.recording_from(1));
+        lgs[0].apply_vertex(2, 3, 777);
+        s0.record_vertex(2, 3, &777);
+        assert!(s0
+            .on_token(1, epoch, |vs, es| record_from_graph(&lgs[0], vs, es))
+            .is_ok());
+        assert_eq!(s0.committed, 1);
+        assert!(!s0.recording_from(1));
+        // Both parts on disk: the snapshot is complete and carries the
+        // channel-state record.
+        let snap = load::<u32, u32>(&root.join("snapshot_1")).unwrap();
+        assert!(snap.verts.iter().any(|&(v, ver, d)| (v, ver, d) == (2, 3, 777)));
+        // Duplicate / stale tokens are ignored.
+        assert!(!s0
+            .on_token(1, epoch, |vs, es| record_from_graph(&lgs[0], vs, es))
+            .unwrap());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn overlay_is_version_gated_and_order_independent() {
+        let mut lgs = locals();
+        let snap = SnapshotData {
+            epoch: 1,
+            machines: 2,
+            verts: vec![(2, 1, 555), (2, 4, 999), (0, 0, 42)],
+            edges: vec![(1, 2, 888)],
+        };
+        overlay(&mut lgs[1], &snap);
+        let lv = lgs[1].g2l[&2] as usize;
+        assert_eq!((lgs[1].vdata[lv], lgs[1].vversion[lv]), (999, 4));
+        // Version-0 records never displace built state (data is the
+        // initial value anyway); foreign vertices are ignored — vertex 0
+        // is not local to machine 1.
+        assert!(!lgs[1].g2l.contains_key(&0));
+        let le = lgs[1].ge2l[&1] as usize;
+        assert_eq!((lgs[1].edata[le], lgs[1].eversion[le]), (888, 2));
+    }
+}

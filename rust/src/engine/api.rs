@@ -37,7 +37,10 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use super::{chromatic, locking, shared, GlobalValues, SyncOp, VertexProgram};
-use crate::distributed::{ClusterConfig, DataValue, NetworkModel, TransportKind};
+use crate::distributed::snapshot::SnapshotCfg;
+use crate::distributed::{
+    ClusterConfig, DataValue, FaultPlan, NetworkModel, SnapshotTrigger, TransportKind,
+};
 use crate::graph::Graph;
 use crate::partition::atoms::{AtomPlacement, AtomStore};
 use crate::partition::{Coloring, Partition};
@@ -194,6 +197,10 @@ pub struct Engine<V> {
     coloring: Option<Coloring>,
     partition: Option<Partition>,
     atoms_dir: Option<PathBuf>,
+    snapshot_every: Option<SnapshotTrigger>,
+    snapshot_root: Option<PathBuf>,
+    restore: Option<PathBuf>,
+    fault: Option<FaultPlan>,
     on_progress: Option<ProgressFn>,
 }
 
@@ -217,6 +224,10 @@ impl<V> Engine<V> {
             coloring: None,
             partition: None,
             atoms_dir: None,
+            snapshot_every: None,
+            snapshot_root: None,
+            restore: None,
+            fault: None,
             on_progress: None,
         }
     }
@@ -373,6 +384,47 @@ impl<V> Engine<V> {
         self
     }
 
+    /// Cut a Chandy–Lamport snapshot whenever `trigger` fires (paper Sec.
+    /// 4.3): every `k` updates or every `d` seconds, the leader injects a
+    /// token and each machine writes its part of a consistent cut to
+    /// `snapshot_<epoch>/` under the snapshot root ([`Engine::snapshot_to`],
+    /// defaulting to the atom-store dir). Distributed engines only. On the
+    /// locking engine the update-count trigger fires on the *leader's*
+    /// local counter — approximate, roughly `machines×` the flag value
+    /// cluster-wide.
+    pub fn snapshot_every(mut self, trigger: SnapshotTrigger) -> Self {
+        self.snapshot_every = Some(trigger);
+        self
+    }
+
+    /// Directory that holds `snapshot_<epoch>/` directories. Defaults to
+    /// the atom-store dir ([`Engine::atoms_dir`]); required if snapshots
+    /// are enabled without one.
+    pub fn snapshot_to(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.snapshot_root = Some(dir.into());
+        self
+    }
+
+    /// Recovery (paper Sec. 4.3): after the local graphs are built (from
+    /// the in-memory graph or atom journals), overlay the newest
+    /// *complete* `snapshot_<epoch>/` under `dir`, version-gated per
+    /// record. Torn or partial snapshot directories are skipped; if no
+    /// complete snapshot exists the run proceeds from the journals alone.
+    /// Distributed engines only.
+    pub fn restore_from(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.restore = Some(dir.into());
+        self
+    }
+
+    /// Wrap every machine's transport in a [`crate::distributed::Faulty`]
+    /// decorator executing this seeded fault plan (kill/drop/duplicate/
+    /// delay/sever) — deterministic failure injection for tests.
+    /// Distributed engines only.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
+
     /// Progress callback `(epoch, updates_so_far, globals)` invoked at
     /// every engine epoch (chromatic sweep, locking sync barrier, shared
     /// sync barrier).
@@ -399,6 +451,29 @@ impl<V> Engine<V> {
         P: VertexProgram<V, E>,
     {
         let n = graph.num_vertices();
+        // Snapshots, restore and fault injection all live in the
+        // distributed substrate — meaningless on the shared engine.
+        if !self.kind.is_distributed()
+            && (self.snapshot_every.is_some() || self.restore.is_some() || self.fault.is_some())
+        {
+            bail!(
+                "snapshot/restore/fault-plan need a distributed engine \
+                 (chromatic|locking), not shared"
+            );
+        }
+        let snapshot = match self.snapshot_every {
+            None => None,
+            Some(trigger) => {
+                let root = match self.snapshot_root.take().or_else(|| self.atoms_dir.clone()) {
+                    Some(r) => r,
+                    None => bail!(
+                        "snapshot_every needs a snapshot root: set snapshot_to \
+                         (--snapshot-dir) or atoms_dir (--atoms-dir)"
+                    ),
+                };
+                Some(SnapshotCfg { root, trigger })
+            }
+        };
         // Cluster mode: the hosts file is the authority on cluster size.
         if let Some(c) = &self.cluster {
             if !self.kind.is_distributed() {
@@ -488,6 +563,9 @@ impl<V> Engine<V> {
                         cluster: self.cluster,
                         on_sweep: self.on_progress,
                         atoms: placement,
+                        snapshot,
+                        restore: self.restore,
+                        fault: self.fault,
                     },
                 )?;
                 Ok(Exec { graph, stats })
@@ -522,6 +600,9 @@ impl<V> Engine<V> {
                         on_sync: self.on_progress,
                         seed: self.seed,
                         atoms: placement,
+                        snapshot,
+                        restore: self.restore,
+                        fault: self.fault,
                     },
                 )?;
                 Ok(Exec { graph, stats })
@@ -616,5 +697,21 @@ mod tests {
             .with_coloring(Coloring::greedy(&small))
             .run(ring8(), &Noop, vec![]);
         assert!(res.is_err());
+        // Snapshot/restore/fault are distributed-substrate features: the
+        // shared engine must reject them, not silently ignore them.
+        let res = Engine::new(EngineKind::Shared)
+            .snapshot_every(SnapshotTrigger::Updates(10))
+            .run(ring8(), &Noop, vec![]);
+        assert!(res.unwrap_err().to_string().contains("distributed engine"));
+        let res = Engine::new(EngineKind::Shared)
+            .fault_plan(FaultPlan::kill_at(0, 1))
+            .run(ring8(), &Noop, vec![]);
+        assert!(res.is_err());
+        // Snapshots need somewhere to live: no snapshot_to, no atoms_dir.
+        let res = Engine::new(EngineKind::Locking)
+            .machines(2)
+            .snapshot_every(SnapshotTrigger::Updates(10))
+            .run(ring8(), &Noop, vec![]);
+        assert!(res.unwrap_err().to_string().contains("snapshot root"));
     }
 }

@@ -17,6 +17,7 @@
 //! yields **vertex** consistency (paper Sec. 4.2.1). Callers pick the
 //! coloring to match `program.consistency()` (`color_for` helps).
 
+use std::path::PathBuf;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -24,8 +25,9 @@ use anyhow::bail;
 
 use super::{Ctx, ExecStats, GlobalValues, Scope, SyncOp, VertexProgram};
 use crate::distributed::network::NetworkModel;
-use crate::distributed::transport::{ClusterConfig, TransportKind};
-use crate::distributed::{cluster_setup, ClusterSetup, DataValue};
+use crate::distributed::snapshot::{SnapshotCfg, SnapshotSession};
+use crate::distributed::transport::{peer_grace, ClusterConfig, FaultPlan, TransportKind};
+use crate::distributed::{cluster_setup, ClusterSetup, DataValue, LocalGraph};
 use crate::graph::{EdgeId, Graph, SharedStore, VertexId};
 use crate::partition::atoms::AtomPlacement;
 use crate::partition::{Coloring, Partition};
@@ -57,6 +59,15 @@ pub(crate) struct ChromaticOpts {
     /// When set, each machine replays its own on-disk atom journals
     /// instead of slicing the in-memory graph (the paper's load path).
     pub atoms: Option<AtomPlacement>,
+    /// When set, the leader cuts Chandy–Lamport snapshots at sweep
+    /// boundaries (paper Sec. 4.3).
+    pub snapshot: Option<SnapshotCfg>,
+    /// Overlay the newest complete snapshot under this directory onto
+    /// the freshly-loaded local graphs before running (recovery path).
+    pub restore: Option<PathBuf>,
+    /// Deterministic fault injection: wrap every transport in a
+    /// [`crate::distributed::Faulty`] decorator.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ChromaticOpts {
@@ -70,6 +81,9 @@ impl Default for ChromaticOpts {
             cluster: None,
             on_sweep: None,
             atoms: None,
+            snapshot: None,
+            restore: None,
+            fault: None,
         }
     }
 }
@@ -111,6 +125,9 @@ enum Msg<V, E> {
         cont: bool,
         values: Vec<(String, Vec<f64>)>,
     },
+    /// Chandy–Lamport snapshot token (paper Sec. 4.3): everything this
+    /// channel carried before it belongs to cut `epoch`.
+    Snap { epoch: u64 },
 }
 
 /// The chromatic protocol's frame grammar: one discriminant byte, then
@@ -149,6 +166,10 @@ impl<V: Wire, E: Wire> Wire for Msg<V, E> {
                 cont.encode(out);
                 values.encode(out);
             }
+            Msg::Snap { epoch } => {
+                out.push(4);
+                epoch.encode(out);
+            }
         }
     }
 
@@ -172,6 +193,9 @@ impl<V: Wire, E: Wire> Wire for Msg<V, E> {
                 cont: bool::decode(input)?,
                 values: Vec::<(String, Vec<f64>)>::decode(input)?,
             },
+            4 => Msg::Snap {
+                epoch: u64::decode(input)?,
+            },
             tag => {
                 return Err(wire::WireError::BadTag {
                     what: "chromatic::Msg",
@@ -179,6 +203,32 @@ impl<V: Wire, E: Wire> Wire for Msg<V, E> {
                 })
             }
         })
+    }
+}
+
+/// Append this machine's full local state (owned + ghost copies) out of
+/// the chromatic engine's split stores — the "own half" of a snapshot
+/// cut. The caller must be between colors (barrier waits, sweep
+/// boundaries), where no update threads are running.
+fn record_stores<V: DataValue, E: DataValue>(
+    lg: &LocalGraph<V, E>,
+    vstore: &SharedStore<V>,
+    estore: &SharedStore<E>,
+    vversion: &[u64],
+    eversion: &[u64],
+    verts: &mut Vec<(VertexId, u64, V)>,
+    edges: &mut Vec<(EdgeId, u64, E)>,
+) {
+    verts.reserve(lg.l2g.len());
+    for (i, &gv) in lg.l2g.iter().enumerate() {
+        // SAFETY: between colors — the pool's workers are parked and
+        // ghost applies happen on this thread, so no writers exist.
+        verts.push((gv, vversion[i], unsafe { vstore.get(i) }.clone()));
+    }
+    edges.reserve(lg.le2g.len());
+    for (i, &ge) in lg.le2g.iter().enumerate() {
+        // SAFETY: as above.
+        edges.push((ge, eversion[i], unsafe { estore.get(i) }.clone()));
     }
 }
 
@@ -247,11 +297,18 @@ where
         opts.network,
         opts.transport,
         opts.cluster.as_ref(),
+        opts.fault.as_ref(),
+        opts.restore.as_deref(),
     )?;
     let endpoints_ref = &topo.endpoints;
+    let snap_cfg = &opts.snapshot;
 
     let syncs = &syncs;
     let on_sweep = &opts.on_sweep;
+    // In a multi-process cluster each follower process must drive its own
+    // progress callback off the leader's Decision broadcasts (there is no
+    // leader thread in this process to do it).
+    let cluster_mode = opts.cluster.is_some();
     let threads_per_machine = opts.threads_per_machine;
     let max_sweeps = opts.max_sweeps;
     // Per-machine update counts (each machine writes its own slot at
@@ -265,7 +322,12 @@ where
     let outputs: Mutex<Vec<Option<MachineOut<V, E>>>> =
         Mutex::new((0..machines).map(|_| None).collect());
 
-    std::thread::scope(|s| {
+    // Machine loops return typed errors (barrier timeouts naming the
+    // peer failures that stranded them, snapshot I/O); the first one
+    // surfaces through `Engine::run`. Genuine bugs still panic and are
+    // re-raised on the caller thread.
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let mut handles = Vec::new();
         for (lg, mut ep) in locals.into_iter().zip(endpoints) {
             let coloring = &coloring;
             let partition = &partition;
@@ -273,9 +335,13 @@ where
             let outputs = &outputs;
             let updates_by_machine = &updates_by_machine;
             let sweeps_done = &sweeps_done;
-            s.spawn(move || {
+            handles.push(s.spawn(move || -> anyhow::Result<()> {
                 let mut lg = lg;
                 let me = ep.me();
+                let grace = peer_grace(Duration::from_secs(30));
+                let mut snap: Option<SnapshotSession<V, E>> = snap_cfg
+                    .as_ref()
+                    .map(|cfg| SnapshotSession::new(cfg, me, machines));
                 let owned = lg.owned;
                 let vstore = SharedStore::new(std::mem::take(&mut lg.vdata));
                 let estore = SharedStore::new(std::mem::take(&mut lg.edata));
@@ -441,18 +507,26 @@ where
                         // --- barrier: apply peers' data until all done ---
                         let target = (machines as u64 - 1) * (sweep + 1);
                         while color_done[color as usize] < target {
-                            let Some(rcv) = ep.recv_timeout(Duration::from_secs(30)) else {
+                            let Some(rcv) = ep.recv_timeout(grace) else {
                                 // Name the transport failure (decode error,
                                 // dead stream) that actually stranded the
                                 // barrier, not just the timeout.
-                                panic!(
+                                bail!(
                                     "chromatic: color barrier timeout (machine {me}, sweep {sweep}, color {color}, have {} want {target}, dist {:?}, peer errors: {:?})",
                                     color_done[color as usize], color_done, ep.peer_errors()
                                 );
                             };
                             match rcv.msg {
                                 Msg::Ghost { sweep: msg_sweep, verts, edges, tasks } => {
+                                    // Writes racing `src`'s snapshot token
+                                    // are channel state of the cut.
+                                    let cut = snap
+                                        .as_ref()
+                                        .is_some_and(|sx| sx.recording_from(rcv.src));
                                     for (gv, ver, val) in verts {
+                                        if cut {
+                                            snap.as_mut().unwrap().record_vertex(gv, ver, &val);
+                                        }
                                         let lv = lg.g2l[&gv] as usize;
                                         debug_assert!(ver > vversion[lv]);
                                         vversion[lv] = ver;
@@ -462,6 +536,9 @@ where
                                         unsafe { *vstore.get_mut(lv) = val };
                                     }
                                     for (ge, ver, val) in edges {
+                                        if cut {
+                                            snap.as_mut().unwrap().record_edge(ge, ver, &val);
+                                        }
                                         let le = lg.ge2l[&ge] as usize;
                                         debug_assert!(ver > eversion[le]);
                                         eversion[le] = ver;
@@ -479,6 +556,20 @@ where
                                 }
                                 Msg::ColorDone { color: c } => {
                                     color_done[c as usize] += 1;
+                                }
+                                Msg::Snap { epoch } => {
+                                    if let Some(sess) = snap.as_mut() {
+                                        if sess.on_token(rcv.src, epoch, |vs, es| {
+                                            record_stores(
+                                                &lg, &vstore, &estore, &vversion, &eversion,
+                                                vs, es,
+                                            )
+                                        })? {
+                                            for peer in (0..machines).filter(|&p| p != me) {
+                                                ep.send(peer, Msg::Snap { epoch });
+                                            }
+                                        }
+                                    }
                                 }
                                 _ => panic!("unexpected message in color barrier"),
                             }
@@ -515,8 +606,8 @@ where
                         let mut updates_sum = 0u64;
                         let mut got = 0;
                         while got < machines {
-                            let Some(rcv) = ep.recv_timeout(Duration::from_secs(30)) else {
-                                panic!(
+                            let Some(rcv) = ep.recv_timeout(grace) else {
+                                bail!(
                                     "chromatic: sweep barrier timeout (machine {me}, sweep {sweep}, peer errors: {:?})",
                                     ep.peer_errors()
                                 );
@@ -533,6 +624,21 @@ where
                                         syncs[op_i].merge(&mut merged[op_i], &a);
                                     }
                                     got += 1;
+                                }
+                                // Peers echo the leader's own token back.
+                                Msg::Snap { epoch } => {
+                                    if let Some(sess) = snap.as_mut() {
+                                        if sess.on_token(rcv.src, epoch, |vs, es| {
+                                            record_stores(
+                                                &lg, &vstore, &estore, &vversion, &eversion,
+                                                vs, es,
+                                            )
+                                        })? {
+                                            for peer in (0..machines).filter(|&p| p != me) {
+                                                ep.send(peer, Msg::Snap { epoch });
+                                            }
+                                        }
+                                    }
                                 }
                                 _ => panic!("unexpected message at sweep barrier"),
                             }
@@ -560,12 +666,32 @@ where
                                 },
                             );
                         }
+                        // Cut a snapshot at the sweep boundary when due:
+                        // record local state first, then a token on every
+                        // channel (the Chandy–Lamport marker order — FIFO
+                        // channels put everything sent before the token
+                        // inside the cut). The leader counts the *global*
+                        // update total reported this sweep.
+                        if cont {
+                            if let Some(sess) = snap.as_mut() {
+                                if sess.due(updates_sum) {
+                                    let epoch = sess.begin(updates_sum, |vs, es| {
+                                        record_stores(
+                                            &lg, &vstore, &estore, &vversion, &eversion, vs, es,
+                                        )
+                                    })?;
+                                    for peer in 1..machines {
+                                        ep.send(peer, Msg::Snap { epoch });
+                                    }
+                                }
+                            }
+                        }
                         cont
                     } else {
                         // Follower: wait for the decision.
                         loop {
-                            let Some(rcv) = ep.recv_timeout(Duration::from_secs(30)) else {
-                                panic!(
+                            let Some(rcv) = ep.recv_timeout(grace) else {
+                                bail!(
                                     "chromatic: decision timeout (machine {me}, sweep {sweep}, dist {color_done:?}, peer errors: {:?})",
                                     ep.peer_errors()
                                 );
@@ -576,12 +702,27 @@ where
                                         globals.set(&k, v);
                                     }
                                     sweep += 1;
+                                    // In cluster mode this follower is the
+                                    // only machine in its process, so it
+                                    // owns the progress callback (updates
+                                    // count is local, like its stats).
+                                    if cluster_mode {
+                                        if let Some(cb) = on_sweep {
+                                            cb(sweep, my_updates, &globals);
+                                        }
+                                    }
                                     break cont;
                                 }
                                 // Fast peers may already be into the next
                                 // sweep: absorb their traffic here.
                                 Msg::Ghost { sweep: msg_sweep, verts, edges, tasks } => {
+                                    let cut = snap
+                                        .as_ref()
+                                        .is_some_and(|sx| sx.recording_from(rcv.src));
                                     for (gv, ver, val) in verts {
+                                        if cut {
+                                            snap.as_mut().unwrap().record_vertex(gv, ver, &val);
+                                        }
                                         let lv = lg.g2l[&gv] as usize;
                                         vversion[lv] = ver;
                                         // SAFETY: no updates execute while
@@ -589,6 +730,9 @@ where
                                         unsafe { *vstore.get_mut(lv) = val };
                                     }
                                     for (ge, ver, val) in edges {
+                                        if cut {
+                                            snap.as_mut().unwrap().record_edge(ge, ver, &val);
+                                        }
                                         let le = lg.ge2l[&ge] as usize;
                                         eversion[le] = ver;
                                         unsafe { *estore.get_mut(le) = val };
@@ -605,6 +749,20 @@ where
                                 }
                                 Msg::ColorDone { color: c } => {
                                     color_done[c as usize] += 1;
+                                }
+                                Msg::Snap { epoch } => {
+                                    if let Some(sess) = snap.as_mut() {
+                                        if sess.on_token(rcv.src, epoch, |vs, es| {
+                                            record_stores(
+                                                &lg, &vstore, &estore, &vversion, &eversion,
+                                                vs, es,
+                                            )
+                                        })? {
+                                            for peer in (0..machines).filter(|&p| p != me) {
+                                                ep.send(peer, Msg::Snap { epoch });
+                                            }
+                                        }
+                                    }
                                 }
                                 _ => panic!("unexpected message awaiting decision"),
                             }
@@ -648,9 +806,24 @@ where
                     .collect();
                 updates_by_machine.lock().unwrap()[me] = my_updates;
                 outputs.lock().unwrap()[me] = Some((verts, edges));
-            });
+                Ok(())
+            }));
         }
-    });
+        let mut first_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    })?;
 
     // Reassemble the global graph from machine outputs. In-process runs
     // must cover every slot (an uncovered one is a partition/ownership
@@ -722,6 +895,7 @@ mod tests {
             cont: true,
             values: vec![("total_rank".to_string(), vec![1.0])],
         });
+        round_trip(Msg::Snap { epoch: 3 });
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! "inconsistent asynchronous iterations".
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use anyhow::bail;
@@ -35,8 +36,9 @@ use anyhow::bail;
 use super::{Consistency, Ctx, ExecStats, GlobalValues, Scope, SyncOp, VertexProgram};
 use crate::distributed::locks::{LockReq, LockTable, TxnId};
 use crate::distributed::network::NetworkModel;
+use crate::distributed::snapshot::{record_from_graph, SnapshotCfg, SnapshotSession};
 use crate::distributed::termination::{Termination, Token, TokenAction};
-use crate::distributed::transport::{ClusterConfig, TransportKind};
+use crate::distributed::transport::{peer_grace, ClusterConfig, FaultPlan, TransportKind};
 use crate::distributed::{cluster_setup, ClusterSetup, DataValue, LocalGraph};
 use crate::graph::{EdgeId, Graph, VertexId};
 use crate::partition::atoms::AtomPlacement;
@@ -78,6 +80,19 @@ pub(crate) struct LockingOpts {
     /// When set, each machine replays its own on-disk atom journals
     /// instead of slicing the in-memory graph (the paper's load path).
     pub atoms: Option<AtomPlacement>,
+    /// When set, the leader cuts Chandy–Lamport snapshots (paper Sec.
+    /// 4.3). An update-count trigger fires on the *leader's* local
+    /// counter — the engine is asynchronous, so the global total is only
+    /// known at sync barriers; the period is approximate (about
+    /// `machines ×` the configured count cluster-wide on a balanced
+    /// partition).
+    pub snapshot: Option<SnapshotCfg>,
+    /// Overlay the newest complete snapshot under this directory onto
+    /// the freshly-loaded local graphs before running (recovery path).
+    pub restore: Option<PathBuf>,
+    /// Deterministic fault injection: wrap every transport in a
+    /// [`crate::distributed::Faulty`] decorator.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for LockingOpts {
@@ -94,6 +109,9 @@ impl Default for LockingOpts {
             on_sync: None,
             seed: 0,
             atoms: None,
+            snapshot: None,
+            restore: None,
+            fault: None,
         }
     }
 }
@@ -145,6 +163,11 @@ enum Msg<V, E> {
     FinalReport {
         accs: Vec<Vec<f64>>,
         updates: u64,
+    },
+    /// Chandy–Lamport snapshot token (paper Sec. 4.3): everything this
+    /// channel carried before it belongs to cut `epoch`.
+    Snap {
+        epoch: u64,
     },
 }
 
@@ -229,6 +252,10 @@ impl<V: Wire, E: Wire> Wire for Msg<V, E> {
                 accs.encode(out);
                 updates.encode(out);
             }
+            Msg::Snap { epoch } => {
+                out.push(10);
+                epoch.encode(out);
+            }
         }
     }
 
@@ -276,6 +303,9 @@ impl<V: Wire, E: Wire> Wire for Msg<V, E> {
             9 => Msg::FinalReport {
                 accs: Vec::<Vec<f64>>::decode(input)?,
                 updates: u64::decode(input)?,
+            },
+            10 => Msg::Snap {
+                epoch: u64::decode(input)?,
             },
             tag => {
                 return Err(wire::WireError::BadTag {
@@ -356,11 +386,18 @@ where
         opts.network,
         opts.transport,
         opts.cluster.as_ref(),
+        opts.fault.as_ref(),
+        opts.restore.as_deref(),
     )?;
     let endpoints_ref = &topo.endpoints;
+    let snap_cfg = &opts.snapshot;
 
     let syncs = &syncs;
     let on_sync = &opts.on_sync;
+    // In a multi-process cluster each non-leader process must drive its
+    // own progress callback off machine 0's SyncEnd broadcasts (there is
+    // no leader thread in this process to do it).
+    let cluster_mode = opts.cluster.is_some();
     let maxpending = opts.maxpending.max(1);
     let sched_policy = opts.scheduler;
     let sync_period = opts.sync_period;
@@ -376,16 +413,24 @@ where
     let outputs: std::sync::Mutex<Vec<Option<MachineOut<V, E>>>> =
         std::sync::Mutex::new((0..machines).map(|_| None).collect());
 
-    std::thread::scope(|s| {
+    // Machine loops return typed errors (peer-failure grace aborts,
+    // snapshot I/O); the first one surfaces through `Engine::run`.
+    // Genuine bugs still panic and are re-raised on the caller thread.
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let mut handles = Vec::new();
         for (mut lg, mut ep) in locals.into_iter().zip(endpoints) {
             let partition = &partition;
             let initial = &initial;
             let outputs = &outputs;
             let updates_by_machine = &updates_by_machine;
             let epochs = &epochs;
-            s.spawn(move || {
+            handles.push(s.spawn(move || -> anyhow::Result<()> {
                 let me = ep.me();
                 let owned = lg.owned;
+                let grace = peer_grace(Duration::from_secs(5));
+                let mut snap: Option<SnapshotSession<V, E>> = snap_cfg
+                    .as_ref()
+                    .map(|cfg| SnapshotSession::new(cfg, me, machines));
                 let globals = GlobalValues::new();
                 let mut sched = sched_policy.build(n_global, seed ^ me as u64);
                 for t in initial.iter() {
@@ -463,6 +508,11 @@ where
                                 vdata,
                                 edata,
                             } => {
+                                // Writes racing `src`'s snapshot token are
+                                // channel state of the active cut.
+                                let cut = snap
+                                    .as_ref()
+                                    .is_some_and(|sx| sx.recording_from(rcv.src));
                                 // Apply piggybacked data only if strictly
                                 // newer: with pipelined requests the owner
                                 // may grant from a snapshot that predates a
@@ -471,6 +521,9 @@ where
                                 // (written under the write lock) is the
                                 // fresher one.
                                 if let Some((ver, val)) = vdata {
+                                    if cut {
+                                        snap.as_mut().unwrap().record_vertex(vertex, ver, &val);
+                                    }
                                     let lv = lg.g2l[&vertex] as usize;
                                     if ver > lg.vversion[lv] {
                                         lg.vdata[lv] = val;
@@ -478,6 +531,9 @@ where
                                     }
                                 }
                                 if let Some((ge, ver, val)) = edata {
+                                    if cut {
+                                        snap.as_mut().unwrap().record_edge(ge, ver, &val);
+                                    }
                                     let le = lg.ge2l[&ge] as usize;
                                     if ver > lg.eversion[le] {
                                         lg.edata[le] = val;
@@ -509,13 +565,26 @@ where
                                 tasks,
                             } => {
                                 term.on_recv();
+                                // A Release in flight at the cut carries
+                                // writes the sender's recorded state already
+                                // reflects — they are channel state and must
+                                // land in the snapshot too.
+                                let cut = snap
+                                    .as_ref()
+                                    .is_some_and(|sx| sx.recording_from(rcv.src));
                                 for (v, ver, val) in vwrites {
+                                    if cut {
+                                        snap.as_mut().unwrap().record_vertex(v, ver, &val);
+                                    }
                                     let lv = lg.g2l[&v] as usize;
                                     debug_assert!(ver > lg.vversion[lv]);
                                     lg.vdata[lv] = val;
                                     lg.vversion[lv] = ver;
                                 }
                                 for (ge, ver, val) in ewrites {
+                                    if cut {
+                                        snap.as_mut().unwrap().record_edge(ge, ver, &val);
+                                    }
                                     let le = lg.ge2l[&ge] as usize;
                                     debug_assert!(ver > lg.eversion[le]);
                                     lg.edata[le] = val;
@@ -544,7 +613,13 @@ where
                                 }
                             }
                             Msg::GhostPush { verts, edges } => {
+                                let cut = snap
+                                    .as_ref()
+                                    .is_some_and(|sx| sx.recording_from(rcv.src));
                                 for (v, ver, val) in verts {
+                                    if cut {
+                                        snap.as_mut().unwrap().record_vertex(v, ver, &val);
+                                    }
                                     if let Some(&lv) = lg.g2l.get(&v) {
                                         lg.vdata[lv as usize] = val;
                                         lg.vversion[lv as usize] =
@@ -552,6 +627,9 @@ where
                                     }
                                 }
                                 for (ge, ver, val) in edges {
+                                    if cut {
+                                        snap.as_mut().unwrap().record_edge(ge, ver, &val);
+                                    }
                                     if let Some(&le) = lg.ge2l.get(&ge) {
                                         lg.edata[le as usize] = val;
                                         lg.eversion[le as usize] =
@@ -630,6 +708,15 @@ where
                                     globals.set(&k, v);
                                 }
                                 syncing = false;
+                                // In cluster mode this process has no
+                                // leader thread: drive the progress
+                                // callback off the leader's broadcast
+                                // (updates count is local, like stats).
+                                if cluster_mode {
+                                    if let Some(cb) = on_sync {
+                                        cb(epoch, my_updates, &globals);
+                                    }
+                                }
                             }
                             Msg::Token(tok) => {
                                 let idle = is_idle(
@@ -672,6 +759,21 @@ where
                                 }
                                 final_updates_in += updates;
                                 final_got += 1;
+                            }
+                            Msg::Snap { epoch } => {
+                                // Chandy–Lamport marker rule: on the first
+                                // token of an epoch, record local state and
+                                // broadcast the token on every channel;
+                                // commit once all peers' tokens are in.
+                                if let Some(sess) = snap.as_mut() {
+                                    if sess.on_token(rcv.src, epoch, |vs, es| {
+                                        record_from_graph(&lg, vs, es)
+                                    })? {
+                                        for peer in (0..machines).filter(|&p| p != me) {
+                                            ep.send(peer, Msg::Snap { epoch });
+                                        }
+                                    }
+                                }
                             }
                         }
                     }
@@ -800,6 +902,19 @@ where
                                 progressed = true;
                             }
                         }
+                        // Cut a snapshot when due: record local state
+                        // first, then a token on every channel (the
+                        // Chandy–Lamport marker order).
+                        if let Some(sess) = snap.as_mut() {
+                            if sess.due(my_updates) {
+                                let epoch = sess
+                                    .begin(my_updates, |vs, es| record_from_graph(&lg, vs, es))?;
+                                for peer in 1..machines {
+                                    ep.send(peer, Msg::Snap { epoch });
+                                }
+                                progressed = true;
+                            }
+                        }
                         let idle = is_idle(&pipeline, &ready, &*sched, syncing, my_updates, cap)
                             && last_token.elapsed() > Duration::from_micros(500);
                         if idle {
@@ -859,8 +974,8 @@ where
                         if !pending_peer_failure.is_empty() {
                             let since =
                                 *peer_failure_since.get_or_insert_with(Instant::now);
-                            if since.elapsed() > Duration::from_secs(5) {
-                                panic!(
+                            if since.elapsed() > grace {
+                                bail!(
                                     "locking engine machine {me}: peer failure, cannot make progress: {pending_peer_failure:?}"
                                 );
                             }
@@ -977,9 +1092,24 @@ where
                     .collect();
                 updates_by_machine.lock().unwrap()[me] = my_updates;
                 outputs.lock().unwrap()[me] = Some((verts, edges));
-            });
+                Ok(())
+            }));
         }
-    });
+        let mut first_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    })?;
 
     // Reassemble from machine outputs. In-process runs must cover every
     // slot (an uncovered one is a partition/ownership bug, kept as a loud
@@ -1407,6 +1537,7 @@ mod tests {
             accs: vec![vec![0.0; 3]],
             updates: 11,
         });
+        round_trip(Msg::Snap { epoch: 12 });
     }
 
     #[test]

@@ -15,7 +15,10 @@
 //!   shared engine only). With `--cluster HOSTS` the run becomes machine
 //!   0 of a real multi-process cluster (one `host:port` line per machine
 //!   in HOSTS); requires `--atoms-dir` so every process derives the same
-//!   placement from the stored meta-graph.
+//!   placement from the stored meta-graph. `--snapshot-every K|Ns` cuts a
+//!   Chandy–Lamport snapshot every K updates (or every N seconds) into
+//!   `--snapshot-dir` (default: the atom-store dir); `--restore DIR`
+//!   resumes from the newest complete snapshot under DIR (paper Sec. 4.3).
 //! * `worker [<app>] --me N --hosts HOSTS --atoms-dir DIR` — join a
 //!   multi-process cluster as machine N: build machine N's engine state
 //!   by replaying its own atom journals and speak the engine protocol
@@ -68,7 +71,7 @@ use std::time::Duration;
 use anyhow::{bail, Context as _, Result};
 
 use graphlab::apps::{self, als, coseg, gibbs, ner, pagerank};
-use graphlab::distributed::{ClusterConfig, TransportKind};
+use graphlab::distributed::{ClusterConfig, SnapshotTrigger, TransportKind};
 use graphlab::engine::{Engine, EngineKind, ENGINE_KINDS};
 use graphlab::partition::atoms::{self, AtomSet};
 use graphlab::partition::Partition;
@@ -120,8 +123,10 @@ fn main() -> Result<()> {
             eprintln!("  graphlab run <pagerank|als|ner|coseg|gibbs> [--engine shared|chromatic|locking]");
             eprintln!("      [--machines N] [--threads N] [--scheduler fifo|priority|multiqueue|sweep|global-*]");
             eprintln!("      [--transport inproc|tcp] [--cluster HOSTS] [--pjrt] [--sweeps N] [--d N]");
-            eprintln!("      [--atoms-dir DIR] [--config FILE]");
+            eprintln!("      [--atoms-dir DIR] [--snapshot-every K|Ns] [--snapshot-dir DIR] [--restore DIR]");
+            eprintln!("      [--config FILE]");
             eprintln!("  graphlab worker [<app>] --me N --hosts HOSTS --atoms-dir DIR [--engine E]");
+            eprintln!("      [--snapshot-every K|Ns] [--snapshot-dir DIR] [--restore DIR]");
             eprintln!("      (join a multi-process cluster as machine N; app inferred from the store)");
             eprintln!("  graphlab partition <pagerank|als|ner|coseg|gibbs> [--atoms-dir DIR] [--atoms K]");
             eprintln!("      (writes the app's data graph as an on-disk atom store; omit the app for the demo)");
@@ -373,6 +378,11 @@ where
     // engine is capped in whole sweeps via max_sweeps instead).
     let max_updates = cfg.num_or("max-updates", n as u64 * sweeps.min(10_000))?;
     let me = cluster.as_ref().map(|c| c.me);
+    // The final value of the probe sync (e.g. PageRank's total_rank) —
+    // printed after the run so cluster smoke tests can compare the
+    // cluster result against an in-process oracle.
+    let last_probe = std::sync::Arc::new(std::sync::Mutex::new(None::<f64>));
+    let probe_out = last_probe.clone();
     let mut builder = Engine::new(engine)
         .workers(threads)
         .machines(machines)
@@ -386,6 +396,7 @@ where
         .syncs(syncs)
         .on_progress(move |epoch, updates, gv| {
             if let Some(v) = gv.get(probe_key) {
+                *probe_out.lock().unwrap() = Some(v[0]);
                 println!("epoch {epoch:>3}: updates={updates:>9} {probe_key}={:.5}", v[0]);
             }
         });
@@ -395,6 +406,21 @@ where
     if let Some(dir) = atoms_dir {
         // Distributed machines replay their own on-disk atom journals.
         builder = builder.atoms_dir(dir);
+    }
+    // --snapshot-every K|Ns: periodic Chandy–Lamport snapshots to
+    // --snapshot-dir (default: the atom-store dir). --restore DIR resumes
+    // from the newest complete snapshot under DIR after journal replay.
+    if let Some(spec) = cfg.get("snapshot-every") {
+        builder = builder.snapshot_every(SnapshotTrigger::parse(spec).context("--snapshot-every")?);
+    }
+    if let Some(dir) = cfg.get("snapshot-dir") {
+        builder = builder.snapshot_to(dir);
+    }
+    if let Some(dir) = cfg.get("restore") {
+        if dir == "true" {
+            bail!("--restore needs a directory (the snapshot root)");
+        }
+        builder = builder.restore_from(dir);
     }
     let exec = builder.run(g, &prog, initial)?;
     let stats = &exec.stats;
@@ -424,6 +450,13 @@ where
                 println!("bytes sent per machine: {:?}", stats.bytes_sent);
             }
         }
+    }
+    // Machine-parseable result line: the final cluster-wide sync value.
+    // Every process of a cluster prints the same number (global syncs are
+    // true cluster-wide reductions), so smoke tests can diff any worker's
+    // line against an in-process oracle run.
+    if let Some(v) = *last_probe.lock().unwrap() {
+        println!("probe {probe_key}={v:.9}");
     }
     Ok(())
 }

@@ -235,7 +235,10 @@ fn atom_file_name(atom: AtomId) -> String {
     format!("atom_{atom}.bin")
 }
 
-fn check_header(input: &mut &[u8], magic: u32, path: &Path) -> anyhow::Result<()> {
+/// Validate a `magic + WIRE_VERSION` file header (shared by the atom
+/// store and the snapshot files in [`crate::distributed::snapshot`],
+/// which reuse the journal conventions).
+pub(crate) fn check_header(input: &mut &[u8], magic: u32, path: &Path) -> anyhow::Result<()> {
     let got_magic = u32::decode(input).with_context(|| format!("{}", path.display()))?;
     if got_magic != magic {
         bail!(

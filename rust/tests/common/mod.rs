@@ -1,0 +1,66 @@
+//! Helpers shared by the integration-test binaries (`mod common;`).
+//!
+//! Each test binary compiles this module independently, so a helper used
+//! by one binary is dead code in another — hence the file-level allow.
+#![allow(dead_code)]
+
+use graphlab::apps::{self, pagerank};
+use graphlab::distributed::TransportKind;
+use graphlab::engine::{Engine, EngineKind, ExecStats};
+use graphlab::graph::{Graph, GraphBuilder, VertexId};
+use graphlab::util::Rng;
+
+/// Seeded random simple graph: `n` vertices, `m` distinct undirected
+/// edges, no self-loops. Vertex data is the vertex id, edge data the
+/// insertion index — enough structure to catch mixed-up indices.
+pub fn random_graph(n: usize, m: usize, seed: u64) -> Graph<u32, u32> {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new();
+    b.add_vertices(n, |i| i as u32);
+    let mut seen = std::collections::HashSet::new();
+    let mut added = 0;
+    while added < m {
+        let u = rng.gen_range(n) as VertexId;
+        let v = rng.gen_range(n) as VertexId;
+        if u != v && seen.insert((u.min(v), u.max(v))) {
+            b.add_edge(u, v, added as u32);
+            added += 1;
+        }
+    }
+    b.build()
+}
+
+/// Run PageRank to its fixed point on `kind` over `transport`, returning
+/// the final ranks plus the run's stats (for bytes/balance assertions).
+pub fn pagerank_fixed_point(
+    kind: EngineKind,
+    transport: TransportKind,
+    machines: usize,
+    n: usize,
+    edges: &[(u32, u32)],
+    eps: f32,
+) -> (Vec<f32>, ExecStats) {
+    let prog = pagerank::PageRank { alpha: 0.15, eps, n, use_pjrt: false };
+    let g = pagerank::build(n, edges, 0.15);
+    let exec = Engine::new(kind)
+        .workers(4)
+        .machines(machines)
+        .transport(transport)
+        .maxpending(128)
+        .max_updates(3_000_000)
+        .max_sweeps(500)
+        .run(g, &prog, apps::all_vertices(n))
+        .unwrap_or_else(|e| panic!("{kind} over {} failed: {e}", transport.name()));
+    let stats = exec.stats;
+    let g = exec.graph;
+    (g.vertex_ids().map(|v| g.vertex_data(v).rank).collect(), stats)
+}
+
+/// Assert two per-vertex value vectors agree within `tol` everywhere —
+/// the fixed-point-comparison idiom every equivalence test shares.
+pub fn assert_ranks_close(label: &str, oracle: &[f32], got: &[f32], tol: f32) {
+    assert_eq!(oracle.len(), got.len(), "{label}: length mismatch");
+    for (v, (a, b)) in oracle.iter().zip(got).enumerate() {
+        assert!((a - b).abs() < tol, "{label} v{v}: oracle={a} got={b}");
+    }
+}

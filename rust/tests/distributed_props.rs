@@ -1,26 +1,12 @@
 //! Property tests over the distributed substrate (seed-swept, in-repo
 //! generators — no proptest crate offline).
 
-use graphlab::graph::{Graph, GraphBuilder, VertexId};
+use graphlab::graph::VertexId;
 use graphlab::partition::{atoms, Coloring, Partition};
 use graphlab::util::Rng;
 
-fn random_graph(n: usize, m: usize, seed: u64) -> Graph<u32, u32> {
-    let mut rng = Rng::new(seed);
-    let mut b = GraphBuilder::new();
-    b.add_vertices(n, |i| i as u32);
-    let mut seen = std::collections::HashSet::new();
-    let mut added = 0;
-    while added < m {
-        let u = rng.gen_range(n) as VertexId;
-        let v = rng.gen_range(n) as VertexId;
-        if u != v && seen.insert((u.min(v), u.max(v))) {
-            b.add_edge(u, v, added as u32);
-            added += 1;
-        }
-    }
-    b.build()
-}
+mod common;
+use common::random_graph;
 
 #[test]
 fn prop_greedy_coloring_always_valid() {

@@ -9,52 +9,43 @@
 //! function, every `EngineKind`.
 
 use graphlab::apps::{self, als, pagerank};
+use graphlab::distributed::TransportKind;
 use graphlab::engine::{Engine, EngineKind, ENGINE_KINDS};
 use graphlab::partition::{Coloring, Partition};
 use graphlab::scheduler::{Policy, SchedSpec};
 
+mod common;
+use common::assert_ranks_close;
+
 /// The parameterized cross-engine harness: run PageRank to its fixed
-/// point on `kind` and return the final ranks. Engine-specific needs
-/// (coloring, partition) are computed by the builder.
+/// point on `kind` (via the shared `common::pagerank_fixed_point`
+/// helper) and return the final ranks after validating the stats.
 fn pagerank_ranks(kind: EngineKind, n: usize, edges: &[(u32, u32)], eps: f32) -> Vec<f32> {
-    let prog = pagerank::PageRank { alpha: 0.15, eps, n, use_pjrt: false };
-    let g = pagerank::build(n, edges, 0.15);
-    let exec = Engine::new(kind)
-        .workers(4)
-        .machines(3)
-        .maxpending(128)
-        .max_updates(3_000_000)
-        .max_sweeps(500)
-        .run(g, &prog, apps::all_vertices(n))
-        .unwrap_or_else(|e| panic!("{kind} engine failed: {e}"));
-    assert!(
-        exec.stats.updates >= n as u64,
-        "{kind}: only {} updates",
-        exec.stats.updates
-    );
+    let (ranks, stats) =
+        common::pagerank_fixed_point(kind, TransportKind::InProc, 3, n, edges, eps);
+    assert!(stats.updates >= n as u64, "{kind}: only {} updates", stats.updates);
     // The balance vector must be real per-machine accounting: one slot
     // per machine, and every machine did work (the initial task set
     // touches every vertex, and every machine owns some).
     let expected_machines = if kind.is_distributed() { 3 } else { 1 };
     assert_eq!(
-        exec.stats.updates_per_machine.len(),
+        stats.updates_per_machine.len(),
         expected_machines,
         "{kind}: wrong balance-vector length"
     );
     assert!(
-        exec.stats.updates_per_machine.iter().all(|&u| u > 0),
+        stats.updates_per_machine.iter().all(|&u| u > 0),
         "{kind}: a machine reported zero updates: {:?}",
-        exec.stats.updates_per_machine
+        stats.updates_per_machine
     );
     // Guards future drift: the total must stay derived from (or at least
     // consistent with) the per-machine accounting.
     assert_eq!(
-        exec.stats.updates_per_machine.iter().sum::<u64>(),
-        exec.stats.updates,
+        stats.updates_per_machine.iter().sum::<u64>(),
+        stats.updates,
         "{kind}: per-machine counts must sum to the total"
     );
-    let g = exec.graph;
-    g.vertex_ids().map(|v| g.vertex_data(v).rank).collect()
+    ranks
 }
 
 #[test]
@@ -85,9 +76,7 @@ fn all_engines_reach_same_pagerank_fixed_point() {
             continue;
         }
         let got = pagerank_ranks(kind, n, &edges, 1e-7);
-        for (v, (a, b)) in oracle.iter().zip(&got).enumerate() {
-            assert!((a - b).abs() < 1e-5, "{kind} v{v}: oracle={a} got={b}");
-        }
+        assert_ranks_close(kind.name(), &oracle, &got, 1e-5);
     }
 }
 
@@ -153,13 +142,7 @@ fn shared_engine_scheduler_variants_agree_on_pagerank_fixed_point() {
     for policy in graphlab::scheduler::POLICIES {
         for spec in [SchedSpec::ws(policy, 11), SchedSpec::global(policy, 11)] {
             let got = run(spec, 4);
-            for (v, (a, b)) in oracle.iter().zip(&got).enumerate() {
-                assert!(
-                    (a - b).abs() < 1e-5,
-                    "{} v{v}: oracle={a} got={b}",
-                    spec.name()
-                );
-            }
+            assert_ranks_close(&spec.name(), &oracle, &got, 1e-5);
         }
     }
 }

@@ -17,14 +17,16 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
 
-use graphlab::apps::{self, pagerank};
 use graphlab::distributed::network::{Endpoint, NetStats};
 use graphlab::distributed::transport::{
     read_ack, read_handshake, write_handshake, TcpBound, TcpConfig,
 };
 use graphlab::distributed::TransportKind;
-use graphlab::engine::{Engine, EngineKind};
+use graphlab::engine::EngineKind;
 use graphlab::wire::WIRE_VERSION;
+
+mod common;
+use common::assert_ranks_close;
 
 /// Run PageRank to its fixed point on `kind` over `transport`, returning
 /// the final ranks and the per-machine measured wire bytes.
@@ -35,19 +37,8 @@ fn pagerank_ranks(
     n: usize,
     edges: &[(u32, u32)],
 ) -> (Vec<f32>, Vec<u64>) {
-    let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-7, n, use_pjrt: false };
-    let g = pagerank::build(n, edges, 0.15);
-    let exec = Engine::new(kind)
-        .machines(machines)
-        .transport(transport)
-        .maxpending(128)
-        .max_updates(3_000_000)
-        .max_sweeps(500)
-        .run(g, &prog, apps::all_vertices(n))
-        .unwrap_or_else(|e| panic!("{kind} over {transport} failed: {e}"));
-    let bytes = exec.stats.bytes_sent.clone();
-    let g = exec.graph;
-    (g.vertex_ids().map(|v| g.vertex_data(v).rank).collect(), bytes)
+    let (ranks, stats) = common::pagerank_fixed_point(kind, transport, machines, n, edges, 1e-7);
+    (ranks, stats.bytes_sent)
 }
 
 #[test]
@@ -59,12 +50,7 @@ fn tcp_loopback_chromatic_matches_inproc_pagerank() {
             pagerank_ranks(EngineKind::Chromatic, TransportKind::InProc, machines, n, &edges);
         let (tcp, bytes) =
             pagerank_ranks(EngineKind::Chromatic, TransportKind::Tcp, machines, n, &edges);
-        for (v, (a, b)) in inproc.iter().zip(&tcp).enumerate() {
-            assert!(
-                (a - b).abs() < 1e-4,
-                "chromatic x{machines} v{v}: inproc={a} tcp={b}"
-            );
-        }
+        assert_ranks_close(&format!("chromatic x{machines} tcp"), &inproc, &tcp, 1e-4);
         // Real sockets, real traffic: every machine measured sent bytes.
         assert_eq!(bytes.len(), machines);
         assert!(
@@ -81,9 +67,7 @@ fn tcp_loopback_locking_matches_inproc_pagerank() {
     let (inproc, _) =
         pagerank_ranks(EngineKind::Locking, TransportKind::InProc, 3, n, &edges);
     let (tcp, bytes) = pagerank_ranks(EngineKind::Locking, TransportKind::Tcp, 3, n, &edges);
-    for (v, (a, b)) in inproc.iter().zip(&tcp).enumerate() {
-        assert!((a - b).abs() < 1e-4, "locking v{v}: inproc={a} tcp={b}");
-    }
+    assert_ranks_close("locking tcp", &inproc, &tcp, 1e-4);
     assert!(
         bytes.iter().all(|&b| b > 0),
         "locking: a machine sent zero bytes over TCP: {bytes:?}"
@@ -239,11 +223,60 @@ fn free_port() -> u16 {
         .port()
 }
 
+/// The final cluster-wide sync value every `graphlab run`/`worker`
+/// process prints as `probe <key>=<value>` — the machine-parseable
+/// result line the smoke tests diff against an in-process oracle.
+fn parse_probe(stdout: &str) -> Option<f64> {
+    stdout
+        .lines()
+        .rev()
+        .find_map(|l| l.strip_prefix("probe total_rank=")?.trim().parse().ok())
+}
+
+/// The per-machine sent-byte count from a `done (machine N): …` line:
+/// the number right before the word "bytes".
+fn parse_done_bytes(stdout: &str) -> u64 {
+    stdout
+        .lines()
+        .find(|l| l.contains("bytes sent"))
+        .map(|l| {
+            let toks: Vec<&str> = l.split_whitespace().collect();
+            toks.iter()
+                .position(|&t| t == "bytes")
+                .and_then(|i| i.checked_sub(1))
+                .and_then(|i| toks[i].parse().ok())
+                .unwrap_or(0)
+        })
+        .unwrap_or(0)
+}
+
+/// Poll a child until it exits or `secs` elapse (kill on timeout).
+fn wait_with_deadline(child: &mut std::process::Child, secs: u64, who: &str) -> std::process::ExitStatus {
+    let deadline = std::time::Instant::now() + Duration::from_secs(secs);
+    loop {
+        match child.try_wait().unwrap_or_else(|e| panic!("poll {who}: {e}")) {
+            Some(s) => break s,
+            None if std::time::Instant::now() > deadline => {
+                child.kill().ok();
+                child.wait().ok();
+                panic!("{who} did not exit within {secs}s");
+            }
+            None => std::thread::sleep(Duration::from_millis(200)),
+        }
+    }
+}
+
 /// One attempt at the two-process run: write a hosts file on fresh
 /// ports, launch the worker, drive the cluster as machine 0, and check
-/// both processes' results. Returns `Err` (instead of panicking) for
-/// failures that a port-collision retry can fix.
-fn try_cluster_run(bin: &str, dir: &std::path::Path, atoms_s: &str) -> Result<(), String> {
+/// both processes' results against the in-process `oracle` probe value.
+/// Returns `Err` (instead of panicking) for failures that a
+/// port-collision retry can fix.
+fn try_cluster_run(
+    bin: &str,
+    dir: &std::path::Path,
+    atoms_s: &str,
+    oracle: f64,
+) -> Result<(), String> {
     use std::process::{Command, Stdio};
     let hosts = dir.join("hosts.txt");
     std::fs::write(&hosts, format!("127.0.0.1:{}\n127.0.0.1:{}\n", free_port(), free_port()))
@@ -275,66 +308,87 @@ fn try_cluster_run(bin: &str, dir: &std::path::Path, atoms_s: &str) -> Result<()
         worker.wait().ok();
         return Err(format!("driver did not report per-machine completion:\n{stdout}"));
     }
-    // Measured traffic crossed a process boundary: parse the number
-    // before the word "bytes" on the completion line.
-    let bytes: u64 = stdout
-        .lines()
-        .find(|l| l.contains("bytes sent"))
-        .map(|l| {
-            let toks: Vec<&str> = l.split_whitespace().collect();
-            toks.iter()
-                .position(|&t| t == "bytes")
-                .and_then(|i| i.checked_sub(1))
-                .and_then(|i| toks[i].parse().ok())
-                .unwrap_or(0)
-        })
-        .unwrap_or(0);
-    assert!(bytes > 0, "driver reported zero wire bytes:\n{stdout}");
+    // Result equality vs the in-process oracle: the chromatic schedule is
+    // deterministic and global syncs reduce in machine order, so the
+    // cluster's final sync value matches the in-process run's.
+    let probe = parse_probe(&stdout)
+        .unwrap_or_else(|| panic!("driver printed no probe line:\n{stdout}"));
+    assert!(
+        (probe - oracle).abs() < 1e-6 * oracle.abs().max(1.0),
+        "cluster result diverged from in-process oracle: {probe} vs {oracle}"
+    );
+    // Measured traffic crossed a process boundary on the driver's side…
+    let bytes0 = parse_done_bytes(&stdout);
+    assert!(bytes0 > 0, "driver reported zero wire bytes:\n{stdout}");
 
     // The worker must terminate cleanly on its own.
-    let deadline = std::time::Instant::now() + Duration::from_secs(120);
-    let status = loop {
-        match worker.try_wait().expect("poll worker") {
-            Some(s) => break s,
-            None if std::time::Instant::now() > deadline => {
-                worker.kill().ok();
-                worker.wait().ok();
-                panic!("worker did not exit within 120s");
-            }
-            None => std::thread::sleep(Duration::from_millis(200)),
-        }
-    };
+    let status = wait_with_deadline(&mut worker, 120, "worker");
     assert!(status.success(), "worker exited with {status}");
+    // …and on the worker's side too, with the same cluster-wide result.
+    let wout = worker.wait_with_output().expect("collect worker output");
+    let wstdout = String::from_utf8_lossy(&wout.stdout).to_string();
+    let bytes1 = parse_done_bytes(&wstdout);
+    assert!(bytes1 > 0, "worker reported zero wire bytes:\n{wstdout}");
+    let wprobe = parse_probe(&wstdout)
+        .unwrap_or_else(|| panic!("worker printed no probe line:\n{wstdout}"));
+    assert!(
+        (wprobe - oracle).abs() < 1e-6 * oracle.abs().max(1.0),
+        "worker result diverged from in-process oracle: {wprobe} vs {oracle}"
+    );
     Ok(())
 }
 
-/// The paper's startup path as real processes: `partition` once, launch a
-/// `worker`, then `run --cluster` as machine 0 — both processes replay
-/// only their own atom journals and speak the chromatic protocol over
-/// loopback TCP. Ports are picked by bind-and-release, which can race
-/// with other processes on a busy host, so connection-phase failures are
-/// retried on fresh ports.
-#[test]
-#[ignore = "spawns real graphlab processes on loopback ports; run with --ignored (CI cluster-smoke)"]
-fn multi_process_worker_smoke() {
+/// Write the shared atom store once and compute the in-process oracle
+/// probe value for the given extra CLI args (e.g. `--sweeps 400`).
+fn prepare_store_and_oracle(
+    bin: &str,
+    dir: &std::path::Path,
+    extra: &[&str],
+) -> (String, f64) {
     use std::process::Command;
-    let bin = env!("CARGO_BIN_EXE_graphlab");
-    let dir = std::env::temp_dir().join(format!("graphlab-cluster-smoke-{}", std::process::id()));
-    std::fs::remove_dir_all(&dir).ok();
-    std::fs::create_dir_all(&dir).unwrap();
     let atoms = dir.join("atoms");
     let atoms_s = atoms.to_str().unwrap().to_string();
-
-    // Partition once: one atom store feeds every process and attempt.
     let st = Command::new(bin)
         .args(["partition", "pagerank", "--atoms-dir", &atoms_s, "--n", "2000", "--atoms", "32"])
         .status()
         .expect("spawn graphlab partition");
     assert!(st.success(), "graphlab partition failed");
+    // The oracle: the identical run, in one process (2 in-proc machines).
+    let out = Command::new(bin)
+        .args(["run", "pagerank", "--atoms-dir", &atoms_s, "--machines", "2"])
+        .args(extra)
+        .output()
+        .expect("spawn in-process oracle run");
+    assert!(
+        out.status.success(),
+        "oracle run failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    let oracle =
+        parse_probe(&stdout).unwrap_or_else(|| panic!("oracle printed no probe line:\n{stdout}"));
+    (atoms_s, oracle)
+}
+
+/// The paper's startup path as real processes: `partition` once, launch a
+/// `worker`, then `run --cluster` as machine 0 — both processes replay
+/// only their own atom journals and speak the chromatic protocol over
+/// loopback TCP, and both must reproduce the in-process oracle's result
+/// with nonzero measured wire traffic. Ports are picked by
+/// bind-and-release, which can race with other processes on a busy host,
+/// so connection-phase failures are retried on fresh ports.
+#[test]
+#[ignore = "spawns real graphlab processes on loopback ports; run with --ignored (CI cluster-smoke)"]
+fn multi_process_worker_smoke() {
+    let bin = env!("CARGO_BIN_EXE_graphlab");
+    let dir = std::env::temp_dir().join(format!("graphlab-cluster-smoke-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (atoms_s, oracle) = prepare_store_and_oracle(bin, &dir, &[]);
 
     let mut last_err = String::new();
     for attempt in 0..3 {
-        match try_cluster_run(bin, &dir, &atoms_s) {
+        match try_cluster_run(bin, &dir, &atoms_s, oracle) {
             Ok(()) => {
                 std::fs::remove_dir_all(&dir).ok();
                 return;
@@ -346,4 +400,173 @@ fn multi_process_worker_smoke() {
         }
     }
     panic!("cluster smoke failed on 3 port sets; last error:\n{last_err}");
+}
+
+/// True once `root` holds a snapshot directory with every machine's
+/// committed part file.
+fn has_complete_snapshot(root: &std::path::Path, machines: usize) -> bool {
+    let Ok(rd) = std::fs::read_dir(root) else { return false };
+    rd.flatten().any(|e| {
+        let p = e.path();
+        p.is_dir() && (0..machines).all(|m| p.join(format!("machine_{m}.bin")).exists())
+    })
+}
+
+/// One attempt at the kill/restart sequence. Phase 1: run a snapshotting
+/// 2-process cluster, SIGKILL the worker as soon as a complete snapshot
+/// is on disk, and require the driver to fail with a typed error (exit
+/// code 1 — an anyhow error from `Engine::run`, not a panic's 101).
+/// Phase 2: relaunch both processes on fresh ports with `--restore` and
+/// require the restarted run to reproduce the uninterrupted oracle.
+fn try_kill_restart(
+    bin: &str,
+    dir: &std::path::Path,
+    atoms_s: &str,
+    oracle: f64,
+) -> Result<(), String> {
+    use std::process::{Command, Stdio};
+    let snap = dir.join("snaps");
+    std::fs::remove_dir_all(&snap).ok();
+    std::fs::create_dir_all(&snap).unwrap();
+    let snap_s = snap.to_str().unwrap();
+    let common = ["--atoms-dir", atoms_s, "--sweeps", "400"];
+
+    // ---- phase 1: snapshot, kill, typed failure ------------------------
+    let hosts = dir.join("hosts-kill.txt");
+    std::fs::write(&hosts, format!("127.0.0.1:{}\n127.0.0.1:{}\n", free_port(), free_port()))
+        .unwrap();
+    let hosts_s = hosts.to_str().unwrap();
+    let snap_args = ["--snapshot-every", "2000", "--snapshot-dir", snap_s];
+    let mut worker = Command::new(bin)
+        .args(["worker", "--me", "1", "--hosts", hosts_s])
+        .args(common)
+        .args(snap_args)
+        .env("GRAPHLAB_PEER_GRACE_SECS", "2")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn graphlab worker");
+    let mut driver = Command::new(bin)
+        .args(["run", "pagerank", "--cluster", hosts_s])
+        .args(common)
+        .args(snap_args)
+        .env("GRAPHLAB_PEER_GRACE_SECS", "2")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn graphlab run --cluster");
+
+    // Wait for the first complete cut, then SIGKILL the worker mid-run.
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        if has_complete_snapshot(&snap, 2) {
+            break;
+        }
+        if let Some(st) = driver.try_wait().expect("poll driver") {
+            worker.kill().ok();
+            worker.wait().ok();
+            let out = driver.wait_with_output().expect("collect driver output");
+            return Err(format!(
+                "driver exited ({st}) before any complete snapshot:\n{}\n{}",
+                String::from_utf8_lossy(&out.stdout),
+                String::from_utf8_lossy(&out.stderr)
+            ));
+        }
+        if std::time::Instant::now() > deadline {
+            worker.kill().ok();
+            worker.wait().ok();
+            driver.kill().ok();
+            driver.wait().ok();
+            return Err("no complete snapshot appeared within 60s".into());
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    worker.kill().expect("SIGKILL worker");
+    worker.wait().expect("reap worker");
+
+    // The driver must notice the dead peer and fail with a typed error.
+    let dstatus = wait_with_deadline(&mut driver, 120, "driver (peer killed)");
+    let dout = driver.wait_with_output().expect("collect driver output");
+    let dstdout = String::from_utf8_lossy(&dout.stdout).to_string();
+    let dstderr = String::from_utf8_lossy(&dout.stderr).to_string();
+    if dstatus.success() {
+        return Err(format!(
+            "driver succeeded despite the killed worker:\n{dstdout}"
+        ));
+    }
+    assert_eq!(
+        dstatus.code(),
+        Some(1),
+        "driver must fail with a typed error (exit 1), not a panic:\n{dstdout}\n{dstderr}"
+    );
+
+    // ---- phase 2: restart both processes from the snapshot -------------
+    let hosts2 = dir.join("hosts-restart.txt");
+    std::fs::write(&hosts2, format!("127.0.0.1:{}\n127.0.0.1:{}\n", free_port(), free_port()))
+        .unwrap();
+    let hosts2_s = hosts2.to_str().unwrap();
+    let mut worker2 = Command::new(bin)
+        .args(["worker", "--me", "1", "--hosts", hosts2_s])
+        .args(common)
+        .args(["--restore", snap_s])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn restarted worker");
+    let rout = Command::new(bin)
+        .args(["run", "pagerank", "--cluster", hosts2_s])
+        .args(common)
+        .args(["--restore", snap_s])
+        .output()
+        .expect("spawn restarted driver");
+    let rstdout = String::from_utf8_lossy(&rout.stdout).to_string();
+    let rstderr = String::from_utf8_lossy(&rout.stderr).to_string();
+    if !rout.status.success() {
+        worker2.kill().ok();
+        worker2.wait().ok();
+        return Err(format!("restarted driver failed:\n{rstdout}\n{rstderr}"));
+    }
+    // Recovery correctness: the restarted run converges to the
+    // uninterrupted run's fixed point (sum-of-ranks probe; the restored
+    // trajectory differs, so the tolerance is looser than the
+    // deterministic-equality check in the plain smoke).
+    let probe = parse_probe(&rstdout)
+        .unwrap_or_else(|| panic!("restarted driver printed no probe line:\n{rstdout}"));
+    assert!(
+        (probe - oracle).abs() < 0.05,
+        "restored run diverged from uninterrupted oracle: {probe} vs {oracle}"
+    );
+    let status = wait_with_deadline(&mut worker2, 120, "restarted worker");
+    assert!(status.success(), "restarted worker exited with {status}");
+    Ok(())
+}
+
+/// The paper's fault-tolerance claim (Sec. 4.3) as real processes: a
+/// 2-process cluster snapshots to disk, one worker is SIGKILLed mid-run,
+/// the driver fails with a typed error, and a restarted cluster with
+/// `--restore` reproduces the uninterrupted result. Retried on fresh
+/// ports like the plain smoke.
+#[test]
+#[ignore = "spawns and kills real graphlab processes; run with --ignored (CI fault-smoke)"]
+fn multi_process_kill_restart_from_snapshot() {
+    let bin = env!("CARGO_BIN_EXE_graphlab");
+    let dir = std::env::temp_dir().join(format!("graphlab-fault-smoke-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (atoms_s, oracle) = prepare_store_and_oracle(bin, &dir, &["--sweeps", "400"]);
+
+    let mut last_err = String::new();
+    for attempt in 0..3 {
+        match try_kill_restart(bin, &dir, &atoms_s, oracle) {
+            Ok(()) => {
+                std::fs::remove_dir_all(&dir).ok();
+                return;
+            }
+            Err(e) => {
+                eprintln!("kill/restart attempt {attempt} failed, retrying on fresh ports: {e}");
+                last_err = e;
+            }
+        }
+    }
+    panic!("kill/restart smoke failed on 3 attempts; last error:\n{last_err}");
 }
