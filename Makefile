@@ -6,7 +6,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR := artifacts
 
-.PHONY: all build test check clippy fmt fmt-fix bench figures artifacts clean
+.PHONY: all build test check clippy fmt fmt-fix bench lab lab-report figures artifacts clean
 
 all: build
 
@@ -29,6 +29,14 @@ fmt-fix:
 
 bench:
 	$(CARGO) bench --bench engine
+
+# The experiment lab (see BENCHMARKS.md): every preset sweep into the
+# run database, then the per-cell median / baseline-delta report.
+lab:
+	$(CARGO) run --release -- lab --preset all
+
+lab-report:
+	$(CARGO) run --release -- lab report
 
 figures:
 	$(CARGO) bench --bench figures

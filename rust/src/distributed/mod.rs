@@ -31,7 +31,7 @@ pub mod transport;
 pub use localgraph::LocalGraph;
 pub use network::{Endpoint, Network, NetworkModel};
 pub use snapshot::SnapshotTrigger;
-pub use transport::{ClusterConfig, FaultPlan, Faulty, TransportKind};
+pub use transport::{ClusterConfig, FaultPlan, Faulty, TransportKind, PORT_CONFLICT_MARKER};
 
 use std::path::Path;
 use std::sync::Arc;

@@ -45,6 +45,12 @@ use anyhow::{bail, Context as _};
 use crate::partition::MachineId;
 use crate::wire::{self, Wire, WireError, WIRE_VERSION};
 
+/// Stable marker embedded in bind-failure errors when the cause is a
+/// port collision (`EADDRINUSE`). Run supervisors — the experiment lab's
+/// executor — grep child output for this exact string to decide that a
+/// failed run is retryable rather than broken.
+pub const PORT_CONFLICT_MARKER: &str = "port-conflict";
+
 /// Which byte-level substrate carries the frames of a distributed run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TransportKind {
@@ -780,8 +786,18 @@ impl TcpBound {
     /// an ephemeral port — read it back with [`TcpBound::local_addr`])
     /// and start accepting peer connections in a background thread.
     pub fn bind(me: MachineId, addr: &str, cfg: TcpConfig) -> anyhow::Result<TcpBound> {
-        let listener = TcpListener::bind(addr)
-            .with_context(|| format!("machine {me}: binding TCP listener at {addr}"))?;
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            // Tag bind collisions with a stable marker so supervisors
+            // (the experiment lab's executor) can detect them in child
+            // output and retry, instead of string-matching OS errnos.
+            let tag = if e.kind() == std::io::ErrorKind::AddrInUse {
+                format!(" [{PORT_CONFLICT_MARKER}]")
+            } else {
+                String::new()
+            };
+            anyhow::anyhow!(e)
+                .context(format!("machine {me}: binding TCP listener at {addr}{tag}"))
+        })?;
         let local_addr = listener.local_addr()?;
         let (frames_tx, frames_rx) = mpsc::channel();
         let shared = Arc::new(TcpShared {

@@ -155,6 +155,38 @@ impl ExecStats {
     pub fn updates_per_sec(&self) -> f64 {
         self.updates as f64 / self.seconds.max(1e-9)
     }
+
+    /// The stable machine-readable stats line the experiment lab ingests
+    /// (`lab-metric k=v …`; parsed by `crate::lab::ingest`). One line of
+    /// space-separated `key=value` pairs; per-machine vectors travel as
+    /// `;`-joined number lists. This format is load-bearing — the run
+    /// database is built from it — so treat any change as a schema bump.
+    pub fn lab_metric_line(&self) -> String {
+        let join = |v: &[u64]| {
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(";")
+        };
+        let mut line = format!(
+            "lab-metric updates={} sweeps={} seconds={:.6} updates_per_sec={:.1} \
+             balance={:.4} machines={} bytes_sent={} msgs_sent={}",
+            self.updates,
+            self.sweeps,
+            self.seconds,
+            self.updates_per_sec(),
+            self.balance(),
+            self.machines(),
+            self.total_bytes(),
+            self.total_msgs(),
+        );
+        if !self.updates_per_machine.is_empty() {
+            line.push_str(" updates_per_machine=");
+            line.push_str(&join(&self.updates_per_machine));
+        }
+        if !self.bytes_sent.is_empty() {
+            line.push_str(" bytes_per_machine=");
+            line.push_str(&join(&self.bytes_sent));
+        }
+        line
+    }
 }
 
 /// The result of an [`Engine::run`]: the transformed graph + statistics.

@@ -1,0 +1,582 @@
+//! Sweep configs: a JSON-described experiment matrix → a list of cells.
+//!
+//! A config names the axes of a sweep (apps × engines × transports ×
+//! machines × threads × graph scales × schedulers × maxpending depths,
+//! plus micro-benchmark cells) and the fixed run parameters (sweeps,
+//! seed, eps, injected latency, reps, timeout, retries, CPU pinning).
+//! [`SweepConfig::expand`] crosses the axes into [`Cell`]s — one cell per
+//! distinct work item, each with a stable fully-qualified id that the run
+//! database keys on. Unknown config keys are an error (a typo in a sweep
+//! file must not silently produce the wrong matrix), and the `"quick"`
+//! sub-object overlays the top level when the `--quick` flag is set, so
+//! one file carries both the paper-scale matrix and its CI smoke cut.
+//!
+//! The shipped preset configs under `configs/` (embedded at compile time)
+//! subsume the four historical bench subcommands: `sched` (BENCH_pr2),
+//! `engines` (BENCH_pr3), `wire` (BENCH_pr4), `net` (BENCH_pr5), plus the
+//! paper-figure sweeps `fig6b` and `fig8b` and the default `quick` smoke.
+
+use anyhow::{anyhow, bail, Context as _, Result};
+
+use super::json::Json;
+
+/// Known micro-benchmark cell names (see [`crate::lab::micro`]).
+pub const MICRO_NAMES: [&str; 4] =
+    ["wire-codec", "atom-store", "net-pingpong-inproc", "net-pingpong-tcp"];
+
+/// Shipped preset names, in `--preset all` order. Each maps 1:1 onto a
+/// `configs/<name>.json` file embedded at compile time.
+pub const PRESETS: [&str; 7] =
+    ["quick", "sched", "engines", "wire", "net", "fig6b", "fig8b"];
+
+/// The presets `--preset all` expands to: the four historical bench
+/// subcommands' workloads (`bench-sched`/`bench-engines`/`bench-wire`/
+/// `bench-net` → `sched`/`engines`/`wire`/`net`).
+pub const PRESET_ALL: [&str; 4] = ["sched", "engines", "wire", "net"];
+
+/// The JSON text of a shipped preset config.
+pub fn preset_text(name: &str) -> Result<&'static str> {
+    Ok(match name {
+        "quick" => include_str!("../../../configs/quick.json"),
+        "sched" => include_str!("../../../configs/sched.json"),
+        "engines" => include_str!("../../../configs/engines.json"),
+        "wire" => include_str!("../../../configs/wire.json"),
+        "net" => include_str!("../../../configs/net.json"),
+        "fig6b" => include_str!("../../../configs/fig6b.json"),
+        "fig8b" => include_str!("../../../configs/fig8b.json"),
+        other => bail!(
+            "unknown preset '{other}' (one of: {}, or 'all' for {})",
+            PRESETS.join("|"),
+            PRESET_ALL.join("+")
+        ),
+    })
+}
+
+/// One sweep: the cross-product axes plus fixed run parameters.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Sweep name, recorded on every run row.
+    pub name: String,
+    /// Application axis (`pagerank|als|ner|coseg|gibbs`).
+    pub apps: Vec<String>,
+    /// Engine axis (`shared|chromatic|locking`).
+    pub engines: Vec<String>,
+    /// Transport axis (`inproc|tcp`); normalized away for `shared`.
+    pub transports: Vec<String>,
+    /// Machine-count axis (distributed engines; normalized to 1 for shared).
+    pub machines: Vec<usize>,
+    /// Worker-thread axis (shared / chromatic threads-per-machine).
+    pub threads: Vec<usize>,
+    /// Graph-scale axis: the app's primary size flag (`--n` for pagerank).
+    pub scales: Vec<u64>,
+    /// Scheduler axis (`default` = the engine's own default policy).
+    pub schedulers: Vec<String>,
+    /// Lock-pipelining depth axis (locking engine; Fig. 8(b)).
+    pub maxpendings: Vec<usize>,
+    /// Micro-benchmark cells (crossed with `scales` only).
+    pub micros: Vec<String>,
+    /// Sweep budget per run (`--sweeps`).
+    pub sweeps: u64,
+    /// Seed for datagen/partitioning/schedulers (`--seed`).
+    pub seed: u64,
+    /// PageRank tolerance; `0` keeps every update rescheduling so all
+    /// cells execute the same capped workload (the bench convention).
+    pub eps: Option<f64>,
+    /// Injected one-way latency in µs (in-proc transport only).
+    pub latency_us: Option<u64>,
+    /// Repetitions per cell (medians are taken across reps).
+    pub reps: usize,
+    /// Per-run wall-clock timeout (child runs are killed past this).
+    pub timeout_secs: u64,
+    /// Retries per run on port-conflict failures.
+    pub retries: u32,
+    /// Pin each run to a contiguous block of logical CPUs via `taskset`.
+    pub pin_cpus: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            name: "unnamed".into(),
+            apps: vec![],
+            engines: vec![],
+            transports: vec!["inproc".into()],
+            machines: vec![2],
+            threads: vec![2],
+            scales: vec![10_000],
+            schedulers: vec!["default".into()],
+            maxpendings: vec![64],
+            micros: vec![],
+            sweeps: 10,
+            seed: 1,
+            eps: None,
+            latency_us: None,
+            reps: 1,
+            timeout_secs: 300,
+            retries: 2,
+            pin_cpus: false,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// Parse a sweep config from JSON text. With `quick`, the `"quick"`
+    /// sub-object (if present) overlays the top-level fields.
+    pub fn from_json_text(text: &str, quick: bool) -> Result<Self> {
+        let root = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut cfg = SweepConfig::default();
+        apply_fields(&mut cfg, &root, true)?;
+        if quick {
+            if let Some(q) = root.get("quick") {
+                apply_fields(&mut cfg, q, false)
+                    .context("in the \"quick\" overlay")?;
+            }
+        }
+        if cfg.apps.is_empty() && cfg.micros.is_empty() {
+            bail!("config '{}' lists no apps and no micros: nothing to run", cfg.name);
+        }
+        if !cfg.apps.is_empty() && cfg.engines.is_empty() {
+            bail!("config '{}' lists apps but no engines", cfg.name);
+        }
+        for m in &cfg.micros {
+            if !MICRO_NAMES.contains(&m.as_str()) {
+                bail!(
+                    "config '{}': unknown micro '{m}' (one of: {})",
+                    cfg.name,
+                    MICRO_NAMES.join("|")
+                );
+            }
+        }
+        for axis in [&cfg.machines, &cfg.threads] {
+            if axis.iter().any(|&v| v == 0) {
+                bail!("config '{}': machine/thread counts must be >= 1", cfg.name);
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load a shipped preset by name.
+    pub fn preset(name: &str, quick: bool) -> Result<Self> {
+        SweepConfig::from_json_text(preset_text(name)?, quick)
+            .with_context(|| format!("preset '{name}'"))
+    }
+
+    /// Cross the axes into the cell list. Axis combinations that differ
+    /// only in a dimension the engine ignores are normalized and deduped
+    /// (the shared engine has no transport or machine count; the locking
+    /// engine is one event loop per machine; only locking uses
+    /// maxpending), so each cell is a genuinely distinct work item.
+    pub fn expand(&self) -> Vec<Cell> {
+        let mut cells: Vec<Cell> = Vec::new();
+        let mut seen: Vec<String> = Vec::new();
+        for app in &self.apps {
+            for engine in &self.engines {
+                for transport in &self.transports {
+                    for &machines in &self.machines {
+                        for &threads in &self.threads {
+                            for &scale in &self.scales {
+                                for sched in &self.schedulers {
+                                    for &maxpending in &self.maxpendings {
+                                        let mut cell = Cell {
+                                            kind: CellKind::Engine,
+                                            app: app.clone(),
+                                            engine: engine.clone(),
+                                            transport: transport.clone(),
+                                            machines,
+                                            threads,
+                                            scale,
+                                            scheduler: sched.clone(),
+                                            maxpending,
+                                            sweeps: self.sweeps,
+                                            seed: self.seed,
+                                            eps: self.eps,
+                                            latency_us: self.latency_us,
+                                        };
+                                        cell.normalize();
+                                        let id = cell.id();
+                                        if !seen.contains(&id) {
+                                            seen.push(id);
+                                            cells.push(cell);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for micro in &self.micros {
+            for &scale in &self.scales {
+                let cell = Cell {
+                    kind: CellKind::Micro,
+                    app: micro.clone(),
+                    engine: "-".into(),
+                    transport: "-".into(),
+                    machines: 1,
+                    threads: 1,
+                    scale,
+                    scheduler: "-".into(),
+                    maxpending: 0,
+                    sweeps: self.sweeps,
+                    seed: self.seed,
+                    eps: None,
+                    latency_us: None,
+                };
+                let id = cell.id();
+                if !seen.contains(&id) {
+                    seen.push(id);
+                    cells.push(cell);
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// Apply one JSON object's fields onto `cfg`. `top_level` allows the
+/// `name`/`quick` keys; the quick overlay may restate any axis or scalar
+/// but not rename the sweep.
+fn apply_fields(cfg: &mut SweepConfig, obj: &Json, top_level: bool) -> Result<()> {
+    let Json::Obj(fields) = obj else {
+        bail!("expected a JSON object");
+    };
+    for (key, val) in fields {
+        match key.as_str() {
+            "name" if top_level => {
+                cfg.name = str_field(val, key)?;
+            }
+            "quick" if top_level => {} // applied separately by the caller
+            "apps" => cfg.apps = str_list(val, key)?,
+            "engines" => cfg.engines = str_list(val, key)?,
+            "transports" => cfg.transports = str_list(val, key)?,
+            "machines" => cfg.machines = usize_list(val, key)?,
+            "threads" => cfg.threads = usize_list(val, key)?,
+            "scales" => cfg.scales = u64_list(val, key)?,
+            "schedulers" => cfg.schedulers = str_list(val, key)?,
+            "maxpendings" => cfg.maxpendings = usize_list(val, key)?,
+            "micros" => cfg.micros = str_list(val, key)?,
+            "sweeps" => cfg.sweeps = u64_field(val, key)?,
+            "seed" => cfg.seed = u64_field(val, key)?,
+            "eps" => {
+                cfg.eps = Some(
+                    val.as_f64()
+                        .ok_or_else(|| anyhow!("config key '{key}': expected a number"))?,
+                )
+            }
+            "latency_us" => cfg.latency_us = Some(u64_field(val, key)?),
+            "reps" => cfg.reps = u64_field(val, key)?.max(1) as usize,
+            "timeout_secs" => cfg.timeout_secs = u64_field(val, key)?,
+            "retries" => cfg.retries = u64_field(val, key)? as u32,
+            "pin_cpus" => {
+                cfg.pin_cpus = val
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("config key '{key}': expected true/false"))?
+            }
+            other => bail!(
+                "unknown config key '{other}' (a typo here would silently \
+                 change the sweep matrix, so unknown keys are rejected)"
+            ),
+        }
+    }
+    Ok(())
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String> {
+    Ok(v.as_str()
+        .ok_or_else(|| anyhow!("config key '{key}': expected a string"))?
+        .to_string())
+}
+
+fn u64_field(v: &Json, key: &str) -> Result<u64> {
+    v.as_u64()
+        .ok_or_else(|| anyhow!("config key '{key}': expected a non-negative integer"))
+}
+
+fn str_list(v: &Json, key: &str) -> Result<Vec<String>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("config key '{key}': expected an array of strings"))?;
+    arr.iter()
+        .map(|x| {
+            Ok(x.as_str()
+                .ok_or_else(|| anyhow!("config key '{key}': expected strings"))?
+                .to_string())
+        })
+        .collect()
+}
+
+fn u64_list(v: &Json, key: &str) -> Result<Vec<u64>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("config key '{key}': expected an array of integers"))?;
+    arr.iter()
+        .map(|x| {
+            x.as_u64()
+                .ok_or_else(|| anyhow!("config key '{key}': expected non-negative integers"))
+        })
+        .collect()
+}
+
+fn usize_list(v: &Json, key: &str) -> Result<Vec<usize>> {
+    Ok(u64_list(v, key)?.into_iter().map(|x| x as usize).collect())
+}
+
+/// What kind of work a cell is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellKind {
+    /// A full engine run (`graphlab run <app> …` in a child process).
+    Engine,
+    /// A micro-benchmark (`graphlab lab micro <name> …`).
+    Micro,
+}
+
+/// One work item of a sweep: a fully-resolved point in the matrix.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// Engine run or micro-benchmark.
+    pub kind: CellKind,
+    /// App name (engine cells) or micro name (micro cells).
+    pub app: String,
+    /// Engine (`-` for micros).
+    pub engine: String,
+    /// Transport (`-` where irrelevant).
+    pub transport: String,
+    /// Machine count.
+    pub machines: usize,
+    /// Worker threads.
+    pub threads: usize,
+    /// Graph scale (the app's primary size flag).
+    pub scale: u64,
+    /// Scheduler policy (`default` = engine default, `-` where ignored).
+    pub scheduler: String,
+    /// Lock-pipelining depth (locking engine only; 0 where ignored).
+    pub maxpending: usize,
+    /// Sweep budget.
+    pub sweeps: u64,
+    /// Seed.
+    pub seed: u64,
+    /// PageRank tolerance override.
+    pub eps: Option<f64>,
+    /// Injected in-proc latency (µs).
+    pub latency_us: Option<u64>,
+}
+
+impl Cell {
+    /// Collapse axis values the engine ignores so the cross product does
+    /// not produce duplicate work items.
+    fn normalize(&mut self) {
+        match self.engine.as_str() {
+            "shared" => {
+                // No network, no machines; scheduler + threads matter.
+                self.transport = "-".into();
+                self.machines = 1;
+                self.maxpending = 0;
+                self.latency_us = None;
+            }
+            "chromatic" => {
+                // Static schedule; maxpending is a locking knob.
+                self.scheduler = "-".into();
+                self.maxpending = 0;
+            }
+            "locking" => {
+                // One event loop per machine; no worker threads.
+                self.threads = 1;
+            }
+            _ => {}
+        }
+    }
+
+    /// Stable fully-qualified id — the run database's grouping key. Every
+    /// axis value appears, so two cells with the same id are the same
+    /// workload.
+    pub fn id(&self) -> String {
+        match self.kind {
+            CellKind::Micro => format!("micro/{}/n{}", self.app, self.scale),
+            CellKind::Engine => {
+                let lat = match self.latency_us {
+                    Some(us) => format!("/lat{us}us"),
+                    None => String::new(),
+                };
+                format!(
+                    "{}/{}/{}/m{}/t{}/n{}/{}/p{}/s{}{}",
+                    self.app,
+                    self.engine,
+                    self.transport,
+                    self.machines,
+                    self.threads,
+                    self.scale,
+                    self.scheduler,
+                    self.maxpending,
+                    self.sweeps,
+                    lat
+                )
+            }
+        }
+    }
+
+    /// Worker parallelism of this cell (how many logical CPUs it can
+    /// use), for CPU pinning.
+    pub fn parallelism(&self) -> usize {
+        match (self.kind, self.engine.as_str()) {
+            (CellKind::Micro, _) => 2, // ping-pong echo thread at most
+            (_, "shared") => self.threads,
+            (_, "chromatic") => self.machines * self.threads,
+            (_, "locking") => self.machines,
+            _ => self.machines.max(self.threads),
+        }
+    }
+
+    /// The `graphlab` argv (without the binary path) that executes this
+    /// cell in a child process.
+    pub fn argv(&self) -> Vec<String> {
+        let mut args: Vec<String> = Vec::new();
+        match self.kind {
+            CellKind::Micro => {
+                args.extend(["lab".into(), "micro".into(), self.app.clone()]);
+                args.extend(["--n".into(), self.scale.to_string()]);
+                args.extend(["--seed".into(), self.seed.to_string()]);
+            }
+            CellKind::Engine => {
+                args.extend(["run".into(), self.app.clone()]);
+                args.extend(["--engine".into(), self.engine.clone()]);
+                if self.transport != "-" {
+                    args.extend(["--transport".into(), self.transport.clone()]);
+                }
+                args.extend(["--machines".into(), self.machines.to_string()]);
+                args.extend(["--threads".into(), self.threads.to_string()]);
+                args.extend([scale_flag(&self.app).into(), self.scale.to_string()]);
+                if self.scheduler != "default" && self.scheduler != "-" {
+                    args.extend(["--scheduler".into(), self.scheduler.clone()]);
+                }
+                if self.maxpending > 0 {
+                    args.extend(["--maxpending".into(), self.maxpending.to_string()]);
+                }
+                args.extend(["--sweeps".into(), self.sweeps.to_string()]);
+                args.extend(["--seed".into(), self.seed.to_string()]);
+                if let Some(eps) = self.eps {
+                    args.extend(["--eps".into(), format!("{eps}")]);
+                }
+                if let Some(us) = self.latency_us {
+                    args.extend(["--latency-us".into(), us.to_string()]);
+                }
+            }
+        }
+        args
+    }
+}
+
+/// The app's primary size flag, which the `scales` axis drives.
+pub fn scale_flag(app: &str) -> &'static str {
+    match app {
+        "als" => "--users",
+        "ner" => "--nps",
+        "coseg" => "--frames",
+        "gibbs" => "--side",
+        _ => "--n", // pagerank and anything pagerank-shaped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+        "name": "mini",
+        "apps": ["pagerank"],
+        "engines": ["chromatic", "locking"],
+        "transports": ["inproc", "tcp"],
+        "scales": [1000, 2000],
+        "sweeps": 3,
+        "eps": 0,
+        "quick": { "scales": [500] }
+    }"#;
+
+    #[test]
+    fn expands_the_cross_product() {
+        let cfg = SweepConfig::from_json_text(MINI, false).unwrap();
+        let cells = cfg.expand();
+        // 2 engines × 2 transports × 2 scales = 8 distinct cells.
+        assert_eq!(cells.len(), 8);
+        let ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+        let mut dedup = ids.clone();
+        dedup.dedup();
+        assert_eq!(ids.len(), dedup.len(), "duplicate cell ids: {ids:?}");
+    }
+
+    #[test]
+    fn quick_overlay_applies() {
+        let cfg = SweepConfig::from_json_text(MINI, true).unwrap();
+        assert_eq!(cfg.scales, vec![500]);
+        assert_eq!(cfg.expand().len(), 4); // one scale left
+        // ... and without --quick the full matrix is untouched.
+        let full = SweepConfig::from_json_text(MINI, false).unwrap();
+        assert_eq!(full.scales, vec![1000, 2000]);
+    }
+
+    #[test]
+    fn shared_engine_cells_are_deduped_across_transports() {
+        let cfg = SweepConfig::from_json_text(
+            r#"{"name":"s","apps":["pagerank"],"engines":["shared"],
+                "transports":["inproc","tcp"],"machines":[2,4],"scales":[100]}"#,
+            false,
+        )
+        .unwrap();
+        // shared ignores transport and machines → exactly one cell.
+        assert_eq!(cfg.expand().len(), 1);
+    }
+
+    #[test]
+    fn unknown_key_is_an_error() {
+        let err = SweepConfig::from_json_text(
+            r#"{"name":"x","apps":["pagerank"],"engines":["shared"],"scale":[1]}"#,
+            false,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown config key 'scale'"), "{err}");
+    }
+
+    #[test]
+    fn empty_matrix_is_an_error() {
+        assert!(SweepConfig::from_json_text(r#"{"name":"x"}"#, false).is_err());
+        assert!(
+            SweepConfig::from_json_text(r#"{"name":"x","apps":["pagerank"]}"#, false).is_err()
+        );
+    }
+
+    #[test]
+    fn engine_cell_argv_shape() {
+        let cfg = SweepConfig::from_json_text(MINI, false).unwrap();
+        let cell = &cfg.expand()[0];
+        let argv = cell.argv();
+        assert_eq!(argv[0], "run");
+        assert_eq!(argv[1], "pagerank");
+        assert!(argv.contains(&"--engine".to_string()));
+        assert!(argv.contains(&"--eps".to_string()));
+        // chromatic: scheduler normalized away, no --scheduler flag
+        assert!(!argv.contains(&"--scheduler".to_string()));
+    }
+
+    #[test]
+    fn micro_cells_cross_scales_only() {
+        let cfg = SweepConfig::from_json_text(
+            r#"{"name":"m","micros":["wire-codec","atom-store"],"scales":[100,200]}"#,
+            false,
+        )
+        .unwrap();
+        let cells = cfg.expand();
+        assert_eq!(cells.len(), 4);
+        assert!(cells.iter().all(|c| c.kind == CellKind::Micro));
+        assert_eq!(cells[0].argv()[0..3], ["lab", "micro", "wire-codec"]);
+    }
+
+    #[test]
+    fn unknown_micro_is_an_error() {
+        let err = SweepConfig::from_json_text(
+            r#"{"name":"m","micros":["warp-drive"],"scales":[100]}"#,
+            false,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown micro"), "{err}");
+    }
+}

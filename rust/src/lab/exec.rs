@@ -1,0 +1,360 @@
+//! Executor: supervise each cell of a sweep and record what happened.
+//!
+//! The default mode runs every cell as a **child process** of the
+//! `graphlab` binary itself (`current_exe`, overridable via `--bin` or
+//! `GRAPHLAB_BIN`): a crashed or wedged run takes down one cell, not the
+//! sweep, and timing is not polluted by the collector's own allocator
+//! state. Supervision per run:
+//!
+//! * **timeout** — the child is killed at the config's `timeout_secs`
+//!   and the cell recorded as `timeout` (a wedged distributed run must
+//!   not wedge the sweep);
+//! * **retry on port conflict** — a run whose output carries the
+//!   [`crate::distributed::PORT_CONFLICT_MARKER`] tag (or the OS's
+//!   "Address already in use") lost a bind race with another process and
+//!   is retried up to `retries` times; any other failure is recorded,
+//!   not retried;
+//! * **CPU pinning** (`pin_cpus`) — each run is prefixed with
+//!   `taskset -c 0-(P-1)` where `P` is the cell's parallelism, so cells
+//!   with different thread counts don't float across a loaded host. If
+//!   `taskset` is missing the run proceeds unpinned with a warning.
+//!
+//! Every attempt's outcome — ok, timeout, or error, with whatever the
+//! ingestor salvaged — is appended to the run database. `--inproc` mode
+//! runs cells inside the collector process instead (no spawn, no
+//! pinning, no timeout enforcement): it exists for environments where
+//! spawning is unavailable (sandboxed tests) and synthesizes the same
+//! stdout text, so records still flow through the one ingest path.
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::distributed::PORT_CONFLICT_MARKER;
+
+use super::config::{Cell, CellKind, SweepConfig};
+use super::ingest;
+use super::store::{Outcome, RunDb, RunRecord};
+
+/// Executor options (from the `graphlab lab` CLI flags).
+#[derive(Debug, Clone)]
+pub struct ExecOpts {
+    /// The run database to append to.
+    pub db: RunDb,
+    /// Child binary; `None` = `GRAPHLAB_BIN` or the current executable.
+    pub bin: Option<PathBuf>,
+    /// Run cells in-process instead of spawning children.
+    pub inproc: bool,
+    /// Echo child output to our own stdout (verbose mode).
+    pub echo: bool,
+}
+
+/// What a sweep did, in aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct SweepSummary {
+    /// Cells in the expanded matrix.
+    pub cells: usize,
+    /// Run attempts recorded (cells × reps, plus retries).
+    pub runs: usize,
+    /// Runs that ended `ok`.
+    pub ok: usize,
+    /// Runs that timed out.
+    pub timeouts: usize,
+    /// Runs that failed.
+    pub errors: usize,
+}
+
+/// Execute every cell of `cfg` (× reps), appending one record per run
+/// attempt to the database. Errors only if *nothing* succeeded — partial
+/// failure is data, not an excuse to lose the rest of the sweep.
+pub fn run_sweep(cfg: &SweepConfig, opts: &ExecOpts) -> Result<SweepSummary> {
+    let cells = cfg.expand();
+    let mut summary = SweepSummary { cells: cells.len(), ..Default::default() };
+    println!(
+        "lab: sweep '{}': {} cells x {} rep(s) -> {}",
+        cfg.name,
+        cells.len(),
+        cfg.reps,
+        opts.db.path.display()
+    );
+    for (idx, cell) in cells.iter().enumerate() {
+        for rep in 0..cfg.reps {
+            let (outcome, elapsed_s, error, output) = if opts.inproc {
+                run_inproc(cell)
+            } else {
+                run_child(cell, cfg, opts)
+            };
+            // Ingest whatever the run produced; a clean exit with
+            // unparseable output downgrades to an error record.
+            let (outcome, error, parsed) = match ingest::parse_lenient(&output) {
+                Ok(parsed) if outcome == Outcome::Ok && parsed.metrics.is_empty() => (
+                    Outcome::Error,
+                    Some(ingest::IngestError::NoMetrics.to_string()),
+                    parsed,
+                ),
+                Ok(parsed) => (outcome, error, parsed),
+                Err(e) if outcome == Outcome::Ok => {
+                    (Outcome::Error, Some(e.to_string()), Default::default())
+                }
+                // The run already failed; keep its error, salvage nothing.
+                Err(_) => (outcome, error, Default::default()),
+            };
+            match outcome {
+                Outcome::Ok => summary.ok += 1,
+                Outcome::Timeout => summary.timeouts += 1,
+                Outcome::Error => summary.errors += 1,
+            }
+            summary.runs += 1;
+            let rec =
+                RunRecord::new(&cfg.name, cell, rep, outcome, elapsed_s, error.clone(), parsed);
+            opts.db.append(&rec)?;
+            println!(
+                "lab: [{}/{}] {} rep {}: {} ({:.3}s){}",
+                idx + 1,
+                cells.len(),
+                cell.id(),
+                rep,
+                outcome.name(),
+                elapsed_s,
+                match &error {
+                    Some(e) => format!(" — {e}"),
+                    None => String::new(),
+                }
+            );
+        }
+    }
+    if summary.ok == 0 {
+        bail!(
+            "sweep '{}': all {} run(s) failed — see {}",
+            cfg.name,
+            summary.runs,
+            opts.db.path.display()
+        );
+    }
+    Ok(summary)
+}
+
+/// Supervise one cell as a child process: spawn, drain output, enforce
+/// the timeout, retry on port conflicts. Infallible by design — every
+/// failure becomes an outcome, not an `Err`.
+fn run_child(cell: &Cell, cfg: &SweepConfig, opts: &ExecOpts) -> (Outcome, f64, Option<String>, String) {
+    let bin = match &opts.bin {
+        Some(p) => p.clone(),
+        None => match std::env::var_os("GRAPHLAB_BIN") {
+            Some(p) => PathBuf::from(p),
+            None => match std::env::current_exe() {
+                Ok(p) => p,
+                Err(e) => {
+                    return (
+                        Outcome::Error,
+                        0.0,
+                        Some(format!("cannot locate own binary: {e}")),
+                        String::new(),
+                    )
+                }
+            },
+        },
+    };
+    let mut last = (Outcome::Error, 0.0, Some("never ran".to_string()), String::new());
+    for attempt in 0..=cfg.retries {
+        last = run_child_once(&bin, cell, cfg, opts);
+        let retryable = last.0 == Outcome::Error
+            && (last.3.contains(PORT_CONFLICT_MARKER)
+                || last.3.contains("Address already in use"));
+        if !retryable || attempt == cfg.retries {
+            break;
+        }
+        eprintln!(
+            "lab: {}: port conflict (attempt {}/{}), retrying",
+            cell.id(),
+            attempt + 1,
+            cfg.retries + 1
+        );
+        // Losing a bind race means another process holds the port right
+        // now; a beat of backoff makes the retry worth taking.
+        std::thread::sleep(Duration::from_millis(200 * (attempt as u64 + 1)));
+    }
+    last
+}
+
+fn run_child_once(
+    bin: &std::path::Path,
+    cell: &Cell,
+    cfg: &SweepConfig,
+    opts: &ExecOpts,
+) -> (Outcome, f64, Option<String>, String) {
+    let argv = cell.argv();
+    let mut cmd;
+    let mut pinned = false;
+    if cfg.pin_cpus {
+        let cpus = cell.parallelism().max(1);
+        cmd = Command::new("taskset");
+        cmd.arg("-c").arg(format!("0-{}", cpus - 1)).arg(bin).args(&argv);
+        pinned = true;
+    } else {
+        cmd = Command::new(bin);
+        cmd.args(&argv);
+    }
+    // Supervision hook for the distributed layer: children must not
+    // outlive the sweep's own per-run budget waiting for lost peers.
+    cmd.env("GRAPHLAB_PEER_GRACE_SECS", cfg.timeout_secs.to_string());
+    cmd.stdin(Stdio::null()).stdout(Stdio::piped()).stderr(Stdio::piped());
+    let start = Instant::now();
+    let mut child = match cmd.spawn() {
+        Ok(c) => c,
+        Err(e) if pinned => {
+            // No taskset on this host: warn once per process, run unpinned.
+            eprintln!("lab: taskset unavailable ({e}); running unpinned");
+            let mut cmd = Command::new(bin);
+            cmd.args(&argv)
+                .env("GRAPHLAB_PEER_GRACE_SECS", cfg.timeout_secs.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped());
+            match cmd.spawn() {
+                Ok(c) => c,
+                Err(e) => {
+                    return (Outcome::Error, 0.0, Some(format!("spawn failed: {e}")), String::new())
+                }
+            }
+        }
+        Err(e) => {
+            return (Outcome::Error, 0.0, Some(format!("spawn failed: {e}")), String::new())
+        }
+    };
+    // Drain both pipes on threads — a child that fills a pipe while we
+    // only poll `try_wait` would deadlock against us.
+    let stdout = child.stdout.take().map(reader_thread);
+    let stderr = child.stderr.take().map(reader_thread);
+    let timeout = Duration::from_secs(cfg.timeout_secs.max(1));
+    let status = loop {
+        match child.try_wait() {
+            Ok(Some(status)) => break Some(status),
+            Ok(None) if start.elapsed() >= timeout => {
+                let _ = child.kill();
+                let _ = child.wait();
+                break None;
+            }
+            Ok(None) => std::thread::sleep(Duration::from_millis(20)),
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                let out = join_reader(stdout);
+                let err_text = join_reader(stderr);
+                return (
+                    Outcome::Error,
+                    start.elapsed().as_secs_f64(),
+                    Some(format!("wait failed: {e}")),
+                    format!("{out}{err_text}"),
+                );
+            }
+        }
+    };
+    let elapsed = start.elapsed().as_secs_f64();
+    let out = join_reader(stdout);
+    let err_text = join_reader(stderr);
+    if opts.echo {
+        print!("{out}");
+        eprint!("{err_text}");
+    }
+    let combined = format!("{out}{err_text}");
+    match status {
+        None => (
+            Outcome::Timeout,
+            elapsed,
+            Some(format!("killed at {}s timeout", cfg.timeout_secs)),
+            combined,
+        ),
+        Some(s) if s.success() => (Outcome::Ok, elapsed, None, combined),
+        Some(s) => {
+            let tail: String = err_text.lines().last().unwrap_or("").chars().take(200).collect();
+            (Outcome::Error, elapsed, Some(format!("exit {s}: {tail}")), combined)
+        }
+    }
+}
+
+fn reader_thread(
+    mut pipe: impl std::io::Read + Send + 'static,
+) -> std::thread::JoinHandle<String> {
+    std::thread::spawn(move || {
+        let mut buf = Vec::new();
+        let _ = pipe.read_to_end(&mut buf);
+        String::from_utf8_lossy(&buf).into_owned()
+    })
+}
+
+fn join_reader(h: Option<std::thread::JoinHandle<String>>) -> String {
+    h.and_then(|h| h.join().ok()).unwrap_or_default()
+}
+
+/// Run one cell inside this process and synthesize the same stdout text
+/// a child would have printed, so ingestion is identical. Supports micro
+/// cells and PageRank engine cells (the quick matrix); anything else
+/// reports an error record directing the caller at child mode.
+fn run_inproc(cell: &Cell) -> (Outcome, f64, Option<String>, String) {
+    let start = Instant::now();
+    let result = run_inproc_inner(cell);
+    let elapsed = start.elapsed().as_secs_f64();
+    match result {
+        Ok(text) => (Outcome::Ok, elapsed, None, text),
+        Err(e) => (Outcome::Error, elapsed, Some(format!("{e:#}")), String::new()),
+    }
+}
+
+fn run_inproc_inner(cell: &Cell) -> Result<String> {
+    use crate::apps::{self, pagerank};
+    use crate::distributed::{NetworkModel, TransportKind};
+    use crate::engine::{Engine, EngineKind};
+    use crate::scheduler::SchedSpec;
+
+    if cell.kind == CellKind::Micro {
+        let line = super::micro::micro_line(&cell.app, cell.scale, cell.seed)?;
+        return Ok(format!("{line}\n"));
+    }
+    if cell.app != "pagerank" {
+        bail!("in-proc mode runs pagerank cells only (got '{}'); drop --inproc", cell.app);
+    }
+    let n = cell.scale as usize;
+    let edges = crate::datagen::web_graph(n, 8, cell.seed);
+    let g = pagerank::build(n, &edges, 0.15);
+    let prog = pagerank::PageRank {
+        alpha: 0.15,
+        eps: cell.eps.unwrap_or(0.0) as f32,
+        n,
+        use_pjrt: false,
+    };
+    let kind = EngineKind::parse(&cell.engine)?;
+    // Cap in both updates and sweeps, like `graphlab run` does — with
+    // eps=0 nothing converges, so the caps ARE the workload definition.
+    let mut eng = Engine::new(kind)
+        .workers(cell.threads)
+        .max_updates(cell.scale.saturating_mul(cell.sweeps.max(1)))
+        .max_sweeps(cell.sweeps)
+        .seed(cell.seed)
+        .sync(pagerank::total_rank_sync());
+    if kind.is_distributed() {
+        eng = eng.machines(cell.machines).transport(TransportKind::parse(&cell.transport)?);
+    }
+    if cell.maxpending > 0 {
+        eng = eng.maxpending(cell.maxpending);
+    }
+    if cell.scheduler != "default" && cell.scheduler != "-" {
+        eng = eng.scheduler(SchedSpec::parse(&cell.scheduler, cell.seed)?);
+    }
+    if let Some(us) = cell.latency_us {
+        eng = eng.network(NetworkModel { latency: Duration::from_micros(us) });
+    }
+    let exec = eng.run(g, &prog, apps::all_vertices(n))?;
+    let total: f64 = exec
+        .graph
+        .vertex_ids()
+        .map(|v| exec.graph.vertex_data(v).rank as f64)
+        .sum();
+    Ok(format!(
+        "{}\nbytes sent per machine: {:?}\nprobe total_rank={total:.9}\n",
+        exec.stats.lab_metric_line(),
+        exec.stats.bytes_sent,
+    ))
+}

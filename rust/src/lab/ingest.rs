@@ -1,0 +1,302 @@
+//! Ingestor: parse a run's stdout into structured metrics.
+//!
+//! Three line shapes carry data; everything else (progress chatter,
+//! `done:` summaries, warnings) is ignored:
+//!
+//! - `lab-metric k=v k=v …` — the stable machine-readable stats line
+//!   emitted by [`crate::engine::ExecStats::lab_metric_line`] and by the
+//!   micro-benchmarks. Values are numbers, `;`-separated number lists, or
+//!   bare strings. A malformed pair on a `lab-metric` line is a typed
+//!   error (the line claimed to be machine-readable and lied).
+//! - `probe <key>=<float>` — the convergence probe `graphlab run` prints
+//!   (e.g. `probe total_rank=123.456789000`).
+//! - `bytes sent per machine: [a, b, c]` — the per-machine byte report
+//!   (Rust `Debug` format of a `Vec<u64>`).
+//!
+//! The parser is total: truncated or garbage output yields a typed
+//! [`IngestError`], never a panic, so a crashed child's half-written
+//! stdout degrades into an `error` row in the run database.
+
+use std::fmt;
+
+/// Why a run's output could not be ingested.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IngestError {
+    /// No `lab-metric` line at all — the run died before printing stats.
+    NoMetrics,
+    /// A `lab-metric` line contained a token that is not `key=value`.
+    BadPair { line_no: usize, pair: String },
+    /// A numeric-looking value failed to parse (e.g. truncated mid-write).
+    BadNumber { line_no: usize, key: String, value: String },
+    /// A `bytes sent per machine:` report that is not a `[u64, …]` list.
+    BadByteReport { line_no: usize },
+}
+
+impl fmt::Display for IngestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IngestError::NoMetrics => {
+                write!(f, "no lab-metric line in run output (run died before reporting stats?)")
+            }
+            IngestError::BadPair { line_no, pair } => {
+                write!(f, "line {line_no}: lab-metric token '{pair}' is not key=value")
+            }
+            IngestError::BadNumber { line_no, key, value } => {
+                write!(f, "line {line_no}: lab-metric {key}='{value}' is not a number")
+            }
+            IngestError::BadByteReport { line_no } => {
+                write!(f, "line {line_no}: malformed per-machine byte report")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
+
+/// A metric value on a `lab-metric` line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricValue {
+    /// A single number.
+    Num(f64),
+    /// A `;`-separated number list (e.g. `bytes_per_machine=10;12;9`).
+    List(Vec<f64>),
+    /// Anything non-numeric (e.g. `engine=chromatic`).
+    Str(String),
+}
+
+impl MetricValue {
+    /// The value as a number, if it is one.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            MetricValue::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+}
+
+/// Everything extracted from one run's stdout.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParsedRun {
+    /// Key→value pairs from `lab-metric` lines, in order of appearance.
+    /// Later lines append; duplicate keys keep the *last* value (a
+    /// restarted in-run phase overrides its earlier report).
+    pub metrics: Vec<(String, MetricValue)>,
+    /// `probe <key>=<v>` lines, in order.
+    pub probes: Vec<(String, f64)>,
+    /// The per-machine byte report, if printed.
+    pub bytes_per_machine: Option<Vec<u64>>,
+}
+
+impl ParsedRun {
+    /// Last value recorded for `key` on any `lab-metric` line.
+    pub fn metric(&self, key: &str) -> Option<&MetricValue> {
+        self.metrics.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Numeric metric shorthand.
+    pub fn num(&self, key: &str) -> Option<f64> {
+        self.metric(key).and_then(|v| v.as_num())
+    }
+
+    /// Last probe value for `key`.
+    pub fn probe(&self, key: &str) -> Option<f64> {
+        self.probes.iter().rev().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+}
+
+/// Parse a complete run's stdout. Requires at least one `lab-metric`
+/// line; use [`parse_lenient`] when stats are optional.
+pub fn parse_run_output(text: &str) -> Result<ParsedRun, IngestError> {
+    let parsed = parse_lenient(text)?;
+    if parsed.metrics.is_empty() {
+        return Err(IngestError::NoMetrics);
+    }
+    Ok(parsed)
+}
+
+/// Like [`parse_run_output`] but an output with zero `lab-metric` lines
+/// is fine (empty [`ParsedRun`]). Malformed data lines are still errors.
+pub fn parse_lenient(text: &str) -> Result<ParsedRun, IngestError> {
+    let mut out = ParsedRun::default();
+    for (idx, line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = line.trim();
+        if let Some(rest) = line.strip_prefix("lab-metric ") {
+            parse_metric_pairs(rest, line_no, &mut out.metrics)?;
+        } else if let Some(rest) = line.strip_prefix("probe ") {
+            // Probe lines come from run_generic's `probe {key}={v:.9}`.
+            // Anything else starting with "probe " is chatter: skip it
+            // silently rather than erroring on prose.
+            if let Some((key, val)) = rest.split_once('=') {
+                if let Ok(v) = val.trim().parse::<f64>() {
+                    out.probes.push((key.trim().to_string(), v));
+                }
+            }
+        } else if let Some(rest) = line.strip_prefix("bytes sent per machine:") {
+            out.bytes_per_machine = Some(parse_byte_report(rest, line_no)?);
+        }
+    }
+    Ok(out)
+}
+
+fn parse_metric_pairs(
+    rest: &str,
+    line_no: usize,
+    metrics: &mut Vec<(String, MetricValue)>,
+) -> Result<(), IngestError> {
+    for token in rest.split_whitespace() {
+        let Some((key, value)) = token.split_once('=') else {
+            return Err(IngestError::BadPair { line_no, pair: token.to_string() });
+        };
+        if key.is_empty() {
+            return Err(IngestError::BadPair { line_no, pair: token.to_string() });
+        }
+        let parsed = if value.contains(';') {
+            let mut nums = Vec::new();
+            for part in value.split(';') {
+                match part.parse::<f64>() {
+                    Ok(v) if v.is_finite() => nums.push(v),
+                    _ => {
+                        return Err(IngestError::BadNumber {
+                            line_no,
+                            key: key.to_string(),
+                            value: value.to_string(),
+                        })
+                    }
+                }
+            }
+            MetricValue::List(nums)
+        } else {
+            match value.parse::<f64>() {
+                Ok(v) if v.is_finite() => MetricValue::Num(v),
+                // Non-numeric values are legitimate strings (engine=...)
+                // unless they *look* numeric but are truncated — a string
+                // starting with a digit, '-', or '.' claimed numberhood.
+                _ if value.starts_with(|c: char| c.is_ascii_digit() || c == '-' || c == '.') => {
+                    return Err(IngestError::BadNumber {
+                        line_no,
+                        key: key.to_string(),
+                        value: value.to_string(),
+                    });
+                }
+                _ => MetricValue::Str(value.to_string()),
+            }
+        };
+        metrics.push((key.to_string(), parsed));
+    }
+    Ok(())
+}
+
+fn parse_byte_report(rest: &str, line_no: usize) -> Result<Vec<u64>, IngestError> {
+    let body = rest.trim();
+    let inner = body
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or(IngestError::BadByteReport { line_no })?;
+    let inner = inner.trim();
+    if inner.is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|part| {
+            part.trim().parse::<u64>().map_err(|_| IngestError::BadByteReport { line_no })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shaped like real `graphlab run` output (PR 4's byte report, PR 2's
+    /// probe line, this PR's lab-metric line) plus chatter to ignore.
+    const REAL: &str = "\
+partitioned 1000 vertices over 2 atoms
+machine 0: 500 vertices (480 owned, 20 ghosts)
+lab-metric updates=12000 sweeps=12 seconds=0.512000 updates_per_sec=23437.5 balance=1.04 machines=2 bytes_sent=20480 msgs_sent=96 updates_per_machine=6010;5990 bytes_per_machine=10240;10240
+bytes sent per machine: [10240, 10240]
+probe total_rank=999.999999123
+done: pagerank chromatic 2 machines in 0.512s
+";
+
+    #[test]
+    fn parses_real_output() {
+        let p = parse_run_output(REAL).unwrap();
+        assert_eq!(p.num("updates"), Some(12000.0));
+        assert_eq!(p.num("updates_per_sec"), Some(23437.5));
+        assert_eq!(p.num("machines"), Some(2.0));
+        assert_eq!(
+            p.metric("bytes_per_machine"),
+            Some(&MetricValue::List(vec![10240.0, 10240.0]))
+        );
+        assert_eq!(p.bytes_per_machine, Some(vec![10240, 10240]));
+        assert_eq!(p.probe("total_rank"), Some(999.999999123));
+    }
+
+    #[test]
+    fn no_metric_line_is_typed_error() {
+        let out = "partitioned 1000 vertices\nprobe total_rank=1.0\n";
+        assert_eq!(parse_run_output(out).unwrap_err(), IngestError::NoMetrics);
+        // ... but lenient parsing still recovers the probe.
+        let p = parse_lenient(out).unwrap();
+        assert_eq!(p.probe("total_rank"), Some(1.0));
+    }
+
+    #[test]
+    fn truncated_metric_line_is_typed_error() {
+        // A child killed mid-write leaves a dangling token.
+        let out = "lab-metric updates=12000 seconds=0.5 updates_per\n";
+        match parse_run_output(out).unwrap_err() {
+            IngestError::BadPair { line_no: 1, pair } => assert_eq!(pair, "updates_per"),
+            other => panic!("wrong error: {other:?}"),
+        }
+        // ... or a half-written number.
+        let out = "lab-metric updates=12000 seconds=0.5 updates_per_sec=234e\n";
+        match parse_run_output(out).unwrap_err() {
+            IngestError::BadNumber { key, value, .. } => {
+                assert_eq!(key, "updates_per_sec");
+                assert_eq!(value, "234e");
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_list_is_typed_error() {
+        let out = "lab-metric bytes_per_machine=10240;102\u{0}\n";
+        assert!(matches!(
+            parse_run_output(out).unwrap_err(),
+            IngestError::BadNumber { .. }
+        ));
+    }
+
+    #[test]
+    fn garbage_byte_report_is_typed_error() {
+        for bad in ["bytes sent per machine: [10, oops]", "bytes sent per machine: 10, 20"] {
+            assert!(matches!(
+                parse_lenient(bad).unwrap_err(),
+                IngestError::BadByteReport { line_no: 1 }
+            ));
+        }
+        // Empty vec (0 machines never happens, but Debug prints `[]`).
+        let p = parse_lenient("bytes sent per machine: []").unwrap();
+        assert_eq!(p.bytes_per_machine, Some(vec![]));
+    }
+
+    #[test]
+    fn binary_garbage_does_not_panic() {
+        let garbage = "\u{0}\u{1}\u{FFFD}žžž\nlab-metric\u{0}x=1\nnot a line";
+        // Not prefixed with "lab-metric " (NUL breaks the prefix) → no
+        // metrics → NoMetrics, not a panic.
+        assert_eq!(parse_run_output(garbage).unwrap_err(), IngestError::NoMetrics);
+    }
+
+    #[test]
+    fn string_metrics_and_last_value_wins() {
+        let out = "lab-metric engine=chromatic updates=5\nlab-metric updates=9\n";
+        let p = parse_run_output(out).unwrap();
+        assert_eq!(p.metric("engine"), Some(&MetricValue::Str("chromatic".into())));
+        assert_eq!(p.num("updates"), Some(9.0));
+    }
+}

@@ -1,0 +1,178 @@
+//! Micro-benchmark cells: the non-engine workloads of a sweep.
+//!
+//! Each micro prints `lab-metric …` lines in the same stable format the
+//! engines emit (see [`crate::lab::ingest`]), so the executor ingests
+//! micro cells and engine cells through one code path. The workloads are
+//! the measurement loops of the historical `bench-wire` / `bench-net`
+//! subcommands, re-homed here with the scale knob (`--n`) driving the
+//! repetition count:
+//!
+//! * `wire-codec` — encode/decode throughput of the [`crate::wire`]
+//!   codec over a ghost-flush-shaped payload (ALS d=20 factors).
+//! * `atom-store` — save / per-machine load / full replay timings for an
+//!   on-disk PageRank atom store.
+//! * `net-pingpong-inproc` / `net-pingpong-tcp` — framing-layer 4 KiB
+//!   frame round trips over the in-proc and loopback-TCP transports.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::apps::{als, pagerank};
+use crate::distributed::{Network, NetworkModel};
+use crate::partition::atoms::{self, AtomSet};
+use crate::wire::{self, Wire};
+
+/// Run one micro by name, printing its `lab-metric` line to stdout.
+/// `n` is the scale knob; `seed` feeds the data generators.
+pub fn run_micro(name: &str, n: u64, seed: u64) -> Result<()> {
+    println!("{}", micro_line(name, n, seed)?);
+    Ok(())
+}
+
+/// Run one micro and return its `lab-metric` line (the in-proc executor
+/// ingests this directly; the CLI prints it).
+pub fn micro_line(name: &str, n: u64, seed: u64) -> Result<String> {
+    match name {
+        "wire-codec" => wire_codec(n),
+        "atom-store" => atom_store(n, seed),
+        "net-pingpong-inproc" => pingpong(n, false),
+        "net-pingpong-tcp" => pingpong(n, true),
+        other => bail!(
+            "unknown micro '{other}' (one of: {})",
+            super::config::MICRO_NAMES.join("|")
+        ),
+    }
+}
+
+/// Codec throughput over the shape of a chromatic ghost flush:
+/// (vertex, version, data) triples with ALS d=20 factors.
+fn wire_codec(n: u64) -> Result<String> {
+    let d = 20usize;
+    let payload: Vec<(u32, u64, als::AlsVertex)> = (0..1024u32)
+        .map(|i| {
+            (i, i as u64, als::AlsVertex {
+                factor: vec![0.1; d],
+                sse: 1.0,
+                cnt: 3.0,
+                is_user: i % 2 == 0,
+            })
+        })
+        .collect();
+    let mut buf = Vec::new();
+    payload.encode(&mut buf);
+    let frame_bytes = buf.len();
+    // ~50 reps at the quick scale (n=4000), ~400 at the full (n=20000+).
+    let reps = (n / 64).clamp(10, 1000) as usize;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        buf.clear();
+        payload.encode(&mut buf);
+    }
+    let encode_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let mut decoded_elems = 0usize;
+    for _ in 0..reps {
+        let v: Vec<(u32, u64, als::AlsVertex)> = wire::from_bytes(&buf)?;
+        decoded_elems += v.len();
+    }
+    let decode_s = t0.elapsed().as_secs_f64();
+    let encode_mbps = (frame_bytes * reps) as f64 / encode_s.max(1e-9) / 1e6;
+    let decode_mbps = (frame_bytes * reps) as f64 / decode_s.max(1e-9) / 1e6;
+    // Combined one-pass rate is the headline (the report keys on
+    // `mb_per_sec`); encode/decode split out for the curious.
+    let both = (frame_bytes * reps * 2) as f64 / (encode_s + decode_s).max(1e-9) / 1e6;
+    Ok(format!(
+        "lab-metric micro=wire-codec payload_bytes={frame_bytes} reps={reps} \
+         elements={decoded_elems} encode_mb_per_sec={encode_mbps:.1} \
+         decode_mb_per_sec={decode_mbps:.1} mb_per_sec={both:.1}"
+    ))
+}
+
+/// Atom-store save / machine-0 load / full replay over a PageRank web
+/// graph of `n` vertices split into BFS-grown journals.
+fn atom_store(n: u64, seed: u64) -> Result<String> {
+    let n = n.max(256) as usize;
+    let edges = crate::datagen::web_graph(n, 8, seed);
+    let g = pagerank::build(n, &edges, 0.15);
+    let k = (n / 128).clamp(8, 128);
+    let machines = 4usize;
+    let dir =
+        std::env::temp_dir().join(format!("graphlab-lab-atoms-{}", std::process::id()));
+    let atom_set = AtomSet::grow_bfs(&g, k, seed);
+    let t0 = Instant::now();
+    atom_set.save_atoms(&g, &dir)?;
+    let save_s = t0.elapsed().as_secs_f64();
+    let disk_bytes: u64 = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.metadata().ok())
+        .map(|m| m.len())
+        .sum();
+    let store = atoms::AtomStore::open(&dir)?;
+    let (_partition, placement) = store.place(machines);
+    let t0 = Instant::now();
+    let lg: crate::distributed::LocalGraph<pagerank::PrVertex, pagerank::PrEdge> =
+        crate::distributed::LocalGraph::from_atom_files(
+            &dir,
+            &placement.atom_to_machine,
+            0,
+        )?;
+    let local_load_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let (g2, _) = atoms::load_graph::<pagerank::PrVertex, pagerank::PrEdge>(&dir)?;
+    let full_load_s = t0.elapsed().as_secs_f64();
+    std::fs::remove_dir_all(&dir).ok();
+    anyhow::ensure!(
+        g2.num_vertices() == g.num_vertices() && g2.num_edges() == g.num_edges(),
+        "atom-store round trip changed the graph shape"
+    );
+    let replay_mbps = disk_bytes as f64 / full_load_s.max(1e-9) / 1e6;
+    Ok(format!(
+        "lab-metric micro=atom-store n={n} atoms={k} machines={machines} \
+         disk_bytes={disk_bytes} owned_vertices={} save_seconds={save_s:.6} \
+         machine0_load_seconds={local_load_s:.6} full_replay_seconds={full_load_s:.6} \
+         mb_per_sec={replay_mbps:.1}",
+        lg.owned
+    ))
+}
+
+/// Framing-layer ping-pong: 4 KiB frames between 2 machines, `n` round
+/// trips, over the in-proc channel network or real loopback-TCP sockets.
+fn pingpong(n: u64, tcp: bool) -> Result<String> {
+    let reps = n.clamp(50, 20_000) as usize;
+    let payload = vec![7u8; 4096];
+    // The bytes NetStats counts per frame: 4-byte frame prefix + the Vec
+    // codec's own length prefix + the payload.
+    let frame_bytes = wire::encoded_len(&payload) + 4;
+    let net: Network<Vec<u8>> = if tcp {
+        Network::tcp_loopback(2)?
+    } else {
+        Network::new(2, NetworkModel::default())
+    };
+    let mut eps = net.into_endpoints();
+    let ep1 = eps.pop().unwrap();
+    let mut ep0 = eps.pop().unwrap();
+    let echo = std::thread::spawn(move || {
+        let mut ep1 = ep1;
+        for _ in 0..reps {
+            let r = ep1.recv_timeout(Duration::from_secs(30)).expect("ping lost");
+            ep1.send(0, r.msg);
+        }
+    });
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        ep0.send(1, payload.clone());
+        ep0.recv_timeout(Duration::from_secs(30)).expect("pong lost");
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    echo.join().map_err(|_| anyhow::anyhow!("echo thread panicked"))?;
+    let rt_us = secs / reps as f64 * 1e6;
+    let mbps = (frame_bytes * 2 * reps) as f64 / secs.max(1e-9) / 1e6;
+    let name = if tcp { "net-pingpong-tcp" } else { "net-pingpong-inproc" };
+    // Bandwidth is named `pingpong_mb_per_sec` (not `mb_per_sec`) on
+    // purpose: round-trip latency is the headline metric for this cell.
+    Ok(format!(
+        "lab-metric micro={name} frame_bytes={frame_bytes} reps={reps} \
+         round_trip_us={rt_us:.2} pingpong_mb_per_sec={mbps:.1}"
+    ))
+}

@@ -1,0 +1,43 @@
+//! The experiment lab: config-driven sweeps → supervised runs →
+//! structured records → an append-only run database → regression
+//! reports.
+//!
+//! The paper's argument rests on a systematic evaluation (Fig. 6's
+//! scaling curves, Fig. 8(b)'s pipelined-locking sweep over 64 EC2
+//! nodes); this module is the harness shape that makes such sweeps a
+//! one-command job here. Four small stages, in the classic
+//! collector → executor → ingestor → storage arrangement:
+//!
+//! * [`config`] — a JSON sweep description (engine × transport ×
+//!   machines × app × scale × scheduler axes) expands into explicit
+//!   cells; shipped presets subsume the historical `bench-*`
+//!   subcommands.
+//! * [`exec`] — supervises each cell as a child `graphlab` process
+//!   (timeouts, retry-on-port-conflict, optional CPU pinning) or runs
+//!   it in-process.
+//! * [`ingest`] — parses run stdout (`lab-metric` lines from
+//!   [`crate::engine::ExecStats::lab_metric_line`], `probe` lines, byte
+//!   reports) into typed records; garbage in, typed errors out.
+//! * [`store`] / [`report`] — append-only JSONL run database under
+//!   `artifacts/lab/`, per-cell medians, latest-vs-baseline regression
+//!   deltas.
+//!
+//! [`micro`] holds the non-engine workloads (wire codec, atom store,
+//! transport ping-pong). [`json`] is the dependency-free JSON codec the
+//! configs and database ride on. The CLI face is `graphlab lab` /
+//! `graphlab lab report` / `graphlab lab micro` in `main.rs`; docs in
+//! `BENCHMARKS.md` (schema, metrics glossary) and `EXPERIMENTS.md`
+//! (per-figure sweep configs).
+
+pub mod config;
+pub mod exec;
+pub mod ingest;
+pub mod json;
+pub mod micro;
+pub mod report;
+pub mod store;
+
+pub use config::{Cell, SweepConfig};
+pub use exec::{run_sweep, ExecOpts, SweepSummary};
+pub use ingest::{parse_run_output, IngestError, ParsedRun};
+pub use store::{Outcome, RunDb, RunRecord};

@@ -1,0 +1,239 @@
+//! Reporting: per-cell medians over the run database, and regression
+//! deltas of the latest runs against a committed baseline.
+//!
+//! The report groups rows by cell id, takes the median of each cell's
+//! primary metric across its `ok` runs (medians shrug off one noisy
+//! neighbour-induced outlier; means do not), and — when a baseline file
+//! has rows for the same cell — prints the percentage delta with the
+//! metric's direction taken into account (`updates_per_sec` up is good;
+//! `round_trip_us` up is a regression).
+
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use super::store::{Outcome, RunDb, RunRecord};
+
+/// Per-cell aggregate over one database.
+#[derive(Debug, Clone)]
+pub struct CellStats {
+    /// Cell id.
+    pub cell: String,
+    /// Total rows observed for the cell.
+    pub runs: usize,
+    /// Rows that ended `ok`.
+    pub ok: usize,
+    /// The primary metric's name (see [`primary_metric`]).
+    pub metric: &'static str,
+    /// Median of the primary metric across `ok` rows (None if no row
+    /// carried it).
+    pub median: Option<f64>,
+    /// Median wall-clock seconds across `ok` rows.
+    pub median_elapsed_s: Option<f64>,
+}
+
+/// The headline metric for a cell's rows, chosen from what the runs
+/// actually reported: throughput first, then bandwidth, then latency,
+/// falling back to wall clock.
+pub fn primary_metric(rows: &[&RunRecord]) -> &'static str {
+    for key in ["updates_per_sec", "mb_per_sec", "round_trip_us"] {
+        if rows.iter().any(|r| r.num(key).is_some()) {
+            return key;
+        }
+    }
+    "elapsed_s"
+}
+
+/// Is a higher value of `metric` better?
+pub fn higher_is_better(metric: &str) -> bool {
+    // Latencies and durations regress upward; rates regress downward.
+    !(metric.ends_with("_us") || metric.contains("seconds") || metric == "elapsed_s")
+}
+
+fn median(mut vals: Vec<f64>) -> Option<f64> {
+    if vals.is_empty() {
+        return None;
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let mid = vals.len() / 2;
+    Some(if vals.len() % 2 == 1 { vals[mid] } else { (vals[mid - 1] + vals[mid]) / 2.0 })
+}
+
+/// Group records by cell id (first-appearance order) and aggregate.
+pub fn cell_stats(records: &[RunRecord]) -> Vec<CellStats> {
+    let mut order: Vec<&str> = Vec::new();
+    for r in records {
+        if !order.contains(&r.cell.as_str()) {
+            order.push(&r.cell);
+        }
+    }
+    order
+        .iter()
+        .map(|cell| {
+            let rows: Vec<&RunRecord> =
+                records.iter().filter(|r| &r.cell == cell).collect();
+            let ok_rows: Vec<&RunRecord> =
+                rows.iter().copied().filter(|r| r.outcome == Outcome::Ok).collect();
+            let metric = primary_metric(&ok_rows);
+            let vals: Vec<f64> = ok_rows
+                .iter()
+                .filter_map(|r| {
+                    if metric == "elapsed_s" { Some(r.elapsed_s) } else { r.num(metric) }
+                })
+                .collect();
+            let elapsed: Vec<f64> = ok_rows.iter().map(|r| r.elapsed_s).collect();
+            CellStats {
+                cell: cell.to_string(),
+                runs: rows.len(),
+                ok: ok_rows.len(),
+                metric,
+                median: median(vals),
+                median_elapsed_s: median(elapsed),
+            }
+        })
+        .collect()
+}
+
+/// Render the report text: one line per cell, with a baseline delta
+/// column when `baseline` has matching cells.
+pub fn render(records: &[RunRecord], baseline: Option<&[RunRecord]>) -> String {
+    let stats = cell_stats(records);
+    let base_stats: Vec<CellStats> = baseline.map(cell_stats).unwrap_or_default();
+    let mut out = String::new();
+    if stats.is_empty() {
+        out.push_str("run database has no rows yet — run `graphlab lab --quick` first\n");
+        return out;
+    }
+    let width = stats.iter().map(|s| s.cell.len()).max().unwrap_or(4).max(4);
+    let _ = writeln!(
+        out,
+        "{:<width$}  {:>4} {:>3}  {:<16} {:>14}  {:>10}  {}",
+        "cell", "runs", "ok", "metric", "median", "elapsed_s", "vs baseline"
+    );
+    for s in &stats {
+        let median_s = match s.median {
+            Some(v) => format_sig(v),
+            None => "-".into(),
+        };
+        let elapsed_s = match s.median_elapsed_s {
+            Some(v) => format!("{v:.3}"),
+            None => "-".into(),
+        };
+        let delta = match (&s.median, base_stats.iter().find(|b| b.cell == s.cell)) {
+            (Some(now), Some(base)) => match base.median {
+                Some(then) if then != 0.0 && base.metric == s.metric => {
+                    let pct = (now - then) / then * 100.0;
+                    let good = if higher_is_better(s.metric) { pct >= 0.0 } else { pct <= 0.0 };
+                    format!("{pct:+.1}% {}", if good { "(ok)" } else { "(REGRESSION)" })
+                }
+                _ => "baseline metric mismatch".into(),
+            },
+            (_, None) => "no baseline".into(),
+            (None, _) => "-".into(),
+        };
+        let _ = writeln!(
+            out,
+            "{:<width$}  {:>4} {:>3}  {:<16} {:>14}  {:>10}  {}",
+            s.cell, s.runs, s.ok, s.metric, median_s, elapsed_s, delta
+        );
+    }
+    let failed: usize = stats.iter().map(|s| s.runs - s.ok).sum();
+    if failed > 0 {
+        let _ = writeln!(out, "\n{failed} run(s) did not finish ok (see outcome/error fields)");
+    }
+    out
+}
+
+/// Load the databases and render (the CLI entry point's worker).
+pub fn report(db: &RunDb, baseline: Option<&RunDb>) -> Result<String> {
+    let (records, issues) = db.load()?;
+    let base = match baseline {
+        Some(b) if b.path.exists() => Some(b.load()?.0),
+        _ => None,
+    };
+    let mut out = render(&records, base.as_deref());
+    if baseline.is_some() && base.is_none() {
+        let _ = writeln!(out, "(no baseline file — deltas omitted)");
+    }
+    for issue in &issues {
+        let _ = writeln!(out, "warning: {} {issue}", db.path.display());
+    }
+    Ok(out)
+}
+
+fn format_sig(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.5}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lab::config::SweepConfig;
+    use crate::lab::ingest::parse_run_output;
+    use crate::lab::store::RunRecord;
+
+    fn rec(cell_idx: usize, rep: usize, ups: f64) -> RunRecord {
+        let cfg = SweepConfig::from_json_text(
+            r#"{"name":"t","apps":["pagerank"],"engines":["chromatic","locking"],
+                "transports":["inproc"],"scales":[1000]}"#,
+            false,
+        )
+        .unwrap();
+        let cells = cfg.expand();
+        let parsed = parse_run_output(&format!(
+            "lab-metric updates=100 seconds=0.5 updates_per_sec={ups}\n"
+        ))
+        .unwrap();
+        RunRecord::new("t", &cells[cell_idx], rep, Outcome::Ok, 0.6, None, parsed)
+    }
+
+    #[test]
+    fn medians_are_per_cell() {
+        let records = vec![rec(0, 0, 100.0), rec(0, 1, 300.0), rec(0, 2, 200.0), rec(1, 0, 50.0)];
+        let stats = cell_stats(&records);
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].median, Some(200.0)); // odd count → middle
+        assert_eq!(stats[1].median, Some(50.0));
+        assert_eq!(stats[0].metric, "updates_per_sec");
+        let even = cell_stats(&records[..2]);
+        assert_eq!(even[0].median, Some(200.0)); // (100+300)/2
+    }
+
+    #[test]
+    fn regression_delta_has_direction() {
+        let now = vec![rec(0, 0, 90.0)];
+        let base = vec![rec(0, 0, 100.0)];
+        let text = render(&now, Some(&base));
+        assert!(text.contains("-10.0% (REGRESSION)"), "{text}");
+        // Higher throughput is an improvement, not a regression.
+        let better = vec![rec(0, 0, 150.0)];
+        let text = render(&better, Some(&base));
+        assert!(text.contains("+50.0% (ok)"), "{text}");
+    }
+
+    #[test]
+    fn lower_is_better_for_latency_metrics() {
+        assert!(higher_is_better("updates_per_sec"));
+        assert!(higher_is_better("mb_per_sec"));
+        assert!(!higher_is_better("round_trip_us"));
+        assert!(!higher_is_better("elapsed_s"));
+        assert!(!higher_is_better("engine_seconds"));
+    }
+
+    #[test]
+    fn missing_baseline_is_graceful() {
+        let now = vec![rec(0, 0, 90.0)];
+        let text = render(&now, None);
+        assert!(text.contains("no baseline"), "{text}");
+        let empty = render(&[], None);
+        assert!(empty.contains("no rows"), "{empty}");
+    }
+}

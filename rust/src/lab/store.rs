@@ -1,0 +1,379 @@
+//! Run database: append-only JSONL under `artifacts/lab/`.
+//!
+//! Every executed cell — success, timeout, or failure — becomes exactly
+//! one [`RunRecord`] appended as one line of JSON. Append-only is the
+//! point: a sweep interrupted at cell 37 of 80 has lost nothing, two
+//! sweeps on the same host interleave safely (appends of one line are
+//! atomic at these sizes), and history accumulates so `lab report` can
+//! take per-cell medians across days of runs. Corrupt or torn lines are
+//! surfaced as issues and skipped, never panics — the database must
+//! survive its own writers being killed.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context as _, Result};
+
+use super::json::{obj, Json};
+use super::config::{Cell, CellKind};
+use super::ingest::{MetricValue, ParsedRun};
+
+/// Default run-database path, relative to the repo root.
+pub const DEFAULT_DB: &str = "artifacts/lab/runs.jsonl";
+/// Default committed baseline path.
+pub const DEFAULT_BASELINE: &str = "artifacts/lab/baseline.jsonl";
+/// Schema version stamped on every row.
+pub const SCHEMA: u64 = 1;
+
+/// How a run ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Ran to completion and its output ingested cleanly.
+    Ok,
+    /// Killed at the per-run timeout.
+    Timeout,
+    /// Non-zero exit, spawn failure, or unparseable output.
+    Error,
+}
+
+impl Outcome {
+    /// Stable string form used in the JSONL rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Timeout => "timeout",
+            Outcome::Error => "error",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ok" => Some(Outcome::Ok),
+            "timeout" => Some(Outcome::Timeout),
+            "error" => Some(Outcome::Error),
+            _ => None,
+        }
+    }
+}
+
+/// One row of the run database.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// Schema version (see [`SCHEMA`]).
+    pub schema: u64,
+    /// Sweep-config name this run belonged to.
+    pub config: String,
+    /// Fully-qualified cell id (see [`Cell::id`]) — the grouping key.
+    pub cell: String,
+    /// Repetition index within the sweep (0-based).
+    pub rep: usize,
+    /// `engine` for app runs, `micro` for micro-benchmarks.
+    pub kind: String,
+    /// App or micro name.
+    pub app: String,
+    /// How the run ended.
+    pub outcome: Outcome,
+    /// Wall-clock seconds the executor observed (spawn → exit/kill).
+    pub elapsed_s: f64,
+    /// Error description for non-`ok` outcomes.
+    pub error: Option<String>,
+    /// Every metric the ingestor extracted, in emission order.
+    pub metrics: Vec<(String, MetricValue)>,
+    /// Convergence probes (`probe k=v` lines).
+    pub probes: Vec<(String, f64)>,
+    /// The per-machine byte report, if the run printed one.
+    pub bytes_per_machine: Option<Vec<u64>>,
+}
+
+impl RunRecord {
+    /// Build a record from an executed cell and its (possibly empty)
+    /// parsed output.
+    pub fn new(
+        config: &str,
+        cell: &Cell,
+        rep: usize,
+        outcome: Outcome,
+        elapsed_s: f64,
+        error: Option<String>,
+        parsed: ParsedRun,
+    ) -> Self {
+        RunRecord {
+            schema: SCHEMA,
+            config: config.to_string(),
+            cell: cell.id(),
+            rep,
+            kind: match cell.kind {
+                CellKind::Engine => "engine".into(),
+                CellKind::Micro => "micro".into(),
+            },
+            app: cell.app.clone(),
+            outcome,
+            elapsed_s,
+            error,
+            metrics: parsed.metrics,
+            probes: parsed.probes,
+            bytes_per_machine: parsed.bytes_per_machine,
+        }
+    }
+
+    /// Numeric metric shorthand (last value wins, as in ingest).
+    pub fn num(&self, key: &str) -> Option<f64> {
+        self.metrics.iter().rev().find(|(k, _)| k == key).and_then(|(_, v)| v.as_num())
+    }
+
+    /// Serialize to one JSON object (one JSONL line via `Display`).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("schema", Json::Num(self.schema as f64)),
+            ("config", Json::Str(self.config.clone())),
+            ("cell", Json::Str(self.cell.clone())),
+            ("rep", Json::Num(self.rep as f64)),
+            ("kind", Json::Str(self.kind.clone())),
+            ("app", Json::Str(self.app.clone())),
+            ("outcome", Json::Str(self.outcome.name().into())),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+        ];
+        if let Some(err) = &self.error {
+            fields.push(("error", Json::Str(err.clone())));
+        }
+        let metrics = self
+            .metrics
+            .iter()
+            .map(|(k, v)| {
+                let jv = match v {
+                    MetricValue::Num(n) => Json::Num(*n),
+                    MetricValue::Str(s) => Json::Str(s.clone()),
+                    MetricValue::List(l) => {
+                        Json::Arr(l.iter().map(|&x| Json::Num(x)).collect())
+                    }
+                };
+                (k.clone(), jv)
+            })
+            .collect();
+        fields.push(("metrics", Json::Obj(metrics)));
+        if !self.probes.is_empty() {
+            let probes =
+                self.probes.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+            fields.push(("probes", Json::Obj(probes)));
+        }
+        if let Some(bpm) = &self.bytes_per_machine {
+            fields.push((
+                "bytes_per_machine",
+                Json::Arr(bpm.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ));
+        }
+        obj(fields)
+    }
+
+    /// Deserialize one row. `None` for rows that are valid JSON but not
+    /// run records (e.g. the baseline header row carries no `cell` key).
+    pub fn from_json(j: &Json) -> Option<Result<Self, String>> {
+        j.get("cell")?;
+        Some(Self::from_json_inner(j))
+    }
+
+    fn from_json_inner(j: &Json) -> Result<Self, String> {
+        let str_of = |key: &str| -> Result<String, String> {
+            Ok(j.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("missing or non-string field '{key}'"))?
+                .to_string())
+        };
+        let outcome_s = str_of("outcome")?;
+        let mut metrics = Vec::new();
+        if let Some(Json::Obj(fields)) = j.get("metrics") {
+            for (k, v) in fields {
+                let mv = match v {
+                    Json::Num(n) => MetricValue::Num(*n),
+                    Json::Str(s) => MetricValue::Str(s.clone()),
+                    Json::Arr(items) => MetricValue::List(
+                        items.iter().filter_map(Json::as_f64).collect(),
+                    ),
+                    _ => continue,
+                };
+                metrics.push((k.clone(), mv));
+            }
+        }
+        let mut probes = Vec::new();
+        if let Some(Json::Obj(fields)) = j.get("probes") {
+            for (k, v) in fields {
+                if let Some(n) = v.as_f64() {
+                    probes.push((k.clone(), n));
+                }
+            }
+        }
+        let bytes_per_machine = j.get("bytes_per_machine").and_then(Json::as_arr).map(|a| {
+            a.iter().filter_map(Json::as_u64).collect()
+        });
+        Ok(RunRecord {
+            schema: j.get("schema").and_then(Json::as_u64).unwrap_or(SCHEMA),
+            config: str_of("config")?,
+            cell: str_of("cell")?,
+            rep: j.get("rep").and_then(Json::as_u64).unwrap_or(0) as usize,
+            kind: str_of("kind")?,
+            app: str_of("app")?,
+            outcome: Outcome::parse(&outcome_s)
+                .ok_or_else(|| format!("unknown outcome '{outcome_s}'"))?,
+            elapsed_s: j.get("elapsed_s").and_then(Json::as_f64).unwrap_or(0.0),
+            error: j.get("error").and_then(Json::as_str).map(str::to_string),
+            metrics,
+            probes,
+            bytes_per_machine,
+        })
+    }
+}
+
+/// Handle on a JSONL run database file.
+#[derive(Debug, Clone)]
+pub struct RunDb {
+    /// Path of the JSONL file.
+    pub path: PathBuf,
+}
+
+impl RunDb {
+    /// Open (without touching the filesystem yet) a database at `path`.
+    pub fn at(path: impl Into<PathBuf>) -> Self {
+        RunDb { path: path.into() }
+    }
+
+    /// Append one record as one line, creating parent directories and
+    /// the file on first use.
+    pub fn append(&self, rec: &RunRecord) -> Result<()> {
+        if let Some(parent) = self.path.parent() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening run db {}", self.path.display()))?;
+        let mut line = rec.to_json().to_string();
+        line.push('\n');
+        f.write_all(line.as_bytes())
+            .with_context(|| format!("appending to {}", self.path.display()))?;
+        Ok(())
+    }
+
+    /// Load every well-formed record. Torn, corrupt, or non-record lines
+    /// come back as human-readable issues, not errors — killing a writer
+    /// mid-append must not brick the database.
+    pub fn load(&self) -> Result<(Vec<RunRecord>, Vec<String>)> {
+        let text = fs::read_to_string(&self.path)
+            .with_context(|| format!("reading run db {}", self.path.display()))?;
+        Ok(Self::parse_lines(&text))
+    }
+
+    /// Parse JSONL text into records + issues (see [`RunDb::load`]).
+    pub fn parse_lines(text: &str) -> (Vec<RunRecord>, Vec<String>) {
+        let mut records = Vec::new();
+        let mut issues = Vec::new();
+        for (idx, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            match Json::parse(line) {
+                Ok(j) => match RunRecord::from_json(&j) {
+                    Some(Ok(rec)) => records.push(rec),
+                    Some(Err(msg)) => issues.push(format!("line {}: {msg}", idx + 1)),
+                    None => {} // header/comment row — fine, skip silently
+                },
+                Err(e) => issues.push(format!("line {}: {e}", idx + 1)),
+            }
+        }
+        (records, issues)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lab::config::SweepConfig;
+    use crate::lab::ingest::parse_run_output;
+
+    fn sample_record() -> RunRecord {
+        let cfg = SweepConfig::from_json_text(
+            r#"{"name":"t","apps":["pagerank"],"engines":["chromatic"],
+                "transports":["inproc"],"scales":[1000]}"#,
+            false,
+        )
+        .unwrap();
+        let cell = &cfg.expand()[0];
+        let parsed = parse_run_output(
+            "lab-metric updates=100 seconds=0.25 updates_per_sec=400 bytes_per_machine=5;7\n\
+             bytes sent per machine: [5, 7]\nprobe total_rank=1.5\n",
+        )
+        .unwrap();
+        RunRecord::new("t", cell, 0, Outcome::Ok, 0.3, None, parsed)
+    }
+
+    #[test]
+    fn record_round_trips_through_jsonl() {
+        let rec = sample_record();
+        let line = rec.to_json().to_string();
+        let back = RunRecord::from_json(&Json::parse(&line).unwrap())
+            .expect("is a record")
+            .expect("parses");
+        assert_eq!(back.cell, rec.cell);
+        assert_eq!(back.outcome, Outcome::Ok);
+        assert_eq!(back.num("updates"), Some(100.0));
+        assert_eq!(back.bytes_per_machine, Some(vec![5, 7]));
+        assert_eq!(back.probes, vec![("total_rank".to_string(), 1.5)]);
+    }
+
+    #[test]
+    fn append_then_load_survives_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("lab-db-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let db = RunDb::at(dir.join("runs.jsonl"));
+        let _ = std::fs::remove_file(&db.path);
+        let rec = sample_record();
+        db.append(&rec).unwrap();
+        db.append(&rec).unwrap();
+        // Simulate a writer killed mid-append: torn half-line at EOF.
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&db.path).unwrap();
+            f.write_all(b"{\"schema\":1,\"cell\":\"half").unwrap();
+        }
+        let (records, issues) = db.load().unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(issues.len(), 1, "torn line must surface as an issue: {issues:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn header_rows_are_skipped_silently() {
+        let text = "{\"note\":\"baseline for PR 7\",\"schema\":1}\n";
+        let (records, issues) = RunDb::parse_lines(text);
+        assert!(records.is_empty());
+        assert!(issues.is_empty());
+    }
+
+    #[test]
+    fn error_rows_round_trip() {
+        let cfg = SweepConfig::from_json_text(
+            r#"{"name":"t","apps":["pagerank"],"engines":["locking"],
+                "transports":["tcp"],"scales":[500]}"#,
+            false,
+        )
+        .unwrap();
+        let cell = &cfg.expand()[0];
+        let rec = RunRecord::new(
+            "t",
+            cell,
+            1,
+            Outcome::Timeout,
+            30.0,
+            Some("killed at 30s timeout".into()),
+            Default::default(),
+        );
+        let line = rec.to_json().to_string();
+        let back = RunRecord::from_json(&Json::parse(&line).unwrap()).unwrap().unwrap();
+        assert_eq!(back.outcome, Outcome::Timeout);
+        assert_eq!(back.error.as_deref(), Some("killed at 30s timeout"));
+        assert_eq!(back.rep, 1);
+    }
+}

@@ -23,6 +23,7 @@ pub mod datagen;
 pub mod distributed;
 pub mod engine;
 pub mod graph;
+pub mod lab;
 pub mod metrics;
 pub mod partition;
 pub mod runtime;

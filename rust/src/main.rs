@@ -37,19 +37,19 @@
 //!   journals. Without an app: the two-phase partitioning quality demo.
 //! * `calibrate` — print the measured per-update costs feeding the
 //!   cluster model.
-//! * `bench-sched` — shared-engine PageRank updates/sec at 1/2/4/8
-//!   threads, work-stealing vs single-queue, written as JSON (the
-//!   `BENCH_pr2.json` perf-trajectory artifact).
-//! * `bench-engines` — the same PageRank workload through all three
-//!   engines (shared vs chromatic vs locking), written as JSON
-//!   (`BENCH_pr3.json`; also run by CI's bench-smoke job).
-//! * `bench-wire` — wire-codec encode/decode throughput plus atom-store
-//!   save/load timings, written as JSON (`BENCH_pr4.json`; also run by
-//!   CI's bench-smoke job).
-//! * `bench-net` — transport comparison: in-proc vs loopback-TCP frame
-//!   round-trip latency/throughput plus a 2-machine PageRank on each
-//!   backend, written as JSON (`BENCH_pr5.json`; also run by CI's
-//!   bench-smoke job).
+//! * `lab` — the experiment lab (`rust/src/lab/`): expand a JSON sweep
+//!   config (`--config FILE` or `--preset quick|sched|engines|wire|net|
+//!   fig6b|fig8b|all`) into a cell matrix, supervise each cell as a
+//!   child process (timeouts, retry-on-port-conflict, optional CPU
+//!   pinning), ingest stdout into structured records, and append them to
+//!   the JSONL run database (`artifacts/lab/runs.jsonl`). `lab report`
+//!   prints per-cell medians and regression deltas against the committed
+//!   baseline; `lab micro <name>` runs one micro-benchmark cell. Schema
+//!   and metrics are documented in `BENCHMARKS.md`.
+//! * `bench-sched` / `bench-engines` / `bench-wire` / `bench-net` —
+//!   historical one-shot benchmarks, now thin forwards onto the lab
+//!   presets `sched`/`engines`/`wire`/`net` (results go to the run
+//!   database, not `BENCH_prN.json`).
 //!
 //! Examples:
 //!
@@ -63,7 +63,9 @@
 //! graphlab worker --me 1 --hosts hosts.txt --atoms-dir atoms/   # then, elsewhere:
 //! graphlab run pagerank --cluster hosts.txt --atoms-dir atoms/
 //! graphlab figure fig6d --out-dir results/
-//! graphlab bench-engines --out BENCH_pr3.json
+//! graphlab lab --quick                  # 8-cell smoke matrix + report
+//! graphlab lab --config configs/fig8b.json
+//! graphlab lab report
 //! ```
 
 use std::time::Duration;
@@ -72,18 +74,22 @@ use anyhow::{bail, Context as _, Result};
 
 use graphlab::apps::{self, als, coseg, gibbs, ner, pagerank};
 use graphlab::distributed::{ClusterConfig, SnapshotTrigger, TransportKind};
-use graphlab::engine::{Engine, EngineKind, ENGINE_KINDS};
+use graphlab::engine::{Engine, EngineKind};
 use graphlab::partition::atoms::{self, AtomSet};
 use graphlab::partition::Partition;
-use graphlab::scheduler::{Policy, SchedSpec};
+use graphlab::scheduler::SchedSpec;
 use graphlab::util::cli::Args;
 use graphlab::util::config::Config;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     let mut cfg = Config::new();
-    if let Some(path) = args.get("config") {
-        cfg = Config::load(path)?;
+    // `lab` interprets --config itself (a JSON sweep file, not the
+    // INI-style run overlay every other subcommand takes).
+    if args.pos(0) != Some("lab") {
+        if let Some(path) = args.get("config") {
+            cfg = Config::load(path)?;
+        }
     }
     cfg.overlay(args.flags());
     match args.pos(0) {
@@ -112,19 +118,22 @@ fn main() -> Result<()> {
             None => partition_demo(&cfg),
         },
         Some("calibrate") => calibrate(&cfg),
-        Some("bench-sched") => bench_sched(&cfg),
-        Some("bench-engines") => bench_engines(&cfg),
-        Some("bench-wire") => bench_wire(&cfg),
-        Some("bench-net") => bench_net(&cfg),
+        Some("lab") => lab_cmd(&args, &cfg),
+        // The four historical bench subcommands forward to their lab
+        // preset sweeps (see BENCHMARKS.md for the migration table).
+        Some("bench-sched") => bench_forward("bench-sched", "sched", &cfg),
+        Some("bench-engines") => bench_forward("bench-engines", "engines", &cfg),
+        Some("bench-wire") => bench_forward("bench-wire", "wire", &cfg),
+        Some("bench-net") => bench_forward("bench-net", "net", &cfg),
         _ => {
             eprintln!(
-                "usage: graphlab <run|worker|figure|partition|calibrate|bench-sched|bench-engines|bench-wire|bench-net> [...]\n"
+                "usage: graphlab <run|worker|figure|partition|calibrate|lab|bench-*> [...]\n"
             );
             eprintln!("  graphlab run <pagerank|als|ner|coseg|gibbs> [--engine shared|chromatic|locking]");
             eprintln!("      [--machines N] [--threads N] [--scheduler fifo|priority|multiqueue|sweep|global-*]");
             eprintln!("      [--transport inproc|tcp] [--cluster HOSTS] [--pjrt] [--sweeps N] [--d N]");
-            eprintln!("      [--atoms-dir DIR] [--snapshot-every K|Ns] [--snapshot-dir DIR] [--restore DIR]");
-            eprintln!("      [--config FILE]");
+            eprintln!("      [--eps X] [--latency-us N] [--atoms-dir DIR]");
+            eprintln!("      [--snapshot-every K|Ns] [--snapshot-dir DIR] [--restore DIR] [--config FILE]");
             eprintln!("  graphlab worker [<app>] --me N --hosts HOSTS --atoms-dir DIR [--engine E]");
             eprintln!("      [--snapshot-every K|Ns] [--snapshot-dir DIR] [--restore DIR]");
             eprintln!("      (join a multi-process cluster as machine N; app inferred from the store)");
@@ -132,10 +141,15 @@ fn main() -> Result<()> {
             eprintln!("      (writes the app's data graph as an on-disk atom store; omit the app for the demo)");
             eprintln!("  graphlab figure <table2|fig1|fig5a|fig6a|fig6c|fig6d|fig7a|fig8a|fig8b|fig8c|fig8d|all>");
             eprintln!("      [--out-dir DIR]");
-            eprintln!("  graphlab bench-sched [--out FILE] [--n N] [--sweeps N] [--quick]");
-            eprintln!("  graphlab bench-engines [--out FILE] [--n N] [--sweeps N] [--machines N] [--quick]");
-            eprintln!("  graphlab bench-wire [--out FILE] [--n N] [--quick]");
-            eprintln!("  graphlab bench-net [--out FILE] [--n N] [--quick]");
+            eprintln!("  graphlab lab [--config FILE.json | --preset NAME[,NAME]|all] [--quick]");
+            eprintln!("      [--db FILE] [--inproc] [--bin PATH] [--verbose]");
+            eprintln!("      (run a sweep matrix; appends JSONL rows to artifacts/lab/runs.jsonl)");
+            eprintln!("  graphlab lab report [--db FILE] [--baseline FILE]");
+            eprintln!("      (per-cell medians + regression deltas vs the committed baseline)");
+            eprintln!("  graphlab lab micro <wire-codec|atom-store|net-pingpong-inproc|net-pingpong-tcp>");
+            eprintln!("      [--n N] [--seed S]");
+            eprintln!("  graphlab bench-sched|bench-engines|bench-wire|bench-net [--quick]");
+            eprintln!("      (forward to `lab --preset sched|engines|wire|net`)");
             bail!("missing subcommand");
         }
     }
@@ -269,7 +283,11 @@ fn run_app(app: &str, cfg: &Config, cluster: Option<ClusterConfig>) -> Result<()
                 }
             };
             let n = g.num_vertices();
-            let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-6, n, use_pjrt };
+            // --eps 0 keeps every update rescheduling its neighbors, so
+            // benchmark runs execute the full capped workload (the lab's
+            // convention); the default converges normally.
+            let eps = cfg.num_or("eps", 1e-6f32)?;
+            let prog = pagerank::PageRank { alpha: 0.15, eps, n, use_pjrt };
             run_generic(g, prog, engine, machines, threads, sweeps, cfg, atoms_dir.as_deref(), cluster,
                 vec![Box::new(pagerank::total_rank_sync())], "total_rank")
         }
@@ -422,6 +440,15 @@ where
         }
         builder = builder.restore_from(dir);
     }
+    // --latency-us N: inject one-way delivery latency (in-proc transport
+    // only) — the stand-in for WAN round trips in the Fig. 8(b)
+    // pipelined-locking sweep.
+    let latency_us = cfg.num_or("latency-us", 0u64)?;
+    if latency_us > 0 {
+        builder = builder.network(graphlab::distributed::NetworkModel {
+            latency: Duration::from_micros(latency_us),
+        });
+    }
     let exec = builder.run(g, &prog, initial)?;
     let stats = &exec.stats;
     match me {
@@ -451,6 +478,9 @@ where
             }
         }
     }
+    // The stable machine-readable stats line the experiment lab ingests
+    // (`lab-metric k=v …`; schema documented in BENCHMARKS.md).
+    println!("{}", stats.lab_metric_line());
     // Machine-parseable result line: the final cluster-wide sync value.
     // Every process of a cluster prints the same number (global syncs are
     // true cluster-wide reductions), so smoke tests can diff any worker's
@@ -580,405 +610,125 @@ fn calibrate(_cfg: &Config) -> Result<()> {
     Ok(())
 }
 
-/// Shared-engine PageRank scheduler sweep: updates/sec at 1/2/4/8 threads,
-/// single global queue (`global-fifo`) vs work stealing (`fifo` and
-/// `multiqueue`), written as JSON for the perf trajectory
-/// (`BENCH_pr2.json`). `--quick` shrinks the graph/workload for CI smoke.
-fn bench_sched(cfg: &Config) -> Result<()> {
-    let quick = cfg.bool_or("quick", false);
-    let n = cfg.num_or("n", if quick { 5_000 } else { 20_000usize })?;
-    let sweeps = cfg.num_or("sweeps", if quick { 4 } else { 12u64 })?;
-    let out_path = cfg.str_or("out", "BENCH_pr2.json");
-    let thread_counts = [1usize, 2, 4, 8];
-    let specs = [
-        SchedSpec::global(Policy::Fifo, 1),
-        SchedSpec::ws(Policy::Fifo, 1),
-        SchedSpec::ws(Policy::MultiQueue, 1),
-    ];
-
-    let edges = graphlab::datagen::web_graph(n, 8, 1);
-    println!("== bench-sched: shared-engine PageRank, n={n}, {} edges, {sweeps} sweeps ==", edges.len());
-
-    // eps = 0 keeps every update rescheduling its neighbors, so the run is
-    // scheduler-bound until the max_updates cap — exactly the contention
-    // path the scheduler work changes.
-    let prog = pagerank::PageRank { alpha: 0.15, eps: 0.0, n, use_pjrt: false };
-    struct Row {
-        scheduler: String,
-        threads: usize,
-        updates: u64,
-        seconds: f64,
-        ups: f64,
-    }
-    let mut rows: Vec<Row> = Vec::new();
-    for spec in specs {
-        for &threads in &thread_counts {
-            let g = pagerank::build(n, &edges, 0.15);
-            let exec = Engine::new(EngineKind::Shared)
-                .workers(threads)
-                .scheduler(spec)
-                .max_updates(n as u64 * sweeps)
-                .run(g, &prog, apps::all_vertices(n))?;
-            let stats = exec.stats;
-            let ups = stats.updates_per_sec();
-            println!(
-                "  {:<16} threads={threads}: {:>9} updates in {:.3}s = {:>12.0} updates/s",
-                spec.name(), stats.updates, stats.seconds, ups
-            );
-            rows.push(Row {
-                scheduler: spec.name(),
-                threads,
-                updates: stats.updates,
-                seconds: stats.seconds,
-                ups,
-            });
+/// `graphlab lab` — the experiment lab CLI (see `rust/src/lab/`):
+///
+/// * `lab [--config FILE.json | --preset NAME[,NAME]|all] [--quick]` —
+///   expand the sweep matrix and execute every cell, appending one JSONL
+///   row per run to the run database (`--db`, default
+///   `artifacts/lab/runs.jsonl`), then print the report. `--inproc`
+///   runs cells inside this process (no child spawn — sandboxed
+///   environments); `--bin PATH` points the executor at a different
+///   `graphlab` binary; `--verbose` echoes child output.
+/// * `lab report [--db FILE] [--baseline FILE]` — per-cell medians plus
+///   regression deltas against the committed baseline
+///   (`artifacts/lab/baseline.jsonl`).
+/// * `lab micro <name> [--n N] [--seed S]` — one micro-benchmark cell
+///   (the executor's child-process entry point for micro cells).
+fn lab_cmd(args: &Args, cfg: &Config) -> Result<()> {
+    use graphlab::lab::{micro, report, RunDb};
+    use graphlab::lab::store::{DEFAULT_BASELINE, DEFAULT_DB};
+    match args.pos(1) {
+        Some("report") => {
+            let db = RunDb::at(cfg.str_or("db", DEFAULT_DB));
+            let baseline = RunDb::at(cfg.str_or("baseline", DEFAULT_BASELINE));
+            print!("{}", report::report(&db, Some(&baseline))?);
+            Ok(())
         }
-    }
-
-    let ups_at = |sched: &str, threads: usize| -> f64 {
-        rows.iter()
-            .find(|r| r.scheduler == sched && r.threads == threads)
-            .map(|r| r.ups)
-            .unwrap_or(0.0)
-    };
-    let improved = ups_at("fifo", 4) > ups_at("global-fifo", 4);
-    println!(
-        "work-stealing vs single-queue at 4 threads: {}",
-        if improved { "IMPROVED" } else { "NOT improved" }
-    );
-
-    let body: Vec<String> = rows
-        .iter()
-        .map(|r| {
-            format!(
-                "    {{\"scheduler\": \"{}\", \"threads\": {}, \"updates\": {}, \"seconds\": {:.6}, \"updates_per_sec\": {:.1}}}",
-                r.scheduler, r.threads, r.updates, r.seconds, r.ups
-            )
-        })
-        .collect();
-    let json = format!(
-        "{{\n  \"bench\": \"shared-engine PageRank scheduler sweep (PR 2)\",\n  \
-         \"command\": \"graphlab bench-sched\",\n  \"n\": {n},\n  \"avg_degree\": 8,\n  \
-         \"sweeps\": {sweeps},\n  \"quick\": {quick},\n  \
-         \"ws_beats_global_at_4_threads\": {improved},\n  \"results\": [\n{}\n  ]\n}}\n",
-        body.join(",\n")
-    );
-    std::fs::write(&out_path, json).with_context(|| format!("writing {out_path}"))?;
-    println!("wrote {out_path}");
-    Ok(())
-}
-
-/// Cross-engine PageRank comparison through the unified `Engine` builder:
-/// the same workload on shared vs chromatic vs locking, updates/sec per
-/// engine, written as JSON (`BENCH_pr3.json`, reusing the `bench-sched`
-/// schema). `--quick` shrinks the workload for CI smoke.
-fn bench_engines(cfg: &Config) -> Result<()> {
-    let quick = cfg.bool_or("quick", false);
-    let n = cfg.num_or("n", if quick { 3_000 } else { 10_000usize })?;
-    let sweeps = cfg.num_or("sweeps", if quick { 3 } else { 10u64 })?;
-    let machines = cfg.num_or("machines", 4usize)?;
-    let threads = cfg.num_or("threads", 4usize)?;
-    let out_path = cfg.str_or("out", "BENCH_pr3.json");
-
-    let edges = graphlab::datagen::web_graph(n, 8, 1);
-    println!(
-        "== bench-engines: PageRank, n={n}, {} edges, {sweeps} sweeps, all engines ==",
-        edges.len()
-    );
-    // eps = 0: every update reschedules its neighbors, so every engine
-    // executes a full `sweeps`-worth of updates before hitting its cap —
-    // the same amount of numeric work on every engine.
-    let prog = pagerank::PageRank { alpha: 0.15, eps: 0.0, n, use_pjrt: false };
-    struct Row {
-        engine: &'static str,
-        parallelism: usize,
-        updates: u64,
-        seconds: f64,
-        ups: f64,
-        mbytes: u64,
-    }
-    let mut rows: Vec<Row> = Vec::new();
-    for kind in ENGINE_KINDS {
-        let g = pagerank::build(n, &edges, 0.15);
-        let exec = Engine::new(kind)
-            .workers(if kind == EngineKind::Shared { threads } else { 1 })
-            .machines(machines)
-            .seed(1)
-            .max_updates(n as u64 * sweeps)
-            .max_sweeps(sweeps)
-            .maxpending(256)
-            .run(g, &prog, apps::all_vertices(n))?;
-        let stats = exec.stats;
-        let parallelism = if kind == EngineKind::Shared { threads } else { machines };
-        let ups = stats.updates_per_sec();
-        println!(
-            "  {:<10} x{parallelism}: {:>9} updates in {:.3}s = {:>12.0} updates/s, \
-             balance {:.2}, {} MB sent",
-            kind.name(),
-            stats.updates,
-            stats.seconds,
-            ups,
-            stats.balance(),
-            stats.total_bytes() / 1_000_000
-        );
-        rows.push(Row {
-            engine: kind.name(),
-            parallelism,
-            updates: stats.updates,
-            seconds: stats.seconds,
-            ups,
-            mbytes: stats.total_bytes() / 1_000_000,
-        });
-    }
-
-    let fastest = rows
-        .iter()
-        .max_by(|a, b| a.ups.partial_cmp(&b.ups).unwrap())
-        .map(|r| r.engine)
-        .unwrap_or("none");
-    println!("fastest engine on this workload: {fastest}");
-
-    let body: Vec<String> = rows
-        .iter()
-        .map(|r| {
-            format!(
-                "    {{\"engine\": \"{}\", \"threads\": {}, \"updates\": {}, \"seconds\": {:.6}, \"updates_per_sec\": {:.1}, \"mb_sent\": {}}}",
-                r.engine, r.parallelism, r.updates, r.seconds, r.ups, r.mbytes
-            )
-        })
-        .collect();
-    let json = format!(
-        "{{\n  \"bench\": \"cross-engine PageRank comparison (PR 3, unified Engine API)\",\n  \
-         \"command\": \"graphlab bench-engines\",\n  \"n\": {n},\n  \"avg_degree\": 8,\n  \
-         \"sweeps\": {sweeps},\n  \"machines\": {machines},\n  \"quick\": {quick},\n  \
-         \"fastest_engine\": \"{fastest}\",\n  \"results\": [\n{}\n  ]\n}}\n",
-        body.join(",\n")
-    );
-    std::fs::write(&out_path, json).with_context(|| format!("writing {out_path}"))?;
-    println!("wrote {out_path}");
-    Ok(())
-}
-
-/// Wire-codec + atom-store benchmark: encode/decode throughput over a
-/// ghost-flush-shaped payload, then save/load timings for an on-disk
-/// PageRank atom store, written as JSON (`BENCH_pr4.json`; CI's
-/// bench-smoke job runs the `--quick` variant).
-fn bench_wire(cfg: &Config) -> Result<()> {
-    use graphlab::wire::{self, Wire};
-    let quick = cfg.bool_or("quick", false);
-    let n = cfg.num_or("n", if quick { 4_000 } else { 20_000usize })?;
-    let out_path = cfg.str_or("out", "BENCH_pr4.json");
-    println!("== bench-wire: codec throughput + atom-store load, n={n} ==");
-
-    // --- codec throughput over a realistic payload ---------------------
-    // The shape of a chromatic ghost flush: (vertex, version, data)
-    // triples with ALS d=20 factors (the heaviest common vertex type).
-    let d = 20usize;
-    let payload: Vec<(u32, u64, als::AlsVertex)> = (0..1024u32)
-        .map(|i| {
-            (i, i as u64, als::AlsVertex {
-                factor: vec![0.1; d],
-                sse: 1.0,
-                cnt: 3.0,
-                is_user: i % 2 == 0,
-            })
-        })
-        .collect();
-    let mut buf = Vec::new();
-    payload.encode(&mut buf);
-    let frame_bytes = buf.len();
-    let reps = if quick { 50usize } else { 400 };
-    let t0 = std::time::Instant::now();
-    for _ in 0..reps {
-        buf.clear();
-        payload.encode(&mut buf);
-    }
-    let encode_s = t0.elapsed().as_secs_f64();
-    let t0 = std::time::Instant::now();
-    let mut decoded_elems = 0usize;
-    for _ in 0..reps {
-        let v: Vec<(u32, u64, als::AlsVertex)> = wire::from_bytes(&buf)?;
-        decoded_elems += v.len();
-    }
-    let decode_s = t0.elapsed().as_secs_f64();
-    let encode_mbps = (frame_bytes * reps) as f64 / encode_s.max(1e-9) / 1e6;
-    let decode_mbps = (frame_bytes * reps) as f64 / decode_s.max(1e-9) / 1e6;
-    println!(
-        "  codec: {frame_bytes} B payload x {reps}: encode {encode_mbps:.0} MB/s, \
-         decode {decode_mbps:.0} MB/s ({decoded_elems} elements decoded)"
-    );
-
-    // --- atom store: save, per-machine load, full replay ----------------
-    let edges = graphlab::datagen::web_graph(n, 8, 1);
-    let g = pagerank::build(n, &edges, 0.15);
-    let k = if quick { 32usize } else { 128 };
-    let machines = 4usize;
-    let dir = std::env::temp_dir().join(format!("graphlab-bench-wire-{}", std::process::id()));
-    let atom_set = AtomSet::grow_bfs(&g, k, 1);
-    let t0 = std::time::Instant::now();
-    atom_set.save_atoms(&g, &dir)?;
-    let save_s = t0.elapsed().as_secs_f64();
-    let store = atoms::AtomStore::open(&dir)?;
-    let (_partition, placement) = store.place(machines);
-    let t0 = std::time::Instant::now();
-    let lg: graphlab::distributed::LocalGraph<pagerank::PrVertex, pagerank::PrEdge> =
-        graphlab::distributed::LocalGraph::from_atom_files(
-            &dir,
-            &placement.atom_to_machine,
-            0,
-        )?;
-    let local_load_s = t0.elapsed().as_secs_f64();
-    let t0 = std::time::Instant::now();
-    let (g2, _) = atoms::load_graph::<pagerank::PrVertex, pagerank::PrEdge>(&dir)?;
-    let full_load_s = t0.elapsed().as_secs_f64();
-    anyhow::ensure!(
-        g2.num_vertices() == g.num_vertices() && g2.num_edges() == g.num_edges(),
-        "atom-store round trip changed the graph shape"
-    );
-    std::fs::remove_dir_all(&dir).ok();
-    println!(
-        "  atoms: {k} journals for n={n}: save {save_s:.3}s, machine-0 load \
-         {local_load_s:.3}s ({} owned vertices), full replay {full_load_s:.3}s",
-        lg.owned
-    );
-
-    let json = format!(
-        "{{\n  \"bench\": \"wire codec + on-disk atom store (PR 4)\",\n  \
-         \"command\": \"graphlab bench-wire\",\n  \"n\": {n},\n  \"atoms\": {k},\n  \
-         \"machines\": {machines},\n  \"quick\": {quick},\n  \"results\": {{\n    \
-         \"codec_payload_bytes\": {frame_bytes},\n    \"codec_reps\": {reps},\n    \
-         \"encode_mb_per_sec\": {encode_mbps:.1},\n    \"decode_mb_per_sec\": {decode_mbps:.1},\n    \
-         \"atoms_save_seconds\": {save_s:.6},\n    \"machine0_load_seconds\": {local_load_s:.6},\n    \
-         \"full_replay_seconds\": {full_load_s:.6}\n  }}\n}}\n"
-    );
-    std::fs::write(&out_path, json).with_context(|| format!("writing {out_path}"))?;
-    println!("wrote {out_path}");
-    Ok(())
-}
-
-/// Transport comparison: in-proc channels vs real loopback-TCP sockets —
-/// framing-layer ping-pong round trips, then a 2-machine chromatic
-/// PageRank on each backend — written as JSON (`BENCH_pr5.json`; CI's
-/// bench-smoke job runs the `--quick` variant).
-fn bench_net(cfg: &Config) -> Result<()> {
-    use graphlab::distributed::{Network, NetworkModel};
-    let quick = cfg.bool_or("quick", false);
-    let n = cfg.num_or("n", if quick { 3_000 } else { 10_000usize })?;
-    let sweeps = cfg.num_or("sweeps", if quick { 3 } else { 10u64 })?;
-    let reps = cfg.num_or("reps", if quick { 500usize } else { 5_000 })?;
-    let out_path = cfg.str_or("out", "BENCH_pr5.json");
-    println!("== bench-net: in-proc vs loopback-TCP, {reps} round trips + PageRank n={n} ==");
-
-    // --- framing-layer ping-pong: 4 KiB frames between 2 machines -------
-    let payload = vec![7u8; 4096];
-    // The bytes NetStats actually counts per frame: 4-byte frame prefix
-    // + the Vec codec's own length prefix + the payload.
-    let frame_bytes = graphlab::wire::encoded_len(&payload) + 4;
-    struct RtRow {
-        transport: &'static str,
-        rt_us: f64,
-        mbps: f64,
-    }
-    let mut rt_rows: Vec<RtRow> = Vec::new();
-    for transport in [TransportKind::InProc, TransportKind::Tcp] {
-        let net: Network<Vec<u8>> = match transport {
-            TransportKind::InProc => Network::new(2, NetworkModel::default()),
-            TransportKind::Tcp => Network::tcp_loopback(2)?,
-        };
-        let mut eps = net.into_endpoints();
-        let ep1 = eps.pop().unwrap();
-        let mut ep0 = eps.pop().unwrap();
-        let echo = std::thread::spawn(move || {
-            let mut ep1 = ep1;
-            for _ in 0..reps {
-                let r = ep1.recv_timeout(Duration::from_secs(30)).expect("ping lost");
-                ep1.send(0, r.msg);
+        Some("micro") => {
+            let name = args
+                .pos(2)
+                .context("lab micro needs a name (wire-codec|atom-store|net-pingpong-*)")?;
+            micro::run_micro(name, cfg.num_or("n", 4_000u64)?, cfg.num_or("seed", 1u64)?)
+        }
+        Some(other) => bail!("unknown lab subcommand '{other}' (report|micro, or flags)"),
+        None => {
+            let mut names: Vec<String> = Vec::new();
+            if let Some(list) = cfg.get("preset") {
+                if list == "true" {
+                    bail!(
+                        "--preset needs a name: {} or 'all'",
+                        graphlab::lab::config::PRESETS.join("|")
+                    );
+                }
+                for name in list.split(',') {
+                    if name == "all" {
+                        names.extend(
+                            graphlab::lab::config::PRESET_ALL.iter().map(|s| s.to_string()),
+                        );
+                    } else {
+                        names.push(name.to_string());
+                    }
+                }
             }
-        });
-        let t0 = std::time::Instant::now();
-        for _ in 0..reps {
-            ep0.send(1, payload.clone());
-            ep0.recv_timeout(Duration::from_secs(30)).expect("pong lost");
+            run_lab(&names, cfg)
         }
-        let secs = t0.elapsed().as_secs_f64();
-        echo.join().map_err(|_| anyhow::anyhow!("echo thread panicked"))?;
-        let rt_us = secs / reps as f64 * 1e6;
-        let mbps = (frame_bytes * 2 * reps) as f64 / secs.max(1e-9) / 1e6;
-        println!(
-            "  {:<7} frame round trip: {rt_us:>8.1} µs ({mbps:>8.1} MB/s both ways)",
-            transport.name()
-        );
-        rt_rows.push(RtRow { transport: transport.name(), rt_us, mbps });
     }
+}
 
-    // --- 2-machine chromatic PageRank: same workload, both backends -----
-    let edges = graphlab::datagen::web_graph(n, 8, 1);
-    // eps = 0: every update reschedules its neighbors, so both backends
-    // execute identical work; only the substrate differs.
-    let prog = pagerank::PageRank { alpha: 0.15, eps: 0.0, n, use_pjrt: false };
-    struct PrRow {
-        transport: &'static str,
-        updates: u64,
-        seconds: f64,
-        ups: f64,
-        bytes: u64,
-    }
-    let mut pr_rows: Vec<PrRow> = Vec::new();
-    for transport in [TransportKind::InProc, TransportKind::Tcp] {
-        let g = pagerank::build(n, &edges, 0.15);
-        let exec = Engine::new(EngineKind::Chromatic)
-            .machines(2)
-            .transport(transport)
-            .max_sweeps(sweeps)
-            .sync(pagerank::total_rank_sync())
-            .run(g, &prog, apps::all_vertices(n))?;
-        let s = exec.stats;
-        let ups = s.updates_per_sec();
-        println!(
-            "  {:<7} pagerank x2 machines: {:>9} updates in {:.3}s = {:>12.0} updates/s, \
-             {} bytes sent",
-            transport.name(),
-            s.updates,
-            s.seconds,
-            ups,
-            s.total_bytes()
+/// Execute lab sweeps: the named presets, a `--config FILE.json`, or
+/// (with neither) the `quick` preset. Appends to the run database and
+/// prints the report afterwards.
+fn run_lab(presets: &[String], cfg: &Config) -> Result<()> {
+    use graphlab::lab::store::{DEFAULT_BASELINE, DEFAULT_DB};
+    use graphlab::lab::{report, run_sweep, ExecOpts, RunDb, SweepConfig, SweepSummary};
+    let quick = cfg.bool_or("quick", false);
+    let mut sweeps: Vec<SweepConfig> = Vec::new();
+    if let Some(path) = cfg.get("config") {
+        if path == "true" {
+            bail!("--config needs a JSON sweep file (see configs/*.json)");
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading sweep config {path}"))?;
+        sweeps.push(
+            SweepConfig::from_json_text(&text, quick)
+                .with_context(|| format!("sweep config {path}"))?,
         );
-        pr_rows.push(PrRow {
-            transport: transport.name(),
-            updates: s.updates,
-            seconds: s.seconds,
-            ups,
-            bytes: s.total_bytes(),
-        });
     }
-
-    let rt_body: Vec<String> = rt_rows
-        .iter()
-        .map(|r| {
-            format!(
-                "    {{\"transport\": \"{}\", \"round_trip_us\": {:.2}, \"mb_per_sec\": {:.1}}}",
-                r.transport, r.rt_us, r.mbps
-            )
-        })
-        .collect();
-    let pr_body: Vec<String> = pr_rows
-        .iter()
-        .map(|r| {
-            format!(
-                "    {{\"transport\": \"{}\", \"updates\": {}, \"seconds\": {:.6}, \"updates_per_sec\": {:.1}, \"bytes_sent\": {}}}",
-                r.transport, r.updates, r.seconds, r.ups, r.bytes
-            )
-        })
-        .collect();
-    let json = format!(
-        "{{\n  \"bench\": \"transport comparison: in-proc vs loopback TCP (PR 5)\",\n  \
-         \"command\": \"graphlab bench-net\",\n  \"n\": {n},\n  \"sweeps\": {sweeps},\n  \
-         \"frame_bytes\": {frame_bytes},\n  \"round_trips\": {reps},\n  \"quick\": {quick},\n  \
-         \"frame_round_trips\": [\n{}\n  ],\n  \"pagerank_2_machines\": [\n{}\n  ]\n}}\n",
-        rt_body.join(",\n"),
-        pr_body.join(",\n")
+    for name in presets {
+        sweeps.push(SweepConfig::preset(name, quick)?);
+    }
+    if sweeps.is_empty() {
+        // No config, no presets: the quick smoke matrix.
+        sweeps.push(SweepConfig::preset("quick", quick)?);
+    }
+    let db = RunDb::at(cfg.str_or("db", DEFAULT_DB));
+    let opts = ExecOpts {
+        db: db.clone(),
+        bin: cfg.get("bin").filter(|v| *v != "true").map(std::path::PathBuf::from),
+        inproc: cfg.bool_or("inproc", false),
+        echo: cfg.bool_or("verbose", false),
+    };
+    let mut total = SweepSummary::default();
+    for sweep in &sweeps {
+        let s = run_sweep(sweep, &opts)?;
+        total.cells += s.cells;
+        total.runs += s.runs;
+        total.ok += s.ok;
+        total.timeouts += s.timeouts;
+        total.errors += s.errors;
+    }
+    println!(
+        "lab: {} cell(s), {} run(s): {} ok, {} timeout, {} error -> {}",
+        total.cells,
+        total.runs,
+        total.ok,
+        total.timeouts,
+        total.errors,
+        db.path.display()
     );
-    std::fs::write(&out_path, json).with_context(|| format!("writing {out_path}"))?;
-    println!("wrote {out_path}");
+    let baseline = RunDb::at(cfg.str_or("baseline", DEFAULT_BASELINE));
+    print!("{}", report::report(&db, Some(&baseline))?);
     Ok(())
+}
+
+/// The historical `bench-sched`/`bench-engines`/`bench-wire`/`bench-net`
+/// subcommands, kept as thin forwards onto their lab preset sweeps.
+/// Results now land in the run database instead of `BENCH_prN.json`
+/// files; BENCHMARKS.md carries the migration table.
+fn bench_forward(old: &str, preset: &str, cfg: &Config) -> Result<()> {
+    println!(
+        "note: `graphlab {old}` now forwards to `graphlab lab --preset {preset}` — \
+         results append to the run database (see BENCHMARKS.md)"
+    );
+    run_lab(&[preset.to_string()], cfg)
 }
