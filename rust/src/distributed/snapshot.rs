@@ -62,16 +62,28 @@ impl SnapshotTrigger {
     /// update count, an integer with an `s` suffix is seconds.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         if let Some(secs) = s.strip_suffix('s') {
-            let secs: u64 = secs
-                .parse()
-                .with_context(|| format!("--snapshot-every: bad seconds value '{s}'"))?;
-            anyhow::ensure!(secs > 0, "--snapshot-every: interval must be positive");
+            let secs: u64 = secs.parse().with_context(|| {
+                format!(
+                    "--snapshot-every: bad seconds value '{s}' \
+                     (accepted forms: 'K' updates, e.g. 50000, or 'Ns' seconds, e.g. 10s)"
+                )
+            })?;
+            anyhow::ensure!(
+                secs > 0,
+                "--snapshot-every: interval must be positive (accepted forms: 'K' | 'Ns')"
+            );
             Ok(SnapshotTrigger::Interval(Duration::from_secs(secs)))
         } else {
             let k: u64 = s.parse().with_context(|| {
-                format!("--snapshot-every: expected an update count or '<secs>s', got '{s}'")
+                format!(
+                    "--snapshot-every: unrecognized value '{s}' \
+                     (accepted forms: 'K' updates, e.g. 50000, or 'Ns' seconds, e.g. 10s)"
+                )
             })?;
-            anyhow::ensure!(k > 0, "--snapshot-every: update count must be positive");
+            anyhow::ensure!(
+                k > 0,
+                "--snapshot-every: update count must be positive (accepted forms: 'K' | 'Ns')"
+            );
             Ok(SnapshotTrigger::Updates(k))
         }
     }
@@ -534,6 +546,10 @@ mod tests {
         for bad in ["", "0", "0s", "-3", "5m", "s"] {
             assert!(SnapshotTrigger::parse(bad).is_err(), "'{bad}' should not parse");
         }
+        // The diagnostic must teach the accepted grammar ('K' | 'Ns').
+        let why = format!("{:#}", SnapshotTrigger::parse("5m").unwrap_err());
+        assert!(why.contains("accepted forms"), "unhelpful error: {why}");
+        assert!(why.contains("'Ns'") || why.contains("10s"), "grammar not named: {why}");
     }
 
     #[test]

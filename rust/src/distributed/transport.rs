@@ -648,6 +648,13 @@ impl TcpConfig {
     }
 }
 
+/// Role byte: this connection belongs to a cluster machine (a full-mesh
+/// peer that will speak the engine protocol).
+pub const ROLE_WORKER: u8 = 0;
+/// Role byte: this connection is a serving-mode client (speaks the
+/// `serve` request/reply grammar; never joins the mesh).
+pub const ROLE_CLIENT: u8 = 1;
+
 /// The decoded contents of a connection handshake.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Handshake {
@@ -659,6 +666,9 @@ pub struct Handshake {
     pub wire_version: u32,
     /// Sender's application type tag.
     pub tag: String,
+    /// Connection role: [`ROLE_WORKER`] (mesh peer) or [`ROLE_CLIENT`]
+    /// (serve-mode client).
+    pub role: u8,
 }
 
 /// Write a handshake (public so tests and diagnostic tooling can speak
@@ -669,6 +679,7 @@ pub fn write_handshake(
     machines: usize,
     wire_version: u32,
     tag: &str,
+    role: u8,
 ) -> std::io::Result<()> {
     let mut body = Vec::with_capacity(64);
     TCP_MAGIC.encode(&mut body);
@@ -676,6 +687,7 @@ pub fn write_handshake(
     (sender as u32).encode(&mut body);
     (machines as u32).encode(&mut body);
     tag.to_string().encode(&mut body);
+    role.encode(&mut body);
     let mut msg = Vec::with_capacity(body.len() + 4);
     (body.len() as u32).encode(&mut msg);
     msg.extend_from_slice(&body);
@@ -710,11 +722,13 @@ pub fn read_handshake(stream: &mut TcpStream) -> std::io::Result<Handshake> {
         let sender = u32::decode(&mut input)?;
         let machines = u32::decode(&mut input)?;
         let tag = String::decode(&mut input)?;
+        let role = u8::decode(&mut input)?;
         Ok(Handshake {
             sender,
             machines,
             wire_version,
             tag,
+            role,
         })
     })();
     parsed.map_err(|e| io_invalid(format!("handshake decode failed: {e}")))
@@ -856,7 +870,14 @@ impl TcpBound {
             let mut stream = connect_retry(addr, deadline)
                 .with_context(|| format!("machine {}: connecting to machine {dst} at {addr}", self.me))?;
             stream.set_nodelay(true).ok();
-            write_handshake(&mut stream, self.me, self.cfg.machines, WIRE_VERSION, &self.cfg.tag)
+            write_handshake(
+                &mut stream,
+                self.me,
+                self.cfg.machines,
+                WIRE_VERSION,
+                &self.cfg.tag,
+                ROLE_WORKER,
+            )
                 .with_context(|| format!("machine {}: handshake to machine {dst}", self.me))?;
             stream.set_read_timeout(Some(self.cfg.connect_timeout))?;
             let accepted = read_ack(&mut stream).with_context(|| {
@@ -1033,6 +1054,12 @@ fn handshake_then_read(
         Some(format!(
             "cluster size {} != this cluster's {}",
             hs.machines, cfg.machines
+        ))
+    } else if hs.role != ROLE_WORKER {
+        Some(format!(
+            "connection role {} is not a cluster machine — serve clients must \
+             dial the frontend's --listen port, not the worker mesh",
+            hs.role
         ))
     } else if hs.tag != cfg.tag {
         Some(format!(
@@ -1316,15 +1343,20 @@ mod tests {
         let bound = TcpBound::bind(0, "127.0.0.1:0", TcpConfig::new(2, "right-tag")).unwrap();
         let addr = bound.local_addr();
         let mut s = TcpStream::connect(addr).unwrap();
-        write_handshake(&mut s, 1, 2, WIRE_VERSION, "wrong-tag").unwrap();
+        write_handshake(&mut s, 1, 2, WIRE_VERSION, "wrong-tag", ROLE_WORKER).unwrap();
         s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
         let accepted = read_ack(&mut s).unwrap_or(false);
         assert!(!accepted, "wrong tag must be rejected");
         // The right tag on a fresh connection is accepted.
         let mut s2 = TcpStream::connect(addr).unwrap();
-        write_handshake(&mut s2, 1, 2, WIRE_VERSION, "right-tag").unwrap();
+        write_handshake(&mut s2, 1, 2, WIRE_VERSION, "right-tag", ROLE_WORKER).unwrap();
         s2.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
         assert!(read_ack(&mut s2).unwrap());
+        // A serve client dialing the worker mesh is rejected by role.
+        let mut s3 = TcpStream::connect(addr).unwrap();
+        write_handshake(&mut s3, 1, 2, WIRE_VERSION, "right-tag", ROLE_CLIENT).unwrap();
+        s3.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        assert!(!read_ack(&mut s3).unwrap_or(false), "client role must be rejected by the mesh");
     }
 
     /// `[u32 len][payload]` helper for the raw-frame tests.

@@ -26,13 +26,14 @@ pub const MICRO_NAMES: [&str; 4] =
 
 /// Shipped preset names, in `--preset all` order. Each maps 1:1 onto a
 /// `configs/<name>.json` file embedded at compile time.
-pub const PRESETS: [&str; 7] =
-    ["quick", "sched", "engines", "wire", "net", "fig6b", "fig8b"];
+pub const PRESETS: [&str; 8] =
+    ["quick", "sched", "engines", "wire", "net", "serve", "fig6b", "fig8b"];
 
 /// The presets `--preset all` expands to: the four historical bench
 /// subcommands' workloads (`bench-sched`/`bench-engines`/`bench-wire`/
-/// `bench-net` → `sched`/`engines`/`wire`/`net`).
-pub const PRESET_ALL: [&str; 4] = ["sched", "engines", "wire", "net"];
+/// `bench-net` → `sched`/`engines`/`wire`/`net`) plus the serving-mode
+/// sweep (`bench-serve` → `serve`).
+pub const PRESET_ALL: [&str; 5] = ["sched", "engines", "wire", "net", "serve"];
 
 /// The JSON text of a shipped preset config.
 pub fn preset_text(name: &str) -> Result<&'static str> {
@@ -42,6 +43,7 @@ pub fn preset_text(name: &str) -> Result<&'static str> {
         "engines" => include_str!("../../../configs/engines.json"),
         "wire" => include_str!("../../../configs/wire.json"),
         "net" => include_str!("../../../configs/net.json"),
+        "serve" => include_str!("../../../configs/serve.json"),
         "fig6b" => include_str!("../../../configs/fig6b.json"),
         "fig8b" => include_str!("../../../configs/fig8b.json"),
         other => bail!(
@@ -75,6 +77,10 @@ pub struct SweepConfig {
     pub maxpendings: Vec<usize>,
     /// Micro-benchmark cells (crossed with `scales` only).
     pub micros: Vec<String>,
+    /// Serving-mode mutation rates (mutations per batch). A non-empty
+    /// list adds `bench-serve` cells crossing transports × machines ×
+    /// scales × mutrates.
+    pub mutrates: Vec<u64>,
     /// Sweep budget per run (`--sweeps`).
     pub sweeps: u64,
     /// Seed for datagen/partitioning/schedulers (`--seed`).
@@ -107,6 +113,7 @@ impl Default for SweepConfig {
             schedulers: vec!["default".into()],
             maxpendings: vec![64],
             micros: vec![],
+            mutrates: vec![],
             sweeps: 10,
             seed: 1,
             eps: None,
@@ -132,8 +139,11 @@ impl SweepConfig {
                     .context("in the \"quick\" overlay")?;
             }
         }
-        if cfg.apps.is_empty() && cfg.micros.is_empty() {
-            bail!("config '{}' lists no apps and no micros: nothing to run", cfg.name);
+        if cfg.apps.is_empty() && cfg.micros.is_empty() && cfg.mutrates.is_empty() {
+            bail!(
+                "config '{}' lists no apps, no micros, and no mutrates: nothing to run",
+                cfg.name
+            );
         }
         if !cfg.apps.is_empty() && cfg.engines.is_empty() {
             bail!("config '{}' lists apps but no engines", cfg.name);
@@ -187,6 +197,7 @@ impl SweepConfig {
                                             scale,
                                             scheduler: sched.clone(),
                                             maxpending,
+                                            mutrate: 0,
                                             sweeps: self.sweeps,
                                             seed: self.seed,
                                             eps: self.eps,
@@ -218,6 +229,7 @@ impl SweepConfig {
                     scale,
                     scheduler: "-".into(),
                     maxpending: 0,
+                    mutrate: 0,
                     sweeps: self.sweeps,
                     seed: self.seed,
                     eps: None,
@@ -227,6 +239,35 @@ impl SweepConfig {
                 if !seen.contains(&id) {
                     seen.push(id);
                     cells.push(cell);
+                }
+            }
+        }
+        for &mutrate in &self.mutrates {
+            for transport in &self.transports {
+                for &machines in &self.machines {
+                    for &scale in &self.scales {
+                        let cell = Cell {
+                            kind: CellKind::Serve,
+                            app: "serve".into(),
+                            engine: "-".into(),
+                            transport: transport.clone(),
+                            machines,
+                            threads: 1,
+                            scale,
+                            scheduler: "-".into(),
+                            maxpending: 0,
+                            mutrate,
+                            sweeps: self.sweeps,
+                            seed: self.seed,
+                            eps: self.eps,
+                            latency_us: None,
+                        };
+                        let id = cell.id();
+                        if !seen.contains(&id) {
+                            seen.push(id);
+                            cells.push(cell);
+                        }
+                    }
                 }
             }
         }
@@ -256,6 +297,7 @@ fn apply_fields(cfg: &mut SweepConfig, obj: &Json, top_level: bool) -> Result<()
             "schedulers" => cfg.schedulers = str_list(val, key)?,
             "maxpendings" => cfg.maxpendings = usize_list(val, key)?,
             "micros" => cfg.micros = str_list(val, key)?,
+            "mutrates" => cfg.mutrates = u64_list(val, key)?,
             "sweeps" => cfg.sweeps = u64_field(val, key)?,
             "seed" => cfg.seed = u64_field(val, key)?,
             "eps" => {
@@ -329,6 +371,9 @@ pub enum CellKind {
     Engine,
     /// A micro-benchmark (`graphlab lab micro <name> …`).
     Micro,
+    /// A serving-mode bench (`graphlab bench-serve …`): resident cluster,
+    /// streaming mutation batches, query latency.
+    Serve,
 }
 
 /// One work item of a sweep: a fully-resolved point in the matrix.
@@ -352,6 +397,8 @@ pub struct Cell {
     pub scheduler: String,
     /// Lock-pipelining depth (locking engine only; 0 where ignored).
     pub maxpending: usize,
+    /// Mutations per batch (serve cells only; 0 where ignored).
+    pub mutrate: u64,
     /// Sweep budget.
     pub sweeps: u64,
     /// Seed.
@@ -393,6 +440,10 @@ impl Cell {
     pub fn id(&self) -> String {
         match self.kind {
             CellKind::Micro => format!("micro/{}/n{}", self.app, self.scale),
+            CellKind::Serve => format!(
+                "serve/{}/m{}/n{}/mr{}/s{}",
+                self.transport, self.machines, self.scale, self.mutrate, self.sweeps
+            ),
             CellKind::Engine => {
                 let lat = match self.latency_us {
                     Some(us) => format!("/lat{us}us"),
@@ -420,6 +471,8 @@ impl Cell {
     pub fn parallelism(&self) -> usize {
         match (self.kind, self.engine.as_str()) {
             (CellKind::Micro, _) => 2, // ping-pong echo thread at most
+            // One thread per machine plus the bench driver itself.
+            (CellKind::Serve, _) => self.machines + 1,
             (_, "shared") => self.threads,
             (_, "chromatic") => self.machines * self.threads,
             (_, "locking") => self.machines,
@@ -436,6 +489,19 @@ impl Cell {
                 args.extend(["lab".into(), "micro".into(), self.app.clone()]);
                 args.extend(["--n".into(), self.scale.to_string()]);
                 args.extend(["--seed".into(), self.seed.to_string()]);
+            }
+            CellKind::Serve => {
+                args.push("bench-serve".into());
+                args.extend(["--machines".into(), self.machines.to_string()]);
+                args.extend(["--transport".into(), self.transport.clone()]);
+                args.extend(["--n".into(), self.scale.to_string()]);
+                args.extend(["--mutrate".into(), self.mutrate.to_string()]);
+                // The sweep budget doubles as the batch count.
+                args.extend(["--batches".into(), self.sweeps.to_string()]);
+                args.extend(["--seed".into(), self.seed.to_string()]);
+                if let Some(eps) = self.eps {
+                    args.extend(["--eps".into(), format!("{eps}")]);
+                }
             }
             CellKind::Engine => {
                 args.extend(["run".into(), self.app.clone()]);
@@ -568,6 +634,28 @@ mod tests {
         assert_eq!(cells.len(), 4);
         assert!(cells.iter().all(|c| c.kind == CellKind::Micro));
         assert_eq!(cells[0].argv()[0..3], ["lab", "micro", "wire-codec"]);
+    }
+
+    #[test]
+    fn serve_cells_cross_transports_machines_scales_mutrates() {
+        let cfg = SweepConfig::from_json_text(
+            r#"{"name":"srv","mutrates":[16,256],"transports":["inproc","tcp"],
+                "machines":[2,3],"scales":[1000],"sweeps":4,"eps":1e-7}"#,
+            false,
+        )
+        .unwrap();
+        let cells = cfg.expand();
+        assert_eq!(cells.len(), 8); // 2 mutrates × 2 transports × 2 machines
+        assert!(cells.iter().all(|c| c.kind == CellKind::Serve));
+        let argv = cells[0].argv();
+        assert_eq!(argv[0], "bench-serve");
+        assert!(argv.contains(&"--mutrate".to_string()));
+        assert!(argv.contains(&"--eps".to_string()));
+        let ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+        assert!(ids[0].starts_with("serve/"), "{}", ids[0]);
+        let mut dedup = ids.clone();
+        dedup.dedup();
+        assert_eq!(ids.len(), dedup.len(), "duplicate serve cell ids: {ids:?}");
     }
 
     #[test]

@@ -291,8 +291,9 @@ fn join_reader(h: Option<std::thread::JoinHandle<String>>) -> String {
 
 /// Run one cell inside this process and synthesize the same stdout text
 /// a child would have printed, so ingestion is identical. Supports micro
-/// cells and PageRank engine cells (the quick matrix); anything else
-/// reports an error record directing the caller at child mode.
+/// cells, serve cells, and PageRank engine cells (the quick matrix);
+/// anything else reports an error record directing the caller at child
+/// mode.
 fn run_inproc(cell: &Cell) -> (Outcome, f64, Option<String>, String) {
     let start = Instant::now();
     let result = run_inproc_inner(cell);
@@ -311,6 +312,19 @@ fn run_inproc_inner(cell: &Cell) -> Result<String> {
 
     if cell.kind == CellKind::Micro {
         let line = super::micro::micro_line(&cell.app, cell.scale, cell.seed)?;
+        return Ok(format!("{line}\n"));
+    }
+    if cell.kind == CellKind::Serve {
+        let line = crate::serve::bench::run_bench(&crate::serve::bench::BenchOpts {
+            n: cell.scale as usize,
+            machines: cell.machines,
+            transport: TransportKind::parse(&cell.transport)?,
+            mutrate: cell.mutrate as usize,
+            batches: cell.sweeps.max(1) as usize,
+            eps: cell.eps.map_or(1e-7, |e| e as f32),
+            seed: cell.seed,
+            ..Default::default()
+        })?;
         return Ok(format!("{line}\n"));
     }
     if cell.app != "pagerank" {

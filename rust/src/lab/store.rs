@@ -106,6 +106,7 @@ impl RunRecord {
             kind: match cell.kind {
                 CellKind::Engine => "engine".into(),
                 CellKind::Micro => "micro".into(),
+                CellKind::Serve => "serve".into(),
             },
             app: cell.app.clone(),
             outcome,

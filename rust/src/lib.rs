@@ -28,6 +28,7 @@ pub mod metrics;
 pub mod partition;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod wire;

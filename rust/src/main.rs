@@ -39,13 +39,26 @@
 //!   cluster model.
 //! * `lab` — the experiment lab (`rust/src/lab/`): expand a JSON sweep
 //!   config (`--config FILE` or `--preset quick|sched|engines|wire|net|
-//!   fig6b|fig8b|all`) into a cell matrix, supervise each cell as a
+//!   serve|fig6b|fig8b|all`) into a cell matrix, supervise each cell as a
 //!   child process (timeouts, retry-on-port-conflict, optional CPU
 //!   pinning), ingest stdout into structured records, and append them to
 //!   the JSONL run database (`artifacts/lab/runs.jsonl`). `lab report`
 //!   prints per-cell medians and regression deltas against the committed
 //!   baseline; `lab micro <name>` runs one micro-benchmark cell. Schema
 //!   and metrics are documented in `BENCHMARKS.md`.
+//! * `serve` — long-lived serving cluster (DESIGN.md §Serving): converge
+//!   PageRank, then stay resident answering client queries and applying
+//!   streaming graph mutations with incremental recomputation (only the
+//!   dirtied neighborhood is rescheduled). In-proc by default
+//!   (`--machines N`, threads), or one machine per process with
+//!   `--cluster HOSTS --me N --atoms-dir DIR`. Machine 0 (the frontend)
+//!   binds the client listener at `--listen` (default `127.0.0.1:7700`).
+//! * `client` — one RPC against a serving frontend (`--addr HOST:PORT`):
+//!   `query V`, `add-edge U V W`, `rm-edge U V`, `set-weight U V W`,
+//!   `touch V`, `stats`, `shutdown`.
+//! * `bench-serve` — serving-mode benchmark: mutation throughput +
+//!   query latency on an in-proc cluster (the lab `serve` preset's child
+//!   entry point).
 //! * `bench-sched` / `bench-engines` / `bench-wire` / `bench-net` —
 //!   historical one-shot benchmarks, now thin forwards onto the lab
 //!   presets `sched`/`engines`/`wire`/`net` (results go to the run
@@ -63,6 +76,9 @@
 //! graphlab worker --me 1 --hosts hosts.txt --atoms-dir atoms/   # then, elsewhere:
 //! graphlab run pagerank --cluster hosts.txt --atoms-dir atoms/
 //! graphlab figure fig6d --out-dir results/
+//! graphlab serve --machines 3 --n 100000 --listen 127.0.0.1:7700   # resident cluster
+//! graphlab client query 42 --addr 127.0.0.1:7700
+//! graphlab client add-edge 7 99 0.11 --addr 127.0.0.1:7700
 //! graphlab lab --quick                  # 8-cell smoke matrix + report
 //! graphlab lab --config configs/fig8b.json
 //! graphlab lab report
@@ -119,6 +135,19 @@ fn main() -> Result<()> {
         },
         Some("calibrate") => calibrate(&cfg),
         Some("lab") => lab_cmd(&args, &cfg),
+        Some("serve") => {
+            let cluster = match cfg.get("cluster") {
+                Some(path) if path != "true" => Some(ClusterConfig {
+                    me: cfg.num_or("me", 0usize)?,
+                    hosts: read_hosts(path)?,
+                }),
+                Some(_) => bail!("--cluster needs a hosts file (one host:port per machine)"),
+                None => None,
+            };
+            serve_cmd(&cfg, cluster)
+        }
+        Some("client") => client_cmd(&args, &cfg),
+        Some("bench-serve") => bench_serve(&cfg),
         // The four historical bench subcommands forward to their lab
         // preset sweeps (see BENCHMARKS.md for the migration table).
         Some("bench-sched") => bench_forward("bench-sched", "sched", &cfg),
@@ -127,7 +156,7 @@ fn main() -> Result<()> {
         Some("bench-net") => bench_forward("bench-net", "net", &cfg),
         _ => {
             eprintln!(
-                "usage: graphlab <run|worker|figure|partition|calibrate|lab|bench-*> [...]\n"
+                "usage: graphlab <run|worker|serve|client|figure|partition|calibrate|lab|bench-*> [...]\n"
             );
             eprintln!("  graphlab run <pagerank|als|ner|coseg|gibbs> [--engine shared|chromatic|locking]");
             eprintln!("      [--machines N] [--threads N] [--scheduler fifo|priority|multiqueue|sweep|global-*]");
@@ -148,6 +177,14 @@ fn main() -> Result<()> {
             eprintln!("      (per-cell medians + regression deltas vs the committed baseline)");
             eprintln!("  graphlab lab micro <wire-codec|atom-store|net-pingpong-inproc|net-pingpong-tcp>");
             eprintln!("      [--n N] [--seed S]");
+            eprintln!("  graphlab serve [--machines N] [--n N] [--listen HOST:PORT] [--eps X]");
+            eprintln!("      [--transport inproc|tcp] [--cluster HOSTS --me N --atoms-dir DIR]");
+            eprintln!("      (resident serving cluster: queries + streaming mutations with");
+            eprintln!("       incremental recomputation; machine 0 hosts the client port)");
+            eprintln!("  graphlab client <query V|add-edge U V W|rm-edge U V|set-weight U V W|");
+            eprintln!("      touch V|stats|shutdown> [--addr HOST:PORT]");
+            eprintln!("  graphlab bench-serve [--machines N] [--n N] [--mutrate N] [--batches N]");
+            eprintln!("      [--queries N] [--transport inproc|tcp] [--eps X] [--seed S]");
             eprintln!("  graphlab bench-sched|bench-engines|bench-wire|bench-net [--quick]");
             eprintln!("      (forward to `lab --preset sched|engines|wire|net`)");
             bail!("missing subcommand");
@@ -731,4 +768,204 @@ fn bench_forward(old: &str, preset: &str, cfg: &Config) -> Result<()> {
          results append to the run database (see BENCHMARKS.md)"
     );
     run_lab(&[preset.to_string()], cfg)
+}
+
+/// `graphlab serve`: converge a PageRank graph, then stay resident
+/// serving queries and mutations over TCP (DESIGN.md §Serving).
+///
+/// In-proc mode (default) runs all `--machines N` machines as threads
+/// and binds the client listener at `--listen` (default
+/// `127.0.0.1:7700`; `:0` picks a free port). With `--cluster HOSTS
+/// --me N --atoms-dir DIR` this process is machine N of a multi-process
+/// cluster — machine 0 (the frontend) binds the listener, the others
+/// join the worker mesh; every process must load the same atom store so
+/// ownership agrees.
+fn serve_cmd(cfg: &Config, cluster: Option<ClusterConfig>) -> Result<()> {
+    use graphlab::serve::client::spawn_listener;
+    use graphlab::serve::engine::{serve_machine, ServeOpts, ServeSession, FRONTEND};
+
+    let seed = cfg.num_or("seed", 1u64)?;
+    let listen = cfg.str_or("listen", "127.0.0.1:7700");
+    let machines = match &cluster {
+        Some(c) => c.hosts.len(),
+        None => cfg.num_or("machines", 2usize)?,
+    };
+    let mut opts = ServeOpts {
+        machines,
+        eps: cfg.num_or("eps", 1e-8f32)?,
+        scheduler: cfg.str_or("scheduler", "fifo"),
+        seed,
+        ..ServeOpts::default()
+    };
+    opts.transport = if cluster.is_some() {
+        TransportKind::Tcp
+    } else {
+        cfg.str_or("transport", "inproc").parse().context("--transport")?
+    };
+    let atoms_dir = atoms_dir_flag(cfg);
+    match cluster {
+        Some(c) => {
+            let Some(dir) = atoms_dir else {
+                bail!(
+                    "serve --cluster requires --atoms-dir: every process must derive \
+                     the identical graph and placement from one stored atom set \
+                     (run `graphlab partition pagerank` first)"
+                );
+            };
+            let (g, store) = atoms::load_graph::<pagerank::PrVertex, pagerank::PrEdge>(&dir)?;
+            let (part, placement) = store.place(machines);
+            println!(
+                "== graphlab serve (cluster machine {}/{}, {} vertices) ==",
+                c.me,
+                machines,
+                g.num_vertices()
+            );
+            if c.me == FRONTEND {
+                let (tx, rx) = std::sync::mpsc::channel();
+                let (addr, _accept) = spawn_listener(&listen, tx)?;
+                println!("serve: frontend accepting clients on {addr}");
+                serve_machine(g, &part, Some(&placement), &opts, Some(&c), Some(rx))
+            } else {
+                serve_machine(g, &part, Some(&placement), &opts, Some(&c), None)
+            }
+        }
+        None => {
+            let (g, part) = match &atoms_dir {
+                Some(dir) => {
+                    let (g, store) =
+                        atoms::load_graph::<pagerank::PrVertex, pagerank::PrEdge>(dir)?;
+                    let (part, _) = store.place(machines);
+                    (g, part)
+                }
+                None => {
+                    let n = cfg.num_or("n", 20_000usize)?;
+                    let edges =
+                        graphlab::datagen::web_graph(n, cfg.num_or("avg-degree", 8)?, seed);
+                    let g = pagerank::build(n, &edges, 0.15);
+                    let part = graphlab::partition::atoms::two_phase(
+                        &g,
+                        cfg.num_or("atoms", (machines * 8).max(16))?,
+                        machines,
+                        seed,
+                    );
+                    (g, part)
+                }
+            };
+            println!(
+                "== graphlab serve (machines={machines}, transport={}, {} vertices, {} edges) ==",
+                opts.transport.name(),
+                g.num_vertices(),
+                g.num_edges()
+            );
+            let session = ServeSession::start(g, &part, &opts)?;
+            let (addr, _accept) = spawn_listener(&listen, session.feed())?;
+            println!(
+                "serve: accepting clients on {addr} — try `graphlab client stats --addr {addr}`"
+            );
+            // Resident until a client sends Shutdown.
+            session.wait()
+        }
+    }
+}
+
+/// `graphlab client <op> [...] --addr HOST:PORT`: one request against a
+/// serving frontend. Ops: `query V`, `add-edge U V W`, `rm-edge U V`,
+/// `set-weight U V W`, `touch V`, `stats`, `shutdown`.
+fn client_cmd(args: &Args, cfg: &Config) -> Result<()> {
+    use graphlab::serve::msg::{Mutation, ServeReply};
+    use graphlab::serve::ServeClient;
+
+    let addr = cfg.str_or("addr", "127.0.0.1:7700");
+    let vertex_at = |i: usize, what: &str| -> Result<u32> {
+        args.pos(i)
+            .with_context(|| format!("client {}: missing {what}", args.pos(1).unwrap_or("?")))?
+            .parse::<u32>()
+            .with_context(|| format!("client: {what} must be a vertex id"))
+    };
+    let weight_at = |i: usize| -> Result<f32> {
+        args.pos(i)
+            .context("client: missing edge weight W")?
+            .parse::<f32>()
+            .context("client: W must be a number")
+    };
+    let mut client = ServeClient::connect(&addr)?;
+    let reply = match args.pos(1) {
+        Some("query") => client.query(vertex_at(2, "vertex id V")?)?,
+        Some("add-edge") => client.mutate(vec![Mutation::AddEdge {
+            u: vertex_at(2, "vertex id U")?,
+            v: vertex_at(3, "vertex id V")?,
+            w: weight_at(4)?,
+        }])?,
+        Some("rm-edge") => client.mutate(vec![Mutation::RemoveEdge {
+            u: vertex_at(2, "vertex id U")?,
+            v: vertex_at(3, "vertex id V")?,
+        }])?,
+        Some("set-weight") => client.mutate(vec![Mutation::SetEdgeWeight {
+            u: vertex_at(2, "vertex id U")?,
+            v: vertex_at(3, "vertex id V")?,
+            w: weight_at(4)?,
+        }])?,
+        Some("touch") => client.mutate(vec![Mutation::TouchVertex {
+            v: vertex_at(2, "vertex id V")?,
+        }])?,
+        Some("stats") => client.request(&graphlab::serve::ServeReq::Stats)?,
+        Some("shutdown") => client.shutdown()?,
+        other => bail!(
+            "client: unknown op {:?} (query|add-edge|rm-edge|set-weight|touch|stats|shutdown)",
+            other.unwrap_or("")
+        ),
+    };
+    match reply {
+        ServeReply::Value { vertex, rank, epoch, converged } => println!(
+            "vertex {vertex}: rank {rank:.9} (epoch {epoch}, {})",
+            if converged { "converged" } else { "still converging" }
+        ),
+        ServeReply::MutAck { epoch, scheduled, updates, steps } => println!(
+            "epoch {epoch}: applied (scheduled {scheduled} endpoint(s), \
+             {updates} incremental update(s) over {steps} superstep(s))"
+        ),
+        ServeReply::Stats(s) => println!(
+            "epoch {} ({}): {} vertices, ~{} edges, {} machine(s); updates: \
+             initial {}, last epoch {}, total {}",
+            s.epoch,
+            if s.converged { "converged" } else { "converging" },
+            s.vertices,
+            s.edges,
+            s.machines,
+            s.initial_updates,
+            s.epoch_updates,
+            s.total_updates
+        ),
+        ServeReply::Bye => println!("cluster shutting down"),
+        ServeReply::Error { kind, detail } => bail!("server refused ({kind:?}): {detail}"),
+    }
+    Ok(())
+}
+
+/// `graphlab bench-serve`: the serving-mode benchmark (in-proc cluster,
+/// streaming mutation batches, timed queries). This is the child entry
+/// point the lab's `serve` preset spawns; the printed `lab-metric` line
+/// carries `mutations_per_sec` and query latency percentiles.
+fn bench_serve(cfg: &Config) -> Result<()> {
+    let o = graphlab::serve::bench::BenchOpts {
+        n: cfg.num_or("n", 20_000usize)?,
+        avg_degree: cfg.num_or("avg-degree", 8usize)?,
+        machines: cfg.num_or("machines", 2usize)?,
+        transport: cfg.str_or("transport", "inproc").parse().context("--transport")?,
+        mutrate: cfg.num_or("mutrate", 64usize)?,
+        batches: cfg.num_or("batches", 8usize)?,
+        queries: cfg.num_or("queries", 200usize)?,
+        eps: cfg.num_or("eps", 1e-7f32)?,
+        seed: cfg.num_or("seed", 1u64)?,
+    };
+    println!(
+        "== graphlab bench-serve (machines={}, transport={}, n={}, mutrate={}, batches={}) ==",
+        o.machines,
+        o.transport.name(),
+        o.n,
+        o.mutrate,
+        o.batches
+    );
+    println!("{}", graphlab::serve::bench::run_bench(&o)?);
+    Ok(())
 }

@@ -69,6 +69,15 @@ pub trait Scheduler: Send {
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// Bulk-push tasks injected from outside the local update loop —
+    /// remote reschedules carried in ghost frames (serving mode's
+    /// dirtied-neighborhood propagation) land here. Same merge
+    /// semantics as [`Scheduler::push`], applied per task.
+    fn inject(&mut self, tasks: &[Task]) {
+        for t in tasks {
+            self.push(*t);
+        }
+    }
 }
 
 /// `RemoveNext(T)` policy names (CLI/config selection).
@@ -472,6 +481,17 @@ mod tests {
         assert_eq!(s.len(), 3);
         let order: Vec<VertexId> = std::iter::from_fn(|| s.pop()).map(|x| x.vertex).collect();
         assert_eq!(order, vec![3, 1, 7]);
+    }
+
+    #[test]
+    fn inject_merges_like_push() {
+        let mut s = PriorityScheduler::new(10);
+        s.push(t(2, 1.0));
+        s.inject(&[t(4, 5.0), t(2, 9.0), t(4, 3.0)]); // dup of 2, dup of 4
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.pop().map(|x| (x.vertex, x.priority)), Some((2, 9.0)));
+        assert_eq!(s.pop().map(|x| x.vertex), Some(4));
+        assert!(s.pop().is_none());
     }
 
     #[test]

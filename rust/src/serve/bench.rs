@@ -1,0 +1,168 @@
+//! `bench-serve`: sustained mutation throughput + query latency against
+//! a live in-proc serving cluster (ROADMAP's serving north star; the
+//! lab's `serve` preset runs this via `configs/serve.json`).
+//!
+//! The driver converges a synthetic web graph, then alternates timed
+//! mutation batches (each one full epoch of incremental re-convergence)
+//! with timed point queries, and emits one `lab-metric` line carrying
+//! `mutations_per_sec`, `query_p50_us`/`query_p99_us`, and the
+//! incremental-vs-initial update counts (`incr_frac` is the fraction of
+//! initial-convergence work an average epoch re-does — the paper's
+//! dynamic-scheduling claim, §3.2, measured live).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::apps::pagerank;
+use crate::distributed::TransportKind;
+use crate::graph::VertexId;
+use crate::partition;
+use crate::util::Rng;
+
+use super::engine::{ServeOpts, ServeSession};
+use super::msg::{Mutation, ServeReply};
+
+/// Bench shape. `mutrate` is mutations per batch (one batch = one
+/// epoch); `batches` epochs and `queries` timed point reads follow the
+/// initial convergence.
+pub struct BenchOpts {
+    pub n: usize,
+    pub avg_degree: usize,
+    pub machines: usize,
+    pub transport: TransportKind,
+    pub mutrate: usize,
+    pub batches: usize,
+    pub queries: usize,
+    pub eps: f32,
+    pub seed: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            n: 20_000,
+            avg_degree: 8,
+            machines: 2,
+            transport: TransportKind::InProc,
+            mutrate: 64,
+            batches: 8,
+            queries: 200,
+            eps: 1e-7,
+            seed: 1,
+        }
+    }
+}
+
+/// Deterministic mutation mix over a live edge list: reweights favored,
+/// then adds, removes, touches. The list tracks adds/removes so later
+/// picks stay mostly valid.
+fn next_mutation(rng: &mut Rng, n: usize, edges: &mut Vec<(u32, u32)>, base_w: f32) -> Mutation {
+    let roll = rng.gen_range(100);
+    if roll < 40 && !edges.is_empty() {
+        let (u, v) = edges[rng.gen_range(edges.len())];
+        Mutation::SetEdgeWeight { u, v, w: base_w * rng.uniform(0.5, 1.5) }
+    } else if roll < 65 {
+        let u = rng.gen_range(n) as VertexId;
+        let mut v = rng.gen_range(n) as VertexId;
+        while v == u {
+            v = rng.gen_range(n) as VertexId;
+        }
+        edges.push((u, v));
+        Mutation::AddEdge { u, v, w: base_w * rng.uniform(0.5, 1.5) }
+    } else if roll < 85 && !edges.is_empty() {
+        let (u, v) = edges.swap_remove(rng.gen_range(edges.len()));
+        Mutation::RemoveEdge { u, v }
+    } else {
+        Mutation::TouchVertex { v: rng.gen_range(n) as VertexId }
+    }
+}
+
+/// Run the bench and return the `lab-metric` line (the caller prints
+/// it — `graphlab bench-serve` to stdout, the lab's in-proc executor
+/// into its synthesized child output).
+pub fn run_bench(o: &BenchOpts) -> Result<String> {
+    anyhow::ensure!(o.n >= 2, "bench-serve needs at least 2 vertices");
+    anyhow::ensure!(
+        o.eps > 0.0,
+        "bench-serve needs eps > 0 (serving convergence is eps-driven; eps=0 never quiesces)"
+    );
+    let mut rng = Rng::new(o.seed ^ 0x5e7e);
+    let mut edges = crate::datagen::web_graph(o.n, o.avg_degree, o.seed);
+    let g = pagerank::build(o.n, &edges, 0.15);
+    let part = partition::atoms::two_phase(&g, (o.machines * 8).max(16), o.machines, o.seed);
+    let opts = ServeOpts {
+        machines: o.machines,
+        eps: o.eps,
+        seed: o.seed,
+        transport: o.transport,
+        ..ServeOpts::default()
+    };
+    let session = ServeSession::start(g, &part, &opts)?;
+    let initial = session.wait_converged()?;
+
+    // Timed mutation batches: each is one epoch of incremental
+    // re-convergence (the MutAck blocks until quiescence).
+    let base_w = (1.0 - 0.15) / o.avg_degree.max(1) as f32;
+    let mut incr_updates = 0u64;
+    let mut epochs = 0u64;
+    let total_muts = (o.batches * o.mutrate) as u64;
+    let t0 = Instant::now();
+    for _ in 0..o.batches {
+        let muts: Vec<Mutation> = (0..o.mutrate)
+            .map(|_| next_mutation(&mut rng, o.n, &mut edges, base_w))
+            .collect();
+        match session.mutate(muts)? {
+            ServeReply::MutAck { updates, .. } => {
+                incr_updates += updates;
+                epochs += 1;
+            }
+            other => bail!("mutation batch answered with {other:?}"),
+        }
+    }
+    let mut_secs = t0.elapsed().as_secs_f64();
+
+    // Timed point queries against the quiescent cluster.
+    let mut lat_us: Vec<f64> = Vec::with_capacity(o.queries);
+    for _ in 0..o.queries {
+        let v = rng.gen_range(o.n) as VertexId;
+        let tq = Instant::now();
+        match session.query(v)? {
+            ServeReply::Value { .. } => {}
+            other => bail!("query answered with {other:?}"),
+        }
+        lat_us.push(tq.elapsed().as_secs_f64() * 1e6);
+    }
+    session.shutdown()?;
+
+    lat_us.sort_by(|a, b| a.total_cmp(b));
+    let pick = |q: f64| -> f64 {
+        if lat_us.is_empty() {
+            return 0.0;
+        }
+        lat_us[((lat_us.len() - 1) as f64 * q).round() as usize]
+    };
+    let incr_per_epoch = incr_updates as f64 / epochs.max(1) as f64;
+    let incr_frac = incr_per_epoch / initial.initial_updates.max(1) as f64;
+    Ok(format!(
+        "lab-metric app=serve machines={} transport={} n={} mutrate={} batches={} \
+         mutations={} seconds={:.6} mutations_per_sec={:.1} \
+         query_p50_us={:.1} query_p99_us={:.1} \
+         initial_updates={} incr_updates={} incr_frac={:.4} updates={} sweeps={}",
+        o.machines,
+        o.transport.name(),
+        o.n,
+        o.mutrate,
+        o.batches,
+        total_muts,
+        mut_secs,
+        total_muts as f64 / mut_secs.max(1e-9),
+        pick(0.50),
+        pick(0.99),
+        initial.initial_updates,
+        incr_updates,
+        incr_frac,
+        initial.initial_updates + incr_updates,
+        epochs + 1,
+    ))
+}

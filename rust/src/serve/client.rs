@@ -1,0 +1,231 @@
+//! The socket boundary of serving mode: the frontend's client listener
+//! and the matching [`ServeClient`] connector (`graphlab client`).
+//!
+//! Clients speak the same handshake as the worker mesh — magic, wire
+//! version, tag, and the PR-8 **role byte** ([`ROLE_CLIENT`]) — so a
+//! client dialing a worker port (or a worker dialing the client port)
+//! gets an explicit reject reason instead of undefined framing. After
+//! the one-byte ack, the connection carries `[u32 len][ServeReq]` frames
+//! up and `[u32 len][ServeReply]` frames down ([`crate::wire`] codec).
+//!
+//! Totality at the boundary: a well-framed payload that fails to decode
+//! is answered with a typed [`ServeReply::Error`] and the connection
+//! stays open; a broken frame (oversized length, short read) closes the
+//! connection after a best-effort error reply. Nothing a client sends
+//! can panic the cluster.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::distributed::transport::{
+    read_ack, read_handshake, read_reject_reason, write_handshake, ROLE_CLIENT,
+};
+use crate::graph::VertexId;
+use crate::wire::{self, Wire, WIRE_VERSION};
+
+use super::engine::ClientCmd;
+use super::msg::{ErrorKind, Mutation, ServeReply, ServeReq, ServeStats};
+
+/// The serve handshake's app-type tag (a new tag, so batch-engine
+/// workers and serve clients can never cross-connect silently).
+pub const CLIENT_TAG: &str = "graphlab-serve/pagerank";
+
+/// Client frames above this are treated as hostile and close the
+/// connection (a mutation batch of ~1M edges fits comfortably).
+pub const MAX_CLIENT_FRAME: u32 = 16 << 20;
+
+/// How long one queued request may wait on the frontend.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Bind the frontend's client listener and accept forever, spawning one
+/// handler thread per connection; every decoded request lands on `feed`
+/// (the same queue the in-proc harness writes). Returns the bound
+/// address (so `--listen 127.0.0.1:0` works) and the acceptor handle.
+pub fn spawn_listener(
+    addr: &str,
+    feed: mpsc::Sender<ClientCmd>,
+) -> Result<(SocketAddr, std::thread::JoinHandle<()>)> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("serve listener bind {addr}"))?;
+    let local = listener.local_addr()?;
+    let handle = std::thread::Builder::new()
+        .name("serve-accept".to_string())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(stream) = conn else { continue };
+                let feed = feed.clone();
+                let _ = std::thread::Builder::new()
+                    .name("serve-client".to_string())
+                    .spawn(move || handle_connection(stream, feed));
+            }
+        })?;
+    Ok((local, handle))
+}
+
+/// Validate one client handshake, then pump request frames until the
+/// client hangs up (or sends something unframeable).
+fn handle_connection(mut stream: TcpStream, feed: mpsc::Sender<ClientCmd>) {
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    let Ok(hs) = read_handshake(&mut stream) else {
+        return; // garbage greeting: drop
+    };
+    let reject = if hs.wire_version != WIRE_VERSION {
+        Some(format!(
+            "wire version {} != this build's {WIRE_VERSION}",
+            hs.wire_version
+        ))
+    } else if hs.role != ROLE_CLIENT {
+        Some("worker-role connection on the client port (dial the mesh instead)".to_string())
+    } else if hs.tag != CLIENT_TAG {
+        Some(format!("client tag {:?} != expected {CLIENT_TAG:?}", hs.tag))
+    } else {
+        None
+    };
+    if let Some(reason) = reject {
+        let mut buf = Vec::with_capacity(reason.len() + 8);
+        buf.push(0u8);
+        reason.encode(&mut buf);
+        let _ = stream.write_all(&buf);
+        return;
+    }
+    if stream.write_all(&[1u8]).is_err() {
+        return;
+    }
+    stream.set_read_timeout(None).ok();
+    stream.set_nodelay(true).ok();
+    loop {
+        let mut len4 = [0u8; 4];
+        if stream.read_exact(&mut len4).is_err() {
+            return; // client hung up
+        }
+        let len = u32::from_le_bytes(len4);
+        if len == 0 || len > MAX_CLIENT_FRAME {
+            let _ = write_frame(
+                &mut stream,
+                &ServeReply::Error {
+                    kind: ErrorKind::BadRequest,
+                    detail: format!("frame length {len} out of range"),
+                },
+            );
+            return; // framing is lost: close
+        }
+        let mut buf = vec![0u8; len as usize];
+        if stream.read_exact(&mut buf).is_err() {
+            return;
+        }
+        let req: ServeReq = match wire::from_bytes(&buf) {
+            Ok(req) => req,
+            Err(e) => {
+                // Well-framed garbage: typed refusal, connection lives.
+                if write_frame(
+                    &mut stream,
+                    &ServeReply::Error {
+                        kind: ErrorKind::BadRequest,
+                        detail: format!("request failed to decode: {e}"),
+                    },
+                )
+                .is_err()
+                {
+                    return;
+                }
+                continue;
+            }
+        };
+        let closing = matches!(req, ServeReq::Shutdown);
+        let (tx, rx) = mpsc::channel();
+        let reply = if feed.send(ClientCmd { req, reply: tx }).is_ok() {
+            rx.recv_timeout(REPLY_TIMEOUT).unwrap_or(ServeReply::Error {
+                kind: ErrorKind::BadRequest,
+                detail: "cluster did not answer (shutting down?)".to_string(),
+            })
+        } else {
+            ServeReply::Error {
+                kind: ErrorKind::BadRequest,
+                detail: "cluster is down".to_string(),
+            }
+        };
+        if write_frame(&mut stream, &reply).is_err() || closing {
+            return;
+        }
+    }
+}
+
+fn write_frame<W: Wire>(stream: &mut TcpStream, msg: &W) -> std::io::Result<()> {
+    let body = wire::to_bytes(msg);
+    let mut frame = Vec::with_capacity(body.len() + 4);
+    (body.len() as u32).encode(&mut frame);
+    frame.extend_from_slice(&body);
+    stream.write_all(&frame)
+}
+
+fn read_frame<W: Wire>(stream: &mut TcpStream, max: u32) -> Result<W> {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4).context("reading reply frame")?;
+    let len = u32::from_le_bytes(len4);
+    if len == 0 || len > max {
+        bail!("reply frame length {len} out of range");
+    }
+    let mut buf = vec![0u8; len as usize];
+    stream.read_exact(&mut buf).context("reading reply frame")?;
+    wire::from_bytes(&buf).context("decoding reply frame")
+}
+
+/// A blocking TCP client for a serving frontend — the transport behind
+/// `graphlab client` and the multi-process serve smoke test.
+pub struct ServeClient {
+    stream: TcpStream,
+}
+
+impl ServeClient {
+    /// Dial `addr`, handshake with [`ROLE_CLIENT`], and fail with the
+    /// frontend's reject reason if refused.
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        let mut stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to frontend {addr}"))?;
+        write_handshake(&mut stream, 0, 0, WIRE_VERSION, CLIENT_TAG, ROLE_CLIENT)
+            .context("sending client handshake")?;
+        stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+        let accepted = read_ack(&mut stream).context("frontend closed during handshake")?;
+        if !accepted {
+            let why = read_reject_reason(&mut stream)
+                .unwrap_or_else(|| "(no reason sent)".to_string());
+            bail!("frontend {addr} rejected the connection: {why}");
+        }
+        stream.set_read_timeout(Some(REPLY_TIMEOUT)).ok();
+        stream.set_nodelay(true).ok();
+        Ok(ServeClient { stream })
+    }
+
+    /// Send one request and block for the reply.
+    pub fn request(&mut self, req: &ServeReq) -> Result<ServeReply> {
+        write_frame(&mut self.stream, req).context("sending request")?;
+        read_frame(&mut self.stream, MAX_CLIENT_FRAME)
+    }
+
+    /// Read one vertex's rank (with its staleness tag).
+    pub fn query(&mut self, vertex: VertexId) -> Result<ServeReply> {
+        self.request(&ServeReq::Query { vertex })
+    }
+
+    /// Apply a mutation batch; blocks until the epoch re-converges.
+    pub fn mutate(&mut self, muts: Vec<Mutation>) -> Result<ServeReply> {
+        self.request(&ServeReq::Mutate { muts })
+    }
+
+    /// Serving counters.
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        match self.request(&ServeReq::Stats)? {
+            ServeReply::Stats(s) => Ok(s),
+            other => bail!("stats request answered with {other:?}"),
+        }
+    }
+
+    /// Ask the cluster to stop.
+    pub fn shutdown(&mut self) -> Result<ServeReply> {
+        self.request(&ServeReq::Shutdown)
+    }
+}

@@ -1,0 +1,969 @@
+//! The resident serving engine: machine event loops, the frontend
+//! coordinator, and the deterministic in-proc client harness.
+//!
+//! Topology (DESIGN.md §Serving): all machines form the usual full mesh
+//! of [`Endpoint`]s carrying [`PeerMsg`]; machine 0 (the **frontend**)
+//! additionally owns a client command channel fed by the in-proc harness
+//! ([`ServeSession`]) and/or the TCP client listener
+//! ([`super::client::spawn_listener`]). Because the frontend derives the
+//! full vertex→machine map from the same partition every machine loaded,
+//! it can route queries to owners and annotate mutations with owner ids
+//! ([`RoutedMutation`]) before broadcasting them — workers never need
+//! global state.
+//!
+//! Each epoch is one mutation batch re-converged by superstep rounds:
+//!
+//! 1. **Apply barrier** — every machine applies the locally-relevant
+//!    mutations, exchanges ghost fills for newly cross-partition edges,
+//!    and schedules exactly the dirtied endpoints it owns (the
+//!    incremental-recomputation core: nothing else is queued).
+//! 2. **Update supersteps** — drain the scheduler, recompute ranks
+//!    (Jacobi: `R(v) = α/n + Σ w_in·R(u)`), push changed values to ghost
+//!    mirrors, and reschedule neighbors whose inputs moved by more than
+//!    `eps` (locally, or by remote task injection through
+//!    [`crate::scheduler::Scheduler::inject`]).
+//! 3. **Barriers** — after flushing, each machine fences the round with
+//!    `StepEnd` to every peer (FIFO channels make the marker a fence),
+//!    then reports its backlog to the frontend; the frontend ends the
+//!    epoch when the cluster-wide backlog hits zero.
+//!
+//! Epoch 0 is the initial convergence (an empty batch that schedules
+//! every owned vertex). Queries are answered at any time from the
+//! owner's current value — the reply's `epoch`/`converged` pair is the
+//! staleness tag.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::apps::pagerank::{PrEdge, PrVertex};
+use crate::distributed::transport::ClusterConfig;
+use crate::distributed::{cluster_setup, Endpoint, LocalGraph, NetworkModel, TransportKind};
+use crate::graph::{Graph, VertexId};
+use crate::partition::atoms::AtomPlacement;
+use crate::partition::{MachineId, Partition};
+use crate::scheduler::{by_name, Scheduler, Task};
+
+use super::msg::{
+    ErrorKind, Mutation, PeerMsg, RoutedMutation, ServeReply, ServeReq, ServeStats,
+};
+
+/// The frontend machine's id (also the cluster leader for barriers).
+pub const FRONTEND: MachineId = 0;
+
+/// How long a harness request may wait for the cluster before the
+/// harness declares it wedged.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Serving-cluster options.
+#[derive(Clone)]
+pub struct ServeOpts {
+    /// Cluster size.
+    pub machines: usize,
+    /// PageRank damping (must match the weights the graph was built
+    /// with — `pagerank::build` uses 0.15).
+    pub alpha: f32,
+    /// Reschedule threshold: a rank change ≤ eps stops propagating.
+    pub eps: f32,
+    /// Scheduler policy for the per-machine task queues.
+    pub scheduler: String,
+    /// Seed (scheduler tie-breaking).
+    pub seed: u64,
+    /// Byte substrate for the machine mesh.
+    pub transport: TransportKind,
+    /// In-proc latency injection.
+    pub model: NetworkModel,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            machines: 2,
+            alpha: 0.15,
+            eps: 1e-8,
+            scheduler: "fifo".to_string(),
+            seed: 1,
+            transport: TransportKind::InProc,
+            model: NetworkModel::default(),
+        }
+    }
+}
+
+/// One queued client command: the request plus its reply channel. Both
+/// the in-proc harness and the TCP listener feed these to the frontend.
+pub struct ClientCmd {
+    pub req: ServeReq,
+    pub reply: mpsc::Sender<ServeReply>,
+}
+
+// ---------------------------------------------------------------------------
+// per-machine state
+// ---------------------------------------------------------------------------
+
+/// Where a machine stands in the barrier protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// No epoch in flight.
+    Idle,
+    /// Flushed a round; waiting for every peer's `StepEnd` fence.
+    WaitMarkers,
+    /// Reported; waiting for the frontend's continue/stop decision.
+    WaitDecision,
+}
+
+/// One serving machine's mutable graph + protocol state. Derived from a
+/// [`LocalGraph`] at startup, then mutated in place for the rest of the
+/// session (the batch engines' `LocalGraph` is CSR-immutable; serving
+/// needs appendable adjacency).
+struct ServeMachine {
+    me: MachineId,
+    machines: usize,
+    n: usize,
+    alpha: f32,
+    eps: f32,
+    /// Local→global vertex ids; `0..owned` are owned, the rest ghosts.
+    l2g: Vec<VertexId>,
+    g2l: HashMap<VertexId, u32>,
+    owned: usize,
+    /// Owning machine per local vertex.
+    vowner: Vec<MachineId>,
+    rank: Vec<f32>,
+    /// Owned versions start at 1 so a fill always beats a ghost
+    /// placeholder's version 0.
+    version: Vec<u64>,
+    /// Mutable adjacency, owned vertices only: `(local nbr, local edge)`.
+    adj: Vec<Vec<(u32, u32)>>,
+    /// `(to_lo, to_hi)` directed weights per local edge.
+    edata: Vec<(f32, f32)>,
+    /// Machines ghosting each owned vertex (grown on cross-partition
+    /// `AddEdge` — the ghost-invalidation fan-out list).
+    mirrors: Vec<Vec<MachineId>>,
+    /// Task queue over *global* vertex ids (the vertex set is fixed, so
+    /// the dedup bitmap sized `n` stays valid for the whole session).
+    sched: Box<dyn Scheduler>,
+    mode: Mode,
+    /// Barriers completed since startup (cumulative across epochs, so
+    /// marker accounting survives a peer racing one round ahead).
+    barrier: u64,
+    marker_total: u64,
+    step_updates: u64,
+    updates_total: u64,
+    /// Ghost fills that arrived before the `Apply` that creates their
+    /// ghost slot (cross-sender FIFO gives no ordering vs the frontend's
+    /// broadcast); drained right after the next batch applies.
+    stash: Vec<(VertexId, u64, f32)>,
+}
+
+impl ServeMachine {
+    fn new(lg: LocalGraph<PrVertex, PrEdge>, n: usize, opts: &ServeOpts) -> Result<ServeMachine> {
+        let nloc = lg.l2g.len();
+        // Unpack the CSR adjacency into per-vertex Vecs (owned only).
+        let mut adj = Vec::with_capacity(lg.owned);
+        for lv in 0..lg.owned {
+            let s = lg.adj_offsets[lv] as usize;
+            let e = lg.adj_offsets[lv + 1] as usize;
+            adj.push(lg.adj[s..e].to_vec());
+        }
+        let sched = by_name(&opts.scheduler, n, opts.seed)
+            .with_context(|| format!("serve scheduler '{}'", opts.scheduler))?;
+        Ok(ServeMachine {
+            me: lg.machine,
+            machines: opts.machines,
+            n,
+            alpha: opts.alpha,
+            eps: opts.eps,
+            l2g: lg.l2g,
+            g2l: lg.g2l,
+            owned: lg.owned,
+            vowner: lg.owner,
+            rank: lg.vdata.iter().map(|v| v.rank).collect(),
+            version: vec![1; nloc],
+            adj,
+            edata: lg.edata.iter().map(|e| (e.to_lo, e.to_hi)).collect(),
+            mirrors: lg.mirrors,
+            sched,
+            mode: Mode::Idle,
+            barrier: 0,
+            marker_total: 0,
+            step_updates: 0,
+            updates_total: 0,
+            stash: Vec::new(),
+        })
+    }
+
+    /// Local id of global `v`, creating a ghost slot if unknown.
+    fn ensure_local(&mut self, v: VertexId, owner: MachineId) -> u32 {
+        if let Some(&lv) = self.g2l.get(&v) {
+            return lv;
+        }
+        let lv = self.l2g.len() as u32;
+        self.l2g.push(v);
+        self.g2l.insert(v, lv);
+        self.vowner.push(owner);
+        self.rank.push(0.0); // placeholder; the owner's fill overwrites it
+        self.version.push(0);
+        lv
+    }
+
+    fn push_owned(&mut self, v: VertexId, priority: f64) {
+        self.sched.push(Task { vertex: v, priority });
+    }
+
+    /// First live edge between owned `la` and local `lb`, as
+    /// `(position in adj[la], local edge id)`.
+    fn find_edge(&self, la: u32, lb: u32) -> Option<(usize, u32)> {
+        self.adj[la as usize]
+            .iter()
+            .position(|&(nbr, _)| nbr == lb)
+            .map(|pos| (pos, self.adj[la as usize][pos].1))
+    }
+
+    /// Apply one routed mutation if it is locally relevant, scheduling
+    /// the dirtied endpoints this machine owns and queuing ghost fills
+    /// for newly cross-partition edges.
+    fn apply_one(
+        &mut self,
+        rm: &RoutedMutation,
+        fills: &mut HashMap<MachineId, Vec<(VertexId, u64, f32)>>,
+    ) {
+        let own_u = rm.owner_u as MachineId == self.me;
+        let own_v = rm.owner_v as MachineId == self.me;
+        match rm.m {
+            Mutation::AddEdge { u, v, w } => {
+                if !own_u && !own_v {
+                    return; // edges live only at their endpoint owners
+                }
+                let lu = self.ensure_local(u, rm.owner_u as MachineId);
+                let lv = self.ensure_local(v, rm.owner_v as MachineId);
+                let le = self.edata.len() as u32;
+                self.edata.push((w, w));
+                if own_u {
+                    self.adj[lu as usize].push((lv, le));
+                }
+                if own_v {
+                    self.adj[lv as usize].push((lu, le));
+                }
+                // A cross-partition edge makes each owner a mirror of the
+                // other's endpoint; seed the new ghost with a fill.
+                if own_u && !own_v {
+                    if !self.mirrors[lu as usize].contains(&(rm.owner_v as MachineId)) {
+                        self.mirrors[lu as usize].push(rm.owner_v as MachineId);
+                    }
+                    fills.entry(rm.owner_v as MachineId).or_default().push((
+                        u,
+                        self.version[lu as usize],
+                        self.rank[lu as usize],
+                    ));
+                }
+                if own_v && !own_u {
+                    if !self.mirrors[lv as usize].contains(&(rm.owner_u as MachineId)) {
+                        self.mirrors[lv as usize].push(rm.owner_u as MachineId);
+                    }
+                    fills.entry(rm.owner_u as MachineId).or_default().push((
+                        v,
+                        self.version[lv as usize],
+                        self.rank[lv as usize],
+                    ));
+                }
+                if own_u {
+                    self.push_owned(u, 1.0);
+                }
+                if own_v {
+                    self.push_owned(v, 1.0);
+                }
+            }
+            Mutation::RemoveEdge { u, v } => {
+                if !own_u && !own_v {
+                    return;
+                }
+                // Locate the edge from whichever endpoint is owned here
+                // (adjacency exists for owned vertices only). Both owners
+                // derived their lists from the same global edge order, so
+                // "first match" removes the same edge everywhere.
+                let (lu, lv) = match (self.g2l.get(&u), self.g2l.get(&v)) {
+                    (Some(&a), Some(&b)) => (a, b),
+                    _ => return, // edge was never here: a no-op remove
+                };
+                let le = if own_u {
+                    self.find_edge(lu, lv)
+                } else {
+                    self.find_edge(lv, lu)
+                };
+                let Some((_, le)) = le else {
+                    return; // no such edge: a no-op remove
+                };
+                if own_u {
+                    if let Some(pos) =
+                        self.adj[lu as usize].iter().position(|&(n, e)| n == lv && e == le)
+                    {
+                        self.adj[lu as usize].remove(pos);
+                    }
+                    self.push_owned(u, 1.0);
+                }
+                if own_v {
+                    if let Some(pos) =
+                        self.adj[lv as usize].iter().position(|&(n, e)| n == lu && e == le)
+                    {
+                        self.adj[lv as usize].remove(pos);
+                    }
+                    self.push_owned(v, 1.0);
+                }
+            }
+            Mutation::SetEdgeWeight { u, v, w } => {
+                if !own_u && !own_v {
+                    return;
+                }
+                let (lu, lv) = match (self.g2l.get(&u), self.g2l.get(&v)) {
+                    (Some(&a), Some(&b)) => (a, b),
+                    _ => return,
+                };
+                let found = if own_u {
+                    self.find_edge(lu, lv)
+                } else {
+                    self.find_edge(lv, lu)
+                };
+                let Some((_, le)) = found else {
+                    return; // no such edge: a no-op reweight
+                };
+                self.edata[le as usize] = (w, w);
+                if own_u {
+                    self.push_owned(u, 1.0);
+                }
+                if own_v {
+                    self.push_owned(v, 1.0);
+                }
+            }
+            Mutation::TouchVertex { v } => {
+                if own_u {
+                    self.push_owned(v, 1.0);
+                }
+            }
+        }
+    }
+
+    /// The epoch's apply barrier: apply the batch (or, for epoch 0's
+    /// empty batch, schedule every owned vertex), flush ghost fills,
+    /// then fence the round.
+    fn apply_batch(&mut self, ep: &Endpoint<PeerMsg>, epoch: u64, muts: &[RoutedMutation]) {
+        let mut fills: HashMap<MachineId, Vec<(VertexId, u64, f32)>> = HashMap::new();
+        if epoch == 0 && muts.is_empty() {
+            for lv in 0..self.owned {
+                let v = self.l2g[lv];
+                self.push_owned(v, 1.0);
+            }
+        }
+        for rm in muts {
+            self.apply_one(rm, &mut fills);
+        }
+        for (m, verts) in fills {
+            ep.send(m, PeerMsg::Ghost { verts, tasks: Vec::new() });
+        }
+        // Fills that raced ahead of this Apply can land now.
+        let stash = std::mem::take(&mut self.stash);
+        self.absorb_ghosts(stash);
+        self.step_updates = 0;
+        self.fence(ep);
+    }
+
+    /// One update superstep: drain the queue, recompute each drained
+    /// vertex, propagate to mirrors, reschedule neighbors past `eps`.
+    fn run_superstep(&mut self, ep: &Endpoint<PeerMsg>) {
+        let mut batch: Vec<VertexId> = Vec::new();
+        while let Some(t) = self.sched.pop() {
+            batch.push(t.vertex);
+        }
+        type Out = (Vec<(VertexId, u64, f32)>, Vec<Task>);
+        let mut out: HashMap<MachineId, Out> = HashMap::new();
+        let inv_n = self.alpha / self.n as f32;
+        for v in batch {
+            let lv = *self.g2l.get(&v).expect("scheduled vertex is local") as usize;
+            debug_assert!(lv < self.owned, "scheduled vertex must be owned");
+            let mut sum = inv_n;
+            for i in 0..self.adj[lv].len() {
+                let (nbr, le) = self.adj[lv][i];
+                let gn = self.l2g[nbr as usize];
+                let (to_lo, to_hi) = self.edata[le as usize];
+                let w = if v < gn { to_lo } else { to_hi };
+                sum += w * self.rank[nbr as usize];
+            }
+            let delta = (sum - self.rank[lv]).abs();
+            self.rank[lv] = sum;
+            self.version[lv] += 1;
+            self.step_updates += 1;
+            self.updates_total += 1;
+            for i in 0..self.mirrors[lv].len() {
+                let m = self.mirrors[lv][i];
+                out.entry(m).or_default().0.push((v, self.version[lv], sum));
+            }
+            if delta > self.eps {
+                for i in 0..self.adj[lv].len() {
+                    let (nbr, _) = self.adj[lv][i];
+                    let gn = self.l2g[nbr as usize];
+                    let owner = self.vowner[nbr as usize];
+                    let t = Task { vertex: gn, priority: delta as f64 };
+                    if owner == self.me {
+                        self.sched.push(t);
+                    } else {
+                        out.entry(owner).or_default().1.push(t);
+                    }
+                }
+            }
+        }
+        for (m, (verts, tasks)) in out {
+            ep.send(m, PeerMsg::Ghost { verts, tasks });
+        }
+        self.fence(ep);
+    }
+
+    /// Flush-complete fence: `StepEnd` to every peer, then wait markers.
+    fn fence(&mut self, ep: &Endpoint<PeerMsg>) {
+        for m in 0..self.machines {
+            if m != self.me {
+                ep.send(m, PeerMsg::StepEnd { step: self.barrier });
+            }
+        }
+        self.mode = Mode::WaitMarkers;
+    }
+
+    /// Version-gated ghost writes; unknown vertices (fills racing their
+    /// `Apply`) are stashed for the next batch.
+    fn absorb_ghosts(&mut self, verts: Vec<(VertexId, u64, f32)>) {
+        for (v, ver, r) in verts {
+            match self.g2l.get(&v) {
+                Some(&lv) => {
+                    let lv = lv as usize;
+                    if ver > self.version[lv] {
+                        self.version[lv] = ver;
+                        self.rank[lv] = r;
+                    }
+                }
+                None => self.stash.push((v, ver, r)),
+            }
+        }
+    }
+
+    /// If every peer's fence for the current barrier has arrived, report
+    /// the local backlog to the frontend and await its decision.
+    fn maybe_report(&mut self, ep: &Endpoint<PeerMsg>) {
+        if self.mode != Mode::WaitMarkers {
+            return;
+        }
+        let need = (self.machines as u64 - 1) * (self.barrier + 1);
+        if self.marker_total < need {
+            return;
+        }
+        ep.send(
+            FRONTEND,
+            PeerMsg::Report {
+                step: self.barrier,
+                pending: self.sched.len() as u64,
+                updates: self.step_updates,
+            },
+        );
+        self.step_updates = 0;
+        self.barrier += 1;
+        self.mode = Mode::WaitDecision;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frontend coordinator
+// ---------------------------------------------------------------------------
+
+/// Machine 0's extra state: client channel, routing partition, epoch
+/// bookkeeping, in-flight query table.
+struct Frontend {
+    part: Partition,
+    client_rx: mpsc::Receiver<ClientCmd>,
+    /// Queued mutation batches: (routed batch, dirtied-endpoint count,
+    /// reply channel). Epoch 0 (initial convergence) has no reply.
+    pending: VecDeque<(Vec<RoutedMutation>, u64, Option<mpsc::Sender<ServeReply>>)>,
+    /// The in-flight epoch's (scheduled count, reply channel).
+    cur: Option<(u64, mpsc::Sender<ServeReply>)>,
+    queries: HashMap<u64, mpsc::Sender<ServeReply>>,
+    next_query: u64,
+    started: bool,
+    in_epoch: bool,
+    next_epoch: u64,
+    rep_count: usize,
+    rep_pending: u64,
+    rep_updates: u64,
+    epoch_updates: u64,
+    epoch_steps: u64,
+    stats: ServeStats,
+}
+
+impl Frontend {
+    fn new(part: Partition, client_rx: mpsc::Receiver<ClientCmd>, n: usize, m_edges: usize, machines: usize) -> Frontend {
+        Frontend {
+            part,
+            client_rx,
+            pending: VecDeque::new(),
+            cur: None,
+            queries: HashMap::new(),
+            next_query: 0,
+            started: false,
+            in_epoch: false,
+            next_epoch: 0,
+            rep_count: 0,
+            rep_pending: 0,
+            rep_updates: 0,
+            epoch_updates: 0,
+            epoch_steps: 0,
+            stats: ServeStats {
+                vertices: n as u64,
+                edges: m_edges as u64,
+                machines: machines as u32,
+                ..ServeStats::default()
+            },
+        }
+    }
+
+    /// The staleness tag attached to query answers.
+    fn tag(&self) -> (u64, bool) {
+        (self.stats.epoch, self.stats.converged && !self.in_epoch)
+    }
+
+    /// Validate and owner-annotate a client mutation batch. Returns the
+    /// routed batch plus the dirtied-endpoint count, or a typed refusal.
+    fn route(&mut self, muts: Vec<Mutation>) -> std::result::Result<(Vec<RoutedMutation>, u64), ServeReply> {
+        let n = self.part.num_vertices() as VertexId;
+        let mut routed = Vec::with_capacity(muts.len());
+        let mut scheduled = 0u64;
+        for m in muts {
+            let (u, v) = m.endpoints();
+            if u >= n || v.is_some_and(|v| v >= n) {
+                return Err(ServeReply::Error {
+                    kind: ErrorKind::UnknownVertex,
+                    detail: format!("vertex out of range in {m:?} (n = {n})"),
+                });
+            }
+            if v == Some(u) {
+                return Err(ServeReply::Error {
+                    kind: ErrorKind::BadRequest,
+                    detail: format!("self-loop mutation {m:?}"),
+                });
+            }
+            if let Mutation::AddEdge { w, .. } | Mutation::SetEdgeWeight { w, .. } = m {
+                if !w.is_finite() {
+                    return Err(ServeReply::Error {
+                        kind: ErrorKind::BadRequest,
+                        detail: format!("non-finite weight in {m:?}"),
+                    });
+                }
+            }
+            // Live-edge tally (approximate for no-op removes: the
+            // frontend does not track per-edge existence).
+            match m {
+                Mutation::AddEdge { .. } => self.stats.edges += 1,
+                Mutation::RemoveEdge { .. } => {
+                    self.stats.edges = self.stats.edges.saturating_sub(1)
+                }
+                _ => {}
+            }
+            scheduled += 1 + v.is_some() as u64;
+            let owner_u = self.part.owner(u) as u32;
+            let owner_v = v.map_or(owner_u, |v| self.part.owner(v) as u32);
+            routed.push(RoutedMutation { m, owner_u, owner_v });
+        }
+        Ok((routed, scheduled))
+    }
+}
+
+fn broadcast(ep: &Endpoint<PeerMsg>, machines: usize, msg: &PeerMsg) {
+    for m in 0..machines {
+        ep.send(m, msg.clone());
+    }
+}
+
+/// Start the next queued epoch (or epoch 0, exactly once, at startup).
+fn start_epochs(st: &ServeMachine, ep: &Endpoint<PeerMsg>, f: &mut Frontend) {
+    if !f.started {
+        f.started = true;
+        f.in_epoch = true;
+        f.stats.converged = false;
+        broadcast(ep, st.machines, &PeerMsg::Apply { epoch: 0, muts: Vec::new() });
+        return;
+    }
+    if f.in_epoch {
+        return;
+    }
+    if let Some((muts, scheduled, reply)) = f.pending.pop_front() {
+        f.in_epoch = true;
+        f.stats.converged = false;
+        f.epoch_updates = 0;
+        f.epoch_steps = 0;
+        f.cur = reply.map(|r| (scheduled, r));
+        broadcast(ep, st.machines, &PeerMsg::Apply { epoch: f.next_epoch, muts });
+    }
+}
+
+/// Handle one client command on the frontend.
+fn handle_client(
+    st: &mut ServeMachine,
+    ep: &Endpoint<PeerMsg>,
+    f: &mut Frontend,
+    cmd: ClientCmd,
+    running: &mut bool,
+) {
+    match cmd.req {
+        ServeReq::Query { vertex } => {
+            if vertex as usize >= st.n {
+                let _ = cmd.reply.send(ServeReply::Error {
+                    kind: ErrorKind::UnknownVertex,
+                    detail: format!("vertex {vertex} out of range (n = {})", st.n),
+                });
+                return;
+            }
+            let owner = f.part.owner(vertex);
+            if owner == st.me {
+                let lv = st.g2l[&vertex] as usize;
+                let (epoch, converged) = f.tag();
+                let _ = cmd.reply.send(ServeReply::Value {
+                    vertex,
+                    rank: st.rank[lv],
+                    epoch,
+                    converged,
+                });
+            } else {
+                let id = f.next_query;
+                f.next_query += 1;
+                f.queries.insert(id, cmd.reply);
+                ep.send(owner, PeerMsg::Query { id, vertex });
+            }
+        }
+        ServeReq::Mutate { muts } => match f.route(muts) {
+            Ok((routed, scheduled)) => {
+                f.pending.push_back((routed, scheduled, Some(cmd.reply)));
+            }
+            Err(refusal) => {
+                let _ = cmd.reply.send(refusal);
+            }
+        },
+        ServeReq::Stats => {
+            let mut s = f.stats.clone();
+            s.converged = s.converged && !f.in_epoch && f.started;
+            let _ = cmd.reply.send(ServeReply::Stats(s));
+        }
+        ServeReq::Shutdown => {
+            let _ = cmd.reply.send(ServeReply::Bye);
+            for m in 0..st.machines {
+                if m != st.me {
+                    ep.send(m, PeerMsg::Stop);
+                }
+            }
+            *running = false;
+        }
+    }
+}
+
+/// Handle one mesh message (frontend-only variants require `f`).
+fn handle_peer(
+    st: &mut ServeMachine,
+    ep: &Endpoint<PeerMsg>,
+    mut f: Option<&mut Frontend>,
+    msg: PeerMsg,
+    running: &mut bool,
+) {
+    match msg {
+        PeerMsg::Apply { epoch, muts } => {
+            st.apply_batch(ep, epoch, &muts);
+            st.maybe_report(ep);
+        }
+        PeerMsg::Ghost { verts, tasks } => {
+            st.absorb_ghosts(verts);
+            st.sched.inject(&tasks);
+        }
+        PeerMsg::StepEnd { .. } => {
+            st.marker_total += 1;
+            st.maybe_report(ep);
+        }
+        PeerMsg::Report { step: _, pending, updates } => {
+            let f = f.as_mut().expect("Report reaches only the frontend");
+            f.rep_count += 1;
+            f.rep_pending += pending;
+            f.rep_updates += updates;
+            if f.rep_count == st.machines {
+                f.epoch_updates += f.rep_updates;
+                let cont = f.rep_pending > 0;
+                if cont {
+                    f.epoch_steps += 1;
+                }
+                f.rep_count = 0;
+                f.rep_pending = 0;
+                f.rep_updates = 0;
+                broadcast(ep, st.machines, &PeerMsg::Decision { step: st.barrier, cont });
+                if !cont {
+                    // Epoch over: book it and ack the waiting client.
+                    f.in_epoch = false;
+                    f.stats.epoch = f.next_epoch;
+                    f.stats.epoch_updates = f.epoch_updates;
+                    f.stats.total_updates += f.epoch_updates;
+                    if f.next_epoch == 0 {
+                        f.stats.initial_updates = f.epoch_updates;
+                    }
+                    f.stats.converged = true;
+                    if let Some((scheduled, reply)) = f.cur.take() {
+                        let _ = reply.send(ServeReply::MutAck {
+                            epoch: f.next_epoch,
+                            scheduled,
+                            updates: f.epoch_updates,
+                            steps: f.epoch_steps,
+                        });
+                    }
+                    f.next_epoch += 1;
+                }
+            }
+        }
+        PeerMsg::Decision { step: _, cont } => {
+            if cont {
+                st.run_superstep(ep);
+                st.maybe_report(ep);
+            } else {
+                st.mode = Mode::Idle;
+            }
+        }
+        PeerMsg::Query { id, vertex } => {
+            let (rank, version) = match st.g2l.get(&vertex) {
+                Some(&lv) => (st.rank[lv as usize], st.version[lv as usize]),
+                None => (0.0, 0),
+            };
+            ep.send(FRONTEND, PeerMsg::Answer { id, vertex, rank, version });
+        }
+        PeerMsg::Answer { id, vertex, rank, version: _ } => {
+            let f = f.as_mut().expect("Answer reaches only the frontend");
+            if let Some(reply) = f.queries.remove(&id) {
+                let (epoch, converged) = f.tag();
+                let _ = reply.send(ServeReply::Value { vertex, rank, epoch, converged });
+            }
+        }
+        PeerMsg::Stop => *running = false,
+    }
+}
+
+/// One machine's resident event loop. Machine 0 passes its frontend
+/// state; workers pass `None`. Returns when a client shutdown (or the
+/// frontend's `Stop`) drains the loop.
+fn machine_loop(
+    mut st: ServeMachine,
+    mut ep: Endpoint<PeerMsg>,
+    mut front: Option<Frontend>,
+) -> Result<()> {
+    let mut running = true;
+    // The frontend polls tightly (it multiplexes the client channel);
+    // workers park long — a mesh message wakes them instantly either way.
+    let idle = if front.is_some() {
+        Duration::from_micros(200)
+    } else {
+        Duration::from_millis(50)
+    };
+    while running {
+        if let Some(f) = front.as_mut() {
+            // Client commands never block: queries answer/forward
+            // immediately, mutations queue for the next epoch.
+            while let Ok(cmd) = f.client_rx.try_recv() {
+                handle_client(&mut st, &ep, f, cmd, &mut running);
+                if !running {
+                    return Ok(());
+                }
+            }
+            start_epochs(&st, &ep, f);
+        }
+        match ep.recv_timeout(idle) {
+            Some(rx) => {
+                handle_peer(&mut st, &ep, front.as_mut(), rx.msg, &mut running);
+                // Drain whatever else is queued before the next poll.
+                while running {
+                    let Some(rx) = ep.try_recv() else { break };
+                    handle_peer(&mut st, &ep, front.as_mut(), rx.msg, &mut running);
+                }
+            }
+            None => {
+                // A worker whose frontend died has nothing left to wait
+                // for (the mesh records per-peer errors).
+                if front.is_none() && !ep.peer_alive(FRONTEND) {
+                    bail!("serve worker {}: frontend (machine 0) is gone", st.me);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// entry points
+// ---------------------------------------------------------------------------
+
+/// A resident in-proc serving cluster: every machine is a thread in this
+/// process, and this handle is the (deterministic, socket-free) client.
+/// The TCP client listener can feed the same frontend — see
+/// [`super::client::spawn_listener`].
+pub struct ServeSession {
+    client_tx: mpsc::Sender<ClientCmd>,
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl ServeSession {
+    /// Build local graphs from `part`, form the mesh, and spawn one
+    /// machine loop per thread. Returns once the cluster is resident
+    /// (epoch 0 — the initial convergence — runs in the background;
+    /// [`ServeSession::wait_converged`] blocks on it).
+    pub fn start(
+        g: Graph<PrVertex, PrEdge>,
+        part: &Partition,
+        opts: &ServeOpts,
+    ) -> Result<ServeSession> {
+        let n = g.num_vertices();
+        let m_edges = g.num_edges();
+        anyhow::ensure!(n > 0, "serve: empty graph");
+        anyhow::ensure!(opts.machines >= 1, "serve: at least one machine");
+        let setup = cluster_setup::<PrVertex, PrEdge, PeerMsg>(
+            g,
+            part,
+            None,
+            opts.machines,
+            opts.model,
+            opts.transport,
+            None,
+            None,
+            None,
+        )?;
+        let (client_tx, client_rx) = mpsc::channel();
+        let mut client_rx = Some(client_rx);
+        let mut handles = Vec::with_capacity(opts.machines);
+        for (lg, ep) in setup.locals.into_iter().zip(setup.endpoints) {
+            let st = ServeMachine::new(lg, n, opts)?;
+            let front = if st.me == FRONTEND {
+                Some(Frontend::new(
+                    part.clone(),
+                    client_rx.take().expect("one frontend"),
+                    n,
+                    m_edges,
+                    opts.machines,
+                ))
+            } else {
+                None
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-m{}", st.me))
+                    .spawn(move || machine_loop(st, ep, front))?,
+            );
+        }
+        Ok(ServeSession { client_tx, handles })
+    }
+
+    /// A sender feeding the frontend's client channel — hand it to the
+    /// TCP listener so socket clients and this harness share one queue.
+    pub fn feed(&self) -> mpsc::Sender<ClientCmd> {
+        self.client_tx.clone()
+    }
+
+    /// Send one request and block for its reply.
+    pub fn request(&self, req: ServeReq) -> Result<ServeReply> {
+        let (tx, rx) = mpsc::channel();
+        self.client_tx
+            .send(ClientCmd { req, reply: tx })
+            .map_err(|_| anyhow::anyhow!("serve cluster is down"))?;
+        rx.recv_timeout(REQUEST_TIMEOUT)
+            .map_err(|_| anyhow::anyhow!("serve cluster did not answer within {REQUEST_TIMEOUT:?}"))
+    }
+
+    /// Read one vertex's rank (with its staleness tag).
+    pub fn query(&self, vertex: VertexId) -> Result<ServeReply> {
+        self.request(ServeReq::Query { vertex })
+    }
+
+    /// Apply a mutation batch as one epoch; blocks until re-converged.
+    pub fn mutate(&self, muts: Vec<Mutation>) -> Result<ServeReply> {
+        self.request(ServeReq::Mutate { muts })
+    }
+
+    /// Serving counters.
+    pub fn stats(&self) -> Result<ServeStats> {
+        match self.request(ServeReq::Stats)? {
+            ServeReply::Stats(s) => Ok(s),
+            other => bail!("stats request answered with {other:?}"),
+        }
+    }
+
+    /// Block until the cluster is quiescent (epoch 0 included).
+    pub fn wait_converged(&self) -> Result<ServeStats> {
+        let deadline = std::time::Instant::now() + REQUEST_TIMEOUT;
+        loop {
+            let s = self.stats()?;
+            if s.converged {
+                return Ok(s);
+            }
+            if std::time::Instant::now() > deadline {
+                bail!("serve cluster did not converge within {REQUEST_TIMEOUT:?}");
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Stop the cluster and join every machine thread.
+    pub fn shutdown(self) -> Result<()> {
+        let _ = self.request(ServeReq::Shutdown)?;
+        self.wait()
+    }
+
+    /// Join every machine thread WITHOUT initiating shutdown — returns
+    /// when some client's `Shutdown` (e.g. over the TCP listener) stops
+    /// the cluster. This is `graphlab serve`'s resident blocking call.
+    pub fn wait(self) -> Result<()> {
+        for h in self.handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => bail!("a serve machine thread panicked"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run ONE machine of a (possibly multi-process) serving cluster on the
+/// calling thread — the `graphlab serve` entry point. Machine 0 is the
+/// frontend and requires a client feed: `client_rx` (from the TCP
+/// listener, an in-proc harness, or both writing to its sender side).
+/// Returns when a client `Shutdown` (or the frontend's `Stop`) lands.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_machine(
+    g: Graph<PrVertex, PrEdge>,
+    part: &Partition,
+    atoms: Option<&AtomPlacement>,
+    opts: &ServeOpts,
+    cluster: Option<&ClusterConfig>,
+    client_rx: Option<mpsc::Receiver<ClientCmd>>,
+) -> Result<()> {
+    let n = g.num_vertices();
+    let m_edges = g.num_edges();
+    let me = cluster.map_or(FRONTEND, |c| c.me);
+    let setup = cluster_setup::<PrVertex, PrEdge, PeerMsg>(
+        g,
+        part,
+        atoms,
+        opts.machines,
+        opts.model,
+        opts.transport,
+        cluster,
+        None,
+        None,
+    )?;
+    anyhow::ensure!(
+        setup.locals.len() == 1 && setup.endpoints.len() == 1,
+        "serve_machine runs exactly one machine per process (use ServeSession in-proc)"
+    );
+    let lg = setup.locals.into_iter().next().unwrap();
+    let ep = setup.endpoints.into_iter().next().unwrap();
+    let st = ServeMachine::new(lg, n, opts)?;
+    let front = if me == FRONTEND {
+        let rx = client_rx.context("serve frontend (machine 0) needs a client channel")?;
+        Some(Frontend::new(part.clone(), rx, n, m_edges, opts.machines))
+    } else {
+        None
+    };
+    machine_loop(st, ep, front)
+}

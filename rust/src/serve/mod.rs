@@ -1,0 +1,29 @@
+//! `graphlab serve`: a long-lived serving cluster with streaming
+//! mutations and incremental recomputation (ROADMAP's serving north
+//! star; DESIGN.md §Serving).
+//!
+//! The batch engines converge once and exit; this subsystem keeps the
+//! cluster resident afterwards. Clients stream **queries** (read a
+//! vertex's rank, routed to its owner) and **mutations** (add/remove an
+//! edge, reweight, touch a vertex); each mutation batch schedules
+//! exactly the dirtied neighborhood and dynamic eps-gated propagation
+//! re-converges only what actually moved — the paper's §3.2 argument
+//! for prioritized dynamic scheduling, kept warm between requests.
+//!
+//! * [`msg`] — the wire grammar: client RPCs ([`ServeReq`]/[`ServeReply`])
+//!   and the machine-mesh protocol ([`PeerMsg`]).
+//! * [`engine`] — resident machine loops, the frontend coordinator, the
+//!   in-proc [`ServeSession`] harness, and the per-process
+//!   [`engine::serve_machine`] entry point.
+//! * [`client`] — the frontend's TCP listener and the [`ServeClient`]
+//!   connector (`graphlab client`).
+//! * [`bench`] — the `bench-serve` driver (lab preset `serve`).
+
+pub mod bench;
+pub mod client;
+pub mod engine;
+pub mod msg;
+
+pub use client::{ServeClient, CLIENT_TAG};
+pub use engine::{ServeOpts, ServeSession, FRONTEND};
+pub use msg::{Mutation, PeerMsg, ServeReply, ServeReq, ServeStats};

@@ -1,0 +1,505 @@
+//! The serving-mode wire grammar (DESIGN.md §Serving).
+//!
+//! Two independent message families share the PR-4 `Wire` codec:
+//!
+//! * **Client RPC** — [`ServeReq`] / [`ServeReply`], framed as
+//!   `[u32 len][payload]` on a dedicated frontend listener socket (or
+//!   passed directly through the in-proc harness). Decoding is *total*:
+//!   any malformed frame becomes a typed [`crate::wire::WireError`],
+//!   which the frontend answers with [`ServeReply::Error`] — a hostile
+//!   client can never panic the cluster.
+//! * **Mesh protocol** — [`PeerMsg`], carried by the ordinary
+//!   [`crate::distributed::Endpoint`] full mesh between the serving
+//!   machines (same substrate the batch engines use, so the handshake's
+//!   tag/version/role validation applies unchanged).
+//!
+//! Every enum encodes as one discriminant byte followed by the variant's
+//! fields in declaration order, the repo-wide convention.
+
+use crate::graph::VertexId;
+use crate::scheduler::Task;
+use crate::wire::{self, Wire, WireError};
+
+/// A client-requested graph mutation. Vertex ids are global; the vertex
+/// set itself is fixed at load time (mutations rewire and reweight the
+/// topology, they do not grow it — the atom placement stays valid).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mutation {
+    /// Insert an undirected edge `u — v` carrying weight `w` in *both*
+    /// directions. Serving-mode weights are raw (no degree
+    /// renormalization happens on mutation — see DESIGN.md §Serving).
+    AddEdge { u: VertexId, v: VertexId, w: f32 },
+    /// Remove the first edge `u — v` (no-op if absent).
+    RemoveEdge { u: VertexId, v: VertexId },
+    /// Set both directed weights of edge `u — v` to `w` (no-op if
+    /// absent).
+    SetEdgeWeight { u: VertexId, v: VertexId, w: f32 },
+    /// Mark `v` dirty without changing the topology (forces its rank to
+    /// be recomputed — the "touch vertex data" RPC).
+    TouchVertex { v: VertexId },
+}
+
+impl Mutation {
+    /// The endpoints this mutation dirties, in `(u, v)` order
+    /// (`TouchVertex` has a single endpoint).
+    pub fn endpoints(&self) -> (VertexId, Option<VertexId>) {
+        match *self {
+            Mutation::AddEdge { u, v, .. }
+            | Mutation::RemoveEdge { u, v }
+            | Mutation::SetEdgeWeight { u, v, .. } => (u, Some(v)),
+            Mutation::TouchVertex { v } => (v, None),
+        }
+    }
+}
+
+impl Wire for Mutation {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Mutation::AddEdge { u, v, w } => {
+                out.push(0);
+                u.encode(out);
+                v.encode(out);
+                w.encode(out);
+            }
+            Mutation::RemoveEdge { u, v } => {
+                out.push(1);
+                u.encode(out);
+                v.encode(out);
+            }
+            Mutation::SetEdgeWeight { u, v, w } => {
+                out.push(2);
+                u.encode(out);
+                v.encode(out);
+                w.encode(out);
+            }
+            Mutation::TouchVertex { v } => {
+                out.push(3);
+                v.encode(out);
+            }
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(match u8::decode(input)? {
+            0 => Mutation::AddEdge {
+                u: VertexId::decode(input)?,
+                v: VertexId::decode(input)?,
+                w: f32::decode(input)?,
+            },
+            1 => Mutation::RemoveEdge {
+                u: VertexId::decode(input)?,
+                v: VertexId::decode(input)?,
+            },
+            2 => Mutation::SetEdgeWeight {
+                u: VertexId::decode(input)?,
+                v: VertexId::decode(input)?,
+                w: f32::decode(input)?,
+            },
+            3 => Mutation::TouchVertex {
+                v: VertexId::decode(input)?,
+            },
+            tag => {
+                return Err(WireError::BadTag {
+                    what: "Mutation",
+                    tag,
+                })
+            }
+        })
+    }
+}
+
+/// A client request to the serving frontend.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeReq {
+    /// Read one vertex's current rank (answered from possibly
+    /// still-converging state; the reply carries the staleness tag).
+    Query { vertex: VertexId },
+    /// Apply a batch of mutations as one epoch and re-converge the
+    /// dirtied neighborhood. The reply reports the epoch's work.
+    Mutate { muts: Vec<Mutation> },
+    /// Read the cluster's serving counters.
+    Stats,
+    /// Stop the cluster (frontend broadcasts `Stop` to every machine).
+    Shutdown,
+}
+
+impl Wire for ServeReq {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            ServeReq::Query { vertex } => {
+                out.push(0);
+                vertex.encode(out);
+            }
+            ServeReq::Mutate { muts } => {
+                out.push(1);
+                muts.encode(out);
+            }
+            ServeReq::Stats => out.push(2),
+            ServeReq::Shutdown => out.push(3),
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(match u8::decode(input)? {
+            0 => ServeReq::Query {
+                vertex: VertexId::decode(input)?,
+            },
+            1 => ServeReq::Mutate {
+                muts: Vec::<Mutation>::decode(input)?,
+            },
+            2 => ServeReq::Stats,
+            3 => ServeReq::Shutdown,
+            tag => {
+                return Err(WireError::BadTag {
+                    what: "ServeReq",
+                    tag,
+                })
+            }
+        })
+    }
+}
+
+/// Why a request was refused (always a reply, never a panic or a dropped
+/// connection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// A vertex id outside `0..n`.
+    UnknownVertex,
+    /// The request frame failed to decode (or was semantically invalid,
+    /// e.g. a self-loop mutation).
+    BadRequest,
+}
+
+impl Wire for ErrorKind {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(match self {
+            ErrorKind::UnknownVertex => 0,
+            ErrorKind::BadRequest => 1,
+        });
+    }
+
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(match u8::decode(input)? {
+            0 => ErrorKind::UnknownVertex,
+            1 => ErrorKind::BadRequest,
+            tag => {
+                return Err(WireError::BadTag {
+                    what: "ErrorKind",
+                    tag,
+                })
+            }
+        })
+    }
+}
+
+/// Serving counters, readable any time via [`ServeReq::Stats`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeStats {
+    /// Completed epochs (epoch 0 is the initial convergence).
+    pub epoch: u64,
+    /// Whether the last epoch has fully converged (quiescent cluster).
+    pub converged: bool,
+    /// Updates executed by the initial convergence (epoch 0).
+    pub initial_updates: u64,
+    /// Updates executed by the most recent epoch.
+    pub epoch_updates: u64,
+    /// Updates executed since the cluster started, all epochs.
+    pub total_updates: u64,
+    /// Global vertex count (fixed for the session's lifetime).
+    pub vertices: u64,
+    /// Live global edge count (initial edges + adds − removes).
+    pub edges: u64,
+    /// Cluster size.
+    pub machines: u32,
+}
+
+impl Wire for ServeStats {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.epoch.encode(out);
+        self.converged.encode(out);
+        self.initial_updates.encode(out);
+        self.epoch_updates.encode(out);
+        self.total_updates.encode(out);
+        self.vertices.encode(out);
+        self.edges.encode(out);
+        self.machines.encode(out);
+    }
+
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(ServeStats {
+            epoch: u64::decode(input)?,
+            converged: bool::decode(input)?,
+            initial_updates: u64::decode(input)?,
+            epoch_updates: u64::decode(input)?,
+            total_updates: u64::decode(input)?,
+            vertices: u64::decode(input)?,
+            edges: u64::decode(input)?,
+            machines: u32::decode(input)?,
+        })
+    }
+}
+
+/// The frontend's reply to one [`ServeReq`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeReply {
+    /// Query answer. `epoch`/`converged` are the staleness tag: the
+    /// value is exact when `converged`, otherwise it is the owning
+    /// machine's in-flight estimate during epoch `epoch`.
+    Value {
+        vertex: VertexId,
+        rank: f32,
+        epoch: u64,
+        converged: bool,
+    },
+    /// Mutation batch applied and re-converged: `updates` vertex-update
+    /// executions over `steps` supersteps (the incremental-recomputation
+    /// cost of the batch), `scheduled` initially-dirtied vertices.
+    MutAck {
+        epoch: u64,
+        scheduled: u64,
+        updates: u64,
+        steps: u64,
+    },
+    /// Stats snapshot.
+    Stats(ServeStats),
+    /// Acknowledges shutdown; the cluster is draining.
+    Bye,
+    /// Typed refusal (unknown vertex, malformed frame, …).
+    Error { kind: ErrorKind, detail: String },
+}
+
+impl Wire for ServeReply {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            ServeReply::Value {
+                vertex,
+                rank,
+                epoch,
+                converged,
+            } => {
+                out.push(0);
+                vertex.encode(out);
+                rank.encode(out);
+                epoch.encode(out);
+                converged.encode(out);
+            }
+            ServeReply::MutAck {
+                epoch,
+                scheduled,
+                updates,
+                steps,
+            } => {
+                out.push(1);
+                epoch.encode(out);
+                scheduled.encode(out);
+                updates.encode(out);
+                steps.encode(out);
+            }
+            ServeReply::Stats(s) => {
+                out.push(2);
+                s.encode(out);
+            }
+            ServeReply::Bye => out.push(3),
+            ServeReply::Error { kind, detail } => {
+                out.push(4);
+                kind.encode(out);
+                detail.encode(out);
+            }
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(match u8::decode(input)? {
+            0 => ServeReply::Value {
+                vertex: VertexId::decode(input)?,
+                rank: f32::decode(input)?,
+                epoch: u64::decode(input)?,
+                converged: bool::decode(input)?,
+            },
+            1 => ServeReply::MutAck {
+                epoch: u64::decode(input)?,
+                scheduled: u64::decode(input)?,
+                updates: u64::decode(input)?,
+                steps: u64::decode(input)?,
+            },
+            2 => ServeReply::Stats(ServeStats::decode(input)?),
+            3 => ServeReply::Bye,
+            4 => ServeReply::Error {
+                kind: ErrorKind::decode(input)?,
+                detail: String::decode(input)?,
+            },
+            tag => {
+                return Err(WireError::BadTag {
+                    what: "ServeReply",
+                    tag,
+                })
+            }
+        })
+    }
+}
+
+/// One mutation annotated by the frontend with the routing facts every
+/// machine needs but only the frontend (which holds the atom-store
+/// partition) computes: the owner machines of both endpoints. Workers
+/// apply the broadcast batch filtered to what is locally relevant, so
+/// they never need the global ownership map.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutedMutation {
+    pub m: Mutation,
+    /// Owner machine of endpoint `u` (== owner of `v` for TouchVertex).
+    pub owner_u: u32,
+    /// Owner machine of endpoint `v` (== `owner_u` for TouchVertex).
+    pub owner_v: u32,
+}
+
+impl Wire for RoutedMutation {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.m.encode(out);
+        self.owner_u.encode(out);
+        self.owner_v.encode(out);
+    }
+
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(RoutedMutation {
+            m: Mutation::decode(input)?,
+            owner_u: u32::decode(input)?,
+            owner_v: u32::decode(input)?,
+        })
+    }
+}
+
+/// The mesh protocol between serving machines (frontend = machine 0).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PeerMsg {
+    /// Frontend → all (including itself): start epoch `epoch` by
+    /// applying `muts`. An empty batch with `epoch == 0` means "schedule
+    /// every owned vertex" — the initial convergence.
+    Apply { epoch: u64, muts: Vec<RoutedMutation> },
+    /// Ghost coherence + remote task injection: `(vertex, version,
+    /// rank)` triples for vertices the receiver ghosts, plus tasks for
+    /// vertices the receiver owns (scheduled via the external-injection
+    /// path, `Scheduler::inject`).
+    Ghost {
+        verts: Vec<(VertexId, u64, f32)>,
+        tasks: Vec<Task>,
+    },
+    /// Superstep barrier marker: the sender has flushed everything it
+    /// will send for barrier `step` (FIFO ordering makes this a fence).
+    StepEnd { step: u64 },
+    /// Worker → frontend at each barrier: local scheduler backlog and
+    /// updates executed this superstep.
+    Report {
+        step: u64,
+        pending: u64,
+        updates: u64,
+    },
+    /// Frontend → all: continue (`cont`) or end the epoch (quiescent).
+    Decision { step: u64, cont: bool },
+    /// Frontend → owner: answer a client query for `vertex`.
+    Query { id: u64, vertex: VertexId },
+    /// Owner → frontend: the query answer.
+    Answer {
+        id: u64,
+        vertex: VertexId,
+        rank: f32,
+        version: u64,
+    },
+    /// Frontend → all: drain and exit the serving loop.
+    Stop,
+}
+
+impl Wire for PeerMsg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            PeerMsg::Apply { epoch, muts } => {
+                out.push(0);
+                epoch.encode(out);
+                muts.encode(out);
+            }
+            PeerMsg::Ghost { verts, tasks } => {
+                out.push(1);
+                verts.encode(out);
+                tasks.encode(out);
+            }
+            PeerMsg::StepEnd { step } => {
+                out.push(2);
+                step.encode(out);
+            }
+            PeerMsg::Report {
+                step,
+                pending,
+                updates,
+            } => {
+                out.push(3);
+                step.encode(out);
+                pending.encode(out);
+                updates.encode(out);
+            }
+            PeerMsg::Decision { step, cont } => {
+                out.push(4);
+                step.encode(out);
+                cont.encode(out);
+            }
+            PeerMsg::Query { id, vertex } => {
+                out.push(5);
+                id.encode(out);
+                vertex.encode(out);
+            }
+            PeerMsg::Answer {
+                id,
+                vertex,
+                rank,
+                version,
+            } => {
+                out.push(6);
+                id.encode(out);
+                vertex.encode(out);
+                rank.encode(out);
+                version.encode(out);
+            }
+            PeerMsg::Stop => out.push(7),
+        }
+    }
+
+    fn decode(input: &mut &[u8]) -> wire::Result<Self> {
+        Ok(match u8::decode(input)? {
+            0 => PeerMsg::Apply {
+                epoch: u64::decode(input)?,
+                muts: Vec::<RoutedMutation>::decode(input)?,
+            },
+            1 => PeerMsg::Ghost {
+                verts: Vec::<(VertexId, u64, f32)>::decode(input)?,
+                tasks: Vec::<Task>::decode(input)?,
+            },
+            2 => PeerMsg::StepEnd {
+                step: u64::decode(input)?,
+            },
+            3 => PeerMsg::Report {
+                step: u64::decode(input)?,
+                pending: u64::decode(input)?,
+                updates: u64::decode(input)?,
+            },
+            4 => PeerMsg::Decision {
+                step: u64::decode(input)?,
+                cont: bool::decode(input)?,
+            },
+            5 => PeerMsg::Query {
+                id: u64::decode(input)?,
+                vertex: VertexId::decode(input)?,
+            },
+            6 => PeerMsg::Answer {
+                id: u64::decode(input)?,
+                vertex: VertexId::decode(input)?,
+                rank: f32::decode(input)?,
+                version: u64::decode(input)?,
+            },
+            7 => PeerMsg::Stop,
+            tag => {
+                return Err(WireError::BadTag {
+                    what: "PeerMsg",
+                    tag,
+                })
+            }
+        })
+    }
+}

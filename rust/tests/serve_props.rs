@@ -1,0 +1,589 @@
+//! Serving-mode properties (DESIGN.md §Serving): the client/peer RPC
+//! grammar round-trips and decodes totally, a mutation batch against a
+//! converged cluster re-converges **incrementally** (update counts well
+//! under the initial convergence) to the same fixed point a from-scratch
+//! run reaches on the mutated graph, and nothing a client sends — out of
+//! range ids, self-loops, NaN weights, raw garbage bytes — can panic the
+//! cluster: every failure is a typed [`ServeReply::Error`].
+//!
+//! The `#[ignore]`d smoke spawns real `graphlab serve` processes and a
+//! real TCP client (CI cluster-smoke runs it with `--ignored`).
+
+use std::collections::HashMap;
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use graphlab::apps::pagerank::{self, PrEdge, PrVertex};
+use graphlab::distributed::transport::{
+    read_ack, read_reject_reason, write_handshake, ROLE_CLIENT, ROLE_WORKER,
+};
+use graphlab::graph::GraphBuilder;
+use graphlab::partition::atoms::two_phase;
+use graphlab::scheduler::Task;
+use graphlab::serve::client::spawn_listener;
+use graphlab::serve::engine::{ServeOpts, ServeSession};
+use graphlab::serve::msg::{ErrorKind, Mutation, PeerMsg, RoutedMutation, ServeReply, ServeReq, ServeStats};
+use graphlab::serve::{ServeClient, CLIENT_TAG};
+use graphlab::util::Rng;
+use graphlab::wire::{self, WIRE_VERSION};
+
+// ---------------------------------------------------------------------------
+// wire grammar: round-trips + totality
+// ---------------------------------------------------------------------------
+
+/// Round-trip plus prefix-totality (same contract as wire_props.rs):
+/// decoding any strict prefix of the encoding must be an error.
+fn assert_codec<W: wire::Wire + PartialEq + std::fmt::Debug>(v: &W) {
+    let bytes = wire::to_bytes(v);
+    let back: W = wire::from_bytes(&bytes).unwrap();
+    assert_eq!(&back, v);
+    for cut in 0..bytes.len() {
+        assert!(
+            wire::from_bytes::<W>(&bytes[..cut]).is_err(),
+            "{cut}-byte prefix of a {}-byte encoding decoded",
+            bytes.len()
+        );
+    }
+}
+
+fn sample_mutations() -> Vec<Mutation> {
+    vec![
+        Mutation::AddEdge { u: 3, v: 99, w: 0.125 },
+        Mutation::RemoveEdge { u: 7, v: 2 },
+        Mutation::SetEdgeWeight { u: 0, v: 1, w: -4.5 },
+        Mutation::TouchVertex { v: 41 },
+    ]
+}
+
+#[test]
+fn prop_serve_client_grammar_round_trips() {
+    for m in sample_mutations() {
+        assert_codec(&m);
+        assert_codec(&RoutedMutation { m, owner_u: 1, owner_v: 2 });
+    }
+    assert_codec(&ServeReq::Query { vertex: 17 });
+    assert_codec(&ServeReq::Mutate { muts: sample_mutations() });
+    assert_codec(&ServeReq::Mutate { muts: Vec::new() });
+    assert_codec(&ServeReq::Stats);
+    assert_codec(&ServeReq::Shutdown);
+
+    let stats = ServeStats {
+        epoch: 9,
+        converged: true,
+        initial_updates: 120_000,
+        epoch_updates: 512,
+        total_updates: 120_512,
+        vertices: 20_000,
+        edges: 81_234,
+        machines: 3,
+    };
+    assert_codec(&stats);
+    assert_codec(&ServeReply::Value { vertex: 17, rank: 0.031, epoch: 4, converged: false });
+    assert_codec(&ServeReply::MutAck { epoch: 5, scheduled: 12, updates: 640, steps: 11 });
+    assert_codec(&ServeReply::Stats(stats));
+    assert_codec(&ServeReply::Bye);
+    assert_codec(&ServeReply::Error {
+        kind: ErrorKind::UnknownVertex,
+        detail: "vertex 10000 out of range (n = 200)".to_string(),
+    });
+    assert_codec(&ServeReply::Error { kind: ErrorKind::BadRequest, detail: String::new() });
+}
+
+#[test]
+fn prop_serve_peer_grammar_round_trips() {
+    let routed: Vec<RoutedMutation> = sample_mutations()
+        .into_iter()
+        .map(|m| RoutedMutation { m, owner_u: 0, owner_v: 2 })
+        .collect();
+    assert_codec(&PeerMsg::Apply { epoch: 3, muts: routed });
+    assert_codec(&PeerMsg::Apply { epoch: 0, muts: Vec::new() });
+    assert_codec(&PeerMsg::Ghost {
+        verts: vec![(4, 17, 0.25), (9, 1, -1.5)],
+        tasks: vec![Task { vertex: 4, priority: 2.0 }, Task { vertex: 9, priority: 0.5 }],
+    });
+    assert_codec(&PeerMsg::StepEnd { step: 41 });
+    assert_codec(&PeerMsg::Report { step: 41, pending: 7, updates: 1234 });
+    assert_codec(&PeerMsg::Decision { step: 41, cont: true });
+    assert_codec(&PeerMsg::Query { id: 77, vertex: 5 });
+    assert_codec(&PeerMsg::Answer { id: 77, vertex: 5, rank: 0.01, version: 9 });
+    assert_codec(&PeerMsg::Stop);
+}
+
+#[test]
+fn prop_serve_decoding_is_total_on_garbage() {
+    // Unknown discriminants are typed errors…
+    assert!(wire::from_bytes::<Mutation>(&[200]).is_err());
+    assert!(wire::from_bytes::<ServeReq>(&[200]).is_err());
+    assert!(wire::from_bytes::<ServeReply>(&[200]).is_err());
+    assert!(wire::from_bytes::<PeerMsg>(&[200]).is_err());
+    // …and random byte soup never panics, whatever it decodes as.
+    let mut rng = Rng::new(0x5e7e);
+    for _ in 0..400 {
+        let len = rng.gen_range(64);
+        let buf: Vec<u8> = (0..len).map(|_| rng.gen_range(256) as u8).collect();
+        let _ = wire::from_bytes::<Mutation>(&buf);
+        let _ = wire::from_bytes::<ServeReq>(&buf);
+        let _ = wire::from_bytes::<ServeReply>(&buf);
+        let _ = wire::from_bytes::<PeerMsg>(&buf);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// incremental recomputation vs from-scratch
+// ---------------------------------------------------------------------------
+
+fn rank_of(s: &ServeSession, v: u32) -> f32 {
+    match s.query(v).expect("query") {
+        ServeReply::Value { rank, .. } => rank,
+        other => panic!("query {v} answered {other:?}"),
+    }
+}
+
+/// The tentpole's acceptance criterion: converge a 3-machine serving
+/// cluster, apply a batch of edge mutations, and require (a) the
+/// re-convergence to be *incremental* — its update count a small
+/// fraction of the initial convergence's — and (b) every queried rank to
+/// match, within 1e-4, a from-scratch convergence on the mutated graph
+/// (built directly, served by a fresh cluster with a different machine
+/// count, so the fixed point is reached by a genuinely different path).
+#[test]
+fn incremental_reconvergence_matches_from_scratch() {
+    let n = 1200usize;
+    let edges = graphlab::datagen::web_graph(n, 6, 11);
+    let g = pagerank::build(n, &edges, 0.15);
+    let part = two_phase(&g, 24, 3, 7);
+    let opts = ServeOpts { machines: 3, eps: 1e-7, ..ServeOpts::default() };
+    let session = ServeSession::start(g, &part, &opts).expect("start serve cluster");
+    let initial = session.wait_converged().expect("initial convergence");
+    assert!(initial.converged && initial.initial_updates > 0);
+
+    // Pick mutation targets with unambiguous semantics: pairs that occur
+    // exactly once in the edge list (remove / reweight) and pairs not
+    // present at all (add), so the oracle's replay is exact.
+    let mut count: HashMap<(u32, u32), usize> = HashMap::new();
+    for &(u, v) in &edges {
+        *count.entry((u.min(v), u.max(v))).or_default() += 1;
+    }
+    let uniq: Vec<(u32, u32)> = edges
+        .iter()
+        .map(|&(u, v)| (u.min(v), u.max(v)))
+        .filter(|k| count[k] == 1)
+        .collect();
+    assert!(uniq.len() >= 5, "generator produced too few unique edges");
+    let mut absent = Vec::new();
+    let mut probe = 0u32;
+    while absent.len() < 2 {
+        let cand = (probe, probe + n as u32 / 2);
+        if cand.0 != cand.1 && !count.contains_key(&cand) {
+            absent.push(cand);
+        }
+        probe += 1;
+    }
+    let muts = vec![
+        Mutation::SetEdgeWeight { u: uniq[0].0, v: uniq[0].1, w: 0.05 },
+        Mutation::SetEdgeWeight { u: uniq[1].1, v: uniq[1].0, w: 0.02 },
+        Mutation::RemoveEdge { u: uniq[2].0, v: uniq[2].1 },
+        Mutation::RemoveEdge { u: uniq[3].1, v: uniq[3].0 },
+        Mutation::AddEdge { u: absent[0].0, v: absent[0].1, w: 0.05 },
+        Mutation::AddEdge { u: absent[1].1, v: absent[1].0, w: 0.03 },
+        Mutation::TouchVertex { v: uniq[4].0 },
+    ];
+    let ack = session.mutate(muts.clone()).expect("mutation batch");
+    let (epoch, updates) = match ack {
+        ServeReply::MutAck { epoch, scheduled, updates, .. } => {
+            assert!(scheduled > 0);
+            (epoch, updates)
+        }
+        other => panic!("mutation batch answered {other:?}"),
+    };
+    assert_eq!(epoch, 1, "first client batch is epoch 1 (epoch 0 = initial convergence)");
+    assert!(updates > 0, "a structural batch must recompute something");
+    // Incrementality: the dirtied-neighborhood recomputation touches a
+    // small fraction of the work the initial convergence did.
+    assert!(
+        (updates as f64) < 0.2 * initial.initial_updates as f64,
+        "re-convergence was not incremental: {updates} updates vs {} initially",
+        initial.initial_updates
+    );
+
+    // Replies after the epoch carry a fresh staleness tag.
+    match session.query(0).expect("query after mutation") {
+        ServeReply::Value { epoch, converged, .. } => {
+            assert_eq!(epoch, 1);
+            assert!(converged, "no epoch in flight: the tag must say converged");
+        }
+        other => panic!("query answered {other:?}"),
+    }
+
+    // The from-scratch oracle: replay the serve mutation semantics on the
+    // initial weighted edge list (pagerank::build weights; AddEdge and
+    // SetEdgeWeight write weight w in both directions, RemoveEdge drops
+    // the edge — serving never renormalizes degrees), then converge a
+    // fresh cluster on the mutated graph from uniform ranks.
+    let mut deg = vec![0u32; n];
+    for &(u, v) in &edges {
+        deg[u as usize] += 1;
+        deg[v as usize] += 1;
+    }
+    let mut wedges: Vec<(u32, u32, f32, f32)> = edges
+        .iter()
+        .map(|&(u, v)| {
+            let (lo, hi) = (u.min(v), u.max(v));
+            (lo, hi, 0.85 / deg[hi as usize] as f32, 0.85 / deg[lo as usize] as f32)
+        })
+        .collect();
+    for m in &muts {
+        match *m {
+            Mutation::AddEdge { u, v, w } => wedges.push((u.min(v), u.max(v), w, w)),
+            Mutation::RemoveEdge { u, v } => {
+                let (lo, hi) = (u.min(v), u.max(v));
+                let pos = wedges
+                    .iter()
+                    .position(|&(a, b, _, _)| (a, b) == (lo, hi))
+                    .expect("removed edge is unique by construction");
+                wedges.remove(pos);
+            }
+            Mutation::SetEdgeWeight { u, v, w } => {
+                let (lo, hi) = (u.min(v), u.max(v));
+                let pos = wedges
+                    .iter()
+                    .position(|&(a, b, _, _)| (a, b) == (lo, hi))
+                    .expect("reweighted edge is unique by construction");
+                wedges[pos].2 = w;
+                wedges[pos].3 = w;
+            }
+            Mutation::TouchVertex { .. } => {}
+        }
+    }
+    let mut b = GraphBuilder::with_capacity(n, wedges.len());
+    b.add_vertices(n, |_| PrVertex { rank: 1.0 / n as f32 });
+    for &(lo, hi, to_lo, to_hi) in &wedges {
+        b.add_edge(lo, hi, PrEdge { to_lo, to_hi });
+    }
+    let og = b.build();
+    let opart = two_phase(&og, 16, 2, 3);
+    let oracle = ServeSession::start(og, &opart, &ServeOpts { machines: 2, eps: 1e-7, ..ServeOpts::default() })
+        .expect("start oracle cluster");
+    oracle.wait_converged().expect("oracle convergence");
+
+    for v in 0..n as u32 {
+        let diff = (rank_of(&session, v) - rank_of(&oracle, v)).abs();
+        assert!(
+            diff <= 1e-4,
+            "vertex {v}: incremental rank diverged from from-scratch by {diff}"
+        );
+    }
+    oracle.shutdown().expect("oracle shutdown");
+    session.shutdown().expect("serve shutdown");
+}
+
+// ---------------------------------------------------------------------------
+// typed refusals: nothing a client sends panics the cluster
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bad_requests_get_typed_errors_not_panics() {
+    let n = 60usize;
+    let edges = graphlab::datagen::web_graph(n, 4, 5);
+    let g = pagerank::build(n, &edges, 0.15);
+    let part = two_phase(&g, 8, 2, 1);
+    let opts = ServeOpts { eps: 1e-6, ..ServeOpts::default() };
+    let session = ServeSession::start(g, &part, &opts).expect("start serve cluster");
+    session.wait_converged().expect("initial convergence");
+
+    match session.query(10_000).expect("query reply") {
+        ServeReply::Error { kind: ErrorKind::UnknownVertex, .. } => {}
+        other => panic!("out-of-range query answered {other:?}"),
+    }
+    match session.mutate(vec![Mutation::AddEdge { u: 2, v: 9_999, w: 0.1 }]).unwrap() {
+        ServeReply::Error { kind: ErrorKind::UnknownVertex, .. } => {}
+        other => panic!("out-of-range mutation answered {other:?}"),
+    }
+    match session.mutate(vec![Mutation::AddEdge { u: 3, v: 3, w: 0.1 }]).unwrap() {
+        ServeReply::Error { kind: ErrorKind::BadRequest, detail } => {
+            assert!(detail.contains("self-loop"), "refusal names the problem: {detail}")
+        }
+        other => panic!("self-loop mutation answered {other:?}"),
+    }
+    match session.mutate(vec![Mutation::SetEdgeWeight { u: 0, v: 1, w: f32::NAN }]).unwrap() {
+        ServeReply::Error { kind: ErrorKind::BadRequest, .. } => {}
+        other => panic!("NaN-weight mutation answered {other:?}"),
+    }
+    match session.mutate(vec![Mutation::TouchVertex { v: n as u32 }]).unwrap() {
+        ServeReply::Error { kind: ErrorKind::UnknownVertex, .. } => {}
+        other => panic!("out-of-range touch answered {other:?}"),
+    }
+    // A refusal wedges nothing: a valid batch still re-converges…
+    match session.mutate(vec![Mutation::TouchVertex { v: 1 }]).unwrap() {
+        ServeReply::MutAck { epoch: 1, .. } => {}
+        other => panic!("valid touch after refusals answered {other:?}"),
+    }
+    // …and a valid query still answers.
+    match session.query(1).unwrap() {
+        ServeReply::Value { vertex: 1, .. } => {}
+        other => panic!("valid query after refusals answered {other:?}"),
+    }
+    session.shutdown().expect("shutdown");
+}
+
+// ---------------------------------------------------------------------------
+// the TCP client boundary
+// ---------------------------------------------------------------------------
+
+fn read_reply(s: &mut TcpStream) -> ServeReply {
+    let mut len4 = [0u8; 4];
+    s.read_exact(&mut len4).expect("reply length");
+    let mut buf = vec![0u8; u32::from_le_bytes(len4) as usize];
+    s.read_exact(&mut buf).expect("reply body");
+    wire::from_bytes(&buf).expect("reply decodes")
+}
+
+fn write_req(s: &mut TcpStream, req: &ServeReq) {
+    let body = wire::to_bytes(req);
+    s.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(&body).unwrap();
+    s.flush().unwrap();
+}
+
+/// Dial the client port raw and complete a valid serve handshake.
+fn raw_client(addr: std::net::SocketAddr) -> TcpStream {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write_handshake(&mut s, 0, 0, WIRE_VERSION, CLIENT_TAG, ROLE_CLIENT).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    assert!(read_ack(&mut s).unwrap(), "valid client handshake must be accepted");
+    s
+}
+
+#[test]
+fn tcp_client_boundary_is_total() {
+    let n = 80usize;
+    let edges = graphlab::datagen::web_graph(n, 4, 9);
+    let g = pagerank::build(n, &edges, 0.15);
+    let part = two_phase(&g, 8, 2, 1);
+    let session =
+        ServeSession::start(g, &part, &ServeOpts { eps: 1e-6, ..ServeOpts::default() }).unwrap();
+    session.wait_converged().unwrap();
+    let (addr, _accept) = spawn_listener("127.0.0.1:0", session.feed()).unwrap();
+
+    // Happy path over real sockets.
+    let mut c = ServeClient::connect(&addr.to_string()).expect("client connects");
+    match c.query(3).unwrap() {
+        ServeReply::Value { vertex: 3, rank, .. } => assert!(rank > 0.0),
+        other => panic!("tcp query answered {other:?}"),
+    }
+    let st = c.stats().unwrap();
+    assert_eq!((st.vertices, st.machines), (n as u64, 2));
+    assert!(st.converged);
+
+    // Worker-role connections are turned away with a reason, not framing
+    // chaos — and so are wrong app tags.
+    let mut w = TcpStream::connect(addr).unwrap();
+    write_handshake(&mut w, 1, 2, WIRE_VERSION, CLIENT_TAG, ROLE_WORKER).unwrap();
+    w.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert!(!read_ack(&mut w).unwrap_or(false), "worker role on client port must be rejected");
+    let why = read_reject_reason(&mut w).expect("reject carries a reason");
+    assert!(why.contains("client port"), "reason names the port: {why}");
+    let mut t = TcpStream::connect(addr).unwrap();
+    write_handshake(&mut t, 0, 0, WIRE_VERSION, "pagerank-msgs", ROLE_CLIENT).unwrap();
+    t.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    assert!(!read_ack(&mut t).unwrap_or(false), "foreign tag on client port must be rejected");
+
+    // Well-framed garbage: typed error, connection survives and still
+    // serves valid requests afterwards.
+    let mut raw = raw_client(addr);
+    raw.write_all(&3u32.to_le_bytes()).unwrap();
+    raw.write_all(&[0xff, 0xff, 0xff]).unwrap();
+    raw.flush().unwrap();
+    match read_reply(&mut raw) {
+        ServeReply::Error { kind: ErrorKind::BadRequest, .. } => {}
+        other => panic!("garbage frame answered {other:?}"),
+    }
+    write_req(&mut raw, &ServeReq::Stats);
+    match read_reply(&mut raw) {
+        ServeReply::Stats(s) => assert_eq!(s.vertices, n as u64),
+        other => panic!("stats after garbage answered {other:?}"),
+    }
+
+    // A zero-length frame is a framing loss: best-effort typed error,
+    // then the server hangs up.
+    let mut broken = raw_client(addr);
+    broken.write_all(&0u32.to_le_bytes()).unwrap();
+    broken.flush().unwrap();
+    match read_reply(&mut broken) {
+        ServeReply::Error { kind: ErrorKind::BadRequest, detail } => {
+            assert!(detail.contains("length"), "error names the framing problem: {detail}")
+        }
+        other => panic!("zero-length frame answered {other:?}"),
+    }
+    let mut one = [0u8; 1];
+    assert!(
+        matches!(broken.read(&mut one), Ok(0) | Err(_)),
+        "connection must close after framing loss"
+    );
+
+    // The cluster survived all of it; shut down through the client.
+    match c.shutdown().unwrap() {
+        ServeReply::Bye => {}
+        other => panic!("shutdown answered {other:?}"),
+    }
+    session.wait().expect("cluster drains cleanly");
+}
+
+// ---------------------------------------------------------------------------
+// multi-process smoke (ignored by default; CI cluster-smoke runs it)
+// ---------------------------------------------------------------------------
+
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+fn wait_with_deadline(
+    child: &mut std::process::Child,
+    secs: u64,
+    who: &str,
+) -> std::process::ExitStatus {
+    let deadline = std::time::Instant::now() + Duration::from_secs(secs);
+    loop {
+        match child.try_wait().unwrap_or_else(|e| panic!("poll {who}: {e}")) {
+            Some(s) => break s,
+            None if std::time::Instant::now() > deadline => {
+                child.kill().ok();
+                child.wait().ok();
+                panic!("{who} did not exit within {secs}s");
+            }
+            None => std::thread::sleep(Duration::from_millis(200)),
+        }
+    }
+}
+
+/// One attempt at the two-process serve cluster (retried on fresh ports).
+fn try_serve_cluster(bin: &str, dir: &std::path::Path, atoms_s: &str) -> Result<(), String> {
+    use std::process::{Command, Stdio};
+    let hosts = dir.join("hosts.txt");
+    std::fs::write(&hosts, format!("127.0.0.1:{}\n127.0.0.1:{}\n", free_port(), free_port()))
+        .unwrap();
+    let hosts_s = hosts.to_str().unwrap();
+    let client_port = free_port();
+    let listen = format!("127.0.0.1:{client_port}");
+
+    let mut worker = Command::new(bin)
+        .args(["serve", "--cluster", hosts_s, "--me", "1", "--atoms-dir", atoms_s])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn serve worker");
+    let mut frontend = Command::new(bin)
+        .args(["serve", "--cluster", hosts_s, "--me", "0", "--atoms-dir", atoms_s])
+        .args(["--listen", &listen])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn serve frontend");
+
+    let kill_both = |worker: &mut std::process::Child, frontend: &mut std::process::Child| {
+        worker.kill().ok();
+        worker.wait().ok();
+        frontend.kill().ok();
+        frontend.wait().ok();
+    };
+
+    // Dial the frontend until its listener is up (the cluster converges
+    // in the background; queries are legal meanwhile).
+    let mut client = None;
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    while client.is_none() {
+        match ServeClient::connect(&listen) {
+            Ok(c) => client = Some(c),
+            Err(e) if std::time::Instant::now() > deadline => {
+                kill_both(&mut worker, &mut frontend);
+                return Err(format!("frontend never accepted a client: {e}"));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(200)),
+        }
+    }
+    let mut client = client.unwrap();
+
+    // Wait out the initial convergence via the stats RPC.
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    let initial = loop {
+        match client.stats() {
+            Ok(s) if s.converged => break s,
+            Ok(_) => std::thread::sleep(Duration::from_millis(100)),
+            Err(e) => {
+                kill_both(&mut worker, &mut frontend);
+                return Err(format!("stats RPC failed: {e}"));
+            }
+        }
+        if std::time::Instant::now() > deadline {
+            kill_both(&mut worker, &mut frontend);
+            return Err("initial convergence did not finish within 120s".into());
+        }
+    };
+    assert!(initial.initial_updates > 0, "converged with zero updates: {initial:?}");
+
+    // A mutation batch over real TCP re-converges and acks.
+    let ack = client
+        .mutate(vec![
+            Mutation::AddEdge { u: 11, v: 1777, w: 0.05 },
+            Mutation::TouchVertex { v: 7 },
+        ])
+        .map_err(|e| format!("mutation RPC failed: {e}"))?;
+    match ack {
+        ServeReply::MutAck { epoch: 1, updates, .. } => {
+            assert!(updates > 0, "mutation epoch recomputed nothing")
+        }
+        other => panic!("mutation batch answered {other:?}"),
+    }
+    match client.query(11).map_err(|e| format!("query RPC failed: {e}"))? {
+        ServeReply::Value { vertex: 11, rank, epoch: 1, .. } => assert!(rank > 0.0),
+        other => panic!("query answered {other:?}"),
+    }
+
+    // Client-driven shutdown stops every process cleanly.
+    match client.shutdown().map_err(|e| format!("shutdown RPC failed: {e}"))? {
+        ServeReply::Bye => {}
+        other => panic!("shutdown answered {other:?}"),
+    }
+    let fs = wait_with_deadline(&mut frontend, 120, "serve frontend");
+    assert!(fs.success(), "frontend exited with {fs}");
+    let ws = wait_with_deadline(&mut worker, 120, "serve worker");
+    assert!(ws.success(), "worker exited with {ws}");
+    Ok(())
+}
+
+/// The serving path as real processes: `partition` once, launch machine 1
+/// and the frontend as separate `graphlab serve --cluster` processes,
+/// then drive query → mutate → re-converge → shutdown through a real TCP
+/// `ServeClient`. Ports are picked by bind-and-release, so
+/// connection-phase failures retry on fresh ports.
+#[test]
+#[ignore = "spawns real graphlab serve processes on loopback ports; run with --ignored (CI cluster-smoke)"]
+fn multi_process_serve_smoke() {
+    let bin = env!("CARGO_BIN_EXE_graphlab");
+    let dir = std::env::temp_dir().join(format!("graphlab-serve-smoke-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let atoms = dir.join("atoms");
+    let atoms_s = atoms.to_str().unwrap().to_string();
+    let st = std::process::Command::new(bin)
+        .args(["partition", "pagerank", "--atoms-dir", &atoms_s, "--n", "2000", "--atoms", "32"])
+        .status()
+        .expect("spawn graphlab partition");
+    assert!(st.success(), "graphlab partition failed");
+
+    let mut last_err = String::new();
+    for attempt in 0..3 {
+        match try_serve_cluster(bin, &dir, &atoms_s) {
+            Ok(()) => {
+                std::fs::remove_dir_all(&dir).ok();
+                return;
+            }
+            Err(e) => {
+                eprintln!("serve smoke attempt {attempt} failed, retrying on fresh ports: {e}");
+                last_err = e;
+            }
+        }
+    }
+    panic!("serve smoke failed on 3 port sets; last error:\n{last_err}");
+}

@@ -19,7 +19,7 @@ use std::time::Duration;
 
 use graphlab::distributed::network::{Endpoint, NetStats};
 use graphlab::distributed::transport::{
-    read_ack, read_handshake, write_handshake, TcpBound, TcpConfig,
+    read_ack, read_handshake, write_handshake, TcpBound, TcpConfig, ROLE_WORKER,
 };
 use graphlab::distributed::TransportKind;
 use graphlab::engine::EngineKind;
@@ -82,7 +82,7 @@ fn tcp_loopback_locking_matches_inproc_pagerank() {
 fn handshake_rejects_wrong_wire_version() {
     let bound = TcpBound::bind(0, "127.0.0.1:0", TcpConfig::new(2, "vtest")).unwrap();
     let mut s = TcpStream::connect(bound.local_addr()).unwrap();
-    write_handshake(&mut s, 1, 2, WIRE_VERSION + 1, "vtest").unwrap();
+    write_handshake(&mut s, 1, 2, WIRE_VERSION + 1, "vtest", ROLE_WORKER).unwrap();
     s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
     // Rejected: explicit ack 0, or the acceptor closed the connection.
     assert!(!read_ack(&mut s).unwrap_or(false), "future wire version must be rejected");
@@ -92,13 +92,13 @@ fn handshake_rejects_wrong_wire_version() {
 fn handshake_rejects_wrong_app_tag() {
     let bound = TcpBound::bind(0, "127.0.0.1:0", TcpConfig::new(2, "pagerank-msgs")).unwrap();
     let mut s = TcpStream::connect(bound.local_addr()).unwrap();
-    write_handshake(&mut s, 1, 2, WIRE_VERSION, "als-msgs").unwrap();
+    write_handshake(&mut s, 1, 2, WIRE_VERSION, "als-msgs", ROLE_WORKER).unwrap();
     s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
     assert!(!read_ack(&mut s).unwrap_or(false), "foreign app tag must be rejected");
     // A matching handshake on a fresh connection still gets in: the
     // rejection did not wedge the acceptor.
     let mut ok = TcpStream::connect(bound.local_addr()).unwrap();
-    write_handshake(&mut ok, 1, 2, WIRE_VERSION, "pagerank-msgs").unwrap();
+    write_handshake(&mut ok, 1, 2, WIRE_VERSION, "pagerank-msgs", ROLE_WORKER).unwrap();
     ok.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
     assert!(read_ack(&mut ok).unwrap());
 }
@@ -107,7 +107,7 @@ fn handshake_rejects_wrong_app_tag() {
 fn handshake_rejects_wrong_cluster_size() {
     let bound = TcpBound::bind(0, "127.0.0.1:0", TcpConfig::new(2, "size")).unwrap();
     let mut s = TcpStream::connect(bound.local_addr()).unwrap();
-    write_handshake(&mut s, 1, 5, WIRE_VERSION, "size").unwrap();
+    write_handshake(&mut s, 1, 5, WIRE_VERSION, "size", ROLE_WORKER).unwrap();
     s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
     assert!(!read_ack(&mut s).unwrap_or(false), "mismatched cluster size must be rejected");
 }
@@ -134,7 +134,7 @@ fn endpoint_with_puppet(tag: &str) -> (Endpoint<u32>, TcpStream, TcpStream) {
         from0.write_all(&[1u8]).unwrap();
         // Open the inbound connection and handshake as machine 1.
         let mut to0 = TcpStream::connect(addr0).unwrap();
-        write_handshake(&mut to0, 1, 2, WIRE_VERSION, &tag_owned).unwrap();
+        write_handshake(&mut to0, 1, 2, WIRE_VERSION, &tag_owned, ROLE_WORKER).unwrap();
         to0.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
         assert!(read_ack(&mut to0).unwrap());
         (to0, from0)
