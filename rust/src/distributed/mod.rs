@@ -31,7 +31,9 @@ pub mod transport;
 pub use localgraph::LocalGraph;
 pub use network::{Endpoint, Network, NetworkModel};
 pub use snapshot::SnapshotTrigger;
-pub use transport::{ClusterConfig, FaultPlan, Faulty, TransportKind, PORT_CONFLICT_MARKER};
+pub use transport::{
+    ClusterConfig, FaultPlan, Faulty, FramePool, TransportKind, PORT_CONFLICT_MARKER,
+};
 
 use std::path::Path;
 use std::sync::Arc;

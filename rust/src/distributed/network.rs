@@ -24,18 +24,24 @@
 //! message pays the same measurement path; they account zero *network*
 //! bytes, as before.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::distributed::transport::{
-    tcp_loopback_mesh, FaultPlan, Faulty, FrameError, InProcTransport, PeerError, TcpBound,
-    TcpConfig, Transport,
+    tcp_loopback_mesh, FaultPlan, Faulty, FrameError, FramePool, InProcTransport, PeerError,
+    TcpBound, TcpConfig, Transport,
 };
 use crate::partition::MachineId;
 use crate::wire::Wire;
 
 pub use crate::distributed::transport::NetworkModel;
+
+/// Eager-flush threshold for autobatched sends: a peer's pending
+/// coalesced buffer that reaches this size goes out immediately instead
+/// of waiting for the next explicit flush point, bounding both memory
+/// and added latency under heavy fan-out.
+const BATCH_FLUSH_BYTES: usize = 1 << 20;
 
 /// Per-machine traffic counters (all byte counts are encoded frame
 /// lengths, including the 4-byte length prefix).
@@ -78,6 +84,39 @@ pub struct Endpoint<M> {
     /// Typed errors from untrusted peers, drained by [`Endpoint::peer_errors`].
     errors: Vec<PeerError>,
     stats: Arc<Vec<NetStats>>,
+    /// Recycled frame buffers: `send` encodes into a pooled `Vec<u8>`,
+    /// `open` returns decoded frames, and the transport (if it buffers
+    /// internally, like TCP's writer/reader threads) recycles through
+    /// the same pool via [`Transport::install_pool`].
+    pool: FramePool,
+    /// When set, `send` appends to a per-peer pending buffer instead of
+    /// hitting the transport; see [`Endpoint::set_autobatch`].
+    autobatch: AtomicBool,
+    /// Per-peer pending coalesced frames (autobatch mode). Mutexes, not
+    /// `&mut`, because `send` takes `&self` — engines send while holding
+    /// shared borrows.
+    pending: Vec<Mutex<Pending>>,
+}
+
+/// One peer's pending coalesced frames (autobatch mode).
+#[derive(Default)]
+struct Pending {
+    /// Back-to-back `[u32 len][payload]` frames not yet handed to the
+    /// transport.
+    buf: Vec<u8>,
+    /// How many logical frames `buf` holds.
+    count: usize,
+}
+
+/// Encode `msg` as one `[u32 len][payload]` frame appended to `buf`;
+/// returns the frame's total length (payload + 4-byte prefix).
+fn encode_frame_into<M: Wire>(msg: &M, buf: &mut Vec<u8>) -> usize {
+    let start = buf.len();
+    buf.extend_from_slice(&[0u8; 4]);
+    msg.encode(buf);
+    let payload_len = (buf.len() - start - 4) as u32;
+    buf[start..start + 4].copy_from_slice(&payload_len.to_le_bytes());
+    buf.len() - start
 }
 
 fn new_stats(machines: usize) -> Arc<Vec<NetStats>> {
@@ -229,7 +268,7 @@ impl<M: Send + Wire> Endpoint<M> {
     /// `stats` must have one slot per machine; this endpoint writes only
     /// its own. (Public so tests and tooling can drive hand-built
     /// transports; engine code goes through [`Network`].)
-    pub fn from_transport(transport: Box<dyn Transport>, stats: Arc<Vec<NetStats>>) -> Self {
+    pub fn from_transport(mut transport: Box<dyn Transport>, stats: Arc<Vec<NetStats>>) -> Self {
         let (self_tx, self_rx) = mpsc::channel();
         let machines = transport.machines();
         assert_eq!(
@@ -237,6 +276,8 @@ impl<M: Send + Wire> Endpoint<M> {
             machines,
             "stats vector must have one slot per machine"
         );
+        let pool = FramePool::default();
+        transport.install_pool(&pool);
         Endpoint {
             me: transport.me(),
             machines,
@@ -246,6 +287,9 @@ impl<M: Send + Wire> Endpoint<M> {
             dead: vec![false; machines],
             errors: Vec::new(),
             stats,
+            pool,
+            autobatch: AtomicBool::new(false),
+            pending: (0..machines).map(|_| Mutex::new(Pending::default())).collect(),
         }
     }
 
@@ -266,27 +310,75 @@ impl<M: Send + Wire> Endpoint<M> {
 
     /// Serialize `msg` into a frame and send it to `dst`. The frame's
     /// encoded length (payload + 4-byte length prefix) is recorded in
-    /// [`NetStats`].
+    /// [`NetStats`] at encode time, per logical message — so the byte
+    /// counters are identical whether frames go out one by one,
+    /// coalesced by autobatch, or packed by [`Endpoint::send_batch`].
     ///
     /// Sending to self is allowed (simplifies engine loops); it still
     /// encodes — parity with remote accounting — but skips the frame
     /// copy and counts zero network bytes (nothing crosses the wire).
     pub fn send(&self, dst: MachineId, msg: M) {
-        let mut frame = Vec::with_capacity(64);
-        frame.extend_from_slice(&[0u8; 4]);
-        msg.encode(&mut frame);
-        let payload_len = (frame.len() - 4) as u32;
-        frame[..4].copy_from_slice(&payload_len.to_le_bytes());
         if dst == self.me {
             // Fast path: deliver the value in-memory (receiver may have
-            // stopped draining at shutdown; drop silently then).
+            // stopped draining at shutdown; drop silently then). The
+            // parity encode goes through a pooled scratch buffer.
+            let mut scratch = self.pool.get();
+            encode_frame_into(&msg, &mut scratch);
+            self.pool.put(scratch);
             let _ = self.self_tx.send(msg);
             return;
         }
+        if self.autobatch.load(Ordering::Relaxed) {
+            let mut p = self.pending[dst].lock().unwrap_or_else(|e| e.into_inner());
+            let n = encode_frame_into(&msg, &mut p.buf);
+            p.count += 1;
+            let s = &self.stats[self.me];
+            s.bytes_sent.fetch_add(n as u64, Ordering::Relaxed);
+            s.msgs_sent.fetch_add(1, Ordering::Relaxed);
+            if p.buf.len() >= BATCH_FLUSH_BYTES {
+                let buf = std::mem::replace(&mut p.buf, self.pool.get());
+                let count = std::mem::take(&mut p.count);
+                drop(p);
+                self.transport.send_frames(dst, buf, count);
+            }
+            return;
+        }
+        let mut frame = self.pool.get();
+        let n = encode_frame_into(&msg, &mut frame);
         let s = &self.stats[self.me];
-        s.bytes_sent.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        s.bytes_sent.fetch_add(n as u64, Ordering::Relaxed);
         s.msgs_sent.fetch_add(1, Ordering::Relaxed);
         self.transport.send_frame(dst, frame);
+    }
+
+    /// Encode `msgs` into one contiguous multi-frame buffer and hand it
+    /// to the transport as a single batched send — one writer-queue entry
+    /// and (on TCP) one write for the lot. FIFO order with surrounding
+    /// [`Endpoint::send`]s is preserved, and per-message accounting is
+    /// identical to sending each individually.
+    pub fn send_batch(&self, dst: MachineId, msgs: Vec<M>) {
+        if msgs.is_empty() {
+            return;
+        }
+        if dst == self.me || self.autobatch.load(Ordering::Relaxed) {
+            // Self-sends keep the in-memory fast path; under autobatch
+            // every frame must route through the per-peer pending buffer
+            // or interleaved sends would go out of order.
+            for msg in msgs {
+                self.send(dst, msg);
+            }
+            return;
+        }
+        let mut buf = self.pool.get();
+        let count = msgs.len();
+        let mut bytes = 0u64;
+        for msg in &msgs {
+            bytes += encode_frame_into(msg, &mut buf) as u64;
+        }
+        let s = &self.stats[self.me];
+        s.bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+        s.msgs_sent.fetch_add(count as u64, Ordering::Relaxed);
+        self.transport.send_frames(dst, buf, count);
     }
 
     /// Decode one transport frame. `None` means the frame was bad and
@@ -299,21 +391,28 @@ impl<M: Send + Wire> Endpoint<M> {
         let s = &self.stats[self.me];
         s.bytes_recv.fetch_add(frame.len() as u64, Ordering::Relaxed);
         s.msgs_recv.fetch_add(1, Ordering::Relaxed);
-        let mut slice = &frame[4..];
-        match M::decode(&mut slice) {
-            Ok(msg) if slice.is_empty() => Some(Received { src, msg }),
-            Ok(_) if self.transport.trusted() => {
-                panic!("wire: frame has trailing bytes (codec bug — encode/decode disagree)")
+        // Decode in an inner scope so the frame buffer can go back to
+        // the pool regardless of outcome (trusted-backend failures still
+        // panic inline — they are codec bugs, not peer behavior).
+        let decoded = {
+            let mut slice = &frame[4..];
+            match M::decode(&mut slice) {
+                Ok(msg) if slice.is_empty() => Ok(msg),
+                Ok(_) if self.transport.trusted() => {
+                    panic!("wire: frame has trailing bytes (codec bug — encode/decode disagree)")
+                }
+                Ok(_) => Err(FrameError::Trailing { extra: slice.len() }),
+                Err(e) if self.transport.trusted() => {
+                    panic!("wire: frame decode failed (codec bug — encode/decode disagree): {e}")
+                }
+                Err(e) => Err(FrameError::Decode(e)),
             }
-            Ok(_) => {
-                self.disconnect(src, FrameError::Trailing { extra: slice.len() });
-                None
-            }
-            Err(e) if self.transport.trusted() => {
-                panic!("wire: frame decode failed (codec bug — encode/decode disagree): {e}")
-            }
+        };
+        self.pool.put(frame);
+        match decoded {
+            Ok(msg) => Some(Received { src, msg }),
             Err(e) => {
-                self.disconnect(src, FrameError::Decode(e));
+                self.disconnect(src, e);
                 None
             }
         }
@@ -372,8 +471,14 @@ impl<M: Send + Wire> Endpoint<M> {
         None
     }
 
-    /// Blocking receive with timeout.
+    /// Blocking receive with timeout. Under autobatch, pending coalesced
+    /// sends are flushed first: a machine about to block must not be the
+    /// reason its peers starve (the request they are waiting on could be
+    /// sitting in a pending buffer — a deadlock, not a slowdown).
     pub fn recv_timeout(&mut self, timeout: Duration) -> Option<Received<M>> {
+        if self.autobatch.load(Ordering::Relaxed) {
+            self.flush();
+        }
         let deadline = Instant::now() + timeout;
         loop {
             if let Some(r) = self.try_recv() {
@@ -388,6 +493,63 @@ impl<M: Send + Wire> Endpoint<M> {
                     return Some(r);
                 }
             }
+        }
+    }
+}
+
+// Autobatch control lives in an unbounded impl block (no `M: Wire`):
+// flushing moves already-encoded bytes, so `Drop` can call it without a
+// codec bound on the message type.
+impl<M> Endpoint<M> {
+    /// Switch per-peer send coalescing on or off. While on, every
+    /// cross-machine [`Endpoint::send`] appends to that peer's pending
+    /// buffer instead of hitting the transport; a buffer goes out when
+    /// it reaches the eager-flush threshold, on [`Endpoint::flush`],
+    /// before every blocking receive, and on drop. Engines with a pump
+    /// structure (the locking engine, `serve`) turn this on and flush
+    /// once per pump iteration: many small protocol messages become a
+    /// few coalesced writes. Disabling flushes immediately.
+    pub fn set_autobatch(&self, on: bool) {
+        let was = self.autobatch.swap(on, Ordering::Relaxed);
+        if was && !on {
+            self.flush();
+        }
+    }
+
+    /// Hand every peer's pending coalesced buffer to the transport (one
+    /// batched send per peer with pending frames). A no-op outside
+    /// autobatch mode or when nothing is pending.
+    pub fn flush(&self) {
+        for dst in 0..self.machines {
+            if dst != self.me {
+                self.flush_peer(dst);
+            }
+        }
+    }
+
+    fn flush_peer(&self, dst: MachineId) {
+        let (buf, count) = {
+            let mut p = self.pending[dst].lock().unwrap_or_else(|e| e.into_inner());
+            if p.count == 0 {
+                return;
+            }
+            (
+                std::mem::replace(&mut p.buf, self.pool.get()),
+                std::mem::take(&mut p.count),
+            )
+        };
+        self.transport.send_frames(dst, buf, count);
+    }
+}
+
+impl<M> Drop for Endpoint<M> {
+    /// Backstop flush: frames still coalescing must reach the transport
+    /// before it tears down (a follower's final report, a `Halt` sent
+    /// just before the machine loop returned). Explicit flush points
+    /// cover the protocol paths; this covers everything else.
+    fn drop(&mut self) {
+        if self.autobatch.load(Ordering::Relaxed) {
+            self.flush();
         }
     }
 }
@@ -499,6 +661,68 @@ mod tests {
             stats[0].bytes_sent.load(Ordering::Relaxed),
             frame_len(&msg)
         );
+    }
+
+    #[test]
+    fn send_batch_matches_individual_accounting_and_order() {
+        type M = (u32, Vec<u8>);
+        let net: Network<M> = Network::new(2, NetworkModel::default());
+        let stats = net.stats();
+        let mut eps = net.into_endpoints();
+        let msgs: Vec<M> = (0..5u32).map(|i| (i, vec![i as u8; i as usize])).collect();
+        let expect: u64 = msgs.iter().map(frame_len).sum();
+        eps[0].send_batch(1, msgs.clone());
+        for m in &msgs {
+            let r = eps[1].recv_timeout(Duration::from_secs(1)).unwrap();
+            assert_eq!((r.src, &r.msg), (0, m));
+        }
+        // One batched send accounts exactly like five individual sends.
+        assert_eq!(stats[0].bytes_sent.load(Ordering::Relaxed), expect);
+        assert_eq!(stats[0].msgs_sent.load(Ordering::Relaxed), 5);
+        assert_eq!(stats[1].msgs_recv.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn autobatch_coalesces_until_flush_with_identical_accounting() {
+        let net: Network<u32> = Network::new(2, NetworkModel::default());
+        let stats = net.stats();
+        let mut eps = net.into_endpoints();
+        eps[0].set_autobatch(true);
+        for i in 0..10u32 {
+            eps[0].send(1, i);
+        }
+        // Accounting is per logical message, counted at encode time —
+        // identical to the unbatched path.
+        assert_eq!(stats[0].msgs_sent.load(Ordering::Relaxed), 10);
+        let expect = stats[0].bytes_sent.load(Ordering::Relaxed);
+        assert_eq!(expect, 10 * frame_len(&0u32));
+        // Nothing is deliverable yet: the frames are still coalescing.
+        assert!(eps[1].try_recv().is_none());
+        eps[0].flush();
+        for i in 0..10u32 {
+            let r = eps[1].recv_timeout(Duration::from_secs(1)).unwrap();
+            assert_eq!((r.src, r.msg), (0, i)); // FIFO across the flush
+        }
+        assert_eq!(stats[0].bytes_sent.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn blocking_recv_flushes_pending_batches() {
+        let net: Network<u32> = Network::new(2, NetworkModel::default());
+        let mut eps = net.into_endpoints();
+        let mut ep1 = eps.pop().unwrap();
+        let mut ep0 = eps.pop().unwrap();
+        ep0.set_autobatch(true);
+        ep0.send(1, 7);
+        // The send is still coalescing; ep0's blocking receive must push
+        // it out before waiting, or this ping-pong would deadlock.
+        let h = std::thread::spawn(move || {
+            let r = ep1.recv_timeout(Duration::from_secs(5)).unwrap();
+            ep1.send(0, r.msg + 1);
+        });
+        let r = ep0.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.msg, 8);
+        h.join().unwrap();
     }
 
     #[test]

@@ -34,10 +34,10 @@
 //! in-process, without real process kills.
 
 use std::collections::VecDeque;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _};
@@ -50,6 +50,116 @@ use crate::wire::{self, Wire, WireError, WIRE_VERSION};
 /// executor — grep child output for this exact string to decide that a
 /// failed run is retryable rather than broken.
 pub const PORT_CONFLICT_MARKER: &str = "port-conflict";
+
+// ---------------------------------------------------------------------------
+// Tuning constants
+// ---------------------------------------------------------------------------
+// Every magic number of the byte layer lives here, so the knobs that
+// govern wire behavior are visible (and auditable) in one place instead
+// of scattered through constructors and thread loops.
+
+/// Default cap on a frame's length prefix: a garbage prefix from a
+/// hostile or corrupted stream must not trigger a giant allocation.
+/// Carried per-connection in [`TcpConfig::max_frame`].
+pub const DEFAULT_MAX_FRAME: u32 = 256 << 20;
+
+/// Default window for outbound connects / inbound accepts during mesh
+/// formation (override with `GRAPHLAB_CONNECT_TIMEOUT_SECS` — manual
+/// multi-host startups can easily take longer than any fixed default).
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Default peer-failure grace of the chromatic engine's barrier waits
+/// (a sweep barrier legitimately waits for the slowest machine).
+/// Overridable via `GRAPHLAB_PEER_GRACE_SECS`; see [`peer_grace`].
+pub const CHROMATIC_GRACE: Duration = Duration::from_secs(30);
+
+/// Default peer-failure grace of the locking engine's idle watchdog
+/// (its pump makes progress continuously, so prolonged silence means a
+/// dead peer much sooner than a barrier wait does). Overridable via
+/// `GRAPHLAB_PEER_GRACE_SECS`; see [`peer_grace`].
+pub const LOCKING_GRACE: Duration = Duration::from_secs(5);
+
+/// Hard cap on the encoded connection handshake (type tags are short).
+const MAX_HANDSHAKE: u32 = 4096;
+
+/// The TCP writer coalesces at most this many queued frames into one
+/// vectored write (the OS caps iovecs around 1024; staying far below
+/// keeps each syscall cheap to assemble).
+const COALESCE_MAX_FRAMES: usize = 64;
+
+/// ... and at most this many payload bytes per coalesced write, so one
+/// giant frame queued behind small ones does not balloon a batch.
+const COALESCE_MAX_BYTES: usize = 1 << 20;
+
+/// A [`FramePool`] keeps at most this many recycled buffers; overflow is
+/// simply freed so a send burst cannot pin memory forever.
+const POOL_MAX_BUFFERS: usize = 64;
+
+/// Buffers that grew beyond this capacity are freed on return instead of
+/// pooled — one huge ghost flush must not turn the pool into a cache of
+/// multi-megabyte allocations.
+const POOL_MAX_BUFFER_CAPACITY: usize = 4 << 20;
+
+// ---------------------------------------------------------------------------
+// Frame-buffer pool
+// ---------------------------------------------------------------------------
+
+/// A recycling pool of frame buffers shared between the framing layer's
+/// send path and the transport's writer/reader threads. `Endpoint::send`
+/// encodes into a pooled `Vec<u8>` instead of allocating; the TCP writer
+/// returns buffers after the bytes are on the wire, and the framing
+/// layer returns received buffers after decoding. Cheap to clone (one
+/// `Arc`), safe to share across threads.
+#[derive(Clone, Default)]
+pub struct FramePool {
+    free: Arc<Mutex<Vec<Vec<u8>>>>,
+}
+
+impl FramePool {
+    /// Pop a recycled buffer (empty, capacity retained) or allocate a
+    /// fresh one.
+    pub fn get(&self) -> Vec<u8> {
+        self.free
+            .lock()
+            .ok()
+            .and_then(|mut f| f.pop())
+            .unwrap_or_default()
+    }
+
+    /// Return a buffer for reuse. Oversized buffers and overflow beyond
+    /// [`POOL_MAX_BUFFERS`] are dropped (freed) rather than pooled.
+    pub fn put(&self, mut buf: Vec<u8>) {
+        if buf.capacity() > POOL_MAX_BUFFER_CAPACITY {
+            return;
+        }
+        buf.clear();
+        if let Ok(mut free) = self.free.lock() {
+            if free.len() < POOL_MAX_BUFFERS {
+                free.push(buf);
+            }
+        }
+    }
+}
+
+/// Split a contiguous multi-frame buffer (`count` back-to-back
+/// `[u32 len][payload]` frames) into its logical frames, each keeping its
+/// length prefix. Used by [`Transport::send_frames`]'s default
+/// implementation so backends (and decorators like [`Faulty`]) that have
+/// no batched fast path observe exactly `count` ordinary sends.
+pub(crate) fn split_frames(buf: &[u8], count: usize) -> Vec<Vec<u8>> {
+    let mut out = Vec::with_capacity(count);
+    let mut off = 0usize;
+    for _ in 0..count {
+        if off + 4 > buf.len() {
+            break; // malformed batch: deliver what parses, drop the rest
+        }
+        let len = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap()) as usize;
+        let end = (off + 4 + len).min(buf.len());
+        out.push(buf[off..end].to_vec());
+        off = end;
+    }
+    out
+}
 
 /// Which byte-level substrate carries the frames of a distributed run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -186,6 +296,34 @@ pub trait Transport: Send {
     /// that is gone (engine shutdown) swallows the frame, matching the
     /// "receiver may have exited" semantics engines already rely on.
     fn send_frame(&self, dst: MachineId, frame: Vec<u8>);
+
+    /// Queue a contiguous buffer of `count` back-to-back
+    /// `[u32 len][payload]` frames for delivery to `dst`. Semantically
+    /// identical to `count` individual [`Transport::send_frame`] calls in
+    /// order. The default implementation does exactly that — splitting
+    /// the buffer at frame boundaries — which keeps decorators such as
+    /// [`Faulty`] batching-invariant *by construction*: fault-plan frame
+    /// indices always count logical frames, never coalesced writes.
+    /// Backends with a batched fast path override this (TCP ships the
+    /// whole buffer as one write; the receiver's read loop re-splits it).
+    fn send_frames(&self, dst: MachineId, buf: Vec<u8>, count: usize) {
+        if count <= 1 {
+            if count == 1 {
+                self.send_frame(dst, buf);
+            }
+            return;
+        }
+        for frame in split_frames(&buf, count) {
+            self.send_frame(dst, frame);
+        }
+    }
+
+    /// Attach the framing layer's [`FramePool`] so this backend can
+    /// recycle frame buffers after use (the TCP writer returns written
+    /// buffers; the TCP reader allocates incoming frames from it).
+    /// Default: no-op — backends without internal buffering have nothing
+    /// to recycle.
+    fn install_pool(&mut self, _pool: &FramePool) {}
 
     /// Non-blocking receive: the next deliverable frame, if any.
     fn recv_frame(&mut self) -> Option<(MachineId, Vec<u8>)>;
@@ -533,6 +671,15 @@ impl<T: Transport> Transport for Faulty<T> {
         self.inner.send_frame(dst, frame);
     }
 
+    // `send_frames` deliberately stays on the trait default: it splits a
+    // batched buffer into logical frames *before* this wrapper counts
+    // them, so a fault plan's kill/drop/delay indices land on the same
+    // frames whether or not the sender coalesced.
+
+    fn install_pool(&mut self, pool: &FramePool) {
+        self.inner.install_pool(pool);
+    }
+
     fn recv_frame(&mut self) -> Option<(MachineId, Vec<u8>)> {
         if self.dead.load(Ordering::SeqCst) {
             return None;
@@ -607,9 +754,6 @@ impl<T: Transport> Transport for Faulty<T> {
 /// Connection-handshake magic (`"GLTC"`, little-endian).
 pub const TCP_MAGIC: u32 = u32::from_le_bytes(*b"GLTC");
 
-/// Hard cap on the encoded handshake (type tags are short).
-const MAX_HANDSHAKE: u32 = 4096;
-
 /// TCP backend parameters.
 #[derive(Debug, Clone)]
 pub struct TcpConfig {
@@ -630,20 +774,21 @@ pub struct TcpConfig {
 
 impl TcpConfig {
     /// Defaults for `machines` machines exchanging `tag`-typed messages:
-    /// 30 s connect window (override with `GRAPHLAB_CONNECT_TIMEOUT_SECS`
-    /// — manual multi-host startups can easily take longer than any fixed
-    /// default), 256 MiB frame cap.
+    /// [`DEFAULT_CONNECT_TIMEOUT`] connect window (override with
+    /// `GRAPHLAB_CONNECT_TIMEOUT_SECS` — manual multi-host startups can
+    /// easily take longer than any fixed default), [`DEFAULT_MAX_FRAME`]
+    /// frame cap.
     pub fn new(machines: usize, tag: impl Into<String>) -> Self {
         let secs = std::env::var("GRAPHLAB_CONNECT_TIMEOUT_SECS")
             .ok()
             .and_then(|v| v.parse::<u64>().ok())
             .filter(|&s| s > 0)
-            .unwrap_or(30);
+            .unwrap_or(DEFAULT_CONNECT_TIMEOUT.as_secs());
         TcpConfig {
             machines,
             tag: tag.into(),
             connect_timeout: Duration::from_secs(secs),
-            max_frame: 256 << 20,
+            max_frame: DEFAULT_MAX_FRAME,
         }
     }
 }
@@ -762,6 +907,12 @@ struct TcpShared {
     frames_tx: mpsc::Sender<(MachineId, Vec<u8>)>,
     errors: Mutex<Vec<PeerError>>,
     stop: AtomicBool,
+    /// Frame-buffer pool installed by the owning `Endpoint` (writer
+    /// threads return written buffers to it; reader threads allocate
+    /// incoming frames from it). Late-bound because writer/reader
+    /// threads spawn during mesh formation, before any endpoint exists;
+    /// `OnceLock` keeps the per-batch read lock-free.
+    pool: OnceLock<FramePool>,
 }
 
 impl TcpShared {
@@ -818,6 +969,7 @@ impl TcpBound {
             frames_tx,
             errors: Mutex::new(Vec::new()),
             stop: AtomicBool::new(false),
+            pool: OnceLock::new(),
         });
         let expected = cfg.machines.saturating_sub(1);
         let acceptor = if expected == 0 {
@@ -1137,7 +1289,13 @@ fn read_loop(src: MachineId, mut stream: TcpStream, max_frame: u32, shared: &Arc
             let _ = stream.shutdown(Shutdown::Both);
             return;
         }
-        let mut frame = Vec::with_capacity((len as usize).min(scratch.len()) + 4);
+        // Recycled buffer when the endpoint has installed a pool (the
+        // framing layer returns it after decoding); fresh otherwise.
+        let mut frame = match shared.pool.get() {
+            Some(pool) => pool.get(),
+            None => Vec::new(),
+        };
+        frame.reserve((len as usize).min(scratch.len()) + 4);
         frame.extend_from_slice(&len4);
         let mut remaining = len as usize;
         while remaining > 0 {
@@ -1156,23 +1314,83 @@ fn read_loop(src: MachineId, mut stream: TcpStream, max_frame: u32, shared: &Arc
     }
 }
 
-/// Writer thread: drain one peer's frame queue onto its stream; on
-/// channel close (transport drop), flush and close the write half so the
-/// peer's reader sees a clean EOF.
+/// Writer thread: drain one peer's frame queue onto its stream. Queued
+/// frames behind the first are coalesced — up to [`COALESCE_MAX_FRAMES`]
+/// buffers / [`COALESCE_MAX_BYTES`] bytes per vectored write — so
+/// backpressure turns many small frames into one syscall instead of one
+/// each. `TCP_NODELAY` is set on every mesh socket, so batching is this
+/// loop's decision, not Nagle's. Written buffers return to the
+/// endpoint's frame pool. On channel close (transport drop), flush and
+/// close the write half so the peer's reader sees a clean EOF.
 fn write_loop(
     dst: MachineId,
     mut stream: TcpStream,
     rx: mpsc::Receiver<Vec<u8>>,
     shared: &Arc<TcpShared>,
 ) {
-    while let Ok(frame) = rx.recv() {
-        if let Err(e) = stream.write_all(&frame) {
+    let mut batch: Vec<Vec<u8>> = Vec::with_capacity(COALESCE_MAX_FRAMES);
+    while let Ok(first) = rx.recv() {
+        let mut bytes = first.len();
+        batch.push(first);
+        while batch.len() < COALESCE_MAX_FRAMES && bytes < COALESCE_MAX_BYTES {
+            match rx.try_recv() {
+                Ok(next) => {
+                    bytes += next.len();
+                    batch.push(next);
+                }
+                Err(_) => break,
+            }
+        }
+        if let Err(e) = write_all_vectored(&mut stream, &batch) {
             shared.record(dst, FrameError::Io(e.to_string()));
             return;
+        }
+        match shared.pool.get() {
+            Some(pool) => batch.drain(..).for_each(|buf| pool.put(buf)),
+            None => batch.clear(),
         }
     }
     let _ = stream.flush();
     let _ = stream.shutdown(Shutdown::Write);
+}
+
+/// Write every buffer in `bufs` to `stream` via vectored writes,
+/// advancing through partial writes by hand (`IoSlice::advance_slices`
+/// postdates this crate's toolchain floor).
+fn write_all_vectored(stream: &mut TcpStream, bufs: &[Vec<u8>]) -> std::io::Result<()> {
+    // (skip_buf, skip_bytes): how much of the batch is already written.
+    let mut skip_buf = 0usize;
+    let mut skip_bytes = 0usize;
+    let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(bufs.len());
+    while skip_buf < bufs.len() {
+        slices.clear();
+        slices.push(IoSlice::new(&bufs[skip_buf][skip_bytes..]));
+        for buf in &bufs[skip_buf + 1..] {
+            slices.push(IoSlice::new(buf));
+        }
+        let mut n = match stream.write_vectored(&slices) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "wrote zero bytes",
+                ))
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        while skip_buf < bufs.len() {
+            let rest = bufs[skip_buf].len() - skip_bytes;
+            if n < rest {
+                skip_bytes += n;
+                break;
+            }
+            n -= rest;
+            skip_buf += 1;
+            skip_bytes = 0;
+        }
+    }
+    Ok(())
 }
 
 /// The ready TCP backend: writer thread + queue per peer, reader threads
@@ -1200,6 +1418,20 @@ impl Transport for TcpTransport {
             // Writer gone (peer dead / shutdown): drop, as documented.
             let _ = tx.send(frame);
         }
+    }
+
+    fn send_frames(&self, dst: MachineId, buf: Vec<u8>, count: usize) {
+        if count == 0 {
+            return;
+        }
+        // One queue entry for the whole batch: the writer flushes it in
+        // one write and the receiver's read loop re-splits it at frame
+        // boundaries — indistinguishable on the wire from `count` sends.
+        self.send_frame(dst, buf);
+    }
+
+    fn install_pool(&mut self, pool: &FramePool) {
+        let _ = self.shared.pool.set(pool.clone());
     }
 
     fn recv_frame(&mut self) -> Option<(MachineId, Vec<u8>)> {
@@ -1472,6 +1704,93 @@ mod tests {
             t0.recv_frame_timeout(Duration::from_secs(1)),
             Some((1, frame_of(&[2])))
         );
+    }
+
+    #[test]
+    fn frame_pool_recycles_buffers() {
+        let pool = FramePool::default();
+        let mut a = pool.get();
+        a.extend_from_slice(&[1, 2, 3]);
+        a.reserve(512);
+        let cap = a.capacity();
+        pool.put(a);
+        // The recycled buffer comes back empty with capacity retained.
+        let b = pool.get();
+        assert!(b.is_empty());
+        assert_eq!(b.capacity(), cap);
+        // A buffer over the capacity cap is freed, not pooled.
+        pool.put(Vec::with_capacity(POOL_MAX_BUFFER_CAPACITY + 1));
+        assert_eq!(pool.get().capacity(), 0);
+    }
+
+    #[test]
+    fn split_frames_recovers_logical_frames() {
+        let frames = [frame_of(&[1, 2, 3]), frame_of(&[]), frame_of(&[9; 70])];
+        let mut buf = Vec::new();
+        for f in &frames {
+            buf.extend_from_slice(f);
+        }
+        assert_eq!(split_frames(&buf, 3), frames.to_vec());
+        // A truncated batch yields only the frames that parse.
+        assert_eq!(split_frames(&buf[..frames[0].len() + 2], 3).len(), 1);
+    }
+
+    #[test]
+    fn send_frames_default_splits_for_inproc() {
+        let mut mesh = InProcTransport::mesh(2, NetworkModel::default());
+        let t1 = mesh.pop().unwrap();
+        let mut t0 = mesh.pop().unwrap();
+        let mut buf = frame_of(&[1]);
+        buf.extend_from_slice(&frame_of(&[2, 2]));
+        buf.extend_from_slice(&frame_of(&[3]));
+        t1.send_frames(0, buf, 3);
+        for payload in [vec![1u8], vec![2, 2], vec![3]] {
+            let (src, f) = t0.recv_frame_timeout(Duration::from_secs(1)).unwrap();
+            assert_eq!((src, f), (1, frame_of(&payload)));
+        }
+        assert!(t0.recv_frame().is_none());
+    }
+
+    #[test]
+    fn fault_indices_count_logical_frames_not_batches() {
+        // Regression: a fault plan targeting frame 1 must hit the second
+        // *message* even when all three ride in one coalesced batch.
+        let plan = FaultPlan {
+            drop: vec![(0, 1)],
+            ..FaultPlan::default()
+        };
+        let mut mesh = faulty_pair(plan);
+        let mut t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        let mut buf = frame_of(&[0]);
+        buf.extend_from_slice(&frame_of(&[1]));
+        buf.extend_from_slice(&frame_of(&[2]));
+        t0.send_frames(1, buf, 3);
+        let mut got = Vec::new();
+        while let Some((_, f)) = t1.recv_frame_timeout(Duration::from_millis(200)) {
+            got.push(f);
+        }
+        assert_eq!(got, vec![frame_of(&[0]), frame_of(&[2])]);
+    }
+
+    #[test]
+    fn tcp_send_frames_delivers_individual_frames() {
+        let mut mesh = tcp_loopback_mesh(2, "batch").unwrap();
+        let mut buf = Vec::new();
+        let payloads: Vec<Vec<u8>> = (0..20u8).map(|i| vec![i; (i as usize % 5) + 1]).collect();
+        for p in &payloads {
+            buf.extend_from_slice(&frame_of(p));
+        }
+        mesh[0].send_frames(1, buf, payloads.len());
+        mesh[0].send_frame(1, frame_of(&[99])); // FIFO after the batch
+        for p in &payloads {
+            let (src, f) = mesh[1]
+                .recv_frame_timeout(Duration::from_secs(5))
+                .expect("batched frame");
+            assert_eq!((src, f), (0, frame_of(p)));
+        }
+        let (_, tail) = mesh[1].recv_frame_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(tail, frame_of(&[99]));
     }
 
     #[test]

@@ -233,6 +233,7 @@ pub struct Engine<V> {
     snapshot_root: Option<PathBuf>,
     restore: Option<PathBuf>,
     fault: Option<FaultPlan>,
+    pin_threads: bool,
     on_progress: Option<ProgressFn>,
 }
 
@@ -260,6 +261,7 @@ impl<V> Engine<V> {
             snapshot_root: None,
             restore: None,
             fault: None,
+            pin_threads: false,
             on_progress: None,
         }
     }
@@ -457,6 +459,16 @@ impl<V> Engine<V> {
         self
     }
 
+    /// Pin each distributed-engine machine loop to a CPU
+    /// (`machine_id % available_cpus`) so hot event loops stop migrating
+    /// between cores mid-run. Best-effort (shells out to `taskset`; a
+    /// failed pin is a no-op) and off by default. Ignored by the shared
+    /// engine, whose workers are pool threads, not per-machine loops.
+    pub fn pin_threads(mut self, on: bool) -> Self {
+        self.pin_threads = on;
+        self
+    }
+
     /// Progress callback `(epoch, updates_so_far, globals)` invoked at
     /// every engine epoch (chromatic sweep, locking sync barrier, shared
     /// sync barrier).
@@ -598,6 +610,7 @@ impl<V> Engine<V> {
                         snapshot,
                         restore: self.restore,
                         fault: self.fault,
+                        pin_threads: self.pin_threads,
                     },
                 )?;
                 Ok(Exec { graph, stats })
@@ -635,6 +648,7 @@ impl<V> Engine<V> {
                         snapshot,
                         restore: self.restore,
                         fault: self.fault,
+                        pin_threads: self.pin_threads,
                     },
                 )?;
                 Ok(Exec { graph, stats })

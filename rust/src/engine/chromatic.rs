@@ -19,14 +19,15 @@
 
 use std::path::PathBuf;
 use std::sync::Mutex;
-use std::time::Duration;
 
 use anyhow::bail;
 
 use super::{Ctx, ExecStats, GlobalValues, Scope, SyncOp, VertexProgram};
 use crate::distributed::network::NetworkModel;
 use crate::distributed::snapshot::{SnapshotCfg, SnapshotSession};
-use crate::distributed::transport::{peer_grace, ClusterConfig, FaultPlan, TransportKind};
+use crate::distributed::transport::{
+    peer_grace, ClusterConfig, FaultPlan, TransportKind, CHROMATIC_GRACE,
+};
 use crate::distributed::{cluster_setup, ClusterSetup, DataValue, LocalGraph};
 use crate::graph::{EdgeId, Graph, SharedStore, VertexId};
 use crate::partition::atoms::AtomPlacement;
@@ -68,6 +69,9 @@ pub(crate) struct ChromaticOpts {
     /// Deterministic fault injection: wrap every transport in a
     /// [`crate::distributed::Faulty`] decorator.
     pub fault: Option<FaultPlan>,
+    /// Pin each machine loop to a CPU (`me % available_cpus`) so the OS
+    /// scheduler stops migrating engine threads mid-run. Best-effort.
+    pub pin_threads: bool,
 }
 
 impl Default for ChromaticOpts {
@@ -84,6 +88,7 @@ impl Default for ChromaticOpts {
             snapshot: None,
             restore: None,
             fault: None,
+            pin_threads: false,
         }
     }
 }
@@ -311,6 +316,7 @@ where
     let cluster_mode = opts.cluster.is_some();
     let threads_per_machine = opts.threads_per_machine;
     let max_sweeps = opts.max_sweeps;
+    let pin_threads = opts.pin_threads;
     // Per-machine update counts (each machine writes its own slot at
     // exit): the ExecStats load-balance vector.
     let updates_by_machine: Mutex<Vec<u64>> = Mutex::new(vec![0; machines]);
@@ -338,7 +344,12 @@ where
             handles.push(s.spawn(move || -> anyhow::Result<()> {
                 let mut lg = lg;
                 let me = ep.me();
-                let grace = peer_grace(Duration::from_secs(30));
+                if pin_threads {
+                    crate::util::affinity::pin_current_thread(
+                        me % crate::util::affinity::available_cpus(),
+                    );
+                }
+                let grace = peer_grace(CHROMATIC_GRACE);
                 let mut snap: Option<SnapshotSession<V, E>> = snap_cfg
                     .as_ref()
                     .map(|cfg| SnapshotSession::new(cfg, me, machines));
@@ -498,10 +509,15 @@ where
                             if peer == me {
                                 continue;
                             }
+                            // Ghost flush + barrier marker ride one batched
+                            // send: a single pooled buffer, one transport
+                            // write per peer per color.
+                            let mut batch = Vec::with_capacity(2);
                             if !verts.is_empty() || !edges.is_empty() || !tasks.is_empty() {
-                                ep.send(peer, Msg::Ghost { sweep, verts, edges, tasks });
+                                batch.push(Msg::Ghost { sweep, verts, edges, tasks });
                             }
-                            ep.send(peer, Msg::ColorDone { color });
+                            batch.push(Msg::ColorDone { color });
+                            ep.send_batch(peer, batch);
                         }
 
                         // --- barrier: apply peers' data until all done ---

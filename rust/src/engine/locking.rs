@@ -38,7 +38,9 @@ use crate::distributed::locks::{LockReq, LockTable, TxnId};
 use crate::distributed::network::NetworkModel;
 use crate::distributed::snapshot::{record_from_graph, SnapshotCfg, SnapshotSession};
 use crate::distributed::termination::{Termination, Token, TokenAction};
-use crate::distributed::transport::{peer_grace, ClusterConfig, FaultPlan, TransportKind};
+use crate::distributed::transport::{
+    peer_grace, ClusterConfig, FaultPlan, TransportKind, LOCKING_GRACE,
+};
 use crate::distributed::{cluster_setup, ClusterSetup, DataValue, LocalGraph};
 use crate::graph::{EdgeId, Graph, VertexId};
 use crate::partition::atoms::AtomPlacement;
@@ -93,6 +95,9 @@ pub(crate) struct LockingOpts {
     /// Deterministic fault injection: wrap every transport in a
     /// [`crate::distributed::Faulty`] decorator.
     pub fault: Option<FaultPlan>,
+    /// Pin each machine loop to a CPU (`me % available_cpus`) so the OS
+    /// scheduler stops migrating engine threads mid-run. Best-effort.
+    pub pin_threads: bool,
 }
 
 impl Default for LockingOpts {
@@ -112,6 +117,7 @@ impl Default for LockingOpts {
             snapshot: None,
             restore: None,
             fault: None,
+            pin_threads: false,
         }
     }
 }
@@ -403,6 +409,7 @@ where
     let sync_period = opts.sync_period;
     let cap = opts.max_updates_per_machine;
     let seed = opts.seed;
+    let pin_threads = opts.pin_threads;
 
     // Per-machine update counts (each machine writes its own slot at
     // exit): the ExecStats load-balance vector.
@@ -426,8 +433,17 @@ where
             let epochs = &epochs;
             handles.push(s.spawn(move || -> anyhow::Result<()> {
                 let me = ep.me();
+                if pin_threads {
+                    crate::util::affinity::pin_current_thread(
+                        me % crate::util::affinity::available_cpus(),
+                    );
+                }
                 let owned = lg.owned;
-                let grace = peer_grace(Duration::from_secs(5));
+                let grace = peer_grace(LOCKING_GRACE);
+                // The pump sends many small protocol frames per iteration
+                // (grants, releases, ghost pushes): coalesce them per peer
+                // and flush once per iteration — see the flush below.
+                ep.set_autobatch(true);
                 let mut snap: Option<SnapshotSession<V, E>> = snap_cfg
                     .as_ref()
                     .map(|cfg| SnapshotSession::new(cfg, me, machines));
@@ -956,7 +972,13 @@ where
                         }
                     }
 
-                    // ---- 6. park briefly when nothing to do --------------
+                    // ---- 6. flush coalesced sends, then park if idle -----
+                    // Everything sections 1–5 sent this iteration is still
+                    // coalescing in per-peer buffers; push it out *before*
+                    // the idle check — an idle spin makes no transport
+                    // calls, so an unflushed LockReq would deadlock the
+                    // whole pipeline.
+                    ep.flush();
                     if !progressed {
                         // A disconnected peer (frame decode failure, dead
                         // stream, EOF from a killed process) can never
@@ -998,6 +1020,10 @@ where
                         peer_failure_since = None;
                     }
                 }
+                // The break above fires before the iteration-bottom flush,
+                // so Halt broadcasts sent this iteration can still be
+                // coalescing — push them out before the final exchange.
+                ep.flush();
 
                 // ---- final report / leader finalization ------------------
                 if me != 0 {
@@ -1018,6 +1044,9 @@ where
                             updates: my_updates,
                         },
                     );
+                    // The leader is blocked gathering this report; it must
+                    // not sit in a coalescing buffer until endpoint drop.
+                    ep.flush();
                 } else {
                     // Leader: gather final reports from everyone else,
                     // starting from any that already arrived during the

@@ -21,8 +21,14 @@ use anyhow::{anyhow, bail, Context as _, Result};
 use super::json::Json;
 
 /// Known micro-benchmark cell names (see [`crate::lab::micro`]).
-pub const MICRO_NAMES: [&str; 4] =
-    ["wire-codec", "atom-store", "net-pingpong-inproc", "net-pingpong-tcp"];
+pub const MICRO_NAMES: [&str; 6] = [
+    "wire-codec",
+    "atom-store",
+    "net-pingpong-inproc",
+    "net-pingpong-tcp",
+    "frame-pool",
+    "coalesce",
+];
 
 /// Shipped preset names, in `--preset all` order. Each maps 1:1 onto a
 /// `configs/<name>.json` file embedded at compile time.

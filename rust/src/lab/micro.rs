@@ -13,6 +13,11 @@
 //!   on-disk PageRank atom store.
 //! * `net-pingpong-inproc` / `net-pingpong-tcp` — framing-layer 4 KiB
 //!   frame round trips over the in-proc and loopback-TCP transports.
+//! * `frame-pool` — frame encode throughput, fresh allocation per frame
+//!   vs recycling buffers through a [`crate::distributed::FramePool`].
+//! * `coalesce` — small-frame fan-out over loopback TCP, one write per
+//!   frame vs [`crate::distributed::Endpoint::send_batch`] coalescing,
+//!   with a byte-accounting parity assertion between the two passes.
 
 use std::time::{Duration, Instant};
 
@@ -38,6 +43,8 @@ pub fn micro_line(name: &str, n: u64, seed: u64) -> Result<String> {
         "atom-store" => atom_store(n, seed),
         "net-pingpong-inproc" => pingpong(n, false),
         "net-pingpong-tcp" => pingpong(n, true),
+        "frame-pool" => frame_pool(n),
+        "coalesce" => coalesce(n),
         other => bail!(
             "unknown micro '{other}' (one of: {})",
             super::config::MICRO_NAMES.join("|")
@@ -133,6 +140,104 @@ fn atom_store(n: u64, seed: u64) -> Result<String> {
          machine0_load_seconds={local_load_s:.6} full_replay_seconds={full_load_s:.6} \
          mb_per_sec={replay_mbps:.1}",
         lg.owned
+    ))
+}
+
+/// Frame-buffer recycling: encode 64 KiB frames into a fresh `Vec` per
+/// frame (the pre-pool send path) vs recycling one buffer through a
+/// [`FramePool`] get/put cycle (the pooled path). The fresh pass pays a
+/// 64 KiB allocation-and-growth per frame; the pooled pass reuses the
+/// retained capacity, so its rate should sit at or above the baseline.
+fn frame_pool(n: u64) -> Result<String> {
+    use crate::distributed::FramePool;
+    let payload = vec![0x5au8; 64 * 1024];
+    let reps = n.clamp(200, 50_000) as usize;
+    let mut frame_bytes = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let mut buf = Vec::new();
+        payload.encode(&mut buf);
+        frame_bytes = buf.len();
+        std::hint::black_box(&buf);
+    }
+    let fresh_s = t0.elapsed().as_secs_f64();
+    let pool = FramePool::default();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let mut buf = pool.get();
+        payload.encode(&mut buf);
+        std::hint::black_box(&buf);
+        pool.put(buf);
+    }
+    let pooled_s = t0.elapsed().as_secs_f64();
+    let fresh_mbps = (frame_bytes * reps) as f64 / fresh_s.max(1e-9) / 1e6;
+    let pooled_mbps = (frame_bytes * reps) as f64 / pooled_s.max(1e-9) / 1e6;
+    // The pooled rate is the headline (`mb_per_sec`): it is the path the
+    // transport actually runs; the fresh rate is the regression baseline.
+    Ok(format!(
+        "lab-metric micro=frame-pool frame_bytes={frame_bytes} reps={reps} \
+         fresh_mb_per_sec={fresh_mbps:.1} pooled_mb_per_sec={pooled_mbps:.1} \
+         mb_per_sec={pooled_mbps:.1}"
+    ))
+}
+
+/// Coalesced flushes: fan `reps` 256-byte messages machine 0 → machine 1
+/// over loopback TCP, once with one `send` (one queue hop, one logical
+/// frame) per message and once with [`crate::distributed::Endpoint::send_batch`]
+/// in 32-message batches (one multi-frame buffer per batch; the writer
+/// thread additionally coalesces queued buffers into vectored writes).
+/// Asserts the batched pass accounts exactly the same bytes/msgs as the
+/// per-frame pass — coalescing must never change the meters.
+fn coalesce(n: u64) -> Result<String> {
+    const BATCH: usize = 32;
+    let reps = (n.clamp(320, 64_000) as usize / BATCH) * BATCH;
+    let payload = vec![3u8; 256];
+    let frame_bytes = wire::encoded_len(&payload) + 4;
+    let pass = |batched: bool| -> Result<(f64, u64, u64)> {
+        let net: Network<Vec<u8>> = Network::tcp_loopback(2)?;
+        let mut eps = net.into_endpoints();
+        let mut ep1 = eps.pop().unwrap();
+        let ep0 = eps.pop().unwrap();
+        let sink = std::thread::spawn(move || {
+            for _ in 0..reps {
+                ep1.recv_timeout(Duration::from_secs(30)).expect("frame lost");
+            }
+            ep1.send(0, vec![1u8]); // all-received ack
+        });
+        let t0 = Instant::now();
+        if batched {
+            for _ in 0..reps / BATCH {
+                ep0.send_batch(1, vec![payload.clone(); BATCH]);
+            }
+        } else {
+            for _ in 0..reps {
+                ep0.send(1, payload.clone());
+            }
+        }
+        let mut ep0 = ep0;
+        ep0.recv_timeout(Duration::from_secs(30)).expect("ack lost");
+        let secs = t0.elapsed().as_secs_f64();
+        sink.join().map_err(|_| anyhow::anyhow!("sink thread panicked"))?;
+        let stats = &ep0.stats()[0];
+        Ok((
+            secs,
+            stats.bytes_sent.load(std::sync::atomic::Ordering::Relaxed),
+            stats.msgs_sent.load(std::sync::atomic::Ordering::Relaxed),
+        ))
+    };
+    let (per_frame_s, bytes_a, msgs_a) = pass(false)?;
+    let (batched_s, bytes_b, msgs_b) = pass(true)?;
+    anyhow::ensure!(
+        bytes_a == bytes_b && msgs_a == msgs_b,
+        "coalescing changed the accounting: per-frame {bytes_a}B/{msgs_a} msgs \
+         vs batched {bytes_b}B/{msgs_b} msgs"
+    );
+    let per_frame_mbps = (frame_bytes * reps) as f64 / per_frame_s.max(1e-9) / 1e6;
+    let batched_mbps = (frame_bytes * reps) as f64 / batched_s.max(1e-9) / 1e6;
+    Ok(format!(
+        "lab-metric micro=coalesce frame_bytes={frame_bytes} reps={reps} batch={BATCH} \
+         accounted_bytes={bytes_a} per_frame_mb_per_sec={per_frame_mbps:.1} \
+         batched_mb_per_sec={batched_mbps:.1} mb_per_sec={batched_mbps:.1}"
     ))
 }
 

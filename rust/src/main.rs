@@ -161,7 +161,7 @@ fn main() -> Result<()> {
             eprintln!("  graphlab run <pagerank|als|ner|coseg|gibbs> [--engine shared|chromatic|locking]");
             eprintln!("      [--machines N] [--threads N] [--scheduler fifo|priority|multiqueue|sweep|global-*]");
             eprintln!("      [--transport inproc|tcp] [--cluster HOSTS] [--pjrt] [--sweeps N] [--d N]");
-            eprintln!("      [--eps X] [--latency-us N] [--atoms-dir DIR]");
+            eprintln!("      [--eps X] [--latency-us N] [--atoms-dir DIR] [--pin-threads]");
             eprintln!("      [--snapshot-every K|Ns] [--snapshot-dir DIR] [--restore DIR] [--config FILE]");
             eprintln!("  graphlab worker [<app>] --me N --hosts HOSTS --atoms-dir DIR [--engine E]");
             eprintln!("      [--snapshot-every K|Ns] [--snapshot-dir DIR] [--restore DIR]");
@@ -175,8 +175,8 @@ fn main() -> Result<()> {
             eprintln!("      (run a sweep matrix; appends JSONL rows to artifacts/lab/runs.jsonl)");
             eprintln!("  graphlab lab report [--db FILE] [--baseline FILE]");
             eprintln!("      (per-cell medians + regression deltas vs the committed baseline)");
-            eprintln!("  graphlab lab micro <wire-codec|atom-store|net-pingpong-inproc|net-pingpong-tcp>");
-            eprintln!("      [--n N] [--seed S]");
+            eprintln!("  graphlab lab micro <wire-codec|atom-store|net-pingpong-inproc|");
+            eprintln!("      net-pingpong-tcp|frame-pool|coalesce> [--n N] [--seed S]");
             eprintln!("  graphlab serve [--machines N] [--n N] [--listen HOST:PORT] [--eps X]");
             eprintln!("      [--transport inproc|tcp] [--cluster HOSTS --me N --atoms-dir DIR]");
             eprintln!("      (resident serving cluster: queries + streaming mutations with");
@@ -447,6 +447,7 @@ where
         .max_updates(max_updates)
         .max_sweeps(sweeps)
         .maxpending(cfg.num_or("maxpending", 64usize)?)
+        .pin_threads(cfg.bool_or("pin-threads", false))
         .sync_period(Duration::from_millis(cfg.num_or("sync-ms", 100u64)?))
         .syncs(syncs)
         .on_progress(move |epoch, updates, gv| {
@@ -795,6 +796,7 @@ fn serve_cmd(cfg: &Config, cluster: Option<ClusterConfig>) -> Result<()> {
         eps: cfg.num_or("eps", 1e-8f32)?,
         scheduler: cfg.str_or("scheduler", "fifo"),
         seed,
+        pin_threads: cfg.bool_or("pin-threads", false),
         ..ServeOpts::default()
     };
     opts.transport = if cluster.is_some() {

@@ -75,6 +75,8 @@ pub struct ServeOpts {
     pub transport: TransportKind,
     /// In-proc latency injection.
     pub model: NetworkModel,
+    /// Pin each machine loop to a CPU (`me % available_cpus`). Best-effort.
+    pub pin_threads: bool,
 }
 
 impl Default for ServeOpts {
@@ -87,6 +89,7 @@ impl Default for ServeOpts {
             seed: 1,
             transport: TransportKind::InProc,
             model: NetworkModel::default(),
+            pin_threads: false,
         }
     }
 }
@@ -357,14 +360,15 @@ impl ServeMachine {
         for rm in muts {
             self.apply_one(rm, &mut fills);
         }
-        for (m, verts) in fills {
-            ep.send(m, PeerMsg::Ghost { verts, tasks: Vec::new() });
-        }
         // Fills that raced ahead of this Apply can land now.
         let stash = std::mem::take(&mut self.stash);
         self.absorb_ghosts(stash);
         self.step_updates = 0;
-        self.fence(ep);
+        let ghosts = fills
+            .into_iter()
+            .map(|(m, verts)| (m, PeerMsg::Ghost { verts, tasks: Vec::new() }))
+            .collect();
+        self.fence_with(ep, ghosts);
     }
 
     /// One update superstep: drain the queue, recompute each drained
@@ -411,18 +415,28 @@ impl ServeMachine {
                 }
             }
         }
-        for (m, (verts, tasks)) in out {
-            ep.send(m, PeerMsg::Ghost { verts, tasks });
-        }
-        self.fence(ep);
+        let ghosts = out
+            .into_iter()
+            .map(|(m, (verts, tasks))| (m, PeerMsg::Ghost { verts, tasks }))
+            .collect();
+        self.fence_with(ep, ghosts);
     }
 
-    /// Flush-complete fence: `StepEnd` to every peer, then wait markers.
-    fn fence(&mut self, ep: &Endpoint<PeerMsg>) {
+    /// Flush-complete fence: each peer gets its ghost payload (if any)
+    /// and the `StepEnd` marker in ONE batched send — a single pooled
+    /// multi-frame buffer and one transport write per peer per round,
+    /// with the marker's fence semantics intact (FIFO within the batch).
+    fn fence_with(&mut self, ep: &Endpoint<PeerMsg>, mut ghosts: HashMap<MachineId, PeerMsg>) {
         for m in 0..self.machines {
-            if m != self.me {
-                ep.send(m, PeerMsg::StepEnd { step: self.barrier });
+            if m == self.me {
+                continue;
             }
+            let mut batch = Vec::with_capacity(2);
+            if let Some(g) = ghosts.remove(&m) {
+                batch.push(g);
+            }
+            batch.push(PeerMsg::StepEnd { step: self.barrier });
+            ep.send_batch(m, batch);
         }
         self.mode = Mode::WaitMarkers;
     }
@@ -846,10 +860,18 @@ impl ServeSession {
             } else {
                 None
             };
+            let pin = opts.pin_threads;
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("serve-m{}", st.me))
-                    .spawn(move || machine_loop(st, ep, front))?,
+                    .spawn(move || {
+                        if pin {
+                            crate::util::affinity::pin_current_thread(
+                                st.me % crate::util::affinity::available_cpus(),
+                            );
+                        }
+                        machine_loop(st, ep, front)
+                    })?,
             );
         }
         Ok(ServeSession { client_tx, handles })
@@ -965,5 +987,8 @@ pub fn serve_machine(
     } else {
         None
     };
+    if opts.pin_threads {
+        crate::util::affinity::pin_current_thread(me % crate::util::affinity::available_cpus());
+    }
     machine_loop(st, ep, front)
 }

@@ -1,0 +1,70 @@
+//! CPU affinity for engine threads (opt-in via `--pin-threads`).
+//!
+//! The lab's executor already pins *whole runs* with `taskset`; this
+//! module pins *individual engine threads* so a machine loop stops
+//! migrating between cores (and across NUMA nodes) mid-run. The vendor
+//! set has no `libc`, so pinning shells out to `taskset` with the
+//! calling thread's kernel tid — best-effort by design: on platforms or
+//! containers without `taskset` (or without `/proc`), it degrades to a
+//! no-op and the engine runs exactly as before.
+
+/// How many CPUs the scheduler offers this process (1 if unknown).
+pub fn available_cpus() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Pin the *calling* thread to `cpu` (modulo nothing — pass a valid
+/// index, e.g. `machine_id % available_cpus()`). Returns whether the
+/// pin was applied. Never fails the run: engines treat `false` as
+/// "scheduler's choice", the behavior before pinning existed.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        // /proc/thread-self is a symlink to <pid>/task/<tid>; its last
+        // component is this thread's kernel tid — the one handle taskset
+        // accepts that std exposes without libc.
+        let Ok(target) = std::fs::read_link("/proc/thread-self") else {
+            return false;
+        };
+        let Some(tid) = target
+            .file_name()
+            .and_then(|s| s.to_str())
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            return false;
+        };
+        std::process::Command::new("taskset")
+            .args(["-cp", &cpu.to_string(), &tid.to_string()])
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpu;
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn available_cpus_is_positive() {
+        assert!(available_cpus() >= 1);
+    }
+
+    #[test]
+    fn pin_is_best_effort_and_never_panics() {
+        // Whether the pin lands depends on the platform/container; the
+        // contract is only that the call returns (no panic, no abort)
+        // and a second pin to another CPU also returns.
+        let _ = pin_current_thread(0);
+        let _ = pin_current_thread(available_cpus() - 1);
+    }
+}

@@ -8,6 +8,7 @@
 //! ([`stats`]), and the small dense linear algebra used by the native
 //! (non-PJRT) math paths ([`matrix`]).
 
+pub mod affinity;
 pub mod cli;
 pub mod config;
 pub mod csv;

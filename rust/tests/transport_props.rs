@@ -12,8 +12,9 @@
 //! spawns actual `graphlab worker` / `graphlab run --cluster` processes
 //! (CI's cluster-smoke job runs it with `--ignored`).
 
-use std::io::Write as _;
+use std::io::{Read as _, Write as _};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -21,7 +22,7 @@ use graphlab::distributed::network::{Endpoint, NetStats};
 use graphlab::distributed::transport::{
     read_ack, read_handshake, write_handshake, TcpBound, TcpConfig, ROLE_WORKER,
 };
-use graphlab::distributed::TransportKind;
+use graphlab::distributed::{Network, TransportKind};
 use graphlab::engine::EngineKind;
 use graphlab::wire::WIRE_VERSION;
 
@@ -209,6 +210,115 @@ fn valid_frames_still_flow_after_construction() {
     let got = ep.recv_timeout(Duration::from_secs(5)).expect("typed message");
     assert_eq!((got.src, got.msg), (1, 0xDEADBEEF));
     assert!(ep.peer_errors().is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// batched sends: coalescing must not change accounting, order, or decoding
+// ---------------------------------------------------------------------------
+
+/// Byte/message accounting parity: the same message stream sent one
+/// frame at a time and sent through `send_batch` (multi-frame buffers,
+/// coalesced by the writer thread) must meter identical `bytes_sent` /
+/// `msgs_sent` — accounting is per logical message at encode time, never
+/// per write. The received streams must also be identical: multi-frame
+/// buffers decode to the same typed messages in the same order.
+#[test]
+fn coalesced_batches_account_identical_bytes_and_msgs() {
+    let msgs: Vec<u32> = (0..96u32).map(|i| i * 31 + 7).collect();
+    let run = |batched: bool| -> (u64, u64, Vec<u32>) {
+        let net: Network<u32> = Network::tcp_loopback(2).unwrap();
+        let mut eps = net.into_endpoints();
+        let mut ep1 = eps.pop().unwrap();
+        let ep0 = eps.pop().unwrap();
+        if batched {
+            for chunk in msgs.chunks(32) {
+                ep0.send_batch(1, chunk.to_vec());
+            }
+        } else {
+            for &m in &msgs {
+                ep0.send(1, m);
+            }
+        }
+        let mut got = Vec::with_capacity(msgs.len());
+        while got.len() < msgs.len() {
+            got.push(ep1.recv_timeout(Duration::from_secs(10)).expect("message lost").msg);
+        }
+        let s = &ep0.stats()[0];
+        (s.bytes_sent.load(Ordering::Relaxed), s.msgs_sent.load(Ordering::Relaxed), got)
+    };
+    let (bytes_per_frame, msgs_per_frame, got_per_frame) = run(false);
+    let (bytes_batched, msgs_batched, got_batched) = run(true);
+    assert_eq!(
+        (bytes_per_frame, msgs_per_frame),
+        (bytes_batched, msgs_batched),
+        "coalescing changed the meters"
+    );
+    assert_eq!(got_per_frame, got_batched, "coalescing changed the received stream");
+    assert_eq!(got_per_frame, msgs, "stream did not round-trip");
+}
+
+/// FIFO across the coalescing boundary: singles and batches interleaved
+/// on one peer arrive in exactly the submission order.
+#[test]
+fn fifo_order_survives_interleaved_sends_and_batches() {
+    let net: Network<u32> = Network::tcp_loopback(2).unwrap();
+    let mut eps = net.into_endpoints();
+    let mut ep1 = eps.pop().unwrap();
+    let ep0 = eps.pop().unwrap();
+    ep0.send(1, 0);
+    ep0.send_batch(1, vec![1, 2, 3]);
+    ep0.send(1, 4);
+    ep0.send_batch(1, vec![5, 6]);
+    let mut got = Vec::new();
+    while got.len() < 7 {
+        got.push(ep1.recv_timeout(Duration::from_secs(10)).expect("message lost").msg);
+    }
+    assert_eq!(got, vec![0, 1, 2, 3, 4, 5, 6]);
+}
+
+/// Wire shape of a batch: `send_batch` emits ordinary back-to-back
+/// `[u32 len][payload]` frames — a receiver that knows nothing about
+/// batching parses the stream unchanged.
+#[test]
+fn batched_buffer_is_back_to_back_frames_on_the_wire() {
+    let (ep, _to0, mut from0) = endpoint_with_puppet("batch-wire");
+    ep.send_batch(1, vec![0xAAu32, 0xBB, 0xCC]);
+    from0.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 24];
+    from0.read_exact(&mut buf).unwrap();
+    for (i, want) in [0xAAu32, 0xBB, 0xCC].iter().enumerate() {
+        let off = i * 8;
+        let len = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+        let val = u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap());
+        assert_eq!((len, val), (4, *want), "frame {i} malformed on the wire");
+    }
+}
+
+/// Hostile cut mid-batch: a peer that dies between the frames of a
+/// coalesced buffer delivers its complete leading frames and surfaces
+/// the torn tail as a typed per-peer error — never a panic.
+#[test]
+fn stream_cut_mid_batch_yields_messages_then_typed_error() {
+    let (mut ep, mut to0, _from0) = endpoint_with_puppet("cut-mid-batch");
+    // Two frames in one write: frame 1 complete, frame 2 claims 4
+    // payload bytes but delivers 2, then the connection drops.
+    let mut batch = Vec::new();
+    batch.extend_from_slice(&4u32.to_le_bytes());
+    batch.extend_from_slice(&7u32.to_le_bytes());
+    batch.extend_from_slice(&4u32.to_le_bytes());
+    batch.extend_from_slice(&[9, 9]);
+    to0.write_all(&batch).unwrap();
+    to0.flush().unwrap();
+    drop(to0);
+    let got = ep.recv_timeout(Duration::from_secs(5)).expect("leading frame lost");
+    assert_eq!((got.src, got.msg), (1, 7));
+    assert!(ep.recv_timeout(Duration::from_secs(2)).is_none());
+    let errs = ep.peer_errors();
+    assert!(
+        errs.iter().any(|e| e.peer == 1),
+        "expected a typed mid-batch error for peer 1, got {errs:?}"
+    );
+    assert!(!ep.peer_alive(1));
 }
 
 // ---------------------------------------------------------------------------
