@@ -11,6 +11,13 @@
 //! later ones. Cycles in the wait-for graph would need some transaction to
 //! wait on a lower-ordered lock than one it holds — impossible. Pipelining
 //! (paper Fig. 8(b)) runs many transactions' chains concurrently.
+//!
+//! Grant exclusivity: a granted write lock excludes every other grant on
+//! that vertex until the holder releases it. The locking engine's executor
+//! pool leans on exactly this contract — scope data snapshotted any time
+//! between the final grant and the release reads the same values, which is
+//! what makes dispatch-time snapshots and commit-time write-back of
+//! executor results exact (DESIGN.md, "Execution off the pump thread").
 
 use std::collections::{HashMap, VecDeque};
 

@@ -272,8 +272,11 @@ impl<V> Engine<V> {
     }
 
     /// Worker threads: the shared engine's thread count, or threads per
-    /// machine on the chromatic engine (the locking engine is one event
-    /// loop per machine).
+    /// machine on the distributed engines. On the locking engine, 1
+    /// evaluates granted batches inline on the per-machine pump thread
+    /// (the bit-deterministic sequential path); N > 1 adds a pool of N
+    /// update-executor threads per machine fed by the lock pipeline (the
+    /// paper's 8-cores-per-node deployment, Fig. 7).
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = n.max(1);
         self
@@ -636,6 +639,7 @@ impl<V> Engine<V> {
                     locking::LockingOpts {
                         machines: self.machines,
                         maxpending: self.maxpending,
+                        threads: self.workers,
                         scheduler: self.sched.policy,
                         network: self.network,
                         transport: self.transport,

@@ -15,7 +15,14 @@
 //!   lock chains concurrently (Fig. 8(b) sweeps this knob);
 //! * **ready-batch execution** — granted transactions are executed through
 //!   `VertexProgram::update_batch`, letting PJRT-backed programs amortize
-//!   compiled-kernel invocations.
+//!   compiled-kernel invocations;
+//! * **parallel update evaluation** — with `--threads N` (N > 1) each
+//!   machine pairs its pump thread with a pool of N executor threads:
+//!   granted batches are snapshotted at dispatch and evaluated off the
+//!   pump, which keeps sole ownership of sockets, locks, ghost pushes,
+//!   and termination accounting (the paper's headline deployment runs
+//!   8 cores per node — Fig. 7). See DESIGN.md §"Execution off the pump
+//!   thread" for the snapshot safety argument.
 //!
 //! Termination uses the Safra/Misra token ring
 //! ([`crate::distributed::termination`]); sync operations run under a
@@ -46,6 +53,7 @@ use crate::graph::{EdgeId, Graph, VertexId};
 use crate::partition::atoms::AtomPlacement;
 use crate::partition::{MachineId, Partition};
 use crate::scheduler::{self, Policy, Task};
+use crate::util::threadpool::DispatchQueue;
 use crate::wire::{self, Wire};
 
 /// Options for a locking-engine run (crate-internal: external callers go
@@ -56,6 +64,12 @@ pub(crate) struct LockingOpts {
     /// Maximum transactions in flight per machine (lock pipelining depth;
     /// 0 means 1 — a fully serial pipeline, the paper's baseline).
     pub maxpending: usize,
+    /// Update-executor threads per machine (the paper runs 8 cores per
+    /// node). 1 (or 0) evaluates granted batches inline on the pump
+    /// thread — the bit-deterministic sequential oracle; N > 1 spawns N
+    /// pool workers per machine and the pump thread only pumps the
+    /// protocol.
+    pub threads: usize,
     /// Scheduler policy (parsed at the CLI boundary via
     /// [`Policy::parse`], so unknown names fail with an error up front).
     pub scheduler: Policy,
@@ -105,6 +119,7 @@ impl Default for LockingOpts {
         LockingOpts {
             machines: 2,
             maxpending: 64,
+            threads: 1,
             scheduler: Policy::Fifo,
             network: NetworkModel::default(),
             transport: TransportKind::InProc,
@@ -338,6 +353,68 @@ struct Txn {
     next: usize,
 }
 
+/// One scope slot of a dispatched transaction: the neighbor's ids plus
+/// *owned copies* of its vertex and edge data, snapshotted at dispatch.
+/// Slot order mirrors `lg.adj[center]`, so dirty flags index identically
+/// on both the inline and the pool path.
+struct JobNbr<V, E> {
+    ng: VertexId,
+    ge: EdgeId,
+    vdata: V,
+    edata: E,
+}
+
+/// A fully-granted transaction packaged for an executor thread. Workers
+/// build their `Scope` over these owned buffers, never over `lg` — the
+/// pump keeps exclusive ownership of the local graph. Snapshotting at
+/// dispatch is equivalent to snapshotting at grant time: every slot in
+/// the plan is still locked between the final grant and the dispatch, so
+/// no writer (local or remote) can touch the data in between.
+struct TxnJob<V, E> {
+    seq: u64,
+    center_lv: u32,
+    plan: Vec<(VertexId, bool)>,
+    center_g: VertexId,
+    center: V,
+    nbrs: Vec<JobNbr<V, E>>,
+}
+
+/// Which scope slots an update dirtied (indices follow `lg.adj[center]`).
+struct TxnFlags {
+    center_dirty: bool,
+    nbr_dirty: Vec<bool>,
+    edge_dirty: Vec<bool>,
+}
+
+/// What an executor thread hands back to the pump: the jobs (now holding
+/// the *mutated* snapshots) with their dirty flags, plus every task the
+/// batch scheduled. The pump alone turns this into version bumps, sends,
+/// ghost pushes, lock releases, and termination accounting.
+struct Completion<V, E> {
+    txns: Vec<(TxnJob<V, E>, TxnFlags)>,
+    tasks: Vec<Task>,
+}
+
+/// Marker sent instead of a [`Completion`] when an update function
+/// panicked on an executor thread; the pump re-raises it loudly (locks
+/// held by the dead batch can never be released — continuing would hang
+/// the cluster).
+struct PoolPanic;
+
+/// A job queued to the per-machine executor pool: the captured batch and
+/// the pump's update counter at dispatch (the batch's `updates_hint`).
+type ExecJob<V, E> = (Vec<TxnJob<V, E>>, u64);
+
+/// An executed transaction as seen by the shared write-back path: both
+/// the inline path (flags read off live scopes) and the pool path (flags
+/// shipped back in the [`Completion`]) reduce to this.
+struct TxnDone {
+    seq: u64,
+    center_lv: u32,
+    plan: Vec<(VertexId, bool)>,
+    flags: TxnFlags,
+}
+
 /// Run `program` under the distributed locking engine. Misconfiguration
 /// (partition not matching the machine count or the graph) is an error,
 /// not a panic — it surfaces through the `engine::Engine` builder's
@@ -410,6 +487,7 @@ where
     let cap = opts.max_updates_per_machine;
     let seed = opts.seed;
     let pin_threads = opts.pin_threads;
+    let threads = opts.threads.max(1);
 
     // Per-machine update counts (each machine writes its own slot at
     // exit): the ExecStats load-balance vector.
@@ -431,8 +509,47 @@ where
             let outputs = &outputs;
             let updates_by_machine = &updates_by_machine;
             let epochs = &epochs;
+            let me = ep.me();
+            // Per-machine executor pool plumbing. The globals live in an
+            // Arc because executor threads read them (`Ctx::global`)
+            // while the pump writes sync results; GlobalValues is
+            // internally locked. With threads == 1 the queue and channel
+            // exist but stay unused — granted batches run inline.
+            let globals = std::sync::Arc::new(GlobalValues::new());
+            let jobs_q: std::sync::Arc<DispatchQueue<ExecJob<V, E>>> =
+                std::sync::Arc::new(DispatchQueue::new());
+            let (done_tx, done_rx) =
+                std::sync::mpsc::channel::<Result<Completion<V, E>, PoolPanic>>();
+            if threads > 1 {
+                for w in 0..threads {
+                    let jobs_q = jobs_q.clone();
+                    let done_tx = done_tx.clone();
+                    let globals = globals.clone();
+                    std::thread::Builder::new()
+                        .name(format!("graphlab-lockexec-{me}-{w}"))
+                        .spawn_scoped(s, move || {
+                            if pin_threads {
+                                // Executors land after every machine's
+                                // pump slot so pumps keep their cores.
+                                crate::util::affinity::pin_current_thread(
+                                    (me + machines * (w + 1))
+                                        % crate::util::affinity::available_cpus(),
+                                );
+                            }
+                            executor_loop(&jobs_q, &done_tx, program, consistency, &globals);
+                        })
+                        .expect("spawn locking executor");
+                }
+            }
+            // The pump holds no sender: once it exits (closing the
+            // queue via the guard below) and the executors drain, the
+            // channel fully disconnects instead of leaking a sender.
+            drop(done_tx);
             handles.push(s.spawn(move || -> anyhow::Result<()> {
-                let me = ep.me();
+                // Close the job queue on *every* exit path (including
+                // unwinds): executors parked in `pop` would otherwise
+                // deadlock the thread scope's implicit join.
+                let _close = jobs_q.close_guard();
                 if pin_threads {
                     crate::util::affinity::pin_current_thread(
                         me % crate::util::affinity::available_cpus(),
@@ -447,7 +564,6 @@ where
                 let mut snap: Option<SnapshotSession<V, E>> = snap_cfg
                     .as_ref()
                     .map(|cfg| SnapshotSession::new(cfg, me, machines));
-                let globals = GlobalValues::new();
                 let mut sched = sched_policy.build(n_global, seed ^ me as u64);
                 for t in initial.iter() {
                     if partition.owner(t.vertex) == me {
@@ -489,7 +605,16 @@ where
                 // with small inline blocks.
                 // ---------------------------------------------------------
 
-                let mut idle_spins: u32 = 0;
+                // Transactions dispatched to the executor pool whose
+                // completions have not yet been committed. They still
+                // hold their locks, so every drain / idle / admission
+                // condition must count them alongside pipeline + ready.
+                let mut inflight: usize = 0;
+                // Events pulled in by the blocking idle wait below, to be
+                // consumed at the top of the next iteration.
+                let mut pending_msg: Option<crate::distributed::network::Received<Msg<V, E>>> =
+                    None;
+                let mut pending_done: Option<Result<Completion<V, E>, PoolPanic>> = None;
                 // Peer failures seen while idle; the run aborts once any
                 // have been pending for longer than the grace window.
                 let mut pending_peer_failure: Vec<crate::distributed::transport::PeerError> =
@@ -499,7 +624,7 @@ where
                     let mut progressed = false;
 
                     // ---- 1. drain incoming messages -----------------------
-                    while let Some(rcv) = ep.try_recv() {
+                    while let Some(rcv) = pending_msg.take().or_else(|| ep.try_recv()) {
                         progressed = true;
                         match rcv.msg {
                             Msg::LockReq {
@@ -736,7 +861,8 @@ where
                             }
                             Msg::Token(tok) => {
                                 let idle = is_idle(
-                                    &pipeline, &ready, &*sched, syncing, my_updates, cap,
+                                    &pipeline, &ready, inflight, &*sched, syncing, my_updates,
+                                    cap,
                                 );
                                 match term.on_token(tok, idle) {
                                     TokenAction::Forward(t) => {
@@ -794,8 +920,46 @@ where
                         }
                     }
 
+                    // ---- 1b. drain executor completions ------------------
+                    // The pump is the only thread that touches `lg`, the
+                    // lock table, the endpoint, or the termination state:
+                    // committing a completion here is what turns an
+                    // executed batch into version bumps, Releases, ghost
+                    // pushes, and promotions.
+                    while let Some(done) = pending_done.take().or_else(|| done_rx.try_recv().ok())
+                    {
+                        progressed = true;
+                        let comp = match done {
+                            Ok(c) => c,
+                            Err(PoolPanic) => panic!(
+                                "locking engine machine {me}: update executor panicked"
+                            ),
+                        };
+                        inflight -= comp.txns.len();
+                        my_updates += comp.txns.len() as u64;
+                        commit_completion(
+                            comp,
+                            consistency,
+                            &mut lg,
+                            partition,
+                            me,
+                            &mut locks,
+                            &mut req_meta,
+                            &ep,
+                            &mut sched,
+                            &mut pipeline,
+                            &mut ready,
+                            &mut term,
+                            halted,
+                        );
+                    }
+
                     // ---- 2. sync-barrier drain ---------------------------
-                    if syncing && !sync_partial_sent && pipeline.is_empty() && ready.is_empty()
+                    if syncing
+                        && !sync_partial_sent
+                        && pipeline.is_empty()
+                        && ready.is_empty()
+                        && inflight == 0
                     {
                         let accs: Vec<Vec<f64>> = syncs
                             .iter()
@@ -820,14 +984,20 @@ where
                         progressed = true;
                     }
 
-                    if halted && pipeline.is_empty() && ready.is_empty() {
+                    if halted && pipeline.is_empty() && ready.is_empty() && inflight == 0 {
                         break 'main;
                     }
 
                     // ---- 3. start new transactions -----------------------
+                    // `inflight` counts against both the pipelining depth
+                    // (dispatched batches still occupy their maxpending
+                    // slots — the knob bounds *uncommitted* transactions)
+                    // and the update cap (their updates are counted only
+                    // at completion).
                     if !syncing && !halted {
-                        while pipeline.len() + ready.len() < maxpending
-                            && (my_updates + (pipeline.len() + ready.len()) as u64) < cap
+                        while pipeline.len() + ready.len() + inflight < maxpending
+                            && (my_updates + (pipeline.len() + ready.len() + inflight) as u64)
+                                < cap
                         {
                             let Some(task) = sched.pop() else {
                                 break;
@@ -879,25 +1049,38 @@ where
                     if flush {
                         progressed = true;
                         let batch: Vec<Txn> = ready.drain(..).collect();
-                        execute_batch(
-                            &batch,
-                            program,
-                            consistency,
-                            &mut lg,
-                            &globals,
-                            partition,
-                            me,
-                            &mut locks,
-                            &mut req_meta,
-                            &ep,
-                            &mut sched,
-                            &mut pipeline,
-                            &mut ready,
-                            &mut term,
-                            my_updates,
-                            halted,
-                        );
-                        my_updates += batch.len() as u64;
+                        if threads > 1 {
+                            // Snapshot the batch's scopes (every slot is
+                            // still locked, so the copies are exactly the
+                            // grant-time values) and hand it to the pool;
+                            // the completion is committed in phase 1b.
+                            inflight += batch.len();
+                            let jobs: Vec<TxnJob<V, E>> =
+                                batch.into_iter().map(|t| capture_job(t, &lg)).collect();
+                            jobs_q.push((jobs, my_updates));
+                        } else {
+                            // Inline path: unchanged sequential oracle.
+                            let blen = batch.len() as u64;
+                            execute_batch(
+                                batch,
+                                program,
+                                consistency,
+                                &mut lg,
+                                &globals,
+                                partition,
+                                me,
+                                &mut locks,
+                                &mut req_meta,
+                                &ep,
+                                &mut sched,
+                                &mut pipeline,
+                                &mut ready,
+                                &mut term,
+                                my_updates,
+                                halted,
+                            );
+                            my_updates += blen;
+                        }
                     }
 
                     // ---- 5. leader: periodic sync + termination ----------
@@ -931,8 +1114,9 @@ where
                                 progressed = true;
                             }
                         }
-                        let idle = is_idle(&pipeline, &ready, &*sched, syncing, my_updates, cap)
-                            && last_token.elapsed() > Duration::from_micros(500);
+                        let idle =
+                            is_idle(&pipeline, &ready, inflight, &*sched, syncing, my_updates, cap)
+                                && last_token.elapsed() > Duration::from_micros(500);
                         if idle {
                             last_token = Instant::now();
                         }
@@ -950,8 +1134,9 @@ where
                     }
                     // Re-offer a held token once idle.
                     if let Some(tok) = held_token {
-                        let idle =
-                            is_idle(&pipeline, &ready, &*sched, syncing, my_updates, cap);
+                        let idle = is_idle(
+                            &pipeline, &ready, inflight, &*sched, syncing, my_updates, cap,
+                        );
                         if idle {
                             match term.maybe_forward(tok, idle) {
                                 TokenAction::Forward(t) => {
@@ -1002,19 +1187,26 @@ where
                                 );
                             }
                         }
-                        // Spin briefly (remote lock-chain latency is a
-                        // multiple of the wake interval — §Perf), then
-                        // yield, then sleep once genuinely idle.
-                        idle_spins += 1;
-                        if idle_spins < 64 {
-                            std::hint::spin_loop();
-                        } else if idle_spins < 256 {
-                            std::thread::yield_now();
-                        } else {
-                            std::thread::sleep(Duration::from_micros(20));
+                        // Park on whichever event source can actually
+                        // unblock this iteration instead of spinning
+                        // (the old spin/yield/20 µs backoff burned a
+                        // core on every idle machine — §Perf). With
+                        // batches in flight the executor channel is the
+                        // next wake (bounded tightly: completions feed
+                        // releases other machines may be blocked on);
+                        // otherwise only a peer message can help, and
+                        // `recv_timeout` flushes + blocks on the
+                        // transport directly. The timeout bounds the
+                        // latency of the leader's timer-driven work
+                        // (sync periods, snapshot triggers, tokens).
+                        if inflight > 0 {
+                            if let Ok(done) = done_rx.recv_timeout(Duration::from_micros(100)) {
+                                pending_done = Some(done);
+                            }
+                        } else if let Some(rcv) = ep.recv_timeout(Duration::from_millis(1)) {
+                            pending_msg = Some(rcv);
                         }
                     } else {
-                        idle_spins = 0;
                         // Progress re-anchors the peer-failure grace
                         // window: only continuous idleness counts.
                         peer_failure_since = None;
@@ -1184,12 +1376,17 @@ where
 fn is_idle(
     pipeline: &HashMap<u64, Txn>,
     ready: &[Txn],
+    inflight: usize,
     sched: &dyn scheduler::Scheduler,
     syncing: bool,
     my_updates: u64,
     cap: u64,
 ) -> bool {
-    pipeline.is_empty() && ready.is_empty() && !syncing && (sched.is_empty() || my_updates >= cap)
+    pipeline.is_empty()
+        && ready.is_empty()
+        && inflight == 0
+        && !syncing
+        && (sched.is_empty() || my_updates >= cap)
 }
 
 /// Build and send the grant for a (now-granted) remote request.
@@ -1314,10 +1511,13 @@ fn pump_txn<V: DataValue, E: DataValue>(
     }
 }
 
-/// Execute a batch of fully-locked transactions, write back, release.
+/// Execute a batch of fully-locked transactions *inline on the pump
+/// thread* (the `threads == 1` path), write back, release. This is the
+/// sequential oracle: scopes point straight into `lg` and the
+/// floating-point evaluation order is identical to the pre-pool engine.
 #[allow(clippy::too_many_arguments)]
 fn execute_batch<V, E, P>(
-    batch: &[Txn],
+    batch: Vec<Txn>,
     program: &P,
     consistency: Consistency,
     lg: &mut LocalGraph<V, E>,
@@ -1369,10 +1569,224 @@ fn execute_batch<V, E, P>(
         let mut refs: Vec<&mut Scope<V, E>> = scopes.iter_mut().collect();
         program.update_batch(&mut refs, &mut ctx);
     }
+    let dones: Vec<TxnDone> = batch
+        .into_iter()
+        .zip(&scopes)
+        .map(|(txn, sc)| {
+            let deg = lg.neighbors(txn.center_lv).len();
+            TxnDone {
+                seq: txn.seq,
+                center_lv: txn.center_lv,
+                plan: txn.plan,
+                flags: TxnFlags {
+                    center_dirty: sc.center_dirty(),
+                    nbr_dirty: (0..deg).map(|i| sc.nbr_dirty(i)).collect(),
+                    edge_dirty: (0..deg).map(|i| sc.edge_dirty(i)).collect(),
+                },
+            }
+        })
+        .collect();
+    let tasks = std::mem::take(&mut ctx.scheduled);
+    write_back_release(
+        dones, tasks, consistency, lg, partition, me, locks, req_meta, ep, sched, pipeline,
+        ready, term, halted,
+    );
+}
 
+/// Package a fully-granted transaction for an executor thread: owned
+/// clones of the center and of every scope slot. All plan slots are
+/// still locked, so these copies are exactly the grant-time values and
+/// stay valid until the completion commits (nothing can write a locked
+/// slot in between — see the version-gate argument in DESIGN.md).
+fn capture_job<V: DataValue, E: DataValue>(txn: Txn, lg: &LocalGraph<V, E>) -> TxnJob<V, E> {
+    let c = txn.center_lv as usize;
+    let nbrs = lg
+        .neighbors(txn.center_lv)
+        .iter()
+        .map(|&(nlv, nle)| JobNbr {
+            ng: lg.l2g[nlv as usize],
+            ge: lg.le2g[nle as usize],
+            vdata: lg.vdata[nlv as usize].clone(),
+            edata: lg.edata[nle as usize].clone(),
+        })
+        .collect();
+    TxnJob {
+        seq: txn.seq,
+        center_lv: txn.center_lv,
+        plan: txn.plan,
+        center_g: lg.l2g[c],
+        center: lg.vdata[c].clone(),
+        nbrs,
+    }
+}
+
+/// Evaluate a dispatched batch on an executor thread: build scopes over
+/// the jobs' own snapshot buffers (no pointer into `lg` ever crosses a
+/// thread boundary), run `update_batch`, and report per-slot dirty flags
+/// plus the tasks the batch scheduled. Mutations land in the job buffers;
+/// the pump moves dirty ones into `lg` at commit.
+fn run_jobs<V, E, P>(
+    jobs: &mut [TxnJob<V, E>],
+    program: &P,
+    consistency: Consistency,
+    globals: &GlobalValues,
+    updates_hint: u64,
+) -> (Vec<TxnFlags>, Vec<Task>)
+where
+    V: DataValue,
+    E: DataValue,
+    P: VertexProgram<V, E>,
+{
+    let mut scopes: Vec<Scope<V, E>> = Vec::with_capacity(jobs.len());
+    for job in jobs.iter_mut() {
+        let mut sc = Scope::new_buffer(consistency);
+        // SAFETY: the pointers target this job's owned buffers, which
+        // outlive the scopes (both live to the end of this function and
+        // the scopes are dropped first), and no Rust reference to the
+        // buffers is formed while `update_batch` writes through them.
+        unsafe {
+            sc.reset(job.center_g, &mut job.center as *mut V);
+            for nbr in job.nbrs.iter_mut() {
+                sc.push_neighbor(
+                    nbr.ng,
+                    nbr.ge,
+                    &mut nbr.vdata as *mut V,
+                    &mut nbr.edata as *mut E,
+                );
+            }
+        }
+        scopes.push(sc);
+    }
+    let mut ctx = Ctx::new(globals);
+    ctx.set_updates_hint(updates_hint);
+    {
+        let mut refs: Vec<&mut Scope<V, E>> = scopes.iter_mut().collect();
+        program.update_batch(&mut refs, &mut ctx);
+    }
+    let flags = jobs
+        .iter()
+        .zip(&scopes)
+        .map(|(job, sc)| TxnFlags {
+            center_dirty: sc.center_dirty(),
+            nbr_dirty: (0..job.nbrs.len()).map(|i| sc.nbr_dirty(i)).collect(),
+            edge_dirty: (0..job.nbrs.len()).map(|i| sc.edge_dirty(i)).collect(),
+        })
+        .collect();
+    (flags, std::mem::take(&mut ctx.scheduled))
+}
+
+/// The executor thread body: pop, evaluate, report, repeat until the
+/// pump closes the queue. Panics inside the update function are caught
+/// and forwarded as [`PoolPanic`] so the pump (which may be blocked on
+/// this very completion) re-raises them instead of hanging.
+fn executor_loop<V, E, P>(
+    jobs_q: &DispatchQueue<ExecJob<V, E>>,
+    done_tx: &std::sync::mpsc::Sender<Result<Completion<V, E>, PoolPanic>>,
+    program: &P,
+    consistency: Consistency,
+    globals: &GlobalValues,
+) where
+    V: DataValue,
+    E: DataValue,
+    P: VertexProgram<V, E>,
+{
+    while let Some((mut jobs, hint)) = jobs_q.pop() {
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_jobs(&mut jobs, program, consistency, globals, hint)
+        }));
+        let msg = match out {
+            Ok((flags, tasks)) => Ok(Completion {
+                txns: jobs.into_iter().zip(flags).collect(),
+                tasks,
+            }),
+            Err(_) => Err(PoolPanic),
+        };
+        if done_tx.send(msg).is_err() {
+            return; // pump already gone (unwinding) — nothing to do
+        }
+    }
+}
+
+/// Commit a pool completion on the pump thread: move the dirty snapshot
+/// values into `lg` (safe — every dirtied slot is still locked by its
+/// transaction, so `lg` cannot have advanced past the snapshot), then
+/// run the shared write-back/release path.
+#[allow(clippy::too_many_arguments)]
+fn commit_completion<V, E>(
+    comp: Completion<V, E>,
+    consistency: Consistency,
+    lg: &mut LocalGraph<V, E>,
+    partition: &Partition,
+    me: MachineId,
+    locks: &mut LockTable,
+    req_meta: &mut ReqMeta,
+    ep: &crate::distributed::Endpoint<Msg<V, E>>,
+    sched: &mut dyn scheduler::Scheduler,
+    pipeline: &mut HashMap<u64, Txn>,
+    ready: &mut Vec<Txn>,
+    term: &mut Termination,
+    halted: bool,
+) where
+    V: DataValue,
+    E: DataValue,
+{
+    let mut dones = Vec::with_capacity(comp.txns.len());
+    for (job, flags) in comp.txns {
+        let c = job.center_lv as usize;
+        let lo = lg.adj_offsets[c] as usize;
+        if flags.center_dirty {
+            lg.vdata[c] = job.center;
+        }
+        for (i, nbr) in job.nbrs.into_iter().enumerate() {
+            let (nlv, nle) = lg.adj[lo + i];
+            if flags.nbr_dirty[i] {
+                lg.vdata[nlv as usize] = nbr.vdata;
+            }
+            if flags.edge_dirty[i] {
+                lg.edata[nle as usize] = nbr.edata;
+            }
+        }
+        dones.push(TxnDone {
+            seq: job.seq,
+            center_lv: job.center_lv,
+            plan: job.plan,
+            flags,
+        });
+    }
+    write_back_release(
+        dones, comp.tasks, consistency, lg, partition, me, locks, req_meta, ep, sched,
+        pipeline, ready, term, halted,
+    );
+}
+
+/// The pump-thread half of transaction completion, shared by the inline
+/// and pool paths: bump versions, build per-owner Release parts, eager
+/// ghost pushes (Unsafe mode), release local locks (running promotions),
+/// and count remote sends into the termination token state.
+#[allow(clippy::too_many_arguments)]
+fn write_back_release<V, E>(
+    dones: Vec<TxnDone>,
+    mut tasks: Vec<Task>,
+    consistency: Consistency,
+    lg: &mut LocalGraph<V, E>,
+    partition: &Partition,
+    me: MachineId,
+    locks: &mut LockTable,
+    req_meta: &mut ReqMeta,
+    ep: &crate::distributed::Endpoint<Msg<V, E>>,
+    sched: &mut dyn scheduler::Scheduler,
+    pipeline: &mut HashMap<u64, Txn>,
+    ready: &mut Vec<Txn>,
+    term: &mut Termination,
+    halted: bool,
+) where
+    V: DataValue,
+    E: DataValue,
+{
     // Write-back + release, one transaction at a time.
-    for (txn, sc) in batch.iter().zip(&scopes) {
-        let center_lv = txn.center_lv as usize;
+    let count = dones.len();
+    for (k, done) in dones.iter().enumerate() {
+        let center_lv = done.center_lv as usize;
         let center_g = lg.l2g[center_lv];
         // Per-owner release parts.
         #[allow(clippy::type_complexity)]
@@ -1388,7 +1802,7 @@ fn execute_batch<V, E, P>(
 
         // Dirty center: bump our authoritative version. Ghost holders
         // refresh via future grants (or eagerly in Unsafe mode).
-        if sc.center_dirty() {
+        if done.flags.center_dirty {
             lg.vversion[center_lv] += 1;
         }
         // Dirty neighbors (full consistency): send to their owners.
@@ -1398,7 +1812,7 @@ fn execute_batch<V, E, P>(
             .enumerate()
         {
             let nlv = nlv as usize;
-            if sc.nbr_dirty(i) {
+            if done.flags.nbr_dirty[i] {
                 let owner = lg.owner[nlv];
                 if owner == me {
                     lg.vversion[nlv] += 1;
@@ -1412,7 +1826,7 @@ fn execute_batch<V, E, P>(
                 }
             }
             let nle = nle as usize;
-            if sc.edge_dirty(i) {
+            if done.flags.edge_dirty[i] {
                 let ge = lg.le2g[nle];
                 let (a, b) = {
                     // endpoints: center and neighbor
@@ -1432,18 +1846,18 @@ fn execute_batch<V, E, P>(
         // Unlocks grouped by owner.
         let txn_id = TxnId {
             machine: me,
-            seq: txn.seq,
+            seq: done.seq,
         };
-        for &(v, write) in &txn.plan {
+        for &(v, write) in &done.plan {
             let owner = partition.owner(v);
             parts.entry(owner).or_default().0.push((v, write));
         }
-        // Scheduled tasks grouped by owner (drain ctx once per batch below).
-        // Tasks were accumulated across the whole batch; attribute them to
-        // owners now (after the last scope's write-back is fine: tasks are
-        // work hints, not data).
-        if std::ptr::eq(txn, batch.last().unwrap()) {
-            for t in ctx.scheduled.drain(..) {
+        // Scheduled tasks grouped by owner. Tasks were accumulated
+        // across the whole batch; attribute them to owners now (after
+        // the last transaction's write-back is fine: tasks are work
+        // hints, not data).
+        if k + 1 == count {
+            for t in tasks.drain(..) {
                 let owner = partition.owner(t.vertex);
                 if owner == me {
                     if !halted {
@@ -1456,7 +1870,7 @@ fn execute_batch<V, E, P>(
         }
 
         // Unsafe mode: eager ghost push of the dirty center.
-        if matches!(consistency, Consistency::Unsafe) && sc.center_dirty() {
+        if matches!(consistency, Consistency::Unsafe) && done.flags.center_dirty {
             let ver = lg.vversion[center_lv];
             let val = lg.vdata[center_lv].clone();
             for &peer in &lg.mirrors[center_lv] {

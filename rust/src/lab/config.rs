@@ -14,7 +14,9 @@
 //! The shipped preset configs under `configs/` (embedded at compile time)
 //! subsume the four historical bench subcommands: `sched` (BENCH_pr2),
 //! `engines` (BENCH_pr3), `wire` (BENCH_pr4), `net` (BENCH_pr5), plus the
-//! paper-figure sweeps `fig6b` and `fig8b` and the default `quick` smoke.
+//! paper-figure sweeps `fig6b` and `fig8b`, the locking-engine scaling
+//! sweep `locking_scale` (threads × maxpending), and the default `quick`
+//! smoke.
 
 use anyhow::{anyhow, bail, Context as _, Result};
 
@@ -32,8 +34,17 @@ pub const MICRO_NAMES: [&str; 6] = [
 
 /// Shipped preset names, in `--preset all` order. Each maps 1:1 onto a
 /// `configs/<name>.json` file embedded at compile time.
-pub const PRESETS: [&str; 8] =
-    ["quick", "sched", "engines", "wire", "net", "serve", "fig6b", "fig8b"];
+pub const PRESETS: [&str; 9] = [
+    "quick",
+    "sched",
+    "engines",
+    "wire",
+    "net",
+    "serve",
+    "fig6b",
+    "fig8b",
+    "locking_scale",
+];
 
 /// The presets `--preset all` expands to: the four historical bench
 /// subcommands' workloads (`bench-sched`/`bench-engines`/`bench-wire`/
@@ -52,6 +63,7 @@ pub fn preset_text(name: &str) -> Result<&'static str> {
         "serve" => include_str!("../../../configs/serve.json"),
         "fig6b" => include_str!("../../../configs/fig6b.json"),
         "fig8b" => include_str!("../../../configs/fig8b.json"),
+        "locking_scale" => include_str!("../../../configs/locking_scale.json"),
         other => bail!(
             "unknown preset '{other}' (one of: {}, or 'all' for {})",
             PRESETS.join("|"),
@@ -179,9 +191,8 @@ impl SweepConfig {
 
     /// Cross the axes into the cell list. Axis combinations that differ
     /// only in a dimension the engine ignores are normalized and deduped
-    /// (the shared engine has no transport or machine count; the locking
-    /// engine is one event loop per machine; only locking uses
-    /// maxpending), so each cell is a genuinely distinct work item.
+    /// (the shared engine has no transport or machine count; only locking
+    /// uses maxpending), so each cell is a genuinely distinct work item.
     pub fn expand(&self) -> Vec<Cell> {
         let mut cells: Vec<Cell> = Vec::new();
         let mut seen: Vec<String> = Vec::new();
@@ -432,10 +443,10 @@ impl Cell {
                 self.scheduler = "-".into();
                 self.maxpending = 0;
             }
-            "locking" => {
-                // One event loop per machine; no worker threads.
-                self.threads = 1;
-            }
+            // The locking engine keeps every axis: threads is the
+            // per-machine executor-pool size since the pump/pool split
+            // (it was pinned to 1 back when the engine was a single
+            // event loop per machine).
             _ => {}
         }
     }
@@ -481,7 +492,13 @@ impl Cell {
             (CellKind::Serve, _) => self.machines + 1,
             (_, "shared") => self.threads,
             (_, "chromatic") => self.machines * self.threads,
-            (_, "locking") => self.machines,
+            // threads > 1 adds a pool of `threads` executors per machine
+            // on top of each machine's pump thread; at threads == 1 the
+            // pump evaluates inline and is the only busy thread.
+            (_, "locking") => {
+                self.machines * self.threads
+                    + if self.threads > 1 { self.machines } else { 0 }
+            }
             _ => self.machines.max(self.threads),
         }
     }
@@ -662,6 +679,34 @@ mod tests {
         let mut dedup = ids.clone();
         dedup.dedup();
         assert_eq!(ids.len(), dedup.len(), "duplicate serve cell ids: {ids:?}");
+    }
+
+    #[test]
+    fn locking_cells_keep_the_threads_axis() {
+        let cfg = SweepConfig::from_json_text(
+            r#"{"name":"l","apps":["pagerank"],"engines":["locking"],
+                "machines":[2],"threads":[1,2,4],"scales":[100]}"#,
+            false,
+        )
+        .unwrap();
+        let cells = cfg.expand();
+        // threads used to be normalized to 1 for locking (duplicating
+        // the axis away); since the executor-pool split all three are
+        // distinct work items.
+        assert_eq!(cells.len(), 3);
+        let mut threads: Vec<usize> = cells.iter().map(|c| c.threads).collect();
+        threads.sort_unstable();
+        assert_eq!(threads, vec![1, 2, 4]);
+        for c in &cells {
+            assert!(c.argv().contains(&"--threads".to_string()));
+            // Pool cells claim pump + executors per machine for pinning.
+            let want = if c.threads > 1 {
+                c.machines * (c.threads + 1)
+            } else {
+                c.machines
+            };
+            assert_eq!(c.parallelism(), want, "cell {}", c.id());
+        }
     }
 
     #[test]

@@ -1,12 +1,17 @@
 //! A small persistent scoped thread pool (no `rayon` offline).
 //!
-//! Provides the two primitives the engines need:
+//! Provides the three primitives the engines need:
 //!
 //! * [`ThreadPool::scope_execute`] — run a closure on every worker
 //!   simultaneously (the engines' "spawn N workers over shared state"
 //!   pattern, mirroring the paper's pthread worker loops);
 //! * [`ThreadPool::parallel_for`] — a chunked dynamic parallel for used by
-//!   data generators and the chromatic engine's per-color vertex sweeps.
+//!   data generators and the chromatic engine's per-color vertex sweeps;
+//! * [`DispatchQueue`] — an asynchronous job queue for the locking
+//!   engine's per-machine executor pools: the pump thread pushes granted
+//!   transaction batches without waiting, workers park on a condvar
+//!   between jobs, and completions travel back over whatever channel the
+//!   caller pairs with the jobs.
 //!
 //! Workers are spawned **once** at construction and parked on a condvar
 //! between jobs, so callers that issue many small phases (the chromatic
@@ -248,6 +253,102 @@ impl Drop for ThreadPool {
     }
 }
 
+/// An asynchronous multi-producer multi-consumer job queue for executor
+/// pools that outlive individual jobs (the locking engine's per-machine
+/// update workers).
+///
+/// Unlike [`ThreadPool::scope_execute`], which is a fork-join barrier
+/// (the submitter blocks until every worker finishes), `push` returns
+/// immediately: the pump thread keeps servicing the network while workers
+/// chew through granted transaction batches. Workers call the blocking
+/// [`DispatchQueue::pop`] in a loop and exit when it returns `None`,
+/// which happens once the queue has been [closed](DispatchQueue::close)
+/// and drained. Results flow back over whatever channel the caller pairs
+/// with the jobs — the queue itself is one-directional.
+pub struct DispatchQueue<J> {
+    state: Mutex<QueueState<J>>,
+    avail: Condvar,
+}
+
+struct QueueState<J> {
+    jobs: std::collections::VecDeque<J>,
+    closed: bool,
+}
+
+impl<J> Default for DispatchQueue<J> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<J> DispatchQueue<J> {
+    pub fn new() -> Self {
+        DispatchQueue {
+            state: Mutex::new(QueueState {
+                jobs: std::collections::VecDeque::new(),
+                closed: false,
+            }),
+            avail: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a job and wake one parked worker. Pushing to a closed
+    /// queue silently drops the job (only reachable during unwinds —
+    /// the pump closes the queue strictly after its last push on the
+    /// normal path).
+    pub fn push(&self, job: J) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if st.closed {
+            return;
+        }
+        st.jobs.push_back(job);
+        self.avail.notify_one();
+    }
+
+    /// Blocking dequeue: parks until a job arrives or the queue is
+    /// closed *and* empty (then returns `None` — the worker's exit
+    /// signal). Remaining jobs are still handed out after `close`, so
+    /// closing never loses queued work.
+    pub fn pop(&self) -> Option<J> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(job) = st.jobs.pop_front() {
+                return Some(job);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.avail.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Close the queue and wake every parked worker so it can drain the
+    /// remainder and exit. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.closed = true;
+        self.avail.notify_all();
+    }
+
+    /// RAII closer: guarantees `close` runs even if the owning scope
+    /// unwinds, so workers blocked in `pop` can never deadlock a
+    /// `std::thread::scope` join.
+    pub fn close_guard(&self) -> CloseGuard<'_, J> {
+        CloseGuard { queue: self }
+    }
+}
+
+/// See [`DispatchQueue::close_guard`].
+pub struct CloseGuard<'a, J> {
+    queue: &'a DispatchQueue<J>,
+}
+
+impl<J> Drop for CloseGuard<'_, J> {
+    fn drop(&mut self) {
+        self.queue.close();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,6 +408,57 @@ mod tests {
             });
         }
         assert_eq!(total.load(Ordering::Relaxed), 200 * 64);
+    }
+
+    #[test]
+    fn dispatch_queue_delivers_every_job_once() {
+        let q = DispatchQueue::new();
+        let hits: Vec<AtomicU64> = (0..500).map(|_| AtomicU64::new(0)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    while let Some(i) = q.pop() {
+                        hits[i as usize].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+            for i in 0..500u64 {
+                q.push(i);
+            }
+            q.close();
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dispatch_queue_close_drains_remaining_jobs() {
+        // Jobs queued before close must still be handed out.
+        let q = DispatchQueue::new();
+        for i in 0..10u64 {
+            q.push(i);
+        }
+        q.close();
+        let mut seen = Vec::new();
+        while let Some(i) = q.pop() {
+            seen.push(i);
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        assert_eq!(q.pop(), None); // stays closed
+    }
+
+    #[test]
+    fn dispatch_queue_close_guard_unblocks_workers_on_unwind() {
+        let q = DispatchQueue::<u64>::new();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            std::thread::scope(|s| {
+                let _close = q.close_guard();
+                s.spawn(|| while q.pop().is_some() {});
+                panic!("pump died");
+            });
+        }));
+        // Without the guard the scope join would hang forever on the
+        // worker parked in pop(); with it, the panic propagates out.
+        assert!(caught.is_err());
     }
 
     #[test]

@@ -182,6 +182,170 @@ fn single_worker_work_stealing_is_deterministic_and_matches_global() {
 }
 
 #[test]
+fn locking_executor_pool_matches_oracle_across_thread_counts() {
+    // The pump/pool split (ISSUE 10): granted batches evaluated by 1, 2,
+    // or 4 executor threads per machine must all land on the sequential
+    // shared-memory fixed point — the paper's Def. 3.1 guarantee is
+    // independent of per-node core count.
+    let n = 600;
+    let edges = graphlab::datagen::web_graph(n, 6, 29);
+    let oracle = pagerank_ranks(EngineKind::Shared, n, &edges, 1e-7);
+    for workers in [1usize, 2, 4] {
+        let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-7, n, use_pjrt: false };
+        let g = pagerank::build(n, &edges, 0.15);
+        let exec = Engine::new(EngineKind::Locking)
+            .workers(workers)
+            .machines(3)
+            .maxpending(64)
+            .max_updates(3_000_000)
+            .run(g, &prog, apps::all_vertices(n))
+            .unwrap();
+        assert!(exec.stats.updates >= n as u64, "t{workers}: {}", exec.stats.updates);
+        let g = exec.graph;
+        let got: Vec<f32> = g.vertex_ids().map(|v| g.vertex_data(v).rank).collect();
+        assert_ranks_close(&format!("locking t{workers}"), &oracle, &got, 1e-5);
+    }
+}
+
+#[test]
+fn locking_single_thread_is_bitwise_deterministic() {
+    // threads == 1 keeps the pre-pool inline path: scopes point straight
+    // into the local graph and evaluation order is the pump's, so
+    // repeated single-machine runs are bit-identical — this is the
+    // sequential oracle the pool path is validated against.
+    let n = 300;
+    let edges = graphlab::datagen::web_graph(n, 5, 37);
+    let run = || {
+        let prog = pagerank::PageRank { alpha: 0.15, eps: 1e-7, n, use_pjrt: false };
+        let g = pagerank::build(n, &edges, 0.15);
+        let exec = Engine::new(EngineKind::Locking)
+            .workers(1)
+            .machines(1)
+            .maxpending(64)
+            .max_updates(2_000_000)
+            .run(g, &prog, apps::all_vertices(n))
+            .unwrap();
+        let g = exec.graph;
+        g.vertex_ids().map(|v| g.vertex_data(v).rank.to_bits()).collect::<Vec<u32>>()
+    };
+    assert_eq!(run(), run(), "threads=1 locking run must be bit-deterministic");
+}
+
+#[test]
+fn locking_pool_write_scopes_never_overlap() {
+    // Scope-isolation property: while one transaction's update runs, no
+    // concurrently executing transaction may hold an overlapping *write*
+    // scope — under edge consistency the center + adjacent edges, under
+    // full consistency also the neighbor vertices. Each update claims
+    // its write scope in atomic counters on entry and releases on exit;
+    // any double-claim is a consistency violation. Run with a 4-thread
+    // executor pool on every machine so claims really do race.
+    use graphlab::engine::{Consistency, Ctx, Scope, VertexProgram};
+    use graphlab::graph::GraphBuilder;
+    use graphlab::wire::Wire;
+    use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    #[derive(Clone, Debug)]
+    struct C(u64);
+    impl Wire for C {
+        fn encode(&self, out: &mut Vec<u8>) {
+            self.0.encode(out);
+        }
+        fn decode(input: &mut &[u8]) -> graphlab::wire::Result<Self> {
+            Ok(C(u64::decode(input)?))
+        }
+    }
+
+    struct ClaimProbe {
+        consistency: Consistency,
+        vclaims: Arc<Vec<AtomicU32>>,
+        eclaims: Arc<Vec<AtomicU32>>,
+        violated: Arc<AtomicBool>,
+        rounds: u64,
+    }
+    impl ClaimProbe {
+        fn claim(&self, slot: &AtomicU32) {
+            if slot.fetch_add(1, Ordering::SeqCst) != 0 {
+                self.violated.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+    impl VertexProgram<C, C> for ClaimProbe {
+        fn consistency(&self) -> Consistency {
+            self.consistency
+        }
+        fn update(&self, scope: &mut Scope<C, C>, ctx: &mut Ctx) {
+            let c = scope.vertex() as usize;
+            self.claim(&self.vclaims[c]);
+            for i in 0..scope.degree() {
+                self.claim(&self.eclaims[scope.edge_id(i) as usize]);
+                if matches!(self.consistency, Consistency::Full) {
+                    self.claim(&self.vclaims[scope.nbr_id(i) as usize]);
+                }
+            }
+            // Widen the race window so a broken engine actually trips.
+            std::thread::yield_now();
+            scope.center_mut().0 += 1;
+            if scope.center().0 < self.rounds {
+                ctx.schedule(scope.vertex(), 1.0);
+            }
+            for i in (0..scope.degree()).rev() {
+                if matches!(self.consistency, Consistency::Full) {
+                    self.vclaims[scope.nbr_id(i) as usize].fetch_sub(1, Ordering::SeqCst);
+                }
+                self.eclaims[scope.edge_id(i) as usize].fetch_sub(1, Ordering::SeqCst);
+            }
+            self.vclaims[c].fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    for consistency in [Consistency::Edge, Consistency::Full] {
+        let n = 24u32;
+        let mut b = GraphBuilder::new();
+        b.add_vertices(n as usize, |_| C(0));
+        for u in 0..n {
+            for v in (u + 1)..n {
+                if (u + v) % 3 == 0 {
+                    b.add_edge(u, v, C(0));
+                }
+            }
+        }
+        let g = b.build();
+        let m = g.num_edges();
+        let vclaims: Arc<Vec<AtomicU32>> =
+            Arc::new((0..n).map(|_| AtomicU32::new(0)).collect());
+        let eclaims: Arc<Vec<AtomicU32>> =
+            Arc::new((0..m).map(|_| AtomicU32::new(0)).collect());
+        let violated = Arc::new(AtomicBool::new(false));
+        let prog = ClaimProbe {
+            consistency,
+            vclaims: vclaims.clone(),
+            eclaims: eclaims.clone(),
+            violated: violated.clone(),
+            rounds: 30,
+        };
+        let exec = Engine::new(EngineKind::Locking)
+            .workers(4)
+            .machines(3)
+            .maxpending(16)
+            .scheduler(SchedSpec::ws(Policy::Fifo, 1))
+            .max_updates(300_000)
+            .with_partition(Partition::striped(n as usize, 3))
+            .run(g, &prog, apps::all_vertices(n as usize))
+            .unwrap();
+        assert!(exec.stats.updates >= n as u64);
+        assert!(
+            !violated.load(Ordering::SeqCst),
+            "overlapping write scopes executed concurrently under {consistency:?}"
+        );
+        // Every claim was released — no transaction exited sideways.
+        assert!(vclaims.iter().all(|c| c.load(Ordering::SeqCst) == 0));
+        assert!(eclaims.iter().all(|c| c.load(Ordering::SeqCst) == 0));
+    }
+}
+
+#[test]
 fn locking_engine_respects_consistency_under_contention() {
     // Counter app where each update increments the center and all
     // neighbor-visible sums must stay exact (full consistency): any lost
@@ -218,33 +382,39 @@ fn locking_engine_respects_consistency_under_contention() {
     }
 
     // Dense-ish graph, striped partition: maximal remote contention.
-    let n = 24u32;
-    let mut b = GraphBuilder::new();
-    b.add_vertices(n as usize, |_| C(0));
-    for u in 0..n {
-        for v in (u + 1)..n {
-            if (u + v) % 3 == 0 {
-                b.add_edge(u, v, C(0));
+    // Exercised at 1, 2, and 4 executor threads per machine — the exact
+    // count invariant is the sharpest lost-write detector we have for
+    // the pool's snapshot/commit protocol.
+    for workers in [1usize, 2, 4] {
+        let n = 24u32;
+        let mut b = GraphBuilder::new();
+        b.add_vertices(n as usize, |_| C(0));
+        for u in 0..n {
+            for v in (u + 1)..n {
+                if (u + v) % 3 == 0 {
+                    b.add_edge(u, v, C(0));
+                }
             }
         }
+        let g = b.build();
+        let m = g.num_edges() as u64;
+        let prog = IncAll { rounds: 50 };
+        let exec = Engine::new(EngineKind::Locking)
+            .workers(workers)
+            .machines(3)
+            .maxpending(16)
+            .scheduler(SchedSpec::ws(Policy::Fifo, 1))
+            .max_updates(300_000)
+            .with_partition(Partition::striped(n as usize, 3))
+            .run(g, &prog, apps::all_vertices(n as usize))
+            .unwrap();
+        let (g, stats) = (exec.graph, exec.stats);
+        // Every update increments center + degree neighbors + degree edges;
+        // totals must match the update count exactly (no lost writes):
+        // total_v = updates + total_e (each update adds deg to edges and deg
+        // to neighbor vertices plus 1 to center).
+        let total_v: u64 = g.vertex_ids().map(|v| g.vertex_data(v).0).sum();
+        let total_e: u64 = (0..m as u32).map(|e| g.edge_data(e).0).sum();
+        assert_eq!(total_v, stats.updates + total_e, "t{workers}: lost or torn writes");
     }
-    let g = b.build();
-    let m = g.num_edges() as u64;
-    let prog = IncAll { rounds: 50 };
-    let exec = Engine::new(EngineKind::Locking)
-        .machines(3)
-        .maxpending(16)
-        .scheduler(SchedSpec::ws(Policy::Fifo, 1))
-        .max_updates(300_000)
-        .with_partition(Partition::striped(n as usize, 3))
-        .run(g, &prog, apps::all_vertices(n as usize))
-        .unwrap();
-    let (g, stats) = (exec.graph, exec.stats);
-    // Every update increments center + degree neighbors + degree edges;
-    // totals must match the update count exactly (no lost writes):
-    // total_v = updates + total_e (each update adds deg to edges and deg
-    // to neighbor vertices plus 1 to center).
-    let total_v: u64 = g.vertex_ids().map(|v| g.vertex_data(v).0).sum();
-    let total_e: u64 = (0..m as u32).map(|e| g.edge_data(e).0).sum();
-    assert_eq!(total_v, stats.updates + total_e, "lost or torn writes");
 }

@@ -533,6 +533,7 @@ fn try_kill_restart(
     dir: &std::path::Path,
     atoms_s: &str,
     oracle: f64,
+    extra: &[&str],
 ) -> Result<(), String> {
     use std::process::{Command, Stdio};
     let snap = dir.join("snaps");
@@ -550,6 +551,7 @@ fn try_kill_restart(
     let mut worker = Command::new(bin)
         .args(["worker", "--me", "1", "--hosts", hosts_s])
         .args(common)
+        .args(extra)
         .args(snap_args)
         .env("GRAPHLAB_PEER_GRACE_SECS", "2")
         .stdout(Stdio::piped())
@@ -559,6 +561,7 @@ fn try_kill_restart(
     let mut driver = Command::new(bin)
         .args(["run", "pagerank", "--cluster", hosts_s])
         .args(common)
+        .args(extra)
         .args(snap_args)
         .env("GRAPHLAB_PEER_GRACE_SECS", "2")
         .stdout(Stdio::piped())
@@ -618,6 +621,7 @@ fn try_kill_restart(
     let mut worker2 = Command::new(bin)
         .args(["worker", "--me", "1", "--hosts", hosts2_s])
         .args(common)
+        .args(extra)
         .args(["--restore", snap_s])
         .stdout(Stdio::piped())
         .stderr(Stdio::piped())
@@ -626,6 +630,7 @@ fn try_kill_restart(
     let rout = Command::new(bin)
         .args(["run", "pagerank", "--cluster", hosts2_s])
         .args(common)
+        .args(extra)
         .args(["--restore", snap_s])
         .output()
         .expect("spawn restarted driver");
@@ -667,7 +672,7 @@ fn multi_process_kill_restart_from_snapshot() {
 
     let mut last_err = String::new();
     for attempt in 0..3 {
-        match try_kill_restart(bin, &dir, &atoms_s, oracle) {
+        match try_kill_restart(bin, &dir, &atoms_s, oracle, &[]) {
             Ok(()) => {
                 std::fs::remove_dir_all(&dir).ok();
                 return;
@@ -679,4 +684,42 @@ fn multi_process_kill_restart_from_snapshot() {
         }
     }
     panic!("kill/restart smoke failed on 3 attempts; last error:\n{last_err}");
+}
+
+/// The same kill/restart sequence with the locking engine running a
+/// 4-thread executor pool per machine. In-flight transactions at the
+/// marker release locks via post-marker channel messages, so the
+/// Chandy-Lamport cut stays consistent regardless of pool threading;
+/// this exercises that argument with a real SIGKILL. `--eps 1e-8`
+/// keeps the run alive long enough to commit a snapshot before the
+/// kill.
+#[test]
+#[ignore = "spawns and kills real graphlab processes; run with --ignored (CI fault-smoke)"]
+fn multi_process_kill_restart_locking_threads4() {
+    let bin = env!("CARGO_BIN_EXE_graphlab");
+    let extra = ["--engine", "locking", "--threads", "4", "--eps", "1e-8"];
+    let dir =
+        std::env::temp_dir().join(format!("graphlab-fault-smoke-lock-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut oracle_extra = vec!["--sweeps", "400"];
+    oracle_extra.extend_from_slice(&extra);
+    let (atoms_s, oracle) = prepare_store_and_oracle(bin, &dir, &oracle_extra);
+
+    let mut last_err = String::new();
+    for attempt in 0..3 {
+        match try_kill_restart(bin, &dir, &atoms_s, oracle, &extra) {
+            Ok(()) => {
+                std::fs::remove_dir_all(&dir).ok();
+                return;
+            }
+            Err(e) => {
+                eprintln!(
+                    "locking kill/restart attempt {attempt} failed, retrying on fresh ports: {e}"
+                );
+                last_err = e;
+            }
+        }
+    }
+    panic!("locking kill/restart smoke failed on 3 attempts; last error:\n{last_err}");
 }
